@@ -1,0 +1,97 @@
+//! Checkpoint + burst-buffer study (paper §III-C / §V-C, Figs. 9-10).
+//!
+//! Trains the mini-app for N iterations, checkpointing every K to each
+//! target the paper tests — HDD, SSD, Optane, and the Optane->HDD
+//! burst buffer — plus the no-checkpoint baseline, printing total
+//! runtimes and median checkpoint stalls, then a dstat-style trace of
+//! the burst-buffer run.
+//!
+//! Run: `cargo run --release --example checkpoint_bb`
+
+use std::sync::Arc;
+
+use dlio::config::{
+    CheckpointTarget, CkptStudyConfig, MiniAppConfig, Testbed,
+};
+use dlio::coordinator::fixtures::{ensure_corpus, make_sim};
+use dlio::coordinator::miniapp;
+use dlio::data::CorpusSpec;
+use dlio::metrics::{median, Table};
+use dlio::runtime::Runtime;
+use dlio::trace::Dstat;
+
+fn main() -> anyhow::Result<()> {
+    let mut testbed = Testbed::paper(8.0);
+    testbed.workdir = format!("{}/ckpt", dlio::config::default_workdir());
+    let rt = Runtime::open_default()?;
+
+    // Paper protocol: images on SSD, prefetch enabled, checkpoint every
+    // 20 of 100 iterations (scaled to every 4 of 20 here).
+    let mini = MiniAppConfig {
+        device: "ssd".into(),
+        threads: 4,
+        batch: 32,
+        prefetch: 1,
+        iterations: 20,
+        profile: "mini".into(), // ~75 MB checkpoints
+        seed: 11,
+    };
+    let targets = [
+        CheckpointTarget::None,
+        CheckpointTarget::Direct("hdd".into()),
+        CheckpointTarget::Direct("ssd".into()),
+        CheckpointTarget::Direct("optane".into()),
+        CheckpointTarget::BurstBuffer {
+            fast: "optane".into(),
+            slow: "hdd".into(),
+        },
+    ];
+
+    let mut table = Table::new(&[
+        "Target", "Total s", "Ckpt stall s", "Median ckpt s",
+    ]);
+    let mut hdd_total = 0.0;
+    let mut bb_total = 0.0;
+    for target in targets {
+        let tracer = Arc::new(Dstat::new(0.25));
+        let sim = make_sim(&testbed, Some(tracer.clone()))?;
+        let manifest =
+            ensure_corpus(&sim, "ssd", &CorpusSpec::caltech101(1024))?;
+        let cfg = CkptStudyConfig {
+            mini: mini.clone(),
+            target: target.clone(),
+            interval: 4,
+            max_to_keep: 5,
+        };
+        let r = miniapp::run_with_checkpoints(
+            Arc::clone(&sim), &rt, &manifest, &cfg)?;
+        match &target {
+            CheckpointTarget::Direct(d) if d == "hdd" => {
+                hdd_total = r.total_secs
+            }
+            CheckpointTarget::BurstBuffer { .. } => bb_total = r.total_secs,
+            _ => {}
+        }
+        table.row(&[
+            target.label(),
+            format!("{:.2}", r.total_secs),
+            format!("{:.2}", r.ckpt_secs),
+            format!("{:.2}", median(&mut r.ckpt_durations.clone())),
+        ]);
+        if matches!(target, CheckpointTarget::BurstBuffer { .. }) {
+            println!("\n== dstat trace of the burst-buffer run \
+                      (Fig. 10 bottom panel) ==");
+            print!("{}", tracer.to_csv());
+        }
+    }
+    println!("\n== Fig. 9: total runtime per checkpoint target ==");
+    print!("{}", table.render());
+    if hdd_total > 0.0 && bb_total > 0.0 {
+        println!(
+            "\nburst-buffer speedup over direct-to-HDD (ckpt overhead): \
+             paper reports 2.6x total-overhead improvement"
+        );
+        println!("measured totals: hdd {hdd_total:.2}s vs bb {bb_total:.2}s");
+    }
+    Ok(())
+}

@@ -1,0 +1,182 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text artifacts for rust (L3).
+
+Interchange format is HLO *text*, not ``lowered.compile().serialize()``:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The text parser on the rust side reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Emitted artifacts (``make artifacts``; python never runs afterwards):
+
+  artifacts/
+    preprocess_{src}_to_{out}.hlo.txt   one per corpus source-dim bucket
+                                        x model input size (DESIGN.md §2)
+    train_{profile}_b{batch}.hlo.txt    AlexNet fwd/bwd/Adam step
+    model_meta.json                     the ABI contract consumed by rust:
+                                        param order/shapes, artifact list,
+                                        optimizer constants, norm stats
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.resize import IMAGENET_MEAN, IMAGENET_STD
+
+# (src, out) resize buckets.  src=96 is the Caltech-101-like corpus
+# bucket (median ~12 kB files), src=256 the ImageNet-subset-like bucket
+# (median ~112 kB files); outs are the model profile input sizes.
+DEFAULT_BUCKETS = [(96, 32), (256, 32), (96, 64), (256, 64)]
+PAPER_BUCKETS = [(96, 224), (256, 224)]
+
+DEFAULT_TRAIN = [
+    ("micro", 16), ("micro", 32), ("micro", 64), ("micro", 128),
+    ("mini", 16), ("mini", 32), ("mini", 64), ("mini", 128),
+]
+PAPER_TRAIN = [("paper", 64)]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unwraps a tuple).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides constants over ~500 elements as ``{...}``, which XLA 0.5.1's
+    text parser silently reads back as *zeros* — the resize weight
+    matrices and any folded model constants would vanish.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    if "{...}" in text:
+        raise RuntimeError("HLO text still contains elided constants")
+    return text
+
+
+def lower_preprocess(src: int, out: int, batch: int = 1) -> str:
+    fn = M.make_preprocess(src, out)
+    lowered = jax.jit(fn).lower(*M.preprocess_example_args(src, batch))
+    return to_hlo_text(lowered)
+
+
+def lower_train(profile: M.Profile, batch: int) -> str:
+    fn = M.make_train_step(profile)
+    lowered = jax.jit(fn).lower(*M.train_step_example_args(profile, batch))
+    return to_hlo_text(lowered)
+
+
+def profile_meta(profile: M.Profile) -> dict:
+    specs = M.param_specs(profile)
+    return {
+        "name": profile.name,
+        "input_size": profile.input_size,
+        "num_classes": profile.num_classes,
+        "num_param_tensors": len(specs),
+        "num_params": M.num_params(profile),
+        "params": [
+            {"name": n, "shape": list(s)} for n, s in specs
+        ],
+        # Flat ABI: [params*, m*, v*, step, images, labels] ->
+        #           (params*, m*, v*, step, loss)
+        "num_inputs": 3 * len(specs) + 3,
+        "num_outputs": 3 * len(specs) + 2,
+    }
+
+
+def write_if_changed(path: str, text: str) -> bool:
+    if os.path.exists(path):
+        with open(path) as f:
+            if f.read() == text:
+                return False
+    with open(path, "w") as f:
+        f.write(text)
+    return True
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="legacy: single-HLO marker path (Makefile stamp)")
+    ap.add_argument("--paper", action="store_true",
+                    help="also emit full-size 224x224 AlexNet artifacts "
+                         "(slow; DLIO_PAPER=1 equivalent)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    paper = args.paper or os.environ.get("DLIO_PAPER") == "1"
+    buckets = DEFAULT_BUCKETS + (PAPER_BUCKETS if paper else [])
+    trains = DEFAULT_TRAIN + (PAPER_TRAIN if paper else [])
+
+    artifacts = []
+    t0 = time.time()
+    for src, out in buckets:
+        name = f"preprocess_{src}_to_{out}.hlo.txt"
+        path = os.path.join(out_dir, name)
+        if args.force or not os.path.exists(path):
+            text = lower_preprocess(src, out)
+            write_if_changed(path, text)
+            print(f"[aot] {name}  ({len(text)//1024} KiB, "
+                  f"{time.time()-t0:.1f}s)")
+        artifacts.append({
+            "kind": "preprocess", "file": name,
+            "src_size": src, "out_size": out, "batch": 1,
+        })
+
+    for prof_name, batch in trains:
+        profile = M.PROFILES[prof_name]
+        name = f"train_{prof_name}_b{batch}.hlo.txt"
+        path = os.path.join(out_dir, name)
+        if args.force or not os.path.exists(path):
+            text = lower_train(profile, batch)
+            write_if_changed(path, text)
+            print(f"[aot] {name}  ({len(text)//1024} KiB, "
+                  f"{time.time()-t0:.1f}s)")
+        artifacts.append({
+            "kind": "train", "file": name,
+            "profile": prof_name, "batch": batch,
+        })
+
+    meta = {
+        "format_version": 1,
+        "adam": {"lr": M.ADAM_LR, "b1": M.ADAM_B1, "b2": M.ADAM_B2,
+                 "eps": M.ADAM_EPS},
+        "norm_mean": list(IMAGENET_MEAN),
+        "norm_std": list(IMAGENET_STD),
+        "profiles": {n: profile_meta(p) for n, p in M.PROFILES.items()},
+        "artifacts": artifacts,
+    }
+    meta_path = os.path.join(out_dir, "model_meta.json")
+    write_if_changed(meta_path, json.dumps(meta, indent=1))
+    print(f"[aot] model_meta.json  ({len(artifacts)} artifacts, "
+          f"{time.time()-t0:.1f}s total)")
+
+    if args.out:
+        # Makefile stamp: ensure the marker file exists.
+        first = os.path.join(out_dir, artifacts[0]["file"])
+        if os.path.abspath(first) != os.path.abspath(args.out):
+            with open(args.out, "w") as f:
+                f.write(f"# see {out_dir}\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

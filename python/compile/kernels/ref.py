@@ -1,0 +1,55 @@
+"""Pure-jnp correctness oracle for the fused preprocess kernel.
+
+Two references:
+
+* :func:`preprocess_ref` — the *specification* oracle: convert u8->f32,
+  normalize, then ``jax.image.resize(method="linear")``.  This is what
+  TensorFlow's ``convert_image_dtype`` + ``resize_images`` compute.
+* :func:`preprocess_matmul_ref` — the *algorithmic* oracle: the same
+  matmul-form resize the Pallas kernel uses, in plain jnp.  The kernel
+  must match this bit-for-bit up to float tolerance; the matmul form in
+  turn must match the specification oracle (tested in
+  ``tests/test_kernel.py``), closing the chain
+  kernel == matmul-form == jax.image.resize.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .resize import IMAGENET_MEAN, IMAGENET_STD, resize_weights
+
+__all__ = ["normalize_ref", "preprocess_ref", "preprocess_matmul_ref"]
+
+
+def normalize_ref(images_u8: jax.Array,
+                  mean=IMAGENET_MEAN, std=IMAGENET_STD) -> jax.Array:
+    """u8 [B,H,W,C] -> normalized f32 [B,H,W,C]."""
+    x = images_u8.astype(jnp.float32) / 255.0
+    mean_a = jnp.asarray(mean, dtype=jnp.float32)
+    std_a = jnp.asarray(std, dtype=jnp.float32)
+    return (x - mean_a) / std_a
+
+
+def preprocess_ref(images_u8: jax.Array, out_size: int,
+                   mean=IMAGENET_MEAN, std=IMAGENET_STD) -> jax.Array:
+    """Specification oracle: normalize then jax.image.resize linear."""
+    x = normalize_ref(images_u8, mean, std)
+    b, _, _, c = x.shape
+    # antialias=False matches TF1's resize_images (the paper's pipeline):
+    # plain bilinear taps, no kernel widening on downsample.
+    return jax.image.resize(x, (b, out_size, out_size, c), method="linear",
+                            antialias=False)
+
+
+def preprocess_matmul_ref(images_u8: jax.Array, out_size: int,
+                          mean=IMAGENET_MEAN, std=IMAGENET_STD) -> jax.Array:
+    """Algorithmic oracle: the kernel's matmul-form resize in plain jnp."""
+    x = normalize_ref(images_u8, mean, std)
+    _, h, w, _ = x.shape
+    ry = jnp.asarray(resize_weights(h, out_size))
+    rx = jnp.asarray(resize_weights(w, out_size))
+    # out[b,oh,ow,c] = Ry[oh,h] X[b,h,w,c] Rx[ow,w]
+    t = jnp.einsum("oh,bhwc->bowc", ry, x)
+    return jnp.einsum("bowc,pw->bopc", t, rx)

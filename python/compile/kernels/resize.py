@@ -1,0 +1,148 @@
+"""L1 Pallas kernel: fused decode-normalize-bilinear-resize.
+
+The paper's per-image map-function hot spot is
+``decode_jpeg -> convert_image_dtype -> resize_images``.  On TPU we do
+not port the CUDA-style gather loop; instead the bilinear resample is
+restructured as two dense matmuls so it runs on the MXU systolic array
+(see DESIGN.md §3, §8)::
+
+    out[oh, ow, c] = sum_h sum_w Ry[oh, h] * X[h, w, c] * Rx[ow, w]
+
+``Ry``/``Rx`` are precomputed interpolation-weight matrices (each row
+has at most two non-zeros — the two bilinear taps), built with the same
+half-pixel-center convention as ``jax.image.resize(..., "linear")``.
+
+The kernel fuses:
+  1. u8 -> f32 conversion and scale to [0, 1]   (convert_image_dtype)
+  2. per-channel mean/std normalization
+  3. the two resize matmuls                      (resize_images)
+
+Grid: one image per grid step; the whole image block plus both weight
+matrices are VMEM-resident (~1.9 MB at 256->224, see DESIGN.md §8).
+
+Pallas is invoked with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and correctness (vs ``ref.py``) is what we
+validate here; real-TPU efficiency is estimated analytically.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "resize_weights",
+    "fused_preprocess",
+    "IMAGENET_MEAN",
+    "IMAGENET_STD",
+]
+
+# Channel statistics used by the normalization stage (ImageNet values,
+# the conventional choice for AlexNet-style training).
+IMAGENET_MEAN = (0.485, 0.456, 0.406)
+IMAGENET_STD = (0.229, 0.224, 0.225)
+
+
+def resize_weights(in_size: int, out_size: int) -> np.ndarray:
+    """Bilinear interpolation weight matrix W[out_size, in_size].
+
+    Uses the half-pixel-center convention of ``jax.image.resize`` with
+    method="linear": source coordinate of output pixel ``o`` is
+    ``(o + 0.5) * in/out - 0.5``, clamped taps, triangle kernel.
+    Each row sums to 1.
+    """
+    if in_size <= 0 or out_size <= 0:
+        raise ValueError(f"sizes must be positive, got {in_size}->{out_size}")
+    scale = in_size / out_size
+    w = np.zeros((out_size, in_size), dtype=np.float64)
+    for o in range(out_size):
+        src = (o + 0.5) * scale - 0.5
+        lo = int(np.floor(src))
+        frac = src - lo
+        lo_c = min(max(lo, 0), in_size - 1)
+        hi_c = min(max(lo + 1, 0), in_size - 1)
+        w[o, lo_c] += 1.0 - frac
+        w[o, hi_c] += frac
+    return w.astype(np.float32)
+
+
+def _preprocess_kernel(x_ref, ry_ref, rx_ref, mean_ref, std_ref, o_ref):
+    """Pallas body: one image per grid step.
+
+    x_ref:  u8  [1, H, W, C]   raw decoded pixels (one image block)
+    ry_ref: f32 [OH, H]        row interpolation weights
+    rx_ref: f32 [OW, W]        col interpolation weights
+    mean_ref/std_ref: f32 [C]
+    o_ref:  f32 [1, OH, OW, C]
+    """
+    x = x_ref[0].astype(jnp.float32) * (1.0 / 255.0)  # convert_image_dtype
+    x = (x - mean_ref[...]) / std_ref[...]              # normalize
+    ry = ry_ref[...]
+    rx = rx_ref[...]
+    # Row resample on the MXU: [OH,H] x [H, W*C] -> [OH, W, C]
+    h, w, c = x.shape
+    t = jnp.dot(ry, x.reshape(h, w * c)).reshape(ry.shape[0], w, c)
+    # Col resample: contract W of t[OH,W,C] with W of rx[OW,W] -> [OH,C,OW]
+    t = jax.lax.dot_general(
+        t, rx, dimension_numbers=(((1,), (1,)), ((), ()))
+    )  # [OH, C, OW]
+    o_ref[0] = jnp.transpose(t, (0, 2, 1))
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _jit_marker(x, out_size):  # pragma: no cover - convenience only
+    return fused_preprocess(x, out_size)
+
+
+def fused_preprocess(images: jax.Array, out_size: int,
+                     mean=IMAGENET_MEAN, std=IMAGENET_STD) -> jax.Array:
+    """Fused u8->normalized-f32 bilinear resize, batched.
+
+    images: u8 [B, H, W, C]  ->  f32 [B, out_size, out_size, C]
+    """
+    if images.ndim != 4:
+        raise ValueError(f"expected [B,H,W,C], got shape {images.shape}")
+    b, h, w, c = images.shape
+    ry = jnp.asarray(resize_weights(h, out_size))
+    rx = jnp.asarray(resize_weights(w, out_size))
+    mean_a = jnp.asarray(mean, dtype=jnp.float32)
+    std_a = jnp.asarray(std, dtype=jnp.float32)
+
+    if b == 1:
+        # Grid-free single-image form.  This is what the AOT artifacts
+        # use (the map function preprocesses one image per call): the
+        # whole image + weight matrices form one VMEM-resident block,
+        # and the lowered HLO contains no `while` loop — XLA 0.5.1's
+        # CPU runtime (the rust side) mis-executes the 1-trip loop the
+        # grid form lowers to under interpret=True.
+        return pl.pallas_call(
+            _preprocess_kernel,
+            out_shape=jax.ShapeDtypeStruct((1, out_size, out_size, c),
+                                           jnp.float32),
+            interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+        )(images, ry, rx, mean_a, std_a)
+
+    # Batched form: one image per grid step (the TPU schedule of
+    # DESIGN.md §8).  Used by python-side tests and TPU targets.
+    grid = (b,)
+    return pl.pallas_call(
+        _preprocess_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((out_size, h), lambda i: (0, 0)),
+            pl.BlockSpec((out_size, w), lambda i: (0, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, out_size, out_size, c), lambda i: (i, 0, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, out_size, out_size, c),
+                                       jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(images, ry, rx, mean_a, std_a)

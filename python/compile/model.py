@@ -1,0 +1,279 @@
+"""L2: AlexNet forward/backward + Adam as a single jitted train step.
+
+This is the "accelerator compute" of the paper's mini-application
+(§III-B): AlexNet [Krizhevsky'12] — five convolutions, three max-pools,
+three fully-connected layers, ReLU — classifying Caltech-101-style
+batches (102 classes), driven by the Adam optimizer.
+
+The module defines *profiles* that scale the network to the benchmark
+testbed while preserving the structure (5 conv / 3 pool / 3 fc):
+
+* ``paper`` — faithful AlexNet: 224x224x3 input, 4096-wide FC layers.
+  Checkpoint (params + Adam moments) ≈ 700 MB, matching the paper's
+  "roughly 600 MB" (§VII).
+* ``mini``  — 64x64x3 input, narrowed channels.  This keeps a CPU-PJRT
+  train step in the paper's compute regime *relative to* the simulated
+  storage devices (DESIGN.md §6) and is the default for benches.
+* ``micro`` — 32x32x3, further narrowed; used by fast tests/benches.
+
+Everything here runs at *build time only*: ``aot.py`` lowers
+``make_train_step`` and the Pallas-fused ``make_preprocess`` to HLO
+text which the rust coordinator loads via PJRT.  Python is never on
+the request path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.resize import fused_preprocess
+
+NUM_CLASSES = 102  # Caltech 101 + "Google background" class (§IV-B)
+
+# ---------------------------------------------------------------------------
+# Profiles
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ConvSpec:
+    ksize: int
+    stride: int
+    out_ch: int
+    pool: bool  # 3x3 stride-2 max pool after this conv
+
+
+@dataclass(frozen=True)
+class Profile:
+    """A structurally-AlexNet network scaled to a target input size."""
+
+    name: str
+    input_size: int
+    convs: Tuple[ConvSpec, ...]
+    fc_widths: Tuple[int, ...]  # hidden FC widths; classifier appended
+    num_classes: int = NUM_CLASSES
+
+    def spatial_after_convs(self) -> int:
+        s = self.input_size
+        for c in self.convs:
+            s = -(-s // c.stride)  # SAME conv
+            if c.pool:
+                s = -(-s // 2)  # 3x3 stride-2 SAME max pool
+        return s
+
+
+# Faithful AlexNet (single-tower variant, as in the paper's ~200-line
+# mini-app): conv1 11x11/4 96, conv2 5x5 256, conv3/4 3x3 384, conv5 3x3 256.
+PAPER = Profile(
+    name="paper",
+    input_size=224,
+    convs=(
+        ConvSpec(11, 4, 96, True),
+        ConvSpec(5, 1, 256, True),
+        ConvSpec(3, 1, 384, False),
+        ConvSpec(3, 1, 384, False),
+        ConvSpec(3, 1, 256, True),
+    ),
+    fc_widths=(4096, 4096),
+)
+
+MINI = Profile(
+    name="mini",
+    input_size=64,
+    convs=(
+        ConvSpec(7, 2, 64, True),
+        ConvSpec(5, 1, 192, True),
+        ConvSpec(3, 1, 256, False),
+        ConvSpec(3, 1, 256, False),
+        ConvSpec(3, 1, 192, True),
+    ),
+    fc_widths=(1024, 1024),
+)
+
+MICRO = Profile(
+    name="micro",
+    input_size=32,
+    convs=(
+        ConvSpec(5, 2, 32, True),
+        ConvSpec(3, 1, 64, False),
+        ConvSpec(3, 1, 64, True),
+    ),
+    fc_widths=(256,),
+)
+
+PROFILES: Dict[str, Profile] = {p.name: p for p in (PAPER, MINI, MICRO)}
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def param_specs(profile: Profile) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list — the HLO argument/result order contract
+    shared with the rust side (emitted into model_meta.json)."""
+    specs: List[Tuple[str, Tuple[int, ...]]] = []
+    in_ch = 3
+    for i, c in enumerate(profile.convs, start=1):
+        specs.append((f"conv{i}/kernel", (c.ksize, c.ksize, in_ch, c.out_ch)))
+        specs.append((f"conv{i}/bias", (c.out_ch,)))
+        in_ch = c.out_ch
+    s = profile.spatial_after_convs()
+    fan_in = s * s * in_ch
+    widths = list(profile.fc_widths) + [profile.num_classes]
+    for i, w in enumerate(widths, start=1):
+        specs.append((f"fc{i}/kernel", (fan_in, w)))
+        specs.append((f"fc{i}/bias", (w,)))
+        fan_in = w
+    return specs
+
+
+def init_params(profile: Profile, seed: int = 0) -> List[jax.Array]:
+    """He-normal kernels, zero biases.  Used by python tests; the rust
+    coordinator re-implements the identical initializer (model::params)."""
+    out: List[jax.Array] = []
+    key = jax.random.PRNGKey(seed)
+    for name, shape in param_specs(profile):
+        key, sub = jax.random.split(key)
+        if name.endswith("bias"):
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = int(np.prod(shape[:-1]))
+            std = float(np.sqrt(2.0 / fan_in))
+            out.append(jax.random.normal(sub, shape, jnp.float32) * std)
+    return out
+
+
+def num_params(profile: Profile) -> int:
+    return sum(int(np.prod(s)) for _, s in param_specs(profile))
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def forward(profile: Profile, params: List[jax.Array],
+            images: jax.Array) -> jax.Array:
+    """images f32 [B, S, S, 3] -> logits f32 [B, num_classes]."""
+    specs = param_specs(profile)
+    idx = 0
+    x = images
+    for c in profile.convs:
+        k, b = params[idx], params[idx + 1]
+        idx += 2
+        x = jax.lax.conv_general_dilated(
+            x, k,
+            window_strides=(c.stride, c.stride),
+            padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ) + b
+        x = jax.nn.relu(x)
+        if c.pool:
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max,
+                window_dimensions=(1, 3, 3, 1),
+                window_strides=(1, 2, 2, 1),
+                padding="SAME",
+            )
+    b_sz = x.shape[0]
+    x = x.reshape(b_sz, -1)
+    n_fc = len(profile.fc_widths) + 1
+    for i in range(n_fc):
+        k, b = params[idx], params[idx + 1]
+        idx += 2
+        x = x @ k + b
+        if i < n_fc - 1:
+            x = jax.nn.relu(x)
+    assert idx == len(specs)
+    return x
+
+
+def loss_fn(profile: Profile, params: List[jax.Array],
+            images: jax.Array, labels_onehot: jax.Array) -> jax.Array:
+    """Softmax cross-entropy against one-hot labels (mean over batch)."""
+    logits = forward(profile, params, images)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(labels_onehot * logp, axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# Adam optimizer (tf.train.AdamOptimizer defaults, §III-B)
+# ---------------------------------------------------------------------------
+
+ADAM_LR = 1e-4
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def make_train_step(profile: Profile):
+    """Build the jittable flat train step.
+
+    Flat signature (the artifact ABI, mirrored in model_meta.json):
+
+        inputs : [P params..., P m..., P v..., step f32[], images, labels]
+        outputs: (P new_params..., P new_m..., P new_v..., new_step, loss)
+    """
+    n = len(param_specs(profile))
+
+    def train_step(*args):
+        params = list(args[0:n])
+        m = list(args[n:2 * n])
+        v = list(args[2 * n:3 * n])
+        step = args[3 * n]
+        images = args[3 * n + 1]
+        labels = args[3 * n + 2]
+
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(profile, p, images, labels))(params)
+
+        t = step + 1.0
+        bc1 = 1.0 - ADAM_B1 ** t
+        bc2 = 1.0 - ADAM_B2 ** t
+        new_params, new_m, new_v = [], [], []
+        for p, g, mi, vi in zip(params, grads, m, v):
+            mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+            vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * (g * g)
+            update = ADAM_LR * (mi / bc1) / (jnp.sqrt(vi / bc2) + ADAM_EPS)
+            new_params.append(p - update)
+            new_m.append(mi)
+            new_v.append(vi)
+        return tuple(new_params + new_m + new_v + [t, loss])
+
+    return train_step
+
+
+def train_step_example_args(profile: Profile, batch: int):
+    """ShapeDtypeStructs for lowering make_train_step."""
+    sds = jax.ShapeDtypeStruct
+    specs = param_specs(profile)
+    args = [sds(shape, jnp.float32) for _, shape in specs] * 3
+    args.append(sds((), jnp.float32))  # step
+    args.append(sds((batch, profile.input_size, profile.input_size, 3),
+                    jnp.float32))
+    args.append(sds((batch, profile.num_classes), jnp.float32))
+    return args
+
+
+# ---------------------------------------------------------------------------
+# Preprocess graph (wraps the L1 Pallas kernel)
+# ---------------------------------------------------------------------------
+
+
+def make_preprocess(src_size: int, out_size: int):
+    """u8 [B, src, src, 3] -> f32 [B, out, out, 3] via the fused Pallas
+    kernel.  One HLO artifact per (src, out) bucket (DESIGN.md §2)."""
+
+    def preprocess(images_u8):
+        return (fused_preprocess(images_u8, out_size),)
+
+    return preprocess
+
+
+def preprocess_example_args(src_size: int, batch: int = 1):
+    return [jax.ShapeDtypeStruct((batch, src_size, src_size, 3), jnp.uint8)]

@@ -1,0 +1,91 @@
+"""AOT artifact contract tests: HLO text validity + meta ABI consistency."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model as M
+
+
+class TestHloText:
+    def test_preprocess_lowering_is_hlo_text(self):
+        text = aot.lower_preprocess(96, 64)
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+
+    def test_train_lowering_is_hlo_text(self):
+        text = aot.lower_train(M.PROFILES["micro"], 2)
+        assert text.startswith("HloModule")
+        # fwd+bwd must contain convolutions (fwd + grad)
+        assert text.count("convolution") >= 2
+
+    def test_preprocess_has_no_custom_call(self):
+        # interpret=True must lower pallas to plain HLO — a Mosaic
+        # custom-call would be unloadable by the CPU PJRT client.
+        text = aot.lower_preprocess(96, 64)
+        assert "custom-call" not in text or "mosaic" not in text.lower()
+
+    def test_lowering_deterministic(self):
+        assert aot.lower_preprocess(96, 32) == aot.lower_preprocess(96, 32)
+
+
+class TestMeta:
+    def test_profile_meta_counts(self):
+        for name, p in M.PROFILES.items():
+            meta = aot.profile_meta(p)
+            n = meta["num_param_tensors"]
+            assert meta["num_inputs"] == 3 * n + 3
+            assert meta["num_outputs"] == 3 * n + 2
+            assert len(meta["params"]) == n
+            total = sum(
+                int(__import__("numpy").prod(q["shape"]))
+                for q in meta["params"])
+            assert total == meta["num_params"]
+
+    def test_meta_json_roundtrip(self, tmp_path):
+        meta = {"profiles": {n: aot.profile_meta(p)
+                             for n, p in M.PROFILES.items()}}
+        path = tmp_path / "m.json"
+        path.write_text(json.dumps(meta))
+        back = json.loads(path.read_text())
+        assert back == meta
+
+
+class TestWriteIfChanged:
+    def test_skips_identical(self, tmp_path):
+        p = str(tmp_path / "x.txt")
+        assert aot.write_if_changed(p, "abc") is True
+        assert aot.write_if_changed(p, "abc") is False
+        assert aot.write_if_changed(p, "abcd") is True
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__),
+                                    "../../artifacts/model_meta.json")),
+    reason="artifacts not built")
+class TestBuiltArtifacts:
+    """Validate the artifacts actually shipped to the rust side."""
+
+    @pytest.fixture()
+    def meta(self):
+        path = os.path.join(os.path.dirname(__file__),
+                            "../../artifacts/model_meta.json")
+        with open(path) as f:
+            return json.load(f)
+
+    def test_all_artifact_files_exist(self, meta):
+        base = os.path.join(os.path.dirname(__file__), "../../artifacts")
+        for a in meta["artifacts"]:
+            assert os.path.exists(os.path.join(base, a["file"])), a
+
+    def test_adam_constants_match_model(self, meta):
+        assert meta["adam"]["lr"] == M.ADAM_LR
+        assert meta["adam"]["b1"] == M.ADAM_B1
+        assert meta["adam"]["b2"] == M.ADAM_B2
+
+    def test_artifacts_cover_default_buckets(self, meta):
+        pre = {(a["src_size"], a["out_size"])
+               for a in meta["artifacts"] if a["kind"] == "preprocess"}
+        for bucket in aot.DEFAULT_BUCKETS:
+            assert bucket in pre

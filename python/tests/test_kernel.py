@@ -1,0 +1,183 @@
+"""L1 correctness: Pallas fused preprocess kernel vs pure-jnp oracles.
+
+Chain closed here (DESIGN.md §3):
+    pallas kernel == matmul-form jnp ref == jax.image.resize spec.
+Hypothesis sweeps shapes/dtypes; fixed cases pin the paper's actual
+bucket geometries (96->64, 256->64, 256->224).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import (
+    normalize_ref,
+    preprocess_matmul_ref,
+    preprocess_ref,
+)
+from compile.kernels.resize import (
+    IMAGENET_MEAN,
+    IMAGENET_STD,
+    fused_preprocess,
+    resize_weights,
+)
+
+
+def rand_u8(shape, seed=0):
+    return np.random.default_rng(seed).integers(
+        0, 256, size=shape, dtype=np.uint8)
+
+
+# ---------------------------------------------------------------------------
+# resize_weights invariants
+# ---------------------------------------------------------------------------
+
+class TestResizeWeights:
+    @pytest.mark.parametrize("in_size,out_size",
+                             [(96, 64), (256, 64), (256, 224), (64, 64),
+                              (10, 30), (1, 4), (4, 1)])
+    def test_rows_sum_to_one(self, in_size, out_size):
+        w = resize_weights(in_size, out_size)
+        np.testing.assert_allclose(w.sum(axis=1), 1.0, rtol=1e-6)
+
+    @pytest.mark.parametrize("in_size,out_size", [(96, 64), (256, 224)])
+    def test_at_most_two_taps(self, in_size, out_size):
+        w = resize_weights(in_size, out_size)
+        assert ((w != 0).sum(axis=1) <= 2).all()
+
+    def test_identity_when_same_size(self):
+        w = resize_weights(17, 17)
+        np.testing.assert_allclose(w, np.eye(17, dtype=np.float32),
+                                   atol=1e-7)
+
+    def test_weights_nonnegative(self):
+        for a, b in [(96, 64), (64, 96), (256, 224), (7, 13)]:
+            assert (resize_weights(a, b) >= 0).all()
+
+    def test_rejects_bad_sizes(self):
+        with pytest.raises(ValueError):
+            resize_weights(0, 4)
+        with pytest.raises(ValueError):
+            resize_weights(4, 0)
+
+    def test_upsample_interpolates_linearly(self):
+        # Resizing a linear ramp must reproduce a linear ramp exactly in
+        # the interior (bilinear preserves degree-1 signals).
+        w = resize_weights(16, 32)
+        ramp = np.arange(16, dtype=np.float32)
+        out = w @ ramp
+        interior = out[2:-2]
+        diffs = np.diff(interior)
+        np.testing.assert_allclose(diffs, diffs[0], atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# normalize
+# ---------------------------------------------------------------------------
+
+class TestNormalize:
+    def test_zero_pixels_map_to_minus_mean_over_std(self):
+        x = np.zeros((1, 4, 4, 3), np.uint8)
+        out = np.asarray(normalize_ref(jnp.asarray(x)))
+        expect = -(np.asarray(IMAGENET_MEAN) / np.asarray(IMAGENET_STD))
+        np.testing.assert_allclose(out[0, 0, 0], expect, rtol=1e-6)
+
+    def test_255_maps_to_one_normalized(self):
+        x = np.full((1, 2, 2, 3), 255, np.uint8)
+        out = np.asarray(normalize_ref(jnp.asarray(x)))
+        expect = (1.0 - np.asarray(IMAGENET_MEAN)) / np.asarray(IMAGENET_STD)
+        np.testing.assert_allclose(out[0, 1, 1], expect, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracles — fixed paper geometries
+# ---------------------------------------------------------------------------
+
+PAPER_BUCKETS = [(96, 64), (256, 64), (96, 32), (256, 32)]
+
+
+class TestKernelVsRef:
+    @pytest.mark.parametrize("src,out", PAPER_BUCKETS)
+    def test_kernel_matches_matmul_ref(self, src, out):
+        x = jnp.asarray(rand_u8((2, src, src, 3), seed=src * out))
+        k = fused_preprocess(x, out)
+        r = preprocess_matmul_ref(x, out)
+        np.testing.assert_allclose(np.asarray(k), np.asarray(r),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("src,out", PAPER_BUCKETS)
+    def test_matmul_ref_matches_spec(self, src, out):
+        x = jnp.asarray(rand_u8((2, src, src, 3), seed=src + out))
+        r = preprocess_matmul_ref(x, out)
+        s = preprocess_ref(x, out)
+        np.testing.assert_allclose(np.asarray(r), np.asarray(s),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_paper_full_geometry_256_to_224(self):
+        x = jnp.asarray(rand_u8((1, 256, 256, 3), seed=7))
+        k = fused_preprocess(x, 224)
+        s = preprocess_ref(x, 224)
+        np.testing.assert_allclose(np.asarray(k), np.asarray(s),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_constant_image_resizes_to_constant(self):
+        x = jnp.asarray(np.full((1, 96, 96, 3), 128, np.uint8))
+        k = np.asarray(fused_preprocess(x, 64))
+        expect = (128.0 / 255.0 - np.asarray(IMAGENET_MEAN)) \
+            / np.asarray(IMAGENET_STD)
+        np.testing.assert_allclose(k, np.broadcast_to(expect, k.shape),
+                                   rtol=1e-4)
+
+    def test_output_shape_and_dtype(self):
+        x = jnp.asarray(rand_u8((3, 96, 96, 3)))
+        k = fused_preprocess(x, 64)
+        assert k.shape == (3, 64, 64, 3)
+        assert k.dtype == jnp.float32
+
+    def test_batch_elements_independent(self):
+        # Preprocessing image i must not depend on image j != i.
+        a = rand_u8((2, 96, 96, 3), seed=1)
+        b = a.copy()
+        b[1] = rand_u8((96, 96, 3), seed=2)
+        ka = np.asarray(fused_preprocess(jnp.asarray(a), 64))
+        kb = np.asarray(fused_preprocess(jnp.asarray(b), 64))
+        np.testing.assert_array_equal(ka[0], kb[0])
+        assert np.abs(ka[1] - kb[1]).max() > 0
+
+    def test_rejects_non_4d(self):
+        with pytest.raises(ValueError):
+            fused_preprocess(jnp.zeros((96, 96, 3), jnp.uint8), 64)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis shape/dtype sweep
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.integers(1, 3),
+    src=st.integers(8, 64),
+    out=st.integers(4, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(batch, src, out, seed):
+    x = jnp.asarray(rand_u8((batch, src, src, 3), seed=seed))
+    k = fused_preprocess(x, out)
+    r = preprocess_matmul_ref(x, out)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(r),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    src=st.integers(8, 48),
+    out=st.integers(4, 48),
+)
+def test_matmul_form_matches_spec_hypothesis(src, out):
+    x = jnp.asarray(rand_u8((1, src, src, 3), seed=src * 1000 + out))
+    r = preprocess_matmul_ref(x, out)
+    s = preprocess_ref(x, out)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(s),
+                               rtol=1e-3, atol=1e-3)

@@ -1,0 +1,145 @@
+"""L2 correctness: AlexNet profiles, shapes, loss/grad behaviour, Adam."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def make_batch(profile, batch, seed=0):
+    rng = np.random.default_rng(seed)
+    imgs = rng.standard_normal(
+        (batch, profile.input_size, profile.input_size, 3)).astype(np.float32)
+    labels = np.zeros((batch, profile.num_classes), np.float32)
+    labels[np.arange(batch), rng.integers(0, profile.num_classes, batch)] = 1
+    return jnp.asarray(imgs), jnp.asarray(labels)
+
+
+class TestProfiles:
+    @pytest.mark.parametrize("name", ["paper", "mini", "micro"])
+    def test_profile_registered(self, name):
+        assert M.PROFILES[name].name == name
+
+    def test_paper_is_faithful_alexnet(self):
+        p = M.PROFILES["paper"]
+        assert p.input_size == 224
+        assert [c.out_ch for c in p.convs] == [96, 256, 384, 384, 256]
+        assert [c.ksize for c in p.convs] == [11, 5, 3, 3, 3]
+        assert p.fc_widths == (4096, 4096)
+        # 5 convs + 3 FCs, 3 pools — the AlexNet structure (§III-B)
+        assert sum(c.pool for c in p.convs) == 3
+
+    def test_paper_checkpoint_size_near_600mb(self):
+        # §VII: "roughly 600 MB in the case of AlexNet" (params + Adam
+        # moments).  w + m + v, f32.
+        n = M.num_params(M.PROFILES["paper"])
+        ckpt_mb = n * 3 * 4 / 1e6
+        assert 450 <= ckpt_mb <= 900, ckpt_mb
+
+    def test_mini_structure_preserved(self):
+        p = M.PROFILES["mini"]
+        assert len(p.convs) == 5
+        assert sum(c.pool for c in p.convs) == 3
+        assert len(p.fc_widths) + 1 == 3
+
+    def test_param_specs_order_convs_then_fcs(self):
+        specs = M.param_specs(M.PROFILES["micro"])
+        names = [n for n, _ in specs]
+        assert names[0] == "conv1/kernel"
+        assert names[-1].startswith("fc")
+        assert names[-1].endswith("bias")
+        # alternating kernel/bias
+        for i, n in enumerate(names):
+            assert n.endswith("kernel" if i % 2 == 0 else "bias")
+
+    def test_spatial_after_convs(self):
+        # micro: 32 -> conv s2 -> 16 -> pool -> 8 -> conv -> 8 -> pool -> 4
+        assert M.PROFILES["micro"].spatial_after_convs() == 4
+        # paper: 224/4=56 -> pool 28 -> pool 14 -> pool 7
+        assert M.PROFILES["paper"].spatial_after_convs() == 7
+
+
+class TestForward:
+    def test_logit_shape_micro(self):
+        p = M.PROFILES["micro"]
+        params = M.init_params(p)
+        imgs, _ = make_batch(p, 4)
+        logits = M.forward(p, params, imgs)
+        assert logits.shape == (4, p.num_classes)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_initial_loss_at_or_above_chance(self):
+        # A randomly-initialized classifier cannot beat chance: the
+        # cross-entropy must be >= ln(102) - eps and finite.  (He-init
+        # on standard-normal inputs yields confident-but-wrong logits,
+        # so the loss is typically well above ln(C).)
+        p = M.PROFILES["micro"]
+        params = M.init_params(p)
+        imgs, labels = make_batch(p, 8)
+        loss = float(M.loss_fn(p, params, imgs, labels))
+        assert np.isfinite(loss)
+        assert loss > np.log(p.num_classes) - 1.0, loss
+
+
+class TestTrainStep:
+    def _run_steps(self, profile, batch, steps):
+        n = len(M.param_specs(profile))
+        fn = jax.jit(M.make_train_step(profile))
+        params = M.init_params(profile)
+        m = [jnp.zeros_like(p) for p in params]
+        v = [jnp.zeros_like(p) for p in params]
+        step = jnp.float32(0)
+        imgs, labels = make_batch(profile, batch)
+        losses = []
+        for _ in range(steps):
+            out = fn(*params, *m, *v, step, imgs, labels)
+            params, m, v = list(out[:n]), list(out[n:2*n]), list(out[2*n:3*n])
+            step = out[3 * n]
+            losses.append(float(out[3 * n + 1]))
+        return losses, step
+
+    def test_loss_decreases_on_fixed_batch(self):
+        losses, step = self._run_steps(M.PROFILES["micro"], 8, 12)
+        assert losses[-1] < losses[0], losses
+        assert float(step) == 12.0
+
+    def test_output_arity_matches_meta(self):
+        p = M.PROFILES["micro"]
+        n = len(M.param_specs(p))
+        fn = jax.jit(M.make_train_step(p))
+        params = M.init_params(p)
+        zeros = [jnp.zeros_like(x) for x in params]
+        imgs, labels = make_batch(p, 2)
+        out = fn(*params, *zeros, *zeros, jnp.float32(0), imgs, labels)
+        assert len(out) == 3 * n + 2
+
+    def test_step_counter_increments(self):
+        _, step = self._run_steps(M.PROFILES["micro"], 2, 3)
+        assert float(step) == 3.0
+
+    def test_adam_moments_move_from_zero(self):
+        p = M.PROFILES["micro"]
+        n = len(M.param_specs(p))
+        fn = jax.jit(M.make_train_step(p))
+        params = M.init_params(p)
+        zeros = [jnp.zeros_like(x) for x in params]
+        imgs, labels = make_batch(p, 2)
+        out = fn(*params, *zeros, *zeros, jnp.float32(0), imgs, labels)
+        m = out[n:2*n]
+        assert any(float(jnp.abs(mi).max()) > 0 for mi in m)
+
+
+class TestExampleArgs:
+    def test_train_example_args_count(self):
+        p = M.PROFILES["micro"]
+        args = M.train_step_example_args(p, 4)
+        assert len(args) == 3 * len(M.param_specs(p)) + 3
+        assert args[-2].shape == (4, 32, 32, 3)
+        assert args[-1].shape == (4, p.num_classes)
+
+    def test_preprocess_example_args(self):
+        (a,) = M.preprocess_example_args(96, batch=2)
+        assert a.shape == (2, 96, 96, 3)
+        assert a.dtype == jnp.uint8

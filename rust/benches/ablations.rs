@@ -1,0 +1,163 @@
+//! Ablations beyond the paper's figures (DESIGN.md §5): design-choice
+//! checks on the knobs the paper holds fixed.
+//!
+//!  A1 shuffle-buffer size    — randomness/memory trade-off has no
+//!                              bandwidth cost (the paper shuffles the
+//!                              whole path list).
+//!  A2 prefetch depth > 1     — the paper uses 0/1; deeper buffers
+//!                              should not help once overlap is full.
+//!  A3 warm page cache        — second-epoch speedup when caches are
+//!                              not dropped (why the paper runs one
+//!                              epoch cold).
+//!  A4 burst-buffer drain bw  — staging wins even as the slow device
+//!                              gets slower; direct writes degrade
+//!                              proportionally.
+
+use std::sync::Arc;
+
+use dlio::bench;
+use dlio::config::{MicrobenchConfig, MiniAppConfig};
+use dlio::coordinator::{ensure_corpus, microbench, miniapp};
+use dlio::data::CorpusSpec;
+use dlio::metrics::Table;
+use dlio::model::ModelState;
+use dlio::runtime::meta::{ParamSpec, ProfileMeta};
+
+fn main() -> anyhow::Result<()> {
+    bench::banner("Ablations", "design-choice checks", "beyond the paper");
+    let env = bench::env("ablations", None)?;
+    let files = bench::pick(256usize, 512, 2048);
+
+    // --- A1: shuffle buffer size ---
+    println!("\n[A1] shuffle-buffer size vs ingestion bandwidth (ssd, 4 thr)");
+    let spec = CorpusSpec::caltech101(files);
+    let manifest = ensure_corpus(&env.sim, "ssd", &spec)?;
+    let mut t = Table::new(&["shuffle buffer", "img/s"]);
+    for frac in [1usize, 8, 64] {
+        // microbench::run shuffles with a full buffer; emulate smaller
+        // buffers through the pipeline API directly.
+        use dlio::pipeline::{from_manifest, DatasetExt};
+        let sim2 = Arc::clone(&env.sim);
+        let ds = from_manifest(&manifest)
+            .shuffle(manifest.len() / frac + 1, dlio::util::Rng::new(1))
+            .parallel_map(4, move |s| {
+                sim2.read(&s.path).map(|b| b.len() as u64)
+            })
+            .batch(64, false);
+        env.sim.drop_caches();
+        let t0 = std::time::Instant::now();
+        let n: usize = dlio::pipeline::collect(ds)?.iter().map(Vec::len).sum();
+        t.row(&[
+            format!("n/{frac}"),
+            format!("{:.0}", n as f64 / t0.elapsed().as_secs_f64()),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // --- A2: prefetch depth ---
+    println!("\n[A2] prefetch depth (micro profile, ssd, 4 thr)");
+    let mut t = Table::new(&["prefetch", "total s", "ingest wait s"]);
+    for prefetch in [0usize, 1, 2, 4] {
+        let cfg = MiniAppConfig {
+            device: "ssd".into(),
+            threads: 4,
+            batch: 32,
+            prefetch,
+            iterations: bench::pick(4, 6, 20),
+            profile: "micro".into(),
+            seed: 2,
+        };
+        env.sim.drop_caches();
+        let r = miniapp::run(Arc::clone(&env.sim), &env.rt, &manifest, &cfg)?;
+        t.row(&[
+            prefetch.to_string(),
+            format!("{:.2}", r.total_secs),
+            format!("{:.3}", r.ingest_wait_secs),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // --- A3: warm page cache ---
+    println!("\n[A3] cold vs warm page cache (micro-benchmark, hdd, 4 thr)");
+    {
+        let mut testbed = env.testbed.clone();
+        testbed.cache_bytes = 4 << 30;
+        testbed.workdir =
+            format!("{}/bench-ablation-cache", dlio::config::default_workdir());
+        let sim = dlio::coordinator::make_sim(&testbed, None)?;
+        let manifest = ensure_corpus(&sim, "hdd", &spec)?;
+        let cfg = MicrobenchConfig {
+            device: "hdd".into(),
+            threads: 4,
+            batch: 64,
+            iterations: files / 64,
+            preprocess: false,
+            out_size: 64,
+        };
+        let mut t = Table::new(&["epoch", "MB/s", "cache hits"]);
+        for epoch in ["cold", "warm"] {
+            let r = microbench::run(
+                Arc::clone(&sim), &env.rt, &manifest, &cfg, 3)?;
+            let (hits, _) = sim.cache().stats();
+            t.row(&[
+                epoch.into(),
+                format!("{:.1}", r.mb_per_sec()),
+                hits.to_string(),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+
+    // --- A4: burst-buffer drain bandwidth sensitivity ---
+    println!("\n[A4] BB save latency is independent of drain-target speed");
+    {
+        use dlio::checkpoint::BurstBuffer;
+        use dlio::storage::{DeviceModel, StorageSim};
+        let profile = ProfileMeta {
+            name: "abl".into(),
+            input_size: 8,
+            num_classes: 4,
+            num_params: 700_000,
+            params: vec![ParamSpec {
+                name: "fc1/kernel".into(),
+                shape: vec![700, 1000],
+            }],
+        };
+        let state = ModelState::init(&profile, 1);
+        let mut t = Table::new(&["slow-device write bw", "BB save s",
+                                 "drain visible to training?"]);
+        for slow_bw in [40e6, 20e6, 10e6] {
+            let dir = format!(
+                "{}/bench-ablation-bb-{}", dlio::config::default_workdir(),
+                slow_bw as u64);
+            let _ = std::fs::remove_dir_all(&dir);
+            let mk = |name: &str, bw: f64| DeviceModel {
+                name: name.into(),
+                read_bw: 1e9,
+                write_bw: bw,
+                read_lat: 0.0,
+                write_lat: 0.0,
+                channels: 4,
+                elevator: vec![(1, 1.0)],
+                time_scale: 1.0,
+            };
+            let sim = Arc::new(StorageSim::cold(
+                dir, vec![mk("slow", slow_bw), mk("fast", 600e6)])?);
+            let mut bb = BurstBuffer::new(
+                Arc::clone(&sim), profile.clone(), "fast", "slow",
+                "ck/m", 5);
+            bb.saver_mut().sync_on_save = false;
+            let t0 = std::time::Instant::now();
+            bb.save(&state, 1)?;
+            let save_s = t0.elapsed().as_secs_f64();
+            bb.wait_drained();
+            t.row(&[
+                format!("{:.0} MB/s", slow_bw / 1e6),
+                format!("{save_s:.3}"),
+                "no (async)".into(),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+    Ok(())
+}

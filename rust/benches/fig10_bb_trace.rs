@@ -1,0 +1,82 @@
+//! Fig. 10: dstat write traces during checkpointing — direct-to-HDD
+//! (top panel) vs Optane burst buffer with async HDD drain (bottom).
+//!
+//! Paper shapes: direct HDD writes are long and stall training; with
+//! the burst buffer the Optane absorbs the checkpoint bursts and the
+//! delayed HDD drain continues after (training, even after the app
+//! would have ended).
+
+use std::sync::Arc;
+
+use dlio::bench;
+use dlio::config::{CheckpointTarget, CkptStudyConfig, MiniAppConfig};
+use dlio::coordinator::fixtures::{ensure_corpus, make_sim};
+use dlio::coordinator::miniapp;
+use dlio::data::CorpusSpec;
+use dlio::runtime::Runtime;
+use dlio::trace::Dstat;
+
+fn main() -> anyhow::Result<()> {
+    bench::banner(
+        "Fig. 10",
+        "dstat write traces: ckpt to HDD vs Optane burst buffer",
+        "BB: optane absorbs bursts, HDD drain is delayed & off the \
+         training path (§V-C)",
+    );
+    let rt = Runtime::open_default()?;
+    let files = bench::pick(384usize, 512, 9144);
+    let iterations = bench::pick(8usize, 10, 100);
+    let interval = bench::pick(2usize, 2, 20);
+    let spec = CorpusSpec::caltech101(files);
+
+    for (label, target) in [
+        ("direct-to-HDD (top panel)",
+         CheckpointTarget::Direct("hdd".into())),
+        ("optane burst buffer (bottom panel)",
+         CheckpointTarget::BurstBuffer {
+             fast: "optane".into(),
+             slow: "hdd".into(),
+         }),
+    ] {
+        let tracer = Arc::new(Dstat::new(0.25));
+        // Same 1x clock rationale as Fig. 9.
+        let mut testbed = dlio::config::Testbed::paper(
+            bench::effective_scale(1.0));
+        testbed.workdir =
+            format!("{}/bench-fig10", dlio::config::default_workdir());
+        let sim = make_sim(&testbed, Some(tracer.clone()))?;
+        let manifest = ensure_corpus(&sim, "ssd", &spec)?;
+        let cfg = CkptStudyConfig {
+            mini: MiniAppConfig {
+                device: "ssd".into(),
+                threads: 4,
+                batch: 32,
+                prefetch: 1,
+                iterations,
+                profile: "mini".into(),
+                seed: 17,
+            },
+            target,
+            interval,
+            max_to_keep: 5,
+        };
+        let r = miniapp::run_with_checkpoints(
+            Arc::clone(&sim), &rt, &manifest, &cfg)?;
+        println!(
+            "\n--- {label}: {} steps in {:.2}s, ckpt stall {:.2}s ---",
+            r.steps, r.total_secs, r.ckpt_secs
+        );
+        println!("sec,device,write_mb");
+        for row in tracer.rows() {
+            if row.device == "hdd" || row.device == "optane" {
+                println!(
+                    "{:.2},{},{:.3}",
+                    row.interval as f64 * tracer.interval_secs(),
+                    row.device,
+                    row.write_bytes as f64 / 1e6
+                );
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Fig. 5: micro-benchmark bandwidth with a *read-only* map function —
+//! every preprocessing step removed, isolating raw tf.read() ingestion.
+//!
+//! Paper shape: bandwidths rise well above the Fig. 4 (preprocessing)
+//! numbers, approaching the device's IOR bound at high thread counts.
+
+use std::sync::Arc;
+
+use dlio::bench;
+use dlio::config::MicrobenchConfig;
+use dlio::coordinator::{ensure_corpus, microbench};
+use dlio::data::CorpusSpec;
+use dlio::metrics::Table;
+
+fn main() -> anyhow::Result<()> {
+    bench::banner(
+        "Fig. 5",
+        "micro-benchmark bandwidth, read-only map function",
+        "read-only pipeline approaches the IOR bound; preprocessing \
+         (Fig. 4) caps bandwidth below it (§V-A)",
+    );
+    let env = bench::env_with_scale("fig5", 0.5, None)?;
+    let files = bench::pick(128usize, 384, 16384);
+    let spec = CorpusSpec::imagenet_subset_96(files);
+    let iterations = files / 64;
+    let ts = bench::effective_scale(0.5);
+
+    let mut table = Table::new(&[
+        "Device", "1 thr MB/s", "2 thr", "4 thr", "8 thr",
+        "IOR read bound", "8-thr vs bound",
+    ]);
+    for (device, bound) in
+        [("hdd", 163.0), ("ssd", 280.55), ("optane", 1603.06),
+         ("lustre", 1968.618)]
+    {
+        let manifest = ensure_corpus(&env.sim, device, &spec)?;
+        let mut mbs = Vec::new();
+        for threads in [1usize, 2, 4, 8] {
+            let cfg = MicrobenchConfig {
+                device: device.into(),
+                threads,
+                batch: 64,
+                iterations,
+                preprocess: false,
+                out_size: 64,
+            };
+            env.sim.drop_caches();
+            let r = microbench::run(
+                Arc::clone(&env.sim), &env.rt, &manifest, &cfg, 7)?;
+            mbs.push(r.mb_per_sec() / ts); // modelled-device terms
+        }
+        table.row(&[
+            device.into(),
+            format!("{:.1}", mbs[0]),
+            format!("{:.1}", mbs[1]),
+            format!("{:.1}", mbs[2]),
+            format!("{:.1}", mbs[3]),
+            format!("{bound:.1}"),
+            format!("{:.0}%", mbs[3] / bound * 100.0),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Fig. 6: mini-application runtime vs map threads, per device, with
+//! prefetch disabled / one batch prefetched.
+//!
+//! Paper shapes: with prefetch the runtime collapses to (nearly) the
+//! same value regardless of device or thread count — a complete
+//! overlap of input pipeline and computation; without prefetch the
+//! excess runtime is the visible cost of I/O, largest on HDD.
+
+use std::sync::Arc;
+
+use dlio::bench;
+use dlio::config::MiniAppConfig;
+use dlio::coordinator::{ensure_corpus, miniapp};
+use dlio::data::CorpusSpec;
+use dlio::metrics::Table;
+
+fn main() -> anyhow::Result<()> {
+    bench::banner(
+        "Fig. 6",
+        "mini-app runtime: threads x device x prefetch{0,1}",
+        "prefetch=1 makes runtimes equal across devices/threads \
+         (complete overlap, §V-B); prefetch=0 excess = I/O cost",
+    );
+    let env = bench::env("fig6", None)?;
+    let files = bench::pick(512usize, 1024, 9144);
+    let iterations = bench::pick(6usize, 8, 142);
+    let spec = CorpusSpec::caltech101(files);
+    let threads_sweep: &[usize] = if bench::level() >= 2 {
+        &[1, 2, 4, 8]
+    } else {
+        &[1, 4, 8]
+    };
+
+    let mut table = Table::new(&[
+        "Device", "thr", "prefetch=0 s", "prefetch=1 s",
+        "excess (I/O cost) s", "ingest-wait pf=1 s",
+    ]);
+    for device in ["hdd", "ssd", "optane", "lustre"] {
+        let manifest = ensure_corpus(&env.sim, device, &spec)?;
+        for &threads in threads_sweep {
+            let mut totals = [0.0f64; 2];
+            let mut wait1 = 0.0;
+            for (i, prefetch) in [0usize, 1].into_iter().enumerate() {
+                let cfg = MiniAppConfig {
+                    device: device.into(),
+                    threads,
+                    batch: 32,
+                    prefetch,
+                    iterations,
+                    profile: "micro".into(),
+                    seed: 9,
+                };
+                env.sim.drop_caches();
+                let r = miniapp::run(
+                    Arc::clone(&env.sim), &env.rt, &manifest, &cfg)?;
+                totals[i] = r.total_secs;
+                if prefetch == 1 {
+                    wait1 = r.ingest_wait_secs;
+                }
+            }
+            table.row(&[
+                device.into(),
+                threads.to_string(),
+                format!("{:.2}", totals[0]),
+                format!("{:.2}", totals[1]),
+                format!("{:.2}", totals[0] - totals[1]),
+                format!("{wait1:.3}"),
+            ]);
+        }
+    }
+    print!("{}", table.render());
+    Ok(())
+}

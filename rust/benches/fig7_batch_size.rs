@@ -1,0 +1,63 @@
+//! Fig. 7: effect of batch size on mini-app training time (8 map
+//! threads, with and without prefetch).
+//!
+//! Paper shape: execution time for a fixed number of images decreases
+//! as batch size grows (better accelerator utilization), for both
+//! prefetch settings.
+
+use std::sync::Arc;
+
+use dlio::bench;
+use dlio::config::MiniAppConfig;
+use dlio::coordinator::{ensure_corpus, miniapp};
+use dlio::data::CorpusSpec;
+use dlio::metrics::Table;
+
+fn main() -> anyhow::Result<()> {
+    bench::banner(
+        "Fig. 7",
+        "mini-app runtime vs batch size (8 threads)",
+        "larger batches -> shorter time for the same image count \
+         (higher accelerator utilization, §V-B)",
+    );
+    let env = bench::env("fig7", None)?;
+    let total_images = bench::pick(256usize, 512, 9088);
+    let spec = CorpusSpec::caltech101(total_images);
+    let manifest = ensure_corpus(&env.sim, "ssd", &spec)?;
+
+    let mut table = Table::new(&[
+        "Batch", "iters", "prefetch=0 s", "prefetch=1 s",
+        "imgs/s (pf=1)",
+    ]);
+    for batch in [16usize, 32, 64, 128] {
+        let iterations = total_images / batch;
+        if iterations == 0 {
+            continue;
+        }
+        let mut totals = [0.0f64; 2];
+        for (i, prefetch) in [0usize, 1].into_iter().enumerate() {
+            let cfg = MiniAppConfig {
+                device: "ssd".into(),
+                threads: 8,
+                batch,
+                prefetch,
+                iterations,
+                profile: "micro".into(),
+                seed: 5,
+            };
+            env.sim.drop_caches();
+            let r = miniapp::run(
+                Arc::clone(&env.sim), &env.rt, &manifest, &cfg)?;
+            totals[i] = r.total_secs;
+        }
+        table.row(&[
+            batch.to_string(),
+            iterations.to_string(),
+            format!("{:.2}", totals[0]),
+            format!("{:.2}", totals[1]),
+            format!("{:.0}", (iterations * batch) as f64 / totals[1]),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Fig. 8: dstat I/O trace of the mini-application over time, HDD and
+//! SSD, prefetch disabled vs one batch prefetched.
+//!
+//! Paper shapes: without prefetch a stable interleaving of read bursts
+//! between batch draws; with prefetch the intervals are closer and
+//! per-interval read volume higher (the pipeline runs ahead).
+
+use std::sync::Arc;
+
+use dlio::bench;
+use dlio::config::MiniAppConfig;
+use dlio::coordinator::fixtures::{ensure_corpus, make_sim};
+use dlio::coordinator::miniapp;
+use dlio::data::CorpusSpec;
+use dlio::runtime::Runtime;
+use dlio::trace::Dstat;
+
+fn main() -> anyhow::Result<()> {
+    bench::banner(
+        "Fig. 8",
+        "dstat trace of mini-app reads (HDD / SSD, prefetch 0/1)",
+        "prefetch=0: interleaved read bursts; prefetch=1: denser, \
+         higher-volume reads (§V-B)",
+    );
+    let files = bench::pick(384usize, 768, 9144);
+    let iterations = bench::pick(6usize, 10, 142);
+    let spec = CorpusSpec::caltech101(files);
+    let rt = Runtime::open_default()?;
+
+    for device in ["hdd", "ssd"] {
+        for prefetch in [0usize, 1] {
+            // Fresh sim per run so traces are isolated.
+            let tracer = Arc::new(Dstat::new(0.25));
+            let mut testbed = dlio::config::Testbed::paper(
+                dlio::config::default_time_scale());
+            testbed.workdir = format!(
+                "{}/bench-fig8", dlio::config::default_workdir());
+            let sim = make_sim(&testbed, Some(tracer.clone()))?;
+            let manifest = ensure_corpus(&sim, device, &spec)?;
+            let cfg = MiniAppConfig {
+                device: device.into(),
+                threads: 4,
+                batch: 32,
+                prefetch,
+                iterations,
+                profile: "micro".into(),
+                seed: 3,
+            };
+            let r = miniapp::run(Arc::clone(&sim), &rt, &manifest, &cfg)?;
+            println!(
+                "\n--- {device}, prefetch={prefetch}: {} steps in {:.2}s \
+                 (ingest wait {:.2}s) ---",
+                r.steps, r.total_secs, r.ingest_wait_secs
+            );
+            // Print only this device's series.
+            println!("sec,read_mb");
+            for row in tracer.rows() {
+                if row.device == device {
+                    println!(
+                        "{:.2},{:.3}",
+                        row.interval as f64 * tracer.interval_secs(),
+                        row.read_bytes as f64 / 1e6
+                    );
+                }
+            }
+        }
+    }
+    Ok(())
+}

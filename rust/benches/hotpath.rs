@@ -1,0 +1,145 @@
+//! Hot-path micro-benchmarks (§Perf instrument, EXPERIMENTS.md §Perf).
+//!
+//! Times the L3 building blocks in isolation so the perf pass can see
+//! where per-element cost goes: pipeline dispatch, prefetch handoff,
+//! batch assembly, SIMG decode, literal marshalling, the preprocess
+//! kernel execution, and one train step.
+
+use std::time::Instant;
+
+use dlio::data::format;
+use dlio::pipeline::{from_vec, DatasetExt, ImageBatch, ProcessedImage};
+use dlio::runtime::executable::lit;
+use dlio::runtime::Runtime;
+use dlio::util::Rng;
+
+fn time_per<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn row(name: &str, per: f64, unit: &str) {
+    let v = if per >= 1e-3 {
+        format!("{:.3} ms", per * 1e3)
+    } else {
+        format!("{:.1} us", per * 1e6)
+    };
+    println!("{name:<44} {v:>12}  {unit}");
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("\n=== hotpath: L3 per-element costs ===");
+    let mut rng = Rng::new(1);
+
+    // Pipeline dispatch overhead: pass-through map of unit items.
+    let per = {
+        let n = 100_000;
+        let t0 = Instant::now();
+        let ds = from_vec((0..n as u64).collect::<Vec<_>>())
+            .parallel_map(4, Ok);
+        let out = dlio::pipeline::collect(ds)?;
+        assert_eq!(out.len(), n);
+        t0.elapsed().as_secs_f64() / n as f64
+    };
+    row("parallel_map dispatch (4 thr, no work)", per, "per element");
+
+    // Prefetch handoff.
+    let per = {
+        let n = 100_000;
+        let t0 = Instant::now();
+        let ds = from_vec((0..n as u64).collect::<Vec<_>>()).prefetch(4);
+        let out = dlio::pipeline::collect(ds)?;
+        assert_eq!(out.len(), n);
+        t0.elapsed().as_secs_f64() / n as f64
+    };
+    row("prefetch handoff", per, "per element");
+
+    // SIMG decode (96px caltech-style image).
+    let img = {
+        let mut pixels = vec![0u8; 96 * 96 * 3];
+        for (i, p) in pixels.iter_mut().enumerate() {
+            *p = ((i * 31) % 251) as u8;
+        }
+        dlio::data::Image {
+            width: 96, height: 96, channels: 3, label: 1, pixels,
+        }
+    };
+    let encoded = format::encode(&img, Some(12 * 1024), 7)?;
+    let per = time_per(500, || {
+        let _ = format::decode(&encoded).unwrap();
+    });
+    row("SIMG decode (96x96, ~12 KB file)", per, "per image");
+
+    let encoded_big = {
+        let mut pixels = vec![0u8; 256 * 256 * 3];
+        rng.fill_bytes(&mut pixels);
+        let img = dlio::data::Image {
+            width: 256, height: 256, channels: 3, label: 1, pixels,
+        };
+        format::encode(&img, Some(112 * 1024), 7)?
+    };
+    let per = time_per(200, || {
+        let _ = format::decode(&encoded_big).unwrap();
+    });
+    row("SIMG decode (256x256, ~112 KB file)", per, "per image");
+
+    // Batch assembly (32 x 32x32 images).
+    let samples: Vec<ProcessedImage> = (0..32)
+        .map(|i| ProcessedImage {
+            pixels: vec![0.1; 32 * 32 * 3],
+            size: 32,
+            label: i % 4,
+            bytes_read: 0,
+        })
+        .collect();
+    let per = time_per(2000, || {
+        let _ = ImageBatch::assemble(samples.clone(), 102).unwrap();
+    });
+    row("batch assembly (32 x 32px, incl clone)", per, "per batch");
+
+    // Literal marshalling: 1 MB f32.
+    let data = vec![0.5f32; 262_144];
+    let per = time_per(500, || {
+        let _ = lit::f32(&[262_144], &data).unwrap();
+    });
+    row("literal upload 1 MB f32", per, "per literal");
+
+    // PJRT paths (need artifacts).
+    match Runtime::open_default() {
+        Err(_) => println!("(artifacts not built; skipping PJRT rows)"),
+        Ok(rt) => {
+            let exe = rt.preprocess(96, 64)?.get()?;
+            let raw = vec![128u8; 96 * 96 * 3];
+            let per = time_per(200, || {
+                let _ = dlio::coordinator::workload::run_preprocess(
+                    &exe, &raw, 96, 64).unwrap();
+            });
+            row("preprocess kernel exec (96->64, PJRT)", per, "per image");
+
+            let mut trainer =
+                dlio::model::Trainer::new(&rt, "micro", 16, 1)?;
+            let prof = trainer.profile().clone();
+            let samples: Vec<ProcessedImage> = (0..16)
+                .map(|_| ProcessedImage {
+                    pixels: (0..prof.input_size * prof.input_size * 3)
+                        .map(|_| rng.next_f32())
+                        .collect(),
+                    size: prof.input_size as u32,
+                    label: rng.next_below(prof.num_classes as u64) as u32,
+                    bytes_read: 0,
+                })
+                .collect();
+            let batch = ImageBatch::assemble(samples,
+                                             prof.num_classes as u32)?;
+            let per = time_per(10, || {
+                trainer.step(&batch).unwrap();
+            });
+            row("train step micro b16 (PJRT, incl marshal)", per,
+                "per step");
+        }
+    }
+    Ok(())
+}

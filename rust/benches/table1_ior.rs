@@ -1,0 +1,63 @@
+//! Table I: IOR raw device bandwidth upper bounds.
+//!
+//! Protocol (§IV): sequential read+write of one large file, 6 reps,
+//! first rep discarded as warm-up, median reported, caches dropped
+//! between runs.  File size is bench-scaled (the token-bucket model
+//! makes bandwidth size-independent past the burst window).
+
+use dlio::bench;
+use dlio::config::default_time_scale;
+use dlio::metrics::Table;
+use dlio::storage::ior;
+
+const PAPER: [(&str, f64, f64); 4] = [
+    ("hdd", 163.00, 133.14),
+    ("ssd", 280.55, 195.05),
+    ("optane", 1603.06, 511.78),
+    ("lustre", 1968.618, 991.914),
+];
+
+fn main() -> anyhow::Result<()> {
+    bench::banner(
+        "Table I",
+        "IOR max read/write bandwidth per device",
+        "HDD 163.00/133.14, SSD 280.55/195.05, Optane 1603.06/511.78, \
+         Lustre 1968.618/991.914 MB/s",
+    );
+    let env = bench::env("table1", None)?;
+    let cfg = ior::IorConfig {
+        file_bytes: bench::pick(16_000_000u64, 64_000_000, 512_000_000),
+        reps: bench::pick(3usize, 6, 6),
+    };
+    let ts = default_time_scale();
+    println!(
+        "probe: {} MB x {} reps (time-scale {ts}x; measured values are \
+         divided by the scale to report modelled-device terms)",
+        cfg.file_bytes / 1_000_000, cfg.reps
+    );
+
+    let mut table = Table::new(&[
+        "Device", "Read MB/s", "(paper)", "Write MB/s", "(paper)",
+        "read err", "write err",
+    ]);
+    for row in ior::run_all(&env.sim, &cfg)? {
+        let (_, pr, pw) = PAPER
+            .iter()
+            .find(|(n, _, _)| *n == row.device)
+            .copied()
+            .unwrap_or(("", f64::NAN, f64::NAN));
+        let read = row.max_read_mbs / ts;
+        let write = row.max_write_mbs / ts;
+        table.row(&[
+            row.device.clone(),
+            format!("{read:.2}"),
+            format!("{pr:.2}"),
+            format!("{write:.2}"),
+            format!("{pw:.2}"),
+            format!("{:+.1}%", (read / pr - 1.0) * 100.0),
+            format!("{:+.1}%", (write / pw - 1.0) * 100.0),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}

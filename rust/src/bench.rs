@@ -1,0 +1,93 @@
+//! Shared support for the figure/table bench harnesses
+//! (`rust/benches/*.rs`, run via `cargo bench`).
+//!
+//! Each bench regenerates one table or figure of the paper: it prints
+//! the same rows/series the paper reports, next to the paper's
+//! reference numbers where the text states them.  Absolute numbers
+//! differ (simulated testbed, accelerated clock); the *shapes* — who
+//! wins, by what factor, where curves flatten — are the reproduction
+//! target (see EXPERIMENTS.md).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{default_time_scale, Testbed};
+use crate::coordinator::fixtures::make_sim;
+use crate::runtime::Runtime;
+use crate::storage::{IoObserver, StorageSim};
+
+/// Standard bench environment: paper testbed at the default (or
+/// `$DLIO_TIME_SCALE`) acceleration, per-bench workdir, artifacts open.
+pub struct BenchEnv {
+    pub testbed: Testbed,
+    pub sim: Arc<StorageSim>,
+    pub rt: Runtime,
+}
+
+/// Create the bench environment (optionally traced).
+pub fn env(bench: &str, observer: Option<Arc<dyn IoObserver>>)
+    -> Result<BenchEnv>
+{
+    env_with_scale(bench, default_time_scale(), observer)
+}
+
+/// Like [`env`] but with a bench-specific default time scale
+/// (`$DLIO_TIME_SCALE` still takes precedence).  The thread-scaling
+/// figures run the devices *slower* than the default so that device
+/// service time dominates single-core map-function compute, matching
+/// the paper's I/O:CPU balance per worker (EXPERIMENTS.md).
+pub fn env_with_scale(
+    bench: &str,
+    scale_default: f64,
+    observer: Option<Arc<dyn IoObserver>>,
+) -> Result<BenchEnv> {
+    let scale = std::env::var("DLIO_TIME_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(scale_default);
+    let mut testbed = Testbed::paper(scale);
+    testbed.workdir =
+        format!("{}/bench-{bench}", crate::config::default_workdir());
+    let sim = make_sim(&testbed, observer)?;
+    let rt = Runtime::open_default()?;
+    Ok(BenchEnv { testbed, sim, rt })
+}
+
+/// The time scale actually in force for a bench created with
+/// [`env_with_scale`].
+pub fn effective_scale(scale_default: f64) -> f64 {
+    std::env::var("DLIO_TIME_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(scale_default)
+}
+
+/// Bench sizing knob: 0 = smoke (CI-fast), 1 = default, 2 = full paper
+/// geometry.  Set `DLIO_BENCH_LEVEL`.
+pub fn level() -> u32 {
+    std::env::var("DLIO_BENCH_LEVEL")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+}
+
+/// Scale a (smoke, default, full) triple by the bench level.
+pub fn pick<T: Copy>(smoke: T, default: T, full: T) -> T {
+    match level() {
+        0 => smoke,
+        1 => default,
+        _ => full,
+    }
+}
+
+/// Print the bench banner with the reproduction context.
+pub fn banner(id: &str, what: &str, paper_ref: &str) {
+    println!("\n=== {id}: {what} ===");
+    println!("paper reference: {paper_ref}");
+    println!(
+        "testbed: simulated Blackdog+Tegner devices at {}x time scale \
+         (ratios are scale-invariant)",
+        default_time_scale()
+    );
+}

@@ -1,0 +1,219 @@
+//! Proof-of-concept burst buffer (§III-C, Figs. 9-10).
+//!
+//! The paper: *"when the checkpoint saver is called, a checkpoint is
+//! created and synchronized to a fast non-volatile memory device.  At
+//! the same time a process is spawned in background to copy the just
+//! created files to hard disk for storage.  Since the checkpoint was
+//! already written to persistent memory, it is possible to continue
+//! training without disruption."*  And §V-C: once drained, staged
+//! copies can be cleaned up ("by moving these files to HDD for
+//! archiving it is possible to cleanup the buffer"), and the HDD copy
+//! needs no immediate sync.
+//!
+//! Implementation: a [`Saver`] targeting the fast device + one drainer
+//! thread consuming a queue of drain jobs (copy triple to the slow
+//! device, then optionally delete the staged files).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::model::ModelState;
+use crate::runtime::meta::ProfileMeta;
+use crate::storage::StorageSim;
+
+use super::saver::{CheckpointHandle, Saver};
+
+struct DrainQueue {
+    jobs: Mutex<VecDeque<CheckpointHandle>>,
+    available: Condvar,
+    idle: Condvar,
+    shutdown: Mutex<bool>,
+}
+
+/// Burst-buffer checkpointer: synchronous save to `fast`, asynchronous
+/// drain to `slow`.
+pub struct BurstBuffer {
+    saver: Saver,
+    slow_device: String,
+    queue: Arc<DrainQueue>,
+    drainer: Option<JoinHandle<()>>,
+    drained: Arc<AtomicU64>,
+    drain_errors: Arc<AtomicU64>,
+    cleanup_staged: Arc<AtomicBool>,
+}
+
+impl BurstBuffer {
+    pub fn new(
+        sim: Arc<StorageSim>,
+        profile: ProfileMeta,
+        fast_device: &str,
+        slow_device: &str,
+        prefix: &str,
+        max_to_keep: usize,
+    ) -> BurstBuffer {
+        let saver = Saver::new(
+            Arc::clone(&sim),
+            profile,
+            fast_device,
+            prefix,
+            max_to_keep,
+        );
+        let queue = Arc::new(DrainQueue {
+            jobs: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            idle: Condvar::new(),
+            shutdown: Mutex::new(false),
+        });
+        let drained = Arc::new(AtomicU64::new(0));
+        let drain_errors = Arc::new(AtomicU64::new(0));
+        let cleanup_staged = Arc::new(AtomicBool::new(false));
+
+        let drainer = {
+            let q = Arc::clone(&queue);
+            let sim = Arc::clone(&sim);
+            let slow = slow_device.to_string();
+            let drained = Arc::clone(&drained);
+            let errors = Arc::clone(&drain_errors);
+            let cleanup = Arc::clone(&cleanup_staged);
+            std::thread::Builder::new()
+                .name("dlio-bb-drain".into())
+                .spawn(move || drain_loop(q, sim, slow, drained, errors,
+                                          cleanup))
+                .expect("spawn burst-buffer drainer")
+        };
+
+        BurstBuffer {
+            saver,
+            slow_device: slow_device.to_string(),
+            queue,
+            drainer: Some(drainer),
+            drained,
+            drain_errors,
+            cleanup_staged,
+        }
+    }
+
+    /// Save to the fast device (synchronous, synced) and enqueue the
+    /// asynchronous drain to the slow device.  Returns as soon as the
+    /// fast copy is durable — this is the time training is paused.
+    pub fn save(&mut self, state: &ModelState, step: u64)
+        -> Result<CheckpointHandle>
+    {
+        let handle = self.saver.save(state, step)?;
+        {
+            let mut jobs = self.queue.jobs.lock().unwrap();
+            jobs.push_back(handle.clone());
+        }
+        self.queue.available.notify_one();
+        Ok(handle)
+    }
+
+    /// Delete staged fast-device files once drained — the paper's
+    /// "cleanup the buffer for other data" (§V-C).  Off by default so
+    /// restores can come from the fast copy.
+    pub fn set_cleanup_staged(&self, on: bool) {
+        self.cleanup_staged.store(on, Ordering::SeqCst);
+    }
+
+    /// Number of checkpoints fully drained to the slow device.
+    pub fn drained_count(&self) -> u64 {
+        self.drained.load(Ordering::SeqCst)
+    }
+
+    pub fn drain_error_count(&self) -> u64 {
+        self.drain_errors.load(Ordering::SeqCst)
+    }
+
+    /// Block until every enqueued drain has completed (end-of-run
+    /// barrier; the paper notes HDD flushing "continues after the
+    /// application ends" — experiments call this to account for it).
+    pub fn wait_drained(&self) {
+        let mut jobs = self.queue.jobs.lock().unwrap();
+        while !jobs.is_empty() {
+            jobs = self.queue.idle.wait(jobs).unwrap();
+        }
+    }
+
+    /// Access to the inner saver (retention list etc.).
+    pub fn saver(&self) -> &Saver {
+        &self.saver
+    }
+
+    pub fn saver_mut(&mut self) -> &mut Saver {
+        &mut self.saver
+    }
+
+    pub fn slow_device(&self) -> &str {
+        &self.slow_device
+    }
+}
+
+fn drain_loop(
+    q: Arc<DrainQueue>,
+    sim: Arc<StorageSim>,
+    slow: String,
+    drained: Arc<AtomicU64>,
+    errors: Arc<AtomicU64>,
+    cleanup: Arc<AtomicBool>,
+) {
+    loop {
+        let job = {
+            let mut jobs = q.jobs.lock().unwrap();
+            loop {
+                if let Some(j) = jobs.front().cloned() {
+                    break j;
+                }
+                if *q.shutdown.lock().unwrap() {
+                    return;
+                }
+                jobs = q.available.wait(jobs).unwrap();
+            }
+        };
+        // Copy the triple to the slow device.  No syncfs: "it is not
+        // necessary to enforce immediate synchronization ... when moved
+        // to HDD" (§V-C).
+        let mut ok = true;
+        for f in job.files() {
+            let dst = crate::storage::SimPath::new(slow.clone(), f.rel.clone());
+            if let Err(e) = sim.copy(&f, &dst) {
+                eprintln!("[burst-buffer] drain {f}: {e:#}");
+                errors.fetch_add(1, Ordering::SeqCst);
+                ok = false;
+                break;
+            }
+        }
+        if ok {
+            drained.fetch_add(1, Ordering::SeqCst);
+            if cleanup.load(Ordering::SeqCst) {
+                for f in job.files() {
+                    if sim.exists(&f) {
+                        let _ = sim.remove(&f);
+                    }
+                }
+            }
+        }
+        // Pop the job and wake any wait_drained() callers.
+        let mut jobs = q.jobs.lock().unwrap();
+        jobs.pop_front();
+        let empty = jobs.is_empty();
+        drop(jobs);
+        if empty {
+            q.idle.notify_all();
+        }
+    }
+}
+
+impl Drop for BurstBuffer {
+    fn drop(&mut self) {
+        self.wait_drained();
+        *self.queue.shutdown.lock().unwrap() = true;
+        self.queue.available.notify_all();
+        if let Some(d) = self.drainer.take() {
+            let _ = d.join();
+        }
+    }
+}

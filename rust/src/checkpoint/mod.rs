@@ -1,0 +1,8 @@
+//! Checkpointing (§II-B, §III-C): a `tf.train.Saver` work-alike plus
+//! the paper's proof-of-concept burst buffer.
+
+pub mod burst_buffer;
+pub mod saver;
+
+pub use burst_buffer::BurstBuffer;
+pub use saver::{CheckpointHandle, Saver};

@@ -1,0 +1,251 @@
+//! `tf.train.Saver` work-alike (§II-B).
+//!
+//! Saving a checkpoint emits the same file triple TensorFlow does:
+//!
+//! * `<prefix>-<step>.meta`  — graph structure (here: profile name +
+//!   ordered tensor names/shapes, as JSON),
+//! * `<prefix>-<step>.index` — tensor -> (offset, length) table into
+//!   the data file,
+//! * `<prefix>-<step>.data`  — the raw variable contents
+//!   (params + Adam moments + step, little-endian f32).
+//!
+//! Semantics reproduced from the paper: saving is synchronous (training
+//! pauses — "TensorFlow currently does not support overlap of
+//! checkpointing and computation", §VII), a `syncfs()` follows every
+//! save (§III-C), and only the most recent `max_to_keep` checkpoints
+//! are retained (default five, §II-B).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::ModelState;
+use crate::runtime::meta::ProfileMeta;
+use crate::storage::{SimPath, StorageSim};
+use crate::util::json::{obj, to_string, Json};
+
+/// Identifies one saved checkpoint.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CheckpointHandle {
+    pub device: String,
+    pub prefix: String,
+    pub step: u64,
+}
+
+impl CheckpointHandle {
+    pub fn file(&self, suffix: &str) -> SimPath {
+        SimPath::new(
+            self.device.clone(),
+            format!("{}-{}.{}", self.prefix, self.step, suffix),
+        )
+    }
+
+    pub fn files(&self) -> [SimPath; 3] {
+        [self.file("meta"), self.file("index"), self.file("data")]
+    }
+}
+
+/// The checkpoint saver.
+pub struct Saver {
+    sim: Arc<StorageSim>,
+    profile: ProfileMeta,
+    device: String,
+    prefix: String,
+    max_to_keep: usize,
+    saved: Vec<CheckpointHandle>,
+    /// Skip the post-save syncfs (used by tests; experiments keep it).
+    pub sync_on_save: bool,
+}
+
+impl Saver {
+    /// `prefix` is the path prefix *within* `device`, e.g.
+    /// `"ckpt/model"` -> `device://ckpt/model-120.data`.
+    pub fn new(
+        sim: Arc<StorageSim>,
+        profile: ProfileMeta,
+        device: &str,
+        prefix: &str,
+        max_to_keep: usize,
+    ) -> Saver {
+        Saver {
+            sim,
+            profile,
+            device: device.to_string(),
+            prefix: prefix.to_string(),
+            max_to_keep: max_to_keep.max(1),
+            saved: Vec::new(),
+            sync_on_save: true,
+        }
+    }
+
+    fn meta_json(&self) -> String {
+        let params: Vec<Json> = self
+            .profile
+            .params
+            .iter()
+            .map(|p| {
+                obj(vec![
+                    ("name", Json::Str(p.name.clone())),
+                    (
+                        "shape",
+                        Json::Arr(
+                            p.shape
+                                .iter()
+                                .map(|&d| Json::Num(d as f64))
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        to_string(&obj(vec![
+            ("profile", Json::Str(self.profile.name.clone())),
+            ("params", Json::Arr(params)),
+        ]))
+    }
+
+    fn index_json(&self) -> String {
+        // Offsets into the .data payload: params, then m, then v.
+        let mut entries = BTreeMap::new();
+        let mut offset = 0u64;
+        for group in ["", "m/", "v/"] {
+            for p in &self.profile.params {
+                let len = p.num_elements() as u64 * 4;
+                entries.insert(
+                    format!("{group}{}", p.name),
+                    obj(vec![
+                        ("offset", Json::Num(offset as f64)),
+                        ("len", Json::Num(len as f64)),
+                    ]),
+                );
+                offset += len;
+            }
+        }
+        entries.insert(
+            "global_step".into(),
+            obj(vec![
+                ("offset", Json::Num(offset as f64)),
+                ("len", Json::Num(4.0)),
+            ]),
+        );
+        to_string(&Json::Obj(entries))
+    }
+
+    /// Save a checkpoint of `state` at training step `step`.
+    /// Synchronous: returns once all three files are written (and
+    /// synced, unless `sync_on_save` is off).
+    pub fn save(&mut self, state: &ModelState, step: u64)
+        -> Result<CheckpointHandle>
+    {
+        state.validate(&self.profile)?;
+        let handle = CheckpointHandle {
+            device: self.device.clone(),
+            prefix: self.prefix.clone(),
+            step,
+        };
+        self.sim
+            .write(&handle.file("meta"), self.meta_json().as_bytes())?;
+        self.sim
+            .write(&handle.file("index"), self.index_json().as_bytes())?;
+        self.sim.write(&handle.file("data"), &state.to_bytes())?;
+        if self.sync_on_save {
+            // §III-C: "we perform disk synchronization ... immediately
+            // after Saver returns".
+            self.sim.syncfs(&self.device)?;
+        }
+        self.saved.push(handle.clone());
+        self.cleanup()?;
+        Ok(handle)
+    }
+
+    /// Retention: keep only the newest `max_to_keep` checkpoints.
+    fn cleanup(&mut self) -> Result<()> {
+        while self.saved.len() > self.max_to_keep {
+            let victim = self.saved.remove(0);
+            for f in victim.files() {
+                if self.sim.exists(&f) {
+                    self.sim.remove(&f)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Checkpoints currently retained, oldest first.
+    pub fn retained(&self) -> &[CheckpointHandle] {
+        &self.saved
+    }
+
+    /// Restore a state from a handle (graph meta first, then
+    /// variables — the order §II-B describes).
+    pub fn restore(
+        sim: &StorageSim,
+        profile: &ProfileMeta,
+        handle: &CheckpointHandle,
+    ) -> Result<ModelState> {
+        let meta_bytes = sim
+            .read(&handle.file("meta"))
+            .context("reading checkpoint .meta")?;
+        let meta = Json::parse(std::str::from_utf8(&meta_bytes)?)
+            .context("parsing checkpoint .meta")?;
+        let saved_profile = meta
+            .get("profile")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!(".meta missing profile"))?;
+        if saved_profile != profile.name {
+            return Err(anyhow!(
+                "checkpoint is for profile {saved_profile:?}, \
+                 trainer uses {:?}", profile.name
+            ));
+        }
+        let n_meta = meta
+            .get("params")
+            .and_then(Json::as_arr)
+            .map(|a| a.len())
+            .unwrap_or(0);
+        if n_meta != profile.params.len() {
+            return Err(anyhow!(
+                ".meta has {n_meta} tensors, profile has {}",
+                profile.params.len()
+            ));
+        }
+        let data = sim
+            .read(&handle.file("data"))
+            .context("reading checkpoint .data")?;
+        let state = ModelState::from_bytes(profile, &data)?;
+        state.validate(profile)?;
+        Ok(state)
+    }
+
+    /// Find the latest checkpoint under `device://dir` with `prefix`.
+    pub fn latest(
+        sim: &StorageSim,
+        device: &str,
+        prefix: &str,
+    ) -> Result<Option<CheckpointHandle>> {
+        let dir = match prefix.rsplit_once('/') {
+            Some((d, _)) => d,
+            None => "",
+        };
+        let mut best: Option<CheckpointHandle> = None;
+        for p in sim.list(device, dir)? {
+            if let Some(rest) = p
+                .rel
+                .strip_prefix(&format!("{prefix}-"))
+                .and_then(|r| r.strip_suffix(".data"))
+            {
+                if let Ok(step) = rest.parse::<u64>() {
+                    if best.as_ref().map_or(true, |b| step > b.step) {
+                        best = Some(CheckpointHandle {
+                            device: device.to_string(),
+                            prefix: prefix.to_string(),
+                            step,
+                        });
+                    }
+                }
+            }
+        }
+        Ok(best)
+    }
+}

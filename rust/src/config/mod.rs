@@ -1,0 +1,302 @@
+//! Configuration: testbed setup (devices, cache, time scale) and
+//! experiment parameter blocks, plus a tiny CLI argument parser used
+//! by the `dlio` binary and the bench harnesses.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::storage::{profiles, DeviceModel};
+
+/// Testbed description: which simulated devices exist and how fast the
+/// simulation runs relative to the modelled hardware.
+#[derive(Debug, Clone)]
+pub struct Testbed {
+    pub devices: Vec<DeviceModel>,
+    /// Simulated page-cache capacity in bytes (0 = the paper's
+    /// cold-cache protocol).
+    pub cache_bytes: u64,
+    /// Working directory for backing files.
+    pub workdir: String,
+}
+
+impl Testbed {
+    /// The paper's two environments, at a given simulation speed-up.
+    /// `time_scale` > 1 accelerates devices uniformly — every ratio in
+    /// every figure is preserved (see DESIGN.md §6).
+    pub fn paper(time_scale: f64) -> Testbed {
+        Testbed {
+            devices: vec![
+                profiles::blackdog_hdd(time_scale),
+                profiles::blackdog_ssd(time_scale),
+                profiles::blackdog_optane(time_scale),
+                profiles::tegner_lustre(time_scale),
+            ],
+            cache_bytes: 0,
+            workdir: default_workdir(),
+        }
+    }
+}
+
+/// `$DLIO_WORKDIR`, else tmpfs (`/dev/shm`) when available, else the
+/// system tmp dir.  Backing files *must* live on fast storage: the
+/// simulator charges real I/O time against the modelled service time
+/// (see `storage::device`), so slow real storage would flatten the
+/// modelled device differences.
+pub fn default_workdir() -> String {
+    if let Ok(dir) = std::env::var("DLIO_WORKDIR") {
+        return dir;
+    }
+    let shm = std::path::Path::new("/dev/shm");
+    if shm.is_dir() {
+        return shm.join("dlio-work").to_string_lossy().into_owned();
+    }
+    std::env::temp_dir()
+        .join("dlio-work")
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// Default simulation speed-up for benches: devices run 8x the modelled
+/// speed, keeping every *ratio* intact while making a full figure sweep
+/// take minutes instead of hours.  Override with `$DLIO_TIME_SCALE`.
+pub fn default_time_scale() -> f64 {
+    std::env::var("DLIO_TIME_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8.0)
+}
+
+/// Micro-benchmark parameters (§III-A / §IV-A).
+#[derive(Debug, Clone)]
+pub struct MicrobenchConfig {
+    pub device: String,
+    pub threads: usize,
+    pub batch: usize,
+    /// Batches to consume (paper: 256 x batch 64 = 16,384 images).
+    pub iterations: usize,
+    /// Full pipeline (read+decode+resize, Fig. 4) vs read-only (Fig. 5).
+    pub preprocess: bool,
+    /// Model input size the resize targets.
+    pub out_size: usize,
+}
+
+impl Default for MicrobenchConfig {
+    fn default() -> Self {
+        MicrobenchConfig {
+            device: "ssd".into(),
+            threads: 4,
+            batch: 64,
+            iterations: 32,
+            preprocess: true,
+            out_size: 64,
+        }
+    }
+}
+
+/// Mini-application parameters (§III-B / §IV-B).
+#[derive(Debug, Clone)]
+pub struct MiniAppConfig {
+    pub device: String,
+    pub threads: usize,
+    pub batch: usize,
+    /// Batches to prefetch (paper: 0 or 1).
+    pub prefetch: usize,
+    /// Training iterations (paper: 142 = one epoch of Caltech-101@64).
+    pub iterations: usize,
+    /// Model profile: micro / mini / paper.
+    pub profile: String,
+    pub seed: u64,
+}
+
+impl Default for MiniAppConfig {
+    fn default() -> Self {
+        MiniAppConfig {
+            device: "ssd".into(),
+            threads: 4,
+            batch: 64,
+            prefetch: 1,
+            iterations: 20,
+            profile: "micro".into(),
+            seed: 42,
+        }
+    }
+}
+
+/// Where checkpoints go (§III-C / §IV-C).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CheckpointTarget {
+    /// No checkpointing (Fig. 9's gray baseline).
+    None,
+    /// Synchronous save straight to a device.
+    Direct(String),
+    /// Burst buffer: save to `fast`, drain asynchronously to `slow`.
+    BurstBuffer { fast: String, slow: String },
+}
+
+impl CheckpointTarget {
+    pub fn parse(s: &str) -> Result<CheckpointTarget> {
+        match s {
+            "none" => Ok(CheckpointTarget::None),
+            _ if s.starts_with("bb:") => {
+                let rest = &s[3..];
+                let (fast, slow) = rest.split_once(':').ok_or_else(|| {
+                    anyhow!("burst buffer spec must be bb:<fast>:<slow>")
+                })?;
+                Ok(CheckpointTarget::BurstBuffer {
+                    fast: fast.to_string(),
+                    slow: slow.to_string(),
+                })
+            }
+            dev => Ok(CheckpointTarget::Direct(dev.to_string())),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            CheckpointTarget::None => "none".into(),
+            CheckpointTarget::Direct(d) => d.clone(),
+            CheckpointTarget::BurstBuffer { fast, slow } => {
+                format!("bb:{fast}:{slow}")
+            }
+        }
+    }
+}
+
+/// Checkpoint study parameters (§IV-C).
+#[derive(Debug, Clone)]
+pub struct CkptStudyConfig {
+    pub mini: MiniAppConfig,
+    pub target: CheckpointTarget,
+    /// Save every N iterations (paper: 20).
+    pub interval: usize,
+    pub max_to_keep: usize,
+}
+
+impl Default for CkptStudyConfig {
+    fn default() -> Self {
+        CkptStudyConfig {
+            mini: MiniAppConfig {
+                device: "ssd".into(), // paper: images on SSD, prefetch on
+                prefetch: 1,
+                iterations: 20,       // paper: 100 (bench-scaled)
+                ..Default::default()
+            },
+            target: CheckpointTarget::Direct("hdd".into()),
+            interval: 5,              // paper: 20 (bench-scaled)
+            max_to_keep: 5,
+        }
+    }
+}
+
+/// Tiny `--key value` / `--flag` argument parser for the binary and
+/// bench harnesses.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map_or(false, |n| !n.starts_with("--"))
+                {
+                    out.options
+                        .insert(key.to_string(), iter.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{key}: {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+        }
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_parse_forms() {
+        let a = Args::parse(
+            ["run", "--threads", "8", "--device=ssd", "--verbose"]
+                .into_iter()
+                .map(String::from),
+        );
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get("threads"), Some("8"));
+        assert_eq!(a.get("device"), Some("ssd"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get_usize("threads", 1).unwrap(), 8);
+        assert_eq!(a.get_usize("missing", 3).unwrap(), 3);
+        assert!(a.get_usize("device", 1).is_err());
+    }
+
+    #[test]
+    fn checkpoint_target_parse() {
+        assert_eq!(CheckpointTarget::parse("none").unwrap(),
+                   CheckpointTarget::None);
+        assert_eq!(CheckpointTarget::parse("hdd").unwrap(),
+                   CheckpointTarget::Direct("hdd".into()));
+        assert_eq!(
+            CheckpointTarget::parse("bb:optane:hdd").unwrap(),
+            CheckpointTarget::BurstBuffer {
+                fast: "optane".into(),
+                slow: "hdd".into()
+            }
+        );
+        assert!(CheckpointTarget::parse("bb:only").is_err());
+        assert_eq!(
+            CheckpointTarget::parse("bb:optane:hdd").unwrap().label(),
+            "bb:optane:hdd"
+        );
+    }
+
+    #[test]
+    fn testbed_paper_has_all_devices() {
+        let t = Testbed::paper(1.0);
+        let names: Vec<_> =
+            t.devices.iter().map(|d| d.name.as_str()).collect();
+        assert_eq!(names, vec!["hdd", "ssd", "optane", "lustre"]);
+        assert_eq!(t.cache_bytes, 0);
+    }
+}

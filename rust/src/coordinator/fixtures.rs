@@ -1,0 +1,134 @@
+//! Shared experiment fixtures: build the testbed sim and (re)generate
+//! corpora, reusing backing files across runs when they match.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::Testbed;
+use crate::data::{generator, CorpusSpec, Manifest};
+use crate::storage::{IoObserver, NullObserver, StorageSim};
+
+/// Instantiate the testbed's storage sim (optionally traced).
+pub fn make_sim(testbed: &Testbed, observer: Option<Arc<dyn IoObserver>>)
+    -> Result<Arc<StorageSim>>
+{
+    let obs = observer.unwrap_or_else(|| Arc::new(NullObserver));
+    Ok(Arc::new(StorageSim::new(
+        testbed.workdir.clone(),
+        testbed.devices.clone(),
+        testbed.cache_bytes,
+        obs,
+    )?))
+}
+
+/// Ensure `spec` exists on `device`, generating it only when the
+/// on-disk manifest doesn't match (corpus generation is fixture setup
+/// and can dominate bench start-up otherwise).
+pub fn ensure_corpus(
+    sim: &StorageSim,
+    device: &str,
+    spec: &CorpusSpec,
+) -> Result<Manifest> {
+    if let Ok(m) = generator::load_manifest(sim, device, &spec.name) {
+        if m.len() == spec.num_files
+            && m.num_classes == spec.num_classes
+            && m.src_size == spec.src_size
+            && m.samples
+                .first()
+                .map_or(true, |s| sim.exists(&s.path))
+            && m.samples
+                .last()
+                .map_or(true, |s| sim.exists(&s.path))
+        {
+            return Ok(m);
+        }
+    }
+    generator::generate(sim, device, spec)
+}
+
+/// Mirror one corpus onto several devices (the paper repeats tests
+/// "with sample images placed on different devices").  Backing bytes
+/// are hard-linked when possible to save space/time.
+pub fn ensure_corpus_on_devices(
+    sim: &StorageSim,
+    devices: &[&str],
+    spec: &CorpusSpec,
+) -> Result<Vec<Manifest>> {
+    let mut out = Vec::new();
+    for dev in devices {
+        out.push(ensure_corpus(sim, dev, spec)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::DeviceModel;
+
+    fn testbed(tag: &str) -> Testbed {
+        let dir = std::env::temp_dir()
+            .join(format!("dlio-fix-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        Testbed {
+            devices: vec![DeviceModel {
+                name: "ssd".into(),
+                read_bw: 1e9,
+                write_bw: 1e9,
+                read_lat: 0.0,
+                write_lat: 0.0,
+                channels: 8,
+                elevator: vec![(1, 1.0)],
+                time_scale: 1000.0,
+            }],
+            cache_bytes: 0,
+            workdir: dir.to_string_lossy().into_owned(),
+        }
+    }
+
+    #[test]
+    fn corpus_cached_across_calls() {
+        let tb = testbed("cache");
+        let sim = make_sim(&tb, None).unwrap();
+        let spec = CorpusSpec {
+            name: "c".into(),
+            num_files: 10,
+            num_classes: 4,
+            src_size: 32,
+            median_bytes: 4096,
+            sigma: 0.2,
+            corrupt_frac: 0.0,
+            seed: 1,
+        };
+        let t0 = std::time::Instant::now();
+        let m1 = ensure_corpus(&sim, "ssd", &spec).unwrap();
+        let first = t0.elapsed();
+        let t0 = std::time::Instant::now();
+        let m2 = ensure_corpus(&sim, "ssd", &spec).unwrap();
+        let second = t0.elapsed();
+        assert_eq!(m1.samples, m2.samples);
+        assert!(second < first, "{second:?} !< {first:?}");
+    }
+
+    #[test]
+    fn spec_change_regenerates() {
+        let tb = testbed("regen");
+        let sim = make_sim(&tb, None).unwrap();
+        let mut spec = CorpusSpec {
+            name: "c".into(),
+            num_files: 5,
+            num_classes: 4,
+            src_size: 32,
+            median_bytes: 4096,
+            sigma: 0.2,
+            corrupt_frac: 0.0,
+            seed: 1,
+        };
+        let m1 = ensure_corpus(&sim, "ssd", &spec).unwrap();
+        spec.num_files = 8;
+        let m2 = ensure_corpus(&sim, "ssd", &spec).unwrap();
+        assert_eq!(m1.len(), 5);
+        assert_eq!(m2.len(), 8);
+    }
+}

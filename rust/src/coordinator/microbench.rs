@@ -1,0 +1,103 @@
+//! The STREAM-like TensorFlow-I/O micro-benchmark (§III-A).
+//!
+//! Pipeline: manifest -> shuffle -> parallel map (read [+ decode +
+//! fused resize]) -> ignore_errors -> batch -> iterator, consumed as
+//! fast as possible with *no* compute phase; bandwidth = images and
+//! bytes through the iterator per second.  Regenerates Figs. 4 & 5.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::MicrobenchConfig;
+use crate::data::manifest::Manifest;
+use crate::metrics::Timer;
+use crate::pipeline::{from_manifest, Dataset, DatasetExt};
+use crate::runtime::Runtime;
+use crate::storage::StorageSim;
+use crate::util::Rng;
+
+use super::workload::{preprocess_fn, read_only_fn};
+
+/// Micro-benchmark outcome.
+#[derive(Debug, Clone)]
+pub struct MicrobenchResult {
+    pub images: u64,
+    pub bytes: u64,
+    pub elapsed_secs: f64,
+    pub dropped: u64,
+}
+
+impl MicrobenchResult {
+    pub fn images_per_sec(&self) -> f64 {
+        self.images as f64 / self.elapsed_secs
+    }
+
+    pub fn mb_per_sec(&self) -> f64 {
+        self.bytes as f64 / 1e6 / self.elapsed_secs
+    }
+}
+
+/// Run the micro-benchmark over `manifest` on `sim`.
+pub fn run(
+    sim: Arc<StorageSim>,
+    rt: &Runtime,
+    manifest: &Manifest,
+    cfg: &MicrobenchConfig,
+    seed: u64,
+) -> Result<MicrobenchResult> {
+    let total_images = cfg.batch * cfg.iterations;
+    let m = manifest.truncated(total_images.min(manifest.len()));
+    // Shuffle buffer = full dataset, as the micro-benchmark shuffles
+    // the whole path list (§III-A).
+    let shuffle_buf = m.len().max(1);
+
+    let mut images = 0u64;
+    let mut bytes = 0u64;
+    let mut dropped = 0u64;
+    let timer;
+
+    if cfg.preprocess {
+        let f = preprocess_fn(
+            Arc::clone(&sim),
+            rt,
+            m.src_size as usize,
+            cfg.out_size,
+        )?;
+        let ds = from_manifest(&m)
+            .shuffle(shuffle_buf, Rng::new(seed))
+            .parallel_map(cfg.threads, f)
+            .ignore_errors();
+        let counter = ds.dropped_counter();
+        let mut ds = ds.batch(cfg.batch, false).take(cfg.iterations);
+        timer = Timer::start();
+        while let Some(batch) = ds.next() {
+            let batch = batch?;
+            images += batch.len() as u64;
+            bytes += batch.iter().map(|p| p.bytes_read).sum::<u64>();
+        }
+        dropped += counter.load(std::sync::atomic::Ordering::Relaxed);
+    } else {
+        let f = read_only_fn(Arc::clone(&sim));
+        let ds = from_manifest(&m)
+            .shuffle(shuffle_buf, Rng::new(seed))
+            .parallel_map(cfg.threads, f)
+            .ignore_errors();
+        let counter = ds.dropped_counter();
+        let mut ds = ds.batch(cfg.batch, false).take(cfg.iterations);
+        timer = Timer::start();
+        while let Some(batch) = ds.next() {
+            let batch = batch?;
+            images += batch.len() as u64;
+            bytes += batch.iter().map(|r| r.bytes.len() as u64).sum::<u64>();
+        }
+        dropped += counter.load(std::sync::atomic::Ordering::Relaxed);
+    }
+
+    Ok(MicrobenchResult {
+        images,
+        bytes,
+        elapsed_secs: timer.secs(),
+        dropped,
+    })
+}

@@ -1,0 +1,191 @@
+//! The AlexNet mini-application (§III-B): input pipeline + training.
+//!
+//! Pipeline: manifest -> shuffle -> parallel map (read + decode + fused
+//! resize) -> ignore_errors -> batch -> assemble -> prefetch(0|1) ->
+//! train step (AOT AlexNet fwd/bwd/Adam via PJRT).  Regenerates
+//! Figs. 6, 7 and 8 and carries the checkpoint study (Figs. 9, 10).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::checkpoint::{BurstBuffer, Saver};
+use crate::config::{CheckpointTarget, CkptStudyConfig, MiniAppConfig};
+use crate::data::manifest::Manifest;
+use crate::metrics::Timer;
+use crate::model::Trainer;
+use crate::pipeline::{
+    from_manifest, Dataset, DatasetExt, ImageBatch,
+};
+use crate::runtime::Runtime;
+use crate::storage::StorageSim;
+use crate::util::Rng;
+
+use super::workload::preprocess_fn;
+
+/// Outcome of one mini-app run.
+#[derive(Debug, Clone)]
+pub struct MiniAppResult {
+    pub steps: u64,
+    pub images: u64,
+    pub total_secs: f64,
+    /// Time the training loop spent blocked waiting on the iterator —
+    /// the visible I/O cost (≈0 when prefetch fully overlaps, §V-B).
+    pub ingest_wait_secs: f64,
+    /// Time inside the train-step executable.
+    pub compute_secs: f64,
+    /// Time paused inside checkpoint saves (0 without checkpointing).
+    pub ckpt_secs: f64,
+    /// Per-checkpoint durations.
+    pub ckpt_durations: Vec<f64>,
+    pub losses: Vec<f32>,
+}
+
+/// Assemble the full mini-app input pipeline for `cfg`, ending after
+/// prefetch.  Returned dataset yields ready [`ImageBatch`]es.
+pub fn input_pipeline(
+    sim: Arc<StorageSim>,
+    rt: &Runtime,
+    manifest: &Manifest,
+    cfg: &MiniAppConfig,
+) -> Result<crate::pipeline::prefetch::Prefetch<ImageBatch>> {
+    let prof = rt.meta().profile(&cfg.profile)?;
+    let out_size = prof.input_size;
+    let num_classes = manifest.num_classes;
+    let f = preprocess_fn(
+        Arc::clone(&sim),
+        rt,
+        manifest.src_size as usize,
+        out_size,
+    )?;
+    let ds = from_manifest(manifest)
+        .shuffle(manifest.len().max(1), Rng::new(cfg.seed))
+        .parallel_map(cfg.threads, f)
+        .ignore_errors()
+        // drop_remainder: the train HLO is shape-specialized (§IV-B
+        // runs 142 full batches for the same reason).
+        .batch(cfg.batch, true)
+        // Batch assembly happens on the pipeline side so prefetch
+        // hands the trainer a ready tensor.
+        .parallel_map(1, move |samples| {
+            ImageBatch::assemble(samples, num_classes)
+        })
+        .prefetch(cfg.prefetch);
+    Ok(ds)
+}
+
+/// Run the mini-application without checkpointing.
+pub fn run(
+    sim: Arc<StorageSim>,
+    rt: &Runtime,
+    manifest: &Manifest,
+    cfg: &MiniAppConfig,
+) -> Result<MiniAppResult> {
+    run_with_checkpoints(sim, rt, manifest, &CkptStudyConfig {
+        mini: cfg.clone(),
+        target: CheckpointTarget::None,
+        interval: usize::MAX,
+        max_to_keep: 5,
+    })
+}
+
+enum Ckpt {
+    None,
+    Direct(Saver),
+    Bb(BurstBuffer),
+}
+
+/// Run the mini-application, optionally checkpointing every
+/// `cfg.interval` iterations (§IV-C: 100 iters, ckpt every 20).
+pub fn run_with_checkpoints(
+    sim: Arc<StorageSim>,
+    rt: &Runtime,
+    manifest: &Manifest,
+    cfg: &CkptStudyConfig,
+) -> Result<MiniAppResult> {
+    let mini = &cfg.mini;
+    if manifest.len() < mini.batch {
+        return Err(anyhow!(
+            "corpus of {} images cannot fill a batch of {}",
+            manifest.len(), mini.batch
+        ));
+    }
+    let mut trainer = Trainer::new(rt, &mini.profile, mini.batch, mini.seed)?;
+    let profile = trainer.profile().clone();
+
+    let mut ckpt = match &cfg.target {
+        CheckpointTarget::None => Ckpt::None,
+        CheckpointTarget::Direct(dev) => Ckpt::Direct(Saver::new(
+            Arc::clone(&sim),
+            profile.clone(),
+            dev,
+            "ckpt/model",
+            cfg.max_to_keep,
+        )),
+        CheckpointTarget::BurstBuffer { fast, slow } => {
+            Ckpt::Bb(BurstBuffer::new(
+                Arc::clone(&sim),
+                profile.clone(),
+                fast,
+                slow,
+                "ckpt/model",
+                cfg.max_to_keep,
+            ))
+        }
+    };
+
+    let mut ds = input_pipeline(Arc::clone(&sim), rt, manifest, mini)?;
+
+    let mut result = MiniAppResult {
+        steps: 0,
+        images: 0,
+        total_secs: 0.0,
+        ingest_wait_secs: 0.0,
+        compute_secs: 0.0,
+        ckpt_secs: 0.0,
+        ckpt_durations: Vec::new(),
+        losses: Vec::new(),
+    };
+
+    let total = Timer::start();
+    for it in 0..mini.iterations {
+        let wait = Timer::start();
+        let batch = match ds.next() {
+            None => break, // corpus exhausted (one-epoch runs)
+            Some(b) => b?,
+        };
+        result.ingest_wait_secs += wait.secs();
+
+        let compute = Timer::start();
+        let loss = trainer.step(&batch)?;
+        result.compute_secs += compute.secs();
+        result.losses.push(loss);
+        result.steps += 1;
+        result.images += batch.batch as u64;
+
+        // Checkpoint every `interval` iterations (§IV-C).
+        if (it + 1) % cfg.interval.max(1) == 0 {
+            let t = Timer::start();
+            match &mut ckpt {
+                Ckpt::None => {}
+                Ckpt::Direct(saver) => {
+                    saver.save(trainer.state(), trainer.step_count())?;
+                }
+                Ckpt::Bb(bb) => {
+                    bb.save(trainer.state(), trainer.step_count())?;
+                }
+            }
+            let dt = t.secs();
+            if !matches!(ckpt, Ckpt::None) {
+                result.ckpt_secs += dt;
+                result.ckpt_durations.push(dt);
+            }
+        }
+    }
+    result.total_secs = total.secs();
+    // The BurstBuffer drop below blocks until drains complete, but the
+    // paper's runtime measurement ends when *training* ends — we have
+    // already captured total_secs.
+    drop(ckpt);
+    Ok(result)
+}

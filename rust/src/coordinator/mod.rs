@@ -1,0 +1,12 @@
+//! Experiment coordination: the paper's three studies wired onto the
+//! substrates.  Each bench/figure driver composes these runners; the
+//! `dlio` binary exposes them as subcommands.
+
+pub mod fixtures;
+pub mod microbench;
+pub mod miniapp;
+pub mod workload;
+
+pub use fixtures::{ensure_corpus, make_sim};
+pub use microbench::MicrobenchResult;
+pub use miniapp::MiniAppResult;

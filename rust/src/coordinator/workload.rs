@@ -1,0 +1,89 @@
+//! The map functions of the paper's pipelines (§III-A, §III-B): the
+//! per-element work that `parallel_map` fans out over
+//! `num_parallel_calls` threads.
+//!
+//! * [`read_only_fn`] — just `tf.read()` (Fig. 5's stripped pipeline).
+//! * [`preprocess_fn`] — `tf.read()` + decode + the fused Pallas
+//!   normalize/resize kernel via the AOT preprocess executable
+//!   (Figs. 4 & 6's full pipeline).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::data::format;
+use crate::data::manifest::Sample;
+use crate::pipeline::ProcessedImage;
+use crate::runtime::executable::{lit, ExecSpec, Executable};
+use crate::runtime::Runtime;
+use crate::storage::StorageSim;
+
+/// Raw element for the read-only pipeline: bytes + provenance.
+pub struct RawFile {
+    pub bytes: Vec<u8>,
+    pub label: u32,
+}
+
+/// Fig. 5 map function: read the file, nothing else.
+pub fn read_only_fn(
+    sim: Arc<StorageSim>,
+) -> impl Fn(Sample) -> Result<RawFile> + Send + Sync {
+    move |sample: Sample| {
+        let bytes = sim.read(&sample.path)?;
+        Ok(RawFile { bytes, label: sample.label })
+    }
+}
+
+/// Figs. 4/6 map function: read -> decode (DEFLATE, the JPEG-decode
+/// stand-in) -> fused normalize+resize via the L1 Pallas kernel
+/// (executed through PJRT).
+pub fn preprocess_fn(
+    sim: Arc<StorageSim>,
+    rt: &Runtime,
+    src_size: usize,
+    out_size: usize,
+) -> Result<impl Fn(Sample) -> Result<ProcessedImage> + Send + Sync> {
+    let spec: ExecSpec = rt.preprocess(src_size, out_size)?;
+    Ok(move |sample: Sample| {
+        let exe = spec.get()?; // per-thread compile cache
+        let bytes = sim.read(&sample.path)?;
+        let n_read = bytes.len() as u64;
+        let img = format::decode(&bytes)
+            .with_context(|| format!("decoding {}", sample.path))?;
+        if img.width as usize != src_size || img.height as usize != src_size
+        {
+            return Err(anyhow!(
+                "{}: geometry {}x{} outside the {src_size} bucket",
+                sample.path, img.width, img.height
+            ));
+        }
+        let pixels = run_preprocess(&exe, &img.pixels, src_size, out_size)?;
+        Ok(ProcessedImage {
+            pixels,
+            size: out_size as u32,
+            label: sample.label,
+            bytes_read: n_read,
+        })
+    })
+}
+
+/// Execute the preprocess HLO on one image's raw pixels.
+pub fn run_preprocess(
+    exe: &Executable,
+    raw: &[u8],
+    src_size: usize,
+    out_size: usize,
+) -> Result<Vec<f32>> {
+    let input = lit::u8(&[1, src_size, src_size, 3], raw)?;
+    let mut out = exe.run(&[input])?;
+    if out.len() != 1 {
+        return Err(anyhow!("preprocess returned {} outputs", out.len()));
+    }
+    let result = lit::to_f32(&out.pop().unwrap())?;
+    let want = out_size * out_size * 3;
+    if result.len() != want {
+        return Err(anyhow!("preprocess produced {} values, want {want}",
+                           result.len()));
+    }
+    Ok(result)
+}

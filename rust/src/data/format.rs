@@ -1,0 +1,206 @@
+//! SIMG: the synthetic image container standing in for JPEG/PNG files.
+//!
+//! The paper's corpora are JPEG (micro-benchmark, ImageNet subset) and
+//! PNG/JPEG (mini-app, Caltech 101).  We cannot ship those datasets, so
+//! the generator synthesizes files whose *I/O-relevant properties*
+//! match (§IV-A/B file-size distributions) and whose *decode cost* is
+//! real CPU work (DEFLATE entropy decoding, the same family of work as
+//! JPEG's Huffman stage):
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "SIMG"
+//! 4       2     version (=1)
+//! 6       2     channels
+//! 8       4     width
+//! 12      4     height
+//! 16      4     label (class id)
+//! 20      4     payload length P
+//! 24      P     DEFLATE-compressed raw pixels (h*w*c bytes, row-major)
+//! 24+P    *     entropy pad (ignored by decode; sizes the file to the
+//!               corpus distribution, like JPEG's size-vs-content noise)
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+use flate2::read::DeflateDecoder;
+use flate2::write::DeflateEncoder;
+use flate2::Compression;
+use std::io::{Read, Write};
+
+pub const MAGIC: &[u8; 4] = b"SIMG";
+pub const VERSION: u16 = 1;
+pub const HEADER_LEN: usize = 24;
+
+/// A decoded image: raw u8 pixels plus geometry and label.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Image {
+    pub width: u32,
+    pub height: u32,
+    pub channels: u16,
+    pub label: u32,
+    /// Row-major `[h][w][c]` pixel bytes.
+    pub pixels: Vec<u8>,
+}
+
+impl Image {
+    pub fn pixel_len(&self) -> usize {
+        self.width as usize * self.height as usize * self.channels as usize
+    }
+}
+
+/// Encode an image to SIMG bytes, padding the file to `target_len`
+/// when the encoded form is smaller (pad is pseudo-random and thus
+/// incompressible, as JPEG entropy bytes are).
+pub fn encode(img: &Image, target_len: Option<usize>, pad_seed: u64)
+    -> Result<Vec<u8>>
+{
+    if img.pixels.len() != img.pixel_len() {
+        bail!(
+            "pixel buffer {} != {}x{}x{}",
+            img.pixels.len(), img.height, img.width, img.channels
+        );
+    }
+    let mut enc = DeflateEncoder::new(Vec::new(), Compression::fast());
+    enc.write_all(&img.pixels)?;
+    let payload = enc.finish()?;
+
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&img.channels.to_le_bytes());
+    out.extend_from_slice(&img.width.to_le_bytes());
+    out.extend_from_slice(&img.height.to_le_bytes());
+    out.extend_from_slice(&img.label.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+
+    if let Some(t) = target_len {
+        if t > out.len() {
+            let mut rng = crate::util::Rng::new(pad_seed);
+            let mut pad = vec![0u8; t - out.len()];
+            rng.fill_bytes(&mut pad);
+            out.extend_from_slice(&pad);
+        }
+    }
+    Ok(out)
+}
+
+/// Decode SIMG bytes back to an [`Image`] (the mini-app's
+/// `tf.image.decode_png` stand-in).
+pub fn decode(bytes: &[u8]) -> Result<Image> {
+    if bytes.len() < HEADER_LEN {
+        bail!("truncated SIMG: {} bytes", bytes.len());
+    }
+    if &bytes[0..4] != MAGIC {
+        bail!("bad magic {:?}", &bytes[0..4]);
+    }
+    let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+    if version != VERSION {
+        bail!("unsupported SIMG version {version}");
+    }
+    let channels = u16::from_le_bytes([bytes[6], bytes[7]]);
+    let width = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    let height = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
+    let label = u32::from_le_bytes(bytes[16..20].try_into().unwrap());
+    let payload_len =
+        u32::from_le_bytes(bytes[20..24].try_into().unwrap()) as usize;
+    if bytes.len() < HEADER_LEN + payload_len {
+        bail!(
+            "truncated payload: have {}, need {}",
+            bytes.len() - HEADER_LEN, payload_len
+        );
+    }
+    let n = width as usize * height as usize * channels as usize;
+    if n == 0 || n > 512 * 1024 * 1024 {
+        bail!("implausible geometry {width}x{height}x{channels}");
+    }
+    let mut pixels = Vec::with_capacity(n);
+    let mut dec =
+        DeflateDecoder::new(&bytes[HEADER_LEN..HEADER_LEN + payload_len]);
+    dec.read_to_end(&mut pixels)
+        .map_err(|e| anyhow!("deflate: {e}"))?;
+    if pixels.len() != n {
+        bail!("decoded {} pixels, expected {}", pixels.len(), n);
+    }
+    Ok(Image { width, height, channels, label, pixels })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_image(w: u32, h: u32, label: u32) -> Image {
+        let mut pixels = Vec::with_capacity((w * h * 3) as usize);
+        for y in 0..h {
+            for x in 0..w {
+                for c in 0..3u32 {
+                    pixels.push(((x + y * 2 + c * 37 + label) % 256) as u8);
+                }
+            }
+        }
+        Image { width: w, height: h, channels: 3, label, pixels }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let img = test_image(96, 96, 42);
+        let bytes = encode(&img, None, 0).unwrap();
+        let back = decode(&bytes).unwrap();
+        assert_eq!(back, img);
+    }
+
+    #[test]
+    fn roundtrip_with_padding() {
+        let img = test_image(32, 32, 1);
+        let bytes = encode(&img, Some(50_000), 7).unwrap();
+        assert_eq!(bytes.len(), 50_000);
+        let back = decode(&bytes).unwrap();
+        assert_eq!(back, img);
+    }
+
+    #[test]
+    fn padding_not_applied_when_smaller_than_encoded() {
+        let img = test_image(64, 64, 1);
+        let bytes = encode(&img, Some(10), 7).unwrap();
+        assert!(bytes.len() > 10);
+        decode(&bytes).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let img = test_image(8, 8, 0);
+        let mut bytes = encode(&img, None, 0).unwrap();
+        bytes[0] = b'X';
+        assert!(decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let img = test_image(8, 8, 0);
+        let bytes = encode(&img, None, 0).unwrap();
+        assert!(decode(&bytes[..HEADER_LEN + 3]).is_err());
+        assert!(decode(&bytes[..10]).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let img = test_image(8, 8, 0);
+        let mut bytes = encode(&img, None, 0).unwrap();
+        bytes[4] = 9;
+        assert!(decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_pixel_geometry_mismatch() {
+        let mut img = test_image(8, 8, 0);
+        img.pixels.pop();
+        assert!(encode(&img, None, 0).is_err());
+    }
+
+    #[test]
+    fn compressed_smaller_than_raw_for_structured_pixels() {
+        let img = test_image(96, 96, 3);
+        let bytes = encode(&img, None, 0).unwrap();
+        assert!(bytes.len() < img.pixels.len());
+    }
+}

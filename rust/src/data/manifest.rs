@@ -1,0 +1,133 @@
+//! Corpus manifest: the "list of file paths and their labels" that
+//! forms the source dataset of the paper's input pipelines (Fig. 2).
+
+use anyhow::{anyhow, Result};
+
+use crate::storage::SimPath;
+
+/// One training sample: file location + class label.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub path: SimPath,
+    pub label: u32,
+}
+
+/// An ordered list of samples plus corpus geometry metadata.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub samples: Vec<Sample>,
+    pub num_classes: u32,
+    /// Source image edge length (all files in a corpus share one
+    /// geometry bucket; see DESIGN.md §2).
+    pub src_size: u32,
+}
+
+impl Manifest {
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Serialize as text: header line then `path<TAB>label` rows.
+    pub fn to_text(&self) -> String {
+        let mut s = format!(
+            "#dlio-manifest v1 classes={} src={}\n",
+            self.num_classes, self.src_size
+        );
+        for sample in &self.samples {
+            s.push_str(&format!("{}\t{}\n", sample.path, sample.label));
+        }
+        s
+    }
+
+    pub fn from_text(text: &str) -> Result<Manifest> {
+        let mut lines = text.lines();
+        let header = lines.next().ok_or_else(|| anyhow!("empty manifest"))?;
+        if !header.starts_with("#dlio-manifest v1") {
+            return Err(anyhow!("bad manifest header: {header:?}"));
+        }
+        let field = |key: &str| -> Result<u32> {
+            header
+                .split_whitespace()
+                .find_map(|tok| tok.strip_prefix(&format!("{key}=")))
+                .ok_or_else(|| anyhow!("manifest header missing {key}"))?
+                .parse()
+                .map_err(|e| anyhow!("bad {key}: {e}"))
+        };
+        let num_classes = field("classes")?;
+        let src_size = field("src")?;
+        let mut samples = Vec::new();
+        for (i, line) in lines.enumerate() {
+            if line.is_empty() {
+                continue;
+            }
+            let (path, label) = line
+                .split_once('\t')
+                .ok_or_else(|| anyhow!("line {}: missing tab", i + 2))?;
+            samples.push(Sample {
+                path: SimPath::parse(path)?,
+                label: label.parse()
+                    .map_err(|e| anyhow!("line {}: {e}", i + 2))?,
+            });
+        }
+        Ok(Manifest { samples, num_classes, src_size })
+    }
+
+    /// Take the first `n` samples (bench-scale subsetting).
+    pub fn truncated(&self, n: usize) -> Manifest {
+        Manifest {
+            samples: self.samples.iter().take(n).cloned().collect(),
+            num_classes: self.num_classes,
+            src_size: self.src_size,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        Manifest {
+            samples: vec![
+                Sample { path: SimPath::new("ssd", "img/0.simg"), label: 3 },
+                Sample { path: SimPath::new("ssd", "img/1.simg"), label: 7 },
+            ],
+            num_classes: 102,
+            src_size: 96,
+        }
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let m = manifest();
+        let back = Manifest::from_text(&m.to_text()).unwrap();
+        assert_eq!(back.samples, m.samples);
+        assert_eq!(back.num_classes, 102);
+        assert_eq!(back.src_size, 96);
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(Manifest::from_text("nope\n").is_err());
+        assert!(Manifest::from_text("").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_rows() {
+        let text = "#dlio-manifest v1 classes=2 src=96\nno-tab-here\n";
+        assert!(Manifest::from_text(text).is_err());
+        let text = "#dlio-manifest v1 classes=2 src=96\nssd://x\tnotnum\n";
+        assert!(Manifest::from_text(text).is_err());
+    }
+
+    #[test]
+    fn truncated_takes_prefix() {
+        let m = manifest().truncated(1);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.samples[0].label, 3);
+    }
+}

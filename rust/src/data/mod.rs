@@ -1,0 +1,12 @@
+//! Synthetic datasets: the SIMG container format, corpus generation
+//! matching the paper's ImageNet-subset / Caltech-101 size
+//! distributions, and the path+label manifests that seed the input
+//! pipeline.
+
+pub mod format;
+pub mod generator;
+pub mod manifest;
+
+pub use format::{decode, encode, Image};
+pub use generator::{generate, load_manifest, CorpusSpec};
+pub use manifest::{Manifest, Sample};

@@ -1,0 +1,35 @@
+//! # dlio — Deep-Learning I/O workload characterization in Rust
+//!
+//! A full reproduction of *"Characterizing Deep-Learning I/O Workloads
+//! in TensorFlow"* (Chien et al., PDSW-DISCS 2018) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: a faithful `tf.data`-style
+//!   input pipeline (shuffle / parallel map / batch / prefetch), a
+//!   calibrated storage-device simulator (HDD / SSD / Optane / Lustre),
+//!   a `tf.train.Saver`-style checkpointer with a burst-buffer staging
+//!   path, dstat-style tracing, and the experiment drivers regenerating
+//!   every table and figure of the paper.
+//! * **L2 (python/compile/model.py)** — AlexNet fwd/bwd + Adam in JAX,
+//!   AOT-lowered to HLO text once at build time.
+//! * **L1 (python/compile/kernels/)** — the per-image decode/normalize/
+//!   resize hot spot as a fused Pallas kernel (matmul-form bilinear).
+//!
+//! Python never runs at request time: the rust binary loads the
+//! `artifacts/*.hlo.txt` via PJRT (`runtime`) and is self-contained.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod bench;
+pub mod checkpoint;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod model;
+pub mod pipeline;
+pub mod runtime;
+pub mod storage;
+pub mod trace;
+pub mod util;

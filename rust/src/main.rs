@@ -1,0 +1,254 @@
+//! `dlio` — the leader binary: CLI over the experiment coordinators.
+//!
+//! Subcommands mirror the paper's studies:
+//!
+//! ```text
+//! dlio ior         [--size-mb 512] [--reps 6] [--time-scale 8]
+//! dlio gen-corpus  [--corpus imagenet|caltech101] [--files N] [--device D]
+//! dlio microbench  [--device D] [--threads N] [--batch 64]
+//!                  [--iterations N] [--no-preprocess]
+//! dlio train       [--device D] [--threads N] [--batch 64] [--prefetch 1]
+//!                  [--iterations N] [--profile micro|mini]
+//! dlio ckpt-study  [--target none|hdd|ssd|optane|bb:optane:hdd]
+//!                  [--interval 5] [--iterations 20]
+//! dlio trace       [--device D] [--prefetch 0|1] ... (dstat CSV to stdout)
+//! ```
+//!
+//! Every run needs `make artifacts` first (or `DLIO_ARTIFACTS` pointing
+//! at a built artifact dir).  `DLIO_TIME_SCALE` (default 8) uniformly
+//! accelerates the simulated devices; ratios are scale-invariant.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use dlio::config::{
+    default_time_scale, Args, CheckpointTarget, CkptStudyConfig,
+    MicrobenchConfig, MiniAppConfig, Testbed,
+};
+use dlio::coordinator::{ensure_corpus, make_sim, microbench, miniapp};
+use dlio::data::CorpusSpec;
+use dlio::metrics::Table;
+use dlio::runtime::Runtime;
+use dlio::storage::ior;
+use dlio::trace::Dstat;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let code = match run(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("dlio {cmd}: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "ior" => cmd_ior(args),
+        "gen-corpus" => cmd_gen_corpus(args),
+        "microbench" => cmd_microbench(args),
+        "train" => cmd_train(args),
+        "ckpt-study" => cmd_ckpt_study(args),
+        "trace" => cmd_trace(args),
+        "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(anyhow!("unknown subcommand {other:?}; see `dlio help`")),
+    }
+}
+
+const HELP: &str = "\
+dlio — Characterizing Deep-Learning I/O Workloads (PDSW-DISCS'18) repro
+
+  dlio ior         Table I   raw device bandwidth (IOR protocol)
+  dlio gen-corpus             synthesize an SIMG corpus
+  dlio microbench  Figs 4/5  tf.data ingestion bandwidth
+  dlio train       Figs 6/7  AlexNet mini-app (prefetch study)
+  dlio ckpt-study  Fig 9     checkpoint targets incl. burst buffer
+  dlio trace       Figs 8/10 dstat-style I/O trace (CSV on stdout)
+
+Common options: --time-scale F (default $DLIO_TIME_SCALE or 8),
+--device hdd|ssd|optane|lustre, --threads N, --batch N.
+Artifacts: run `make artifacts` first or set DLIO_ARTIFACTS.
+";
+
+fn testbed(args: &Args) -> Result<Testbed> {
+    let ts = args.get_f64("time-scale", default_time_scale())?;
+    if ts <= 0.0 {
+        return Err(anyhow!("--time-scale must be positive"));
+    }
+    let mut tb = Testbed::paper(ts);
+    if let Some(dir) = args.get("workdir") {
+        tb.workdir = dir.to_string();
+    }
+    tb.cache_bytes = args.get_usize("cache-mb", 0)? as u64 * 1_000_000;
+    Ok(tb)
+}
+
+fn corpus_spec(args: &Args) -> Result<CorpusSpec> {
+    let name = args.get_or("corpus", "caltech101");
+    let mut spec = match name.as_str() {
+        "imagenet" => CorpusSpec::imagenet_subset(
+            args.get_usize("files", 2048)?),
+        "caltech101" => CorpusSpec::caltech101(
+            args.get_usize("files", 2048)?),
+        other => return Err(anyhow!("unknown corpus {other:?}")),
+    };
+    spec.corrupt_frac = args.get_f64("corrupt-frac", 0.0)?;
+    Ok(spec)
+}
+
+fn cmd_ior(args: &Args) -> Result<()> {
+    let tb = testbed(args)?;
+    let sim = make_sim(&tb, None)?;
+    let cfg = ior::IorConfig {
+        file_bytes: args.get_usize("size-mb", 512)? as u64 * 1_000_000,
+        reps: args.get_usize("reps", 6)?.max(2),
+    };
+    println!("# IOR protocol: {} MB x {} reps (median, warm-up dropped)",
+             cfg.file_bytes / 1_000_000, cfg.reps);
+    println!("# time-scale {}x: reported bandwidths are scaled back to \
+              modelled-device terms", tb.devices[0].time_scale);
+    let ts = tb.devices[0].time_scale;
+    let mut table = Table::new(&["Device", "Max Read MB/s", "Max Write MB/s"]);
+    for row in ior::run_all(&sim, &cfg)? {
+        table.row(&[
+            row.device.clone(),
+            format!("{:.2}", row.max_read_mbs / ts),
+            format!("{:.2}", row.max_write_mbs / ts),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_gen_corpus(args: &Args) -> Result<()> {
+    let tb = testbed(args)?;
+    let sim = make_sim(&tb, None)?;
+    let device = args.get_or("device", "ssd");
+    let spec = corpus_spec(args)?;
+    let t = dlio::metrics::Timer::start();
+    let m = ensure_corpus(&sim, &device, &spec)?;
+    println!(
+        "corpus {} on {device}: {} files, {} classes, src {}px ({:.1}s)",
+        spec.name, m.len(), m.num_classes, m.src_size, t.secs()
+    );
+    Ok(())
+}
+
+fn cmd_microbench(args: &Args) -> Result<()> {
+    let tb = testbed(args)?;
+    let sim = make_sim(&tb, None)?;
+    let rt = Runtime::open_default()?;
+    let device = args.get_or("device", "ssd");
+    let mut spec = corpus_spec(args)?;
+    if args.get("corpus").is_none() {
+        spec = CorpusSpec::imagenet_subset(args.get_usize("files", 2048)?);
+    }
+    let manifest = ensure_corpus(&sim, &device, &spec)?;
+    let cfg = MicrobenchConfig {
+        device: device.clone(),
+        threads: args.get_usize("threads", 4)?,
+        batch: args.get_usize("batch", 64)?,
+        iterations: args.get_usize("iterations", 16)?,
+        preprocess: !args.has_flag("no-preprocess"),
+        out_size: args.get_usize("out-size", 64)?,
+    };
+    let r = microbench::run(Arc::clone(&sim), &rt, &manifest, &cfg, 7)?;
+    println!(
+        "device={device} threads={} preprocess={} : {:.1} images/s  \
+         {:.2} MB/s  ({} images in {:.2}s, {} dropped)",
+        cfg.threads, cfg.preprocess, r.images_per_sec(), r.mb_per_sec(),
+        r.images, r.elapsed_secs, r.dropped
+    );
+    Ok(())
+}
+
+fn train_cfg(args: &Args) -> Result<MiniAppConfig> {
+    Ok(MiniAppConfig {
+        device: args.get_or("device", "ssd"),
+        threads: args.get_usize("threads", 4)?,
+        batch: args.get_usize("batch", 64)?,
+        prefetch: args.get_usize("prefetch", 1)?,
+        iterations: args.get_usize("iterations", 20)?,
+        profile: args.get_or("profile", "micro"),
+        seed: args.get_usize("seed", 42)? as u64,
+    })
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let tb = testbed(args)?;
+    let sim = make_sim(&tb, None)?;
+    let rt = Runtime::open_default()?;
+    let cfg = train_cfg(args)?;
+    let mut spec = corpus_spec(args)?;
+    spec.num_files = spec
+        .num_files
+        .max(cfg.batch * cfg.iterations.min(1024));
+    let manifest = ensure_corpus(&sim, &cfg.device, &spec)?;
+    let r = miniapp::run(Arc::clone(&sim), &rt, &manifest, &cfg)?;
+    println!(
+        "device={} threads={} prefetch={} batch={} profile={}",
+        cfg.device, cfg.threads, cfg.prefetch, cfg.batch, cfg.profile
+    );
+    println!(
+        "steps={} images={} total={:.2}s ingest-wait={:.2}s \
+         compute={:.2}s",
+        r.steps, r.images, r.total_secs, r.ingest_wait_secs, r.compute_secs
+    );
+    if let (Some(first), Some(last)) = (r.losses.first(), r.losses.last()) {
+        println!("loss: {first:.4} -> {last:.4}");
+    }
+    Ok(())
+}
+
+fn cmd_ckpt_study(args: &Args) -> Result<()> {
+    let tb = testbed(args)?;
+    let sim = make_sim(&tb, None)?;
+    let rt = Runtime::open_default()?;
+    let cfg = CkptStudyConfig {
+        mini: train_cfg(args)?,
+        target: CheckpointTarget::parse(&args.get_or("target", "hdd"))?,
+        interval: args.get_usize("interval", 5)?,
+        max_to_keep: args.get_usize("max-to-keep", 5)?,
+    };
+    let spec = corpus_spec(args)?;
+    let manifest = ensure_corpus(&sim, &cfg.mini.device, &spec)?;
+    let r = miniapp::run_with_checkpoints(Arc::clone(&sim), &rt,
+                                          &manifest, &cfg)?;
+    println!(
+        "target={} interval={} : total={:.2}s ckpt-total={:.2}s \
+         ({} checkpoints, median {:.2}s)",
+        cfg.target.label(), cfg.interval, r.total_secs, r.ckpt_secs,
+        r.ckpt_durations.len(),
+        dlio::metrics::median(&mut r.ckpt_durations.clone()),
+    );
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let tb = testbed(args)?;
+    let tracer = Arc::new(Dstat::new(args.get_f64("interval-secs", 1.0)?));
+    let sim = make_sim(&tb, Some(tracer.clone()))?;
+    let rt = Runtime::open_default()?;
+    let cfg = train_cfg(args)?;
+    let spec = corpus_spec(args)?;
+    let manifest = ensure_corpus(&sim, &cfg.device, &spec)?;
+    let target = CheckpointTarget::parse(&args.get_or("target", "none"))?;
+    let study = CkptStudyConfig {
+        mini: cfg,
+        target,
+        interval: args.get_usize("interval", 5)?,
+        max_to_keep: 5,
+    };
+    let r = miniapp::run_with_checkpoints(Arc::clone(&sim), &rt,
+                                          &manifest, &study)?;
+    eprintln!("# run: {} steps in {:.2}s", r.steps, r.total_secs);
+    print!("{}", tracer.to_csv());
+    Ok(())
+}

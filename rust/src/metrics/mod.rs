@@ -1,0 +1,181 @@
+//! Measurement helpers: the paper's median-of-six protocol, wall
+//! timers, and aligned table rendering for the figure/table benches.
+
+use std::time::Instant;
+
+/// Median of a slice (sorts in place).  Empty input -> 0.
+pub fn median(xs: &mut [f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = xs.len();
+    if n % 2 == 1 {
+        xs[n / 2]
+    } else {
+        0.5 * (xs[n / 2 - 1] + xs[n / 2])
+    }
+}
+
+/// Relative spread of measurements vs their median — the paper reports
+/// "<1% on Blackdog, <4-6% on Tegner" (§IV); used to sanity-check runs.
+pub fn rel_spread(xs: &mut [f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let med = median(xs);
+    if med == 0.0 {
+        return 0.0;
+    }
+    let max_dev = xs
+        .iter()
+        .map(|x| (x - med).abs())
+        .fold(0.0f64, f64::max);
+    max_dev / med
+}
+
+/// The paper's measurement protocol: run `reps` times, discard the
+/// first (warm-up), return the median of the rest.
+pub fn median_of_reps(reps: usize, mut run: impl FnMut(usize) -> f64) -> f64 {
+    assert!(reps >= 2, "need at least warm-up + 1 measurement");
+    let mut vals = Vec::with_capacity(reps - 1);
+    for i in 0..reps {
+        let v = run(i);
+        if i > 0 {
+            vals.push(v);
+        }
+    }
+    median(&mut vals)
+}
+
+/// Simple wall-clock stopwatch.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(Instant::now())
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Column-aligned plain-text table (the benches print paper-style rows
+/// with this).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], out: &mut String| {
+            for (i, c) in cells.iter().enumerate() {
+                out.push_str(&format!("{:<w$}", c, w = widths[i]));
+                if i + 1 < ncol {
+                    out.push_str("  ");
+                }
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.headers, &mut out);
+        let total: usize =
+            widths.iter().sum::<usize>() + 2 * (ncol.saturating_sub(1));
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(row, &mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd_even_empty() {
+        assert_eq!(median(&mut []), 0.0);
+        assert_eq!(median(&mut [3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&mut [4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn median_of_reps_discards_warmup() {
+        // Warm-up returns an outlier; median must ignore it.
+        let vals = [100.0, 1.0, 2.0, 3.0, 2.0, 1.0];
+        let mut i = 0;
+        let m = median_of_reps(6, |_| {
+            let v = vals[i];
+            i += 1;
+            v
+        });
+        assert_eq!(m, 2.0);
+    }
+
+    #[test]
+    fn rel_spread_small_for_tight_runs() {
+        let mut xs = [100.0, 100.5, 99.8, 100.2];
+        assert!(rel_spread(&mut xs) < 0.01);
+        let mut ys = [100.0, 130.0];
+        assert!(rel_spread(&mut ys) > 0.1);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["Device", "MB/s"]);
+        t.row(&["hdd".into(), "163.00".into()]);
+        t.row(&["optane".into(), "1603.06".into()]);
+        let s = t.render();
+        let lines: Vec<_> = s.lines().collect();
+        assert!(lines[0].starts_with("Device"));
+        assert!(lines[1].starts_with("---"));
+        assert_eq!(lines.len(), 4);
+        // Columns aligned: "MB/s" column starts at same offset in rows.
+        let col = lines[0].find("MB/s").unwrap();
+        assert_eq!(&lines[2][col - 2..col], "  ");
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn timer_measures() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(t.secs() >= 0.02);
+    }
+}

@@ -1,0 +1,13 @@
+//! Model state + training driver on the rust side.
+//!
+//! The network itself lives in L2 (`python/compile/model.py`, lowered
+//! to HLO); this module owns the *state* — parameter tensors, Adam
+//! moments, the step counter — initializes it (same He-normal scheme
+//! as the python reference), marshals it through the train-step
+//! executable, and serializes it for checkpointing.
+
+pub mod params;
+pub mod trainer;
+
+pub use params::ModelState;
+pub use trainer::Trainer;

@@ -1,0 +1,234 @@
+//! Parameter / optimizer state container.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::meta::ProfileMeta;
+use crate::util::Rng;
+
+/// Full training state: parameters + Adam first/second moments + step.
+#[derive(Debug, Clone)]
+pub struct ModelState {
+    /// One flat f32 buffer per parameter tensor, in ABI order.
+    pub params: Vec<Vec<f32>>,
+    pub m: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    pub step: f32,
+}
+
+impl ModelState {
+    /// Initialize like `model.init_params`: He-normal kernels
+    /// (std = sqrt(2/fan_in)), zero biases, zero moments.
+    pub fn init(profile: &ProfileMeta, seed: u64) -> ModelState {
+        let mut rng = Rng::new(seed);
+        let mut params = Vec::with_capacity(profile.params.len());
+        for spec in &profile.params {
+            let n = spec.num_elements();
+            if spec.is_bias() {
+                params.push(vec![0f32; n]);
+            } else {
+                let std = (2.0 / spec.fan_in() as f64).sqrt();
+                params.push(
+                    (0..n)
+                        .map(|_| (rng.next_normal() * std) as f32)
+                        .collect(),
+                );
+            }
+        }
+        let zeros: Vec<Vec<f32>> =
+            params.iter().map(|p| vec![0f32; p.len()]).collect();
+        ModelState { m: zeros.clone(), v: zeros, params, step: 0.0 }
+    }
+
+    pub fn num_tensors(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn num_values(&self) -> usize {
+        self.params.iter().map(Vec::len).sum()
+    }
+
+    /// Serialized checkpoint payload size in bytes (the `.data` file).
+    pub fn data_bytes(&self) -> u64 {
+        (self.num_values() * 3 * 4 + 4) as u64
+    }
+
+    /// Serialize `params + m + v + step` as little-endian f32 bytes —
+    /// the checkpoint `.data` payload.
+    ///
+    /// Perf note (EXPERIMENTS.md §Perf): whole-tensor slice copies, not
+    /// per-value `to_le_bytes` — checkpoint serialization sits on the
+    /// synchronous save path the paper measures, and the naive loop
+    /// cost ~10x more than the simulated Optane write it precedes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data_bytes() as usize);
+        for group in [&self.params, &self.m, &self.v] {
+            for tensor in group {
+                // f32 slices are plain little-endian bytes on every
+                // supported target; bulk-copy the raw representation.
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(
+                        tensor.as_ptr() as *const u8,
+                        tensor.len() * 4,
+                    )
+                };
+                out.extend_from_slice(bytes);
+            }
+        }
+        out.extend_from_slice(&self.step.to_le_bytes());
+        out
+    }
+
+    /// Inverse of [`to_bytes`]; `profile` supplies the tensor shapes.
+    pub fn from_bytes(profile: &ProfileMeta, bytes: &[u8])
+        -> Result<ModelState>
+    {
+        let total: usize = profile
+            .params
+            .iter()
+            .map(|s| s.num_elements())
+            .sum();
+        let want = total * 3 * 4 + 4;
+        if bytes.len() != want {
+            bail!("checkpoint payload {} bytes, expected {want}",
+                  bytes.len());
+        }
+        let mut offset = 0usize;
+        let mut read_group = |bytes: &[u8]| -> Vec<Vec<f32>> {
+            profile
+                .params
+                .iter()
+                .map(|spec| {
+                    let n = spec.num_elements();
+                    // Bulk deserialize (see to_bytes): copy the raw
+                    // little-endian block into an f32 vec.
+                    let mut t = vec![0f32; n];
+                    let src = &bytes[offset..offset + n * 4];
+                    unsafe {
+                        std::ptr::copy_nonoverlapping(
+                            src.as_ptr(),
+                            t.as_mut_ptr() as *mut u8,
+                            n * 4,
+                        );
+                    }
+                    offset += n * 4;
+                    t
+                })
+                .collect()
+        };
+        let params = read_group(bytes);
+        let m = read_group(bytes);
+        let v = read_group(bytes);
+        let step =
+            f32::from_le_bytes(bytes[offset..offset + 4].try_into().unwrap());
+        Ok(ModelState { params, m, v, step })
+    }
+
+    /// Consistency check against the profile's shapes.
+    pub fn validate(&self, profile: &ProfileMeta) -> Result<()> {
+        if self.params.len() != profile.params.len() {
+            bail!("tensor count {} != {}", self.params.len(),
+                  profile.params.len());
+        }
+        for (group_name, group) in
+            [("params", &self.params), ("m", &self.m), ("v", &self.v)]
+        {
+            for (t, spec) in group.iter().zip(&profile.params) {
+                if t.len() != spec.num_elements() {
+                    bail!("{group_name}/{}: {} values, expected {}",
+                          spec.name, t.len(), spec.num_elements());
+                }
+            }
+        }
+        if !self.step.is_finite() || self.step < 0.0 {
+            bail!("bad step counter {}", self.step);
+        }
+        Ok(())
+    }
+
+    /// Max |value| across parameters (divergence guard in tests).
+    pub fn max_abs_param(&self) -> f32 {
+        self.params
+            .iter()
+            .flat_map(|t| t.iter())
+            .fold(0f32, |a, &b| a.max(b.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::meta::ParamSpec;
+
+    fn profile() -> ProfileMeta {
+        ProfileMeta {
+            name: "t".into(),
+            input_size: 8,
+            num_classes: 4,
+            num_params: 2 * 2 * 3 * 2 + 2,
+            params: vec![
+                ParamSpec { name: "conv1/kernel".into(),
+                            shape: vec![2, 2, 3, 2] },
+                ParamSpec { name: "conv1/bias".into(), shape: vec![2] },
+            ],
+        }
+    }
+
+    #[test]
+    fn init_shapes_and_stats() {
+        let p = profile();
+        let s = ModelState::init(&p, 1);
+        s.validate(&p).unwrap();
+        assert_eq!(s.params[0].len(), 24);
+        assert_eq!(s.params[1], vec![0.0, 0.0]); // bias zero
+        assert!(s.m.iter().all(|t| t.iter().all(|&x| x == 0.0)));
+        assert_eq!(s.step, 0.0);
+        // Kernel values centred, non-degenerate.
+        let mean: f32 =
+            s.params[0].iter().sum::<f32>() / s.params[0].len() as f32;
+        assert!(mean.abs() < 0.5);
+        assert!(s.max_abs_param() > 0.0);
+    }
+
+    #[test]
+    fn init_deterministic_per_seed() {
+        let p = profile();
+        assert_eq!(ModelState::init(&p, 7).params,
+                   ModelState::init(&p, 7).params);
+        assert_ne!(ModelState::init(&p, 7).params,
+                   ModelState::init(&p, 8).params);
+    }
+
+    #[test]
+    fn byte_roundtrip() {
+        let p = profile();
+        let mut s = ModelState::init(&p, 3);
+        s.step = 17.0;
+        s.m[0][5] = 0.25;
+        let bytes = s.to_bytes();
+        assert_eq!(bytes.len() as u64, s.data_bytes());
+        let back = ModelState::from_bytes(&p, &bytes).unwrap();
+        assert_eq!(back.params, s.params);
+        assert_eq!(back.m, s.m);
+        assert_eq!(back.step, 17.0);
+    }
+
+    #[test]
+    fn from_bytes_rejects_wrong_size() {
+        let p = profile();
+        let s = ModelState::init(&p, 0);
+        let mut bytes = s.to_bytes();
+        bytes.pop();
+        assert!(ModelState::from_bytes(&p, &bytes).is_err());
+    }
+
+    #[test]
+    fn validate_catches_shape_drift() {
+        let p = profile();
+        let mut s = ModelState::init(&p, 0);
+        s.params[0].pop();
+        assert!(s.validate(&p).is_err());
+        let mut s = ModelState::init(&p, 0);
+        s.step = f32::NAN;
+        assert!(s.validate(&p).is_err());
+    }
+}

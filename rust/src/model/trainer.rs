@@ -1,0 +1,139 @@
+//! The training step driver: marshals [`ModelState`] + an
+//! [`ImageBatch`] through the AOT train-step executable.
+//!
+//! Artifact ABI (see `model_meta.json` / `aot.py`):
+//!   inputs  = [params*, m*, v*, step, images, labels]
+//!   outputs = (params*, m*, v*, step, loss)
+
+use anyhow::{anyhow, Result};
+
+use crate::pipeline::ImageBatch;
+use crate::runtime::executable::{lit, ExecSpec};
+use crate::runtime::meta::ProfileMeta;
+use crate::runtime::Runtime;
+
+use super::params::ModelState;
+
+/// Owns the model state and the compiled step function.
+pub struct Trainer {
+    profile: ProfileMeta,
+    batch_size: usize,
+    exe: ExecSpec,
+    state: ModelState,
+    losses: Vec<f32>,
+}
+
+impl Trainer {
+    /// Build a trainer for `profile` at a fixed batch size (the HLO is
+    /// shape-specialized per batch, as XLA requires).
+    pub fn new(rt: &Runtime, profile: &str, batch_size: usize, seed: u64)
+        -> Result<Trainer>
+    {
+        let prof = rt.meta().profile(profile)?.clone();
+        let exe = rt.train_step(profile, batch_size)?;
+        let state = ModelState::init(&prof, seed);
+        Ok(Trainer {
+            profile: prof,
+            batch_size,
+            exe,
+            state,
+            losses: Vec::new(),
+        })
+    }
+
+    pub fn profile(&self) -> &ProfileMeta {
+        &self.profile
+    }
+
+    pub fn state(&self) -> &ModelState {
+        &self.state
+    }
+
+    /// Replace the state (checkpoint restore).
+    pub fn restore(&mut self, state: ModelState) -> Result<()> {
+        state.validate(&self.profile)?;
+        self.state = state;
+        Ok(())
+    }
+
+    pub fn losses(&self) -> &[f32] {
+        &self.losses
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.state.step as u64
+    }
+
+    /// Execute one training step; returns the batch loss.
+    pub fn step(&mut self, batch: &ImageBatch) -> Result<f32> {
+        if batch.batch != self.batch_size {
+            return Err(anyhow!(
+                "batch size {} != trainer's compiled size {}",
+                batch.batch, self.batch_size
+            ));
+        }
+        let s = self.profile.input_size;
+        if batch.size as usize != s {
+            return Err(anyhow!("image size {} != model input {s}",
+                               batch.size));
+        }
+        if batch.num_classes as usize != self.profile.num_classes {
+            return Err(anyhow!("class count mismatch"));
+        }
+
+        let n = self.profile.params.len();
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(3 * n + 3);
+        for group in [&self.state.params, &self.state.m, &self.state.v] {
+            for (tensor, spec) in group.iter().zip(&self.profile.params) {
+                args.push(lit::f32(&spec.shape, tensor)?);
+            }
+        }
+        args.push(lit::scalar_f32(self.state.step));
+        args.push(lit::f32(&[self.batch_size, s, s, 3], &batch.images)?);
+        args.push(lit::f32(
+            &[self.batch_size, self.profile.num_classes],
+            &batch.labels,
+        )?);
+
+        let mut out = self.exe.get()?.run(&args)?;
+        if out.len() != 3 * n + 2 {
+            return Err(anyhow!(
+                "train step returned {} outputs, expected {}",
+                out.len(), 3 * n + 2
+            ));
+        }
+
+        // Unpack in reverse to consume the Vec cheaply.
+        let loss = out
+            .pop()
+            .unwrap()
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("loss: {e}"))?[0];
+        let step = out
+            .pop()
+            .unwrap()
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("step: {e}"))?[0];
+        let mut groups: Vec<Vec<Vec<f32>>> = Vec::with_capacity(3);
+        for g in 0..3 {
+            let mut tensors = Vec::with_capacity(n);
+            for (i, l) in out.drain(out.len() - n..).enumerate() {
+                let t = l
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("output {g}/{i}: {e}"))?;
+                tensors.push(t);
+            }
+            groups.push(tensors);
+        }
+        // groups drained back-to-front: [v, m, params]
+        self.state.v = groups.remove(0);
+        self.state.m = groups.remove(0);
+        self.state.params = groups.remove(0);
+        self.state.step = step;
+        if !loss.is_finite() {
+            return Err(anyhow!("non-finite loss at step {step}"));
+        }
+        self.losses.push(loss);
+        Ok(loss)
+    }
+}

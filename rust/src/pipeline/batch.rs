@@ -1,0 +1,112 @@
+//! `tf.data.Dataset.batch(batch_size)` (§II-A.1).
+//!
+//! *"This operation accumulates the number of training samples from
+//! the upstream operation and forms a batch."*  Emits `Vec<Item>` of
+//! length `batch_size`; the trailing partial batch is emitted or
+//! dropped per `drop_remainder`, as in TensorFlow.
+
+use anyhow::Result;
+
+use super::dataset::Dataset;
+
+pub struct BatchDataset<D: Dataset> {
+    inner: D,
+    batch_size: usize,
+    drop_remainder: bool,
+    done: bool,
+}
+
+impl<D: Dataset> BatchDataset<D> {
+    pub fn new(inner: D, batch_size: usize, drop_remainder: bool) -> Self {
+        BatchDataset {
+            inner,
+            batch_size: batch_size.max(1),
+            drop_remainder,
+            done: false,
+        }
+    }
+}
+
+impl<D: Dataset> Dataset for BatchDataset<D> {
+    type Item = Vec<D::Item>;
+
+    fn next(&mut self) -> Option<Result<Vec<D::Item>>> {
+        if self.done {
+            return None;
+        }
+        let mut batch = Vec::with_capacity(self.batch_size);
+        while batch.len() < self.batch_size {
+            match self.inner.next() {
+                Some(Ok(x)) => batch.push(x),
+                // An error inside batch assembly surfaces as a batch-
+                // level error (TF fails the whole get_next too).
+                Some(Err(e)) => return Some(Err(e)),
+                None => {
+                    self.done = true;
+                    if batch.is_empty()
+                        || (self.drop_remainder
+                            && batch.len() < self.batch_size)
+                    {
+                        return None;
+                    }
+                    return Some(Ok(batch));
+                }
+            }
+        }
+        Some(Ok(batch))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dataset::{collect, DatasetExt};
+    use super::super::source::from_vec;
+    use anyhow::anyhow;
+
+    #[test]
+    fn exact_batches() {
+        let d = from_vec((0..6).collect::<Vec<i32>>()).batch(2, false);
+        assert_eq!(
+            collect(d).unwrap(),
+            vec![vec![0, 1], vec![2, 3], vec![4, 5]]
+        );
+    }
+
+    #[test]
+    fn partial_tail_kept_by_default() {
+        let d = from_vec((0..5).collect::<Vec<i32>>()).batch(2, false);
+        assert_eq!(collect(d).unwrap(), vec![vec![0, 1], vec![2, 3], vec![4]]);
+    }
+
+    #[test]
+    fn partial_tail_dropped_when_requested() {
+        let d = from_vec((0..5).collect::<Vec<i32>>()).batch(2, true);
+        assert_eq!(collect(d).unwrap(), vec![vec![0, 1], vec![2, 3]]);
+    }
+
+    #[test]
+    fn empty_upstream_yields_nothing() {
+        let d = from_vec(Vec::<i32>::new()).batch(4, false);
+        assert!(collect(d).unwrap().is_empty());
+    }
+
+    #[test]
+    fn error_fails_the_batch() {
+        let d = from_vec(vec![1, 2, 3, 4])
+            .parallel_map(1, |x| {
+                if x == 2 {
+                    Err(anyhow!("bad"))
+                } else {
+                    Ok(x)
+                }
+            })
+            .batch(2, false);
+        assert!(collect(d).is_err());
+    }
+
+    #[test]
+    fn batch_zero_clamped_to_one() {
+        let d = from_vec(vec![1, 2]).batch(0, false);
+        assert_eq!(collect(d).unwrap(), vec![vec![1], vec![2]]);
+    }
+}

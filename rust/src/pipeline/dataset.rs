@@ -1,0 +1,146 @@
+//! The `Dataset` abstraction — a faithful rust port of the tf.data
+//! surface the paper characterizes (§II-A, Fig. 2).
+//!
+//! A dataset is a pull-based iterator of `Result` elements.  Errors
+//! flow through the pipeline as values (so `ignore_errors` can drop
+//! them, §III-A) and `None` marks exhaustion.  Combinators mirror the
+//! tf.data operators used in the paper:
+//!
+//! ```text
+//! from_tensor_slices -> shuffle -> map(num_parallel_calls)
+//!     -> ignore_errors -> batch -> prefetch -> iterator
+//! ```
+
+use anyhow::Result;
+
+use crate::util::Rng;
+
+/// A pull-based stream of elements.
+pub trait Dataset: Send {
+    type Item: Send + 'static;
+
+    /// Next element: `None` = exhausted, `Some(Err)` = element-level
+    /// failure (recoverable via [`ignore_errors`]).
+    fn next(&mut self) -> Option<Result<Self::Item>>;
+}
+
+/// Boxed dataset alias used across the coordinator.
+pub type BoxedDataset<T> = Box<dyn Dataset<Item = T>>;
+
+impl<T: Send + 'static> Dataset for BoxedDataset<T> {
+    type Item = T;
+
+    fn next(&mut self) -> Option<Result<T>> {
+        (**self).next()
+    }
+}
+
+/// Combinator constructors, tf.data style.
+pub trait DatasetExt: Dataset + Sized + 'static {
+    /// `tf.data.Dataset.shuffle(buffer_size)`.
+    fn shuffle(self, buffer_size: usize, rng: Rng)
+        -> super::shuffle::Shuffle<Self>
+    {
+        super::shuffle::Shuffle::new(self, buffer_size, rng)
+    }
+
+    /// `tf.data.Dataset.map(f, num_parallel_calls)` — deterministic
+    /// (ordered) parallel map, as tf.data defaults to.
+    fn parallel_map<U, F>(self, threads: usize, f: F)
+        -> super::map::ParallelMap<U>
+    where
+        U: Send + 'static,
+        F: Fn(Self::Item) -> Result<U> + Send + Sync + 'static,
+    {
+        super::map::ParallelMap::new(self, threads, f)
+    }
+
+    /// `tf.contrib.data.ignore_errors()`.
+    fn ignore_errors(self) -> super::ignore_errors::IgnoreErrors<Self> {
+        super::ignore_errors::IgnoreErrors::new(self)
+    }
+
+    /// `tf.data.Dataset.batch(batch_size)`.
+    fn batch(self, batch_size: usize, drop_remainder: bool)
+        -> super::batch::BatchDataset<Self>
+    {
+        super::batch::BatchDataset::new(self, batch_size, drop_remainder)
+    }
+
+    /// `tf.data.Dataset.prefetch(n)` — background-thread prefetcher.
+    fn prefetch(self, buffer_size: usize)
+        -> super::prefetch::Prefetch<Self::Item>
+    {
+        super::prefetch::Prefetch::new(self, buffer_size)
+    }
+
+    /// `Dataset.take(n)`.
+    fn take(self, n: usize) -> Take<Self> {
+        Take { inner: self, left: n }
+    }
+
+    /// Box the dataset for dynamic composition.
+    fn boxed(self) -> BoxedDataset<Self::Item> {
+        Box::new(self)
+    }
+}
+
+impl<D: Dataset + Sized + 'static> DatasetExt for D {}
+
+/// `Dataset.take(n)` adapter.
+pub struct Take<D: Dataset> {
+    inner: D,
+    left: usize,
+}
+
+impl<D: Dataset> Dataset for Take<D> {
+    type Item = D::Item;
+
+    fn next(&mut self) -> Option<Result<D::Item>> {
+        if self.left == 0 {
+            return None;
+        }
+        self.left -= 1;
+        self.inner.next()
+    }
+}
+
+/// Drain a dataset to a vec of Ok items, propagating the first error.
+pub fn collect<D: Dataset>(mut d: D) -> Result<Vec<D::Item>> {
+    let mut out = Vec::new();
+    while let Some(item) = d.next() {
+        out.push(item?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::source::from_vec;
+    use super::*;
+
+    #[test]
+    fn take_limits_and_stops() {
+        let d = from_vec(vec![1, 2, 3, 4, 5]).take(3);
+        assert_eq!(collect(d).unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn take_zero_is_empty() {
+        let d = from_vec(vec![1, 2]).take(0);
+        assert!(collect(d).unwrap().is_empty());
+    }
+
+    #[test]
+    fn take_beyond_end_is_harmless() {
+        let d = from_vec(vec![1, 2]).take(10);
+        assert_eq!(collect(d).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn boxed_composes() {
+        let d: BoxedDataset<i32> = from_vec(vec![1, 2, 3]).boxed();
+        let d = d.take(2);
+        assert_eq!(collect(d).unwrap(), vec![1, 2]);
+    }
+}

@@ -1,0 +1,117 @@
+//! Element types flowing through the experiment pipelines.
+
+use anyhow::{bail, Result};
+
+/// One preprocessed training sample: normalized f32 pixels at the
+/// model's input geometry, plus its label.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProcessedImage {
+    /// `[size][size][3]` row-major normalized pixels.
+    pub pixels: Vec<f32>,
+    pub size: u32,
+    pub label: u32,
+    /// Bytes read from storage to produce this sample (metrics).
+    pub bytes_read: u64,
+}
+
+/// A batch assembled for the training step: contiguous NHWC images and
+/// one-hot labels, the exact layouts the train-step HLO expects.
+#[derive(Debug, Clone)]
+pub struct ImageBatch {
+    /// `[batch][size][size][3]`.
+    pub images: Vec<f32>,
+    /// `[batch][num_classes]` one-hot.
+    pub labels: Vec<f32>,
+    pub batch: usize,
+    pub size: u32,
+    pub num_classes: u32,
+    pub bytes_read: u64,
+}
+
+impl ImageBatch {
+    /// Assemble a batch from per-sample elements (the collection step
+    /// the paper's `tf.dataset.batch()` performs).
+    pub fn assemble(samples: Vec<ProcessedImage>, num_classes: u32)
+        -> Result<ImageBatch>
+    {
+        if samples.is_empty() {
+            bail!("cannot assemble an empty batch");
+        }
+        let size = samples[0].size;
+        let per = (size * size * 3) as usize;
+        let b = samples.len();
+        let mut images = Vec::with_capacity(b * per);
+        let mut labels = vec![0f32; b * num_classes as usize];
+        let mut bytes_read = 0;
+        for (i, s) in samples.into_iter().enumerate() {
+            if s.size != size {
+                bail!("mixed sizes in batch: {} vs {}", s.size, size);
+            }
+            if s.pixels.len() != per {
+                bail!("bad pixel count {} (want {per})", s.pixels.len());
+            }
+            if s.label >= num_classes {
+                bail!("label {} out of range {num_classes}", s.label);
+            }
+            images.extend_from_slice(&s.pixels);
+            labels[i * num_classes as usize + s.label as usize] = 1.0;
+            bytes_read += s.bytes_read;
+        }
+        Ok(ImageBatch { images, labels, batch: b, size, num_classes,
+                        bytes_read })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(label: u32, size: u32, fill: f32) -> ProcessedImage {
+        ProcessedImage {
+            pixels: vec![fill; (size * size * 3) as usize],
+            size,
+            label,
+            bytes_read: 100,
+        }
+    }
+
+    #[test]
+    fn assembles_contiguous_nhwc_and_onehot() {
+        let b = ImageBatch::assemble(
+            vec![sample(1, 4, 0.5), sample(3, 4, -0.5)], 5).unwrap();
+        assert_eq!(b.batch, 2);
+        assert_eq!(b.images.len(), 2 * 4 * 4 * 3);
+        assert_eq!(b.images[0], 0.5);
+        assert_eq!(b.images[4 * 4 * 3], -0.5);
+        assert_eq!(b.labels.len(), 10);
+        assert_eq!(b.labels[1], 1.0);
+        assert_eq!(b.labels[5 + 3], 1.0);
+        assert_eq!(b.labels.iter().sum::<f32>(), 2.0);
+        assert_eq!(b.bytes_read, 200);
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(ImageBatch::assemble(vec![], 5).is_err());
+    }
+
+    #[test]
+    fn rejects_mixed_sizes() {
+        assert!(
+            ImageBatch::assemble(vec![sample(0, 4, 0.0), sample(0, 8, 0.0)], 5)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn rejects_out_of_range_label() {
+        assert!(ImageBatch::assemble(vec![sample(7, 4, 0.0)], 5).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_pixel_count() {
+        let mut s = sample(0, 4, 0.0);
+        s.pixels.pop();
+        assert!(ImageBatch::assemble(vec![s], 5).is_err());
+    }
+}

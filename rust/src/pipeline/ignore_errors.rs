@@ -1,0 +1,85 @@
+//! `tf.contrib.data.ignore_errors()` (§III-A).
+//!
+//! The paper applies this after the map *"to avoid exceptions in the
+//! mapped function from terminating all execution ... useful in
+//! processing large amounts of data where data completeness is not
+//! guaranteed"*.  Failed elements are silently dropped (with a counter
+//! for observability).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::dataset::Dataset;
+
+pub struct IgnoreErrors<D: Dataset> {
+    inner: D,
+    dropped: Arc<AtomicU64>,
+}
+
+impl<D: Dataset> IgnoreErrors<D> {
+    pub fn new(inner: D) -> Self {
+        IgnoreErrors { inner, dropped: Arc::new(AtomicU64::new(0)) }
+    }
+
+    /// Shared counter of dropped elements.
+    pub fn dropped_counter(&self) -> Arc<AtomicU64> {
+        Arc::clone(&self.dropped)
+    }
+}
+
+impl<D: Dataset> Dataset for IgnoreErrors<D> {
+    type Item = D::Item;
+
+    fn next(&mut self) -> Option<Result<D::Item>> {
+        loop {
+            match self.inner.next() {
+                None => return None,
+                Some(Ok(x)) => return Some(Ok(x)),
+                Some(Err(_)) => {
+                    self.dropped.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dataset::{collect, DatasetExt};
+    use super::super::source::from_vec;
+    use anyhow::anyhow;
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn drops_errors_keeps_order() {
+        let d = from_vec((0..10).collect::<Vec<i32>>())
+            .parallel_map(2, |x| {
+                if x % 3 == 0 {
+                    Err(anyhow!("bad {x}"))
+                } else {
+                    Ok(x)
+                }
+            })
+            .ignore_errors();
+        let counter = d.dropped_counter();
+        let out = collect(d).unwrap();
+        assert_eq!(out, vec![1, 2, 4, 5, 7, 8]);
+        assert_eq!(counter.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn all_errors_yields_empty() {
+        let d = from_vec(vec![1, 2, 3])
+            .parallel_map(1, |_| Err::<i32, _>(anyhow!("x")))
+            .ignore_errors();
+        assert!(collect(d).unwrap().is_empty());
+    }
+
+    #[test]
+    fn no_errors_is_identity() {
+        let d = from_vec(vec![1, 2, 3]).parallel_map(1, Ok).ignore_errors();
+        assert_eq!(collect(d).unwrap(), vec![1, 2, 3]);
+    }
+}

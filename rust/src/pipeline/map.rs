@@ -1,0 +1,320 @@
+//! `tf.data.Dataset.map(f, num_parallel_calls)` (§II-A.1).
+//!
+//! The paper: *"Threads will be spawned by the runtime to execute the
+//! I/O function and the number of threads used by the map can be
+//! specified with num_parallel_calls"*.  This is the knob every
+//! thread-scaling experiment (Figs. 4-6) sweeps.
+//!
+//! Semantics reproduced from TensorFlow's deterministic
+//! `ParallelMapDataset`:
+//!
+//! * `num_parallel_calls` worker threads pull upstream elements under
+//!   a shared lock (upstream pulls are serialized; the *map function*
+//!   runs in parallel — exactly TF's contract).
+//! * Results are delivered **in input order** via a reorder buffer.
+//! * At most `num_parallel_calls` elements are in flight or buffered,
+//!   which provides the backpressure that keeps memory bounded.
+//! * Element-level errors (from upstream or from `f`) are delivered in
+//!   order as `Err` values, to be dropped by `ignore_errors`.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::dataset::{BoxedDataset, Dataset};
+
+struct MapState<T: Send + 'static, U> {
+    upstream: Option<BoxedDataset<T>>,
+    /// Next sequence number to hand to a worker.
+    issue_seq: u64,
+    /// Completed results awaiting in-order delivery.
+    results: BTreeMap<u64, Result<U>>,
+    in_flight: usize,
+    upstream_done: bool,
+    shutdown: bool,
+}
+
+struct Shared<T: Send + 'static, U> {
+    state: Mutex<MapState<T, U>>,
+    /// Signals the consumer that a result may be ready.
+    ready: Condvar,
+    /// Signals workers that window space freed up.
+    slot: Condvar,
+    capacity: usize,
+}
+
+/// Ordered parallel map over a boxed upstream.
+pub struct ParallelMap<U: Send + 'static> {
+    shared: Arc<dyn ErasedShared<U>>,
+    workers: Vec<JoinHandle<()>>,
+    next_seq: u64,
+}
+
+/// Object-safe view of `Shared<T, U>` for the consumer side (erases T).
+trait ErasedShared<U>: Send + Sync {
+    fn pop_next(&self, seq: u64) -> Option<Result<U>>;
+    fn request_shutdown(&self);
+}
+
+impl<T: Send + 'static, U: Send + 'static> ErasedShared<U> for Shared<T, U> {
+    fn pop_next(&self, seq: u64) -> Option<Result<U>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(r) = st.results.remove(&seq) {
+                self.slot.notify_all();
+                return Some(r);
+            }
+            let exhausted = st.upstream_done
+                && st.in_flight == 0
+                && st.results.is_empty();
+            if exhausted {
+                return None;
+            }
+            st = self.ready.wait(st).unwrap();
+        }
+    }
+
+    fn request_shutdown(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.shutdown = true;
+        drop(st);
+        self.slot.notify_all();
+        self.ready.notify_all();
+    }
+}
+
+impl<U: Send + 'static> ParallelMap<U> {
+    pub fn new<D, F>(upstream: D, threads: usize, f: F) -> Self
+    where
+        D: Dataset + 'static,
+        F: Fn(D::Item) -> Result<U> + Send + Sync + 'static,
+    {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared::<D::Item, U> {
+            state: Mutex::new(MapState {
+                upstream: Some(Box::new(upstream) as BoxedDataset<D::Item>),
+                issue_seq: 0,
+                results: BTreeMap::new(),
+                in_flight: 0,
+                upstream_done: false,
+                shutdown: false,
+            }),
+            ready: Condvar::new(),
+            slot: Condvar::new(),
+            capacity: threads,
+        });
+        let f = Arc::new(f);
+        let workers = (0..threads)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                let f = Arc::clone(&f);
+                std::thread::Builder::new()
+                    .name(format!("dlio-map-{i}"))
+                    .spawn(move || worker_loop(sh, f))
+                    .expect("spawn map worker")
+            })
+            .collect();
+        ParallelMap { shared, workers, next_seq: 0 }
+    }
+}
+
+fn worker_loop<T: Send + 'static, U: Send + 'static>(
+    sh: Arc<Shared<T, U>>,
+    f: Arc<dyn Fn(T) -> Result<U> + Send + Sync>,
+) {
+    loop {
+        // --- acquire an input element + sequence number ---
+        let (seq, item) = {
+            let mut st = sh.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.upstream_done {
+                    return;
+                }
+                // Backpressure window: buffered + running < capacity.
+                if st.results.len() + st.in_flight < sh.capacity {
+                    break;
+                }
+                st = sh.slot.wait(st).unwrap();
+            }
+            let upstream = st.upstream.as_mut().expect("upstream present");
+            match upstream.next() {
+                None => {
+                    st.upstream_done = true;
+                    st.upstream = None; // drop source promptly
+                    sh.ready.notify_all();
+                    // Wake siblings blocked on the slot condvar so they
+                    // can observe upstream_done and exit.
+                    sh.slot.notify_all();
+                    return;
+                }
+                Some(item) => {
+                    let seq = st.issue_seq;
+                    st.issue_seq += 1;
+                    st.in_flight += 1;
+                    (seq, item)
+                }
+            }
+        };
+
+        // --- run the map function outside the lock ---
+        let out = match item {
+            Ok(x) => f(x),
+            Err(e) => Err(e), // upstream element error propagates in order
+        };
+
+        // --- deliver ---
+        let mut st = sh.state.lock().unwrap();
+        st.results.insert(seq, out);
+        st.in_flight -= 1;
+        drop(st);
+        sh.ready.notify_all();
+    }
+}
+
+impl<U: Send + 'static> Dataset for ParallelMap<U> {
+    type Item = U;
+
+    fn next(&mut self) -> Option<Result<U>> {
+        let r = self.shared.pop_next(self.next_seq);
+        if r.is_some() {
+            self.next_seq += 1;
+        }
+        r
+    }
+}
+
+impl<U: Send + 'static> Drop for ParallelMap<U> {
+    fn drop(&mut self) {
+        self.shared.request_shutdown();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dataset::{collect, DatasetExt};
+    use super::super::source::from_vec;
+    use anyhow::anyhow;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn preserves_input_order() {
+        let d = from_vec((0..200).collect::<Vec<i64>>())
+            .parallel_map(8, |x| Ok(x * 2));
+        let out = collect(d).unwrap();
+        assert_eq!(out, (0..200).map(|x| x * 2).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn order_held_even_with_skewed_latencies() {
+        let d = from_vec((0..40).collect::<Vec<u64>>()).parallel_map(4, |x| {
+            // Earlier elements are slower: order must still hold.
+            std::thread::sleep(Duration::from_millis((40 - x) / 4));
+            Ok(x)
+        });
+        let out = collect(d).unwrap();
+        assert_eq!(out, (0..40).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn actually_parallel() {
+        let t0 = std::time::Instant::now();
+        let d = from_vec((0..8).collect::<Vec<i32>>()).parallel_map(8, |x| {
+            std::thread::sleep(Duration::from_millis(100));
+            Ok(x)
+        });
+        let out = collect(d).unwrap();
+        assert_eq!(out.len(), 8);
+        // 8 x 100 ms on 8 threads ≈ 100 ms; serial would be 800 ms.
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn single_thread_equals_serial_map() {
+        let d = from_vec(vec![1, 2, 3]).parallel_map(1, |x| Ok(x + 1));
+        assert_eq!(collect(d).unwrap(), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn f_errors_delivered_in_order() {
+        let d = from_vec((0..10).collect::<Vec<i32>>()).parallel_map(4, |x| {
+            if x == 5 {
+                Err(anyhow!("boom"))
+            } else {
+                Ok(x)
+            }
+        });
+        let mut got = Vec::new();
+        let mut errs = 0;
+        let mut d = d;
+        while let Some(item) = crate::pipeline::dataset::Dataset::next(&mut d)
+        {
+            match item {
+                Ok(v) => got.push(v),
+                Err(_) => errs += 1,
+            }
+        }
+        assert_eq!(errs, 1);
+        assert_eq!(got, vec![0, 1, 2, 3, 4, 6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn bounded_in_flight_backpressure() {
+        // Without pulling results, at most `threads` elements may be
+        // consumed from upstream (+1 per worker possibly blocked at
+        // the window check before pulling).
+        let pulled = Arc::new(AtomicUsize::new(0));
+        let p = Arc::clone(&pulled);
+        let src = from_vec((0..1000).collect::<Vec<i32>>());
+        struct Counting<D> {
+            inner: D,
+            n: Arc<AtomicUsize>,
+        }
+        impl<D: crate::pipeline::dataset::Dataset> crate::pipeline::dataset::Dataset
+            for Counting<D>
+        {
+            type Item = D::Item;
+            fn next(&mut self) -> Option<anyhow::Result<D::Item>> {
+                self.n.fetch_add(1, Ordering::SeqCst);
+                self.inner.next()
+            }
+        }
+        let d = Counting { inner: src, n: p }.parallel_map(4, Ok);
+        std::thread::sleep(Duration::from_millis(100));
+        let consumed = pulled.load(Ordering::SeqCst);
+        assert!(consumed <= 8, "consumed {consumed} without backpressure");
+        drop(d);
+    }
+
+    #[test]
+    fn drop_mid_stream_joins_cleanly() {
+        let mut d = from_vec((0..100).collect::<Vec<i32>>())
+            .parallel_map(4, |x| {
+                std::thread::sleep(Duration::from_millis(5));
+                Ok(x)
+            });
+        let _ = crate::pipeline::dataset::Dataset::next(&mut d);
+        drop(d); // must not hang or panic
+    }
+
+    #[test]
+    fn empty_upstream_terminates() {
+        let d = from_vec(Vec::<i32>::new()).parallel_map(4, Ok);
+        assert!(collect(d).unwrap().is_empty());
+    }
+
+    #[test]
+    fn thread_count_zero_clamped() {
+        let d = from_vec(vec![1]).parallel_map(0, Ok);
+        assert_eq!(collect(d).unwrap(), vec![1]);
+    }
+}

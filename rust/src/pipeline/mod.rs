@@ -1,0 +1,16 @@
+//! A faithful rust port of the `tf.data` input pipeline (§II-A):
+//! source → shuffle → parallel map → ignore_errors → batch → prefetch,
+//! plus the element/batch types the experiments flow through it.
+
+pub mod batch;
+pub mod dataset;
+pub mod elements;
+pub mod ignore_errors;
+pub mod map;
+pub mod prefetch;
+pub mod shuffle;
+pub mod source;
+
+pub use dataset::{collect, BoxedDataset, Dataset, DatasetExt};
+pub use elements::{ImageBatch, ProcessedImage};
+pub use source::{from_manifest, from_vec};

@@ -1,0 +1,132 @@
+//! `tf.data.Dataset.shuffle(buffer_size)` — reservoir shuffling.
+//!
+//! tf.data semantics: keep a buffer of `buffer_size` elements; on each
+//! pull, emit a uniformly random buffered element and refill from
+//! upstream.  `buffer_size >= dataset` gives a perfect shuffle; smaller
+//! buffers trade randomness for memory, exactly as in TensorFlow.
+
+use anyhow::Result;
+
+use super::dataset::Dataset;
+use crate::util::Rng;
+
+pub struct Shuffle<D: Dataset> {
+    inner: D,
+    buffer: Vec<D::Item>,
+    capacity: usize,
+    rng: Rng,
+    filled: bool,
+    upstream_done: bool,
+}
+
+impl<D: Dataset> Shuffle<D> {
+    pub fn new(inner: D, buffer_size: usize, rng: Rng) -> Self {
+        Shuffle {
+            inner,
+            buffer: Vec::with_capacity(buffer_size.max(1)),
+            capacity: buffer_size.max(1),
+            rng,
+            filled: false,
+            upstream_done: false,
+        }
+    }
+
+    fn fill(&mut self) -> Option<Result<()>> {
+        while !self.upstream_done && self.buffer.len() < self.capacity {
+            match self.inner.next() {
+                Some(Ok(item)) => self.buffer.push(item),
+                Some(Err(e)) => return Some(Err(e)),
+                None => self.upstream_done = true,
+            }
+        }
+        Some(Ok(()))
+    }
+}
+
+impl<D: Dataset> Dataset for Shuffle<D> {
+    type Item = D::Item;
+
+    fn next(&mut self) -> Option<Result<D::Item>> {
+        if !self.filled {
+            if let Some(Err(e)) = self.fill() {
+                return Some(Err(e));
+            }
+            self.filled = true;
+        }
+        if self.buffer.is_empty() {
+            return None;
+        }
+        let idx = self.rng.index(self.buffer.len());
+        let item = self.buffer.swap_remove(idx);
+        // Refill the slot from upstream.
+        if !self.upstream_done {
+            match self.inner.next() {
+                Some(Ok(x)) => self.buffer.push(x),
+                Some(Err(e)) => return Some(Err(e)),
+                None => self.upstream_done = true,
+            }
+        }
+        Some(Ok(item))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dataset::{collect, DatasetExt};
+    use super::super::source::from_vec;
+    use super::*;
+
+    #[test]
+    fn is_a_permutation() {
+        let src: Vec<u32> = (0..500).collect();
+        let d = from_vec(src.clone()).shuffle(64, Rng::new(1));
+        let mut out = collect(d).unwrap();
+        out.sort();
+        assert_eq!(out, src);
+    }
+
+    #[test]
+    fn full_buffer_shuffles_uniformly_enough() {
+        // First emitted element over many seeds should vary.
+        let mut firsts = std::collections::HashSet::new();
+        for seed in 0..20 {
+            let d = from_vec((0..50).collect::<Vec<_>>())
+                .shuffle(50, Rng::new(seed));
+            let out = collect(d).unwrap();
+            firsts.insert(out[0]);
+        }
+        assert!(firsts.len() > 5, "only {} distinct firsts", firsts.len());
+    }
+
+    #[test]
+    fn buffer_one_is_identity() {
+        // A 1-element reservoir cannot reorder.
+        let d = from_vec(vec![1, 2, 3, 4]).shuffle(1, Rng::new(9));
+        assert_eq!(collect(d).unwrap(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn small_buffer_limits_displacement() {
+        // With buffer B, element i cannot appear before pull i - B.
+        let n = 200;
+        let b = 8;
+        let d = from_vec((0..n).collect::<Vec<_>>()).shuffle(b, Rng::new(3));
+        let out = collect(d).unwrap();
+        for (pos, &v) in out.iter().enumerate() {
+            assert!(v <= (pos + b) as i32, "v={v} at pos={pos}");
+        }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mk = || from_vec((0..100).collect::<Vec<_>>())
+            .shuffle(32, Rng::new(77));
+        assert_eq!(collect(mk()).unwrap(), collect(mk()).unwrap());
+    }
+
+    #[test]
+    fn empty_upstream() {
+        let d = from_vec(Vec::<i32>::new()).shuffle(16, Rng::new(0));
+        assert!(collect(d).unwrap().is_empty());
+    }
+}

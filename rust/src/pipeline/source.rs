@@ -1,0 +1,63 @@
+//! Source datasets (`tf.data.Dataset.from_tensor_slices`).
+
+use anyhow::Result;
+
+use super::dataset::Dataset;
+use crate::data::manifest::{Manifest, Sample};
+
+/// A dataset yielding the elements of a vector in order.
+pub struct VecSource<T> {
+    items: std::vec::IntoIter<T>,
+}
+
+/// `from_tensor_slices` over any vector.
+pub fn from_vec<T: Send + 'static>(items: Vec<T>) -> VecSource<T> {
+    VecSource { items: items.into_iter() }
+}
+
+/// The paper's source dataset: the (file path, label) list (Fig. 2).
+pub fn from_manifest(m: &Manifest) -> VecSource<Sample> {
+    from_vec(m.samples.clone())
+}
+
+impl<T: Send + 'static> Dataset for VecSource<T> {
+    type Item = T;
+
+    fn next(&mut self) -> Option<Result<T>> {
+        self.items.next().map(Ok)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::dataset::collect;
+    use crate::storage::SimPath;
+
+    #[test]
+    fn yields_in_order() {
+        let d = from_vec(vec!["a", "b", "c"]);
+        assert_eq!(collect(d).unwrap(), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn empty_source() {
+        let d = from_vec(Vec::<u8>::new());
+        assert!(collect(d).unwrap().is_empty());
+    }
+
+    #[test]
+    fn manifest_source_preserves_pairs() {
+        let m = Manifest {
+            samples: vec![
+                Sample { path: SimPath::new("d", "0"), label: 5 },
+                Sample { path: SimPath::new("d", "1"), label: 6 },
+            ],
+            num_classes: 10,
+            src_size: 32,
+        };
+        let items = collect(from_manifest(&m)).unwrap();
+        assert_eq!(items.len(), 2);
+        assert_eq!(items[1].label, 6);
+    }
+}

@@ -1,0 +1,270 @@
+//! PJRT client + compiled-executable cache.
+//!
+//! ## Threading model
+//!
+//! The `xla` crate's `PjRtClient`/`PjRtLoadedExecutable` are `!Send`
+//! (they hold `Rc` refcounts), so XLA objects must never cross
+//! threads.  We therefore keep **one PJRT client and executable cache
+//! per thread** (`thread_local!`): each `parallel_map` worker that runs
+//! the preprocess kernel owns its own client + compiled module, and
+//! the training thread owns its own train-step module.  This mirrors
+//! the TensorFlow runtime, where each inter-op thread executes kernels
+//! against its own execution context.  Shareable handles ([`ExecSpec`])
+//! are just paths + metadata and are freely `Send`.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::meta::ModelMeta;
+
+/// One compiled HLO module, owned by the current thread.
+pub struct Executable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+thread_local! {
+    /// Per-thread PJRT client (created on first use).
+    static CLIENT: RefCell<Option<Rc<xla::PjRtClient>>> =
+        const { RefCell::new(None) };
+    /// Per-thread compiled-module cache, keyed by artifact path.
+    static EXECUTABLES: RefCell<HashMap<PathBuf, Rc<Executable>>> =
+        RefCell::new(HashMap::new());
+}
+
+/// This thread's PJRT CPU client.
+pub fn thread_client() -> Result<Rc<xla::PjRtClient>> {
+    CLIENT.with(|c| {
+        let mut slot = c.borrow_mut();
+        if let Some(client) = slot.as_ref() {
+            return Ok(Rc::clone(client));
+        }
+        // Quiet the TfrtCpuClient created/destroyed chatter unless the
+        // user asked for verbose logs.
+        if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
+            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+        }
+        let client = Rc::new(
+            xla::PjRtClient::cpu()
+                .map_err(|e| anyhow!("PJRT CPU client init: {e}"))?,
+        );
+        *slot = Some(Rc::clone(&client));
+        Ok(client)
+    })
+}
+
+/// Load+compile `path` on this thread (cached per thread).
+pub fn thread_executable(path: &Path) -> Result<Rc<Executable>> {
+    if let Some(e) =
+        EXECUTABLES.with(|m| m.borrow().get(path).map(Rc::clone))
+    {
+        return Ok(e);
+    }
+    let exe = Rc::new(Executable::load(path)?);
+    EXECUTABLES.with(|m| {
+        m.borrow_mut().insert(path.to_path_buf(), Rc::clone(&exe));
+    });
+    Ok(exe)
+}
+
+impl Executable {
+    /// Load HLO text from `path` and compile it on this thread's
+    /// client.
+    pub fn load(path: &Path) -> Result<Executable> {
+        let name = path
+            .file_name()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = thread_client()?
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e}", path.display()))?;
+        Ok(Executable { name, exe })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with literal inputs, returning the flattened outputs.
+    /// Artifacts are lowered with `return_tuple=True`, so the single
+    /// result buffer is a tuple that we decompose host-side.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let buffers = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute {}: {e}", self.name))?;
+        let out = buffers
+            .first()
+            .and_then(|replica| replica.first())
+            .ok_or_else(|| anyhow!("execute {}: no outputs", self.name))?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {}: {e}", self.name))?;
+        out.to_tuple()
+            .map_err(|e| anyhow!("untuple result of {}: {e}", self.name))
+    }
+
+    /// Execute with device-resident buffers (hot-loop path: keeps
+    /// params on device, avoiding host round-trips).  Returns the raw
+    /// output buffers.
+    pub fn run_b(&self, args: &[&xla::PjRtBuffer])
+        -> Result<Vec<xla::PjRtBuffer>>
+    {
+        let mut buffers = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .map_err(|e| anyhow!("execute_b {}: {e}", self.name))?;
+        if buffers.is_empty() || buffers[0].is_empty() {
+            return Err(anyhow!("execute_b {}: no outputs", self.name));
+        }
+        Ok(buffers.swap_remove(0))
+    }
+}
+
+/// A `Send + Sync` handle to an artifact: resolves to a compiled
+/// [`Executable`] on whichever thread calls [`ExecSpec::get`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExecSpec {
+    path: PathBuf,
+}
+
+impl ExecSpec {
+    pub fn new(path: PathBuf) -> ExecSpec {
+        ExecSpec { path }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Compile (or fetch from this thread's cache) the executable.
+    pub fn get(&self) -> Result<Rc<Executable>> {
+        thread_executable(&self.path)
+    }
+}
+
+/// Literal construction helpers (the L3-side marshalling layer).
+pub mod lit {
+    use super::*;
+
+    /// f32 literal with the given dims from a host slice.
+    pub fn f32(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            return Err(anyhow!("literal shape {dims:?} != len {}",
+                               data.len()));
+        }
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                       data.len() * 4)
+        };
+        xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32, dims, bytes)
+            .map_err(|e| anyhow!("create f32 literal: {e}"))
+    }
+
+    /// u8 literal with the given dims.
+    pub fn u8(dims: &[usize], data: &[u8]) -> Result<xla::Literal> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            return Err(anyhow!("literal shape {dims:?} != len {}",
+                               data.len()));
+        }
+        xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U8, dims, data)
+            .map_err(|e| anyhow!("create u8 literal: {e}"))
+    }
+
+    /// f32 scalar.
+    pub fn scalar_f32(v: f32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    /// Extract a literal's f32 data.
+    pub fn to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+        l.to_vec::<f32>().map_err(|e| anyhow!("literal to f32: {e}"))
+    }
+}
+
+/// Artifact directory + parsed meta.  `Send + Sync`; executables are
+/// materialized per thread via [`ExecSpec`].
+pub struct Runtime {
+    dir: PathBuf,
+    meta: ModelMeta,
+}
+
+impl Runtime {
+    /// Open an artifact directory produced by `make artifacts`.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Runtime> {
+        let dir = dir.into();
+        let meta = ModelMeta::load(&dir).with_context(|| {
+            format!(
+                "loading artifact meta from {} (run `make artifacts`)",
+                dir.display()
+            )
+        })?;
+        Ok(Runtime { dir, meta })
+    }
+
+    /// Default artifact location: `$DLIO_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Runtime> {
+        let dir = std::env::var("DLIO_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(dir)
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    /// Spec for an artifact by file name.
+    pub fn spec(&self, file: &str) -> ExecSpec {
+        ExecSpec::new(self.dir.join(file))
+    }
+
+    /// The preprocess executable spec for a (src, out) bucket.
+    pub fn preprocess(&self, src: usize, out: usize) -> Result<ExecSpec> {
+        Ok(self.spec(self.meta.preprocess_artifact(src, out)?))
+    }
+
+    /// The train-step executable spec for (profile, batch).
+    pub fn train_step(&self, profile: &str, batch: usize)
+        -> Result<ExecSpec>
+    {
+        Ok(self.spec(self.meta.train_artifact(profile, batch)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_helpers_validate_shape() {
+        assert!(lit::f32(&[2, 2], &[1.0, 2.0, 3.0]).is_err());
+        assert!(lit::u8(&[3], &[1, 2]).is_err());
+        let l = lit::f32(&[2, 2], &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(lit::to_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn runtime_open_missing_dir_is_actionable() {
+        let Err(err) = Runtime::open("/nonexistent-dlio") else {
+            panic!("open of missing dir succeeded");
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn exec_spec_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<ExecSpec>();
+        assert_send_sync::<Runtime>();
+    }
+}

@@ -1,0 +1,320 @@
+//! The artifact ABI: a typed view of `artifacts/model_meta.json`.
+//!
+//! `python/compile/aot.py` emits this file alongside the HLO artifacts;
+//! it pins the flat argument/result order of the train step
+//! (`[params*, m*, v*, step, images, labels] -> (params*, m*, v*, step,
+//! loss)`), parameter shapes for initialization, optimizer constants
+//! and the preprocess bucket list.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One parameter tensor: name + shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// He-init fan-in: product of all but the last dimension.
+    pub fn fan_in(&self) -> usize {
+        self.shape[..self.shape.len() - 1].iter().product::<usize>().max(1)
+    }
+
+    pub fn is_bias(&self) -> bool {
+        self.name.ends_with("bias")
+    }
+}
+
+/// One network profile (micro / mini / paper).
+#[derive(Debug, Clone)]
+pub struct ProfileMeta {
+    pub name: String,
+    pub input_size: usize,
+    pub num_classes: usize,
+    pub params: Vec<ParamSpec>,
+    pub num_params: usize,
+}
+
+impl ProfileMeta {
+    /// Train-step input arity: 3 * |params| + step + images + labels.
+    pub fn num_inputs(&self) -> usize {
+        3 * self.params.len() + 3
+    }
+
+    /// Train-step output arity: 3 * |params| + step + loss.
+    pub fn num_outputs(&self) -> usize {
+        3 * self.params.len() + 2
+    }
+
+    /// Logical checkpoint payload (w + m + v as f32), bytes.
+    pub fn checkpoint_bytes(&self) -> u64 {
+        self.num_params as u64 * 3 * 4
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub enum ArtifactInfo {
+    Preprocess { file: String, src_size: usize, out_size: usize,
+                 batch: usize },
+    Train { file: String, profile: String, batch: usize },
+}
+
+impl ArtifactInfo {
+    pub fn file(&self) -> &str {
+        match self {
+            ArtifactInfo::Preprocess { file, .. } => file,
+            ArtifactInfo::Train { file, .. } => file,
+        }
+    }
+}
+
+/// Adam hyper-parameters (mirrors `model.py`).
+#[derive(Debug, Clone, Copy)]
+pub struct AdamMeta {
+    pub lr: f64,
+    pub b1: f64,
+    pub b2: f64,
+    pub eps: f64,
+}
+
+/// Parsed model_meta.json.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub adam: AdamMeta,
+    pub profiles: Vec<ProfileMeta>,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl ModelMeta {
+    pub fn load(dir: &Path) -> Result<ModelMeta> {
+        let path = dir.join("model_meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<ModelMeta> {
+        let j = Json::parse(text).context("parsing model_meta.json")?;
+        let req = |v: Option<&Json>, what: &str| {
+            v.cloned().ok_or_else(|| anyhow!("meta missing {what}"))
+        };
+
+        let adam_j = req(j.get("adam"), "adam")?;
+        let num = |o: &Json, k: &str| -> Result<f64> {
+            o.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("adam missing {k}"))
+        };
+        let adam = AdamMeta {
+            lr: num(&adam_j, "lr")?,
+            b1: num(&adam_j, "b1")?,
+            b2: num(&adam_j, "b2")?,
+            eps: num(&adam_j, "eps")?,
+        };
+
+        let mut profiles = Vec::new();
+        for (name, p) in req(j.get("profiles"), "profiles")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("profiles not an object"))?
+        {
+            let params = p
+                .get("params")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("profile {name} missing params"))?
+                .iter()
+                .map(|q| -> Result<ParamSpec> {
+                    Ok(ParamSpec {
+                        name: q
+                            .get("name")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("param missing name"))?
+                            .to_string(),
+                        shape: q
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| anyhow!("param missing shape"))?
+                            .iter()
+                            .map(|d| {
+                                d.as_usize()
+                                    .ok_or_else(|| anyhow!("bad dim"))
+                            })
+                            .collect::<Result<Vec<_>>>()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let get_usize = |k: &str| -> Result<usize> {
+                p.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("profile {name} missing {k}"))
+            };
+            let prof = ProfileMeta {
+                name: name.clone(),
+                input_size: get_usize("input_size")?,
+                num_classes: get_usize("num_classes")?,
+                num_params: get_usize("num_params")?,
+                params,
+            };
+            // Cross-check the ABI arity recorded by python.
+            if prof.num_inputs() != get_usize("num_inputs")?
+                || prof.num_outputs() != get_usize("num_outputs")?
+            {
+                return Err(anyhow!("profile {name}: ABI arity mismatch"));
+            }
+            profiles.push(prof);
+        }
+
+        let mut artifacts = Vec::new();
+        for a in req(j.get("artifacts"), "artifacts")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("artifacts not an array"))?
+        {
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing file"))?
+                .to_string();
+            let kind = a
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing kind"))?;
+            let info = match kind {
+                "preprocess" => ArtifactInfo::Preprocess {
+                    file,
+                    src_size: a.get("src_size").and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("missing src_size"))?,
+                    out_size: a.get("out_size").and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("missing out_size"))?,
+                    batch: a.get("batch").and_then(Json::as_usize)
+                        .unwrap_or(1),
+                },
+                "train" => ArtifactInfo::Train {
+                    file,
+                    profile: a.get("profile").and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("missing profile"))?
+                        .to_string(),
+                    batch: a.get("batch").and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("missing batch"))?,
+                },
+                other => return Err(anyhow!("unknown artifact kind {other}")),
+            };
+            artifacts.push(info);
+        }
+
+        Ok(ModelMeta { adam, profiles, artifacts })
+    }
+
+    pub fn profile(&self, name: &str) -> Result<&ProfileMeta> {
+        self.profiles
+            .iter()
+            .find(|p| p.name == name)
+            .ok_or_else(|| anyhow!("unknown profile {name:?}"))
+    }
+
+    /// File name of the train artifact for (profile, batch).
+    pub fn train_artifact(&self, profile: &str, batch: usize)
+        -> Result<&str>
+    {
+        self.artifacts
+            .iter()
+            .find_map(|a| match a {
+                ArtifactInfo::Train { file, profile: p, batch: b }
+                    if p == profile && *b == batch => Some(file.as_str()),
+                _ => None,
+            })
+            .ok_or_else(|| {
+                anyhow!("no train artifact for {profile} batch {batch} \
+                         (rebuild with `make artifacts`)")
+            })
+    }
+
+    /// File name of the preprocess artifact for (src, out).
+    pub fn preprocess_artifact(&self, src: usize, out: usize)
+        -> Result<&str>
+    {
+        self.artifacts
+            .iter()
+            .find_map(|a| match a {
+                ArtifactInfo::Preprocess { file, src_size, out_size, .. }
+                    if *src_size == src && *out_size == out => {
+                        Some(file.as_str())
+                    }
+                _ => None,
+            })
+            .ok_or_else(|| {
+                anyhow!("no preprocess artifact {src}->{out} \
+                         (rebuild with `make artifacts`)")
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "adam": {"lr": 0.0001, "b1": 0.9, "b2": 0.999, "eps": 1e-08},
+      "profiles": {
+        "micro": {
+          "name": "micro", "input_size": 32, "num_classes": 102,
+          "num_param_tensors": 2, "num_params": 14,
+          "params": [
+            {"name": "conv1/kernel", "shape": [2, 2, 3, 1]},
+            {"name": "conv1/bias", "shape": [2]}
+          ],
+          "num_inputs": 9, "num_outputs": 8
+        }
+      },
+      "artifacts": [
+        {"kind": "preprocess", "file": "p.hlo.txt",
+         "src_size": 96, "out_size": 32, "batch": 1},
+        {"kind": "train", "file": "t.hlo.txt",
+         "profile": "micro", "batch": 64}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ModelMeta::parse(SAMPLE).unwrap();
+        assert!((m.adam.lr - 1e-4).abs() < 1e-12);
+        let p = m.profile("micro").unwrap();
+        assert_eq!(p.params.len(), 2);
+        assert_eq!(p.num_inputs(), 9);
+        assert_eq!(p.checkpoint_bytes(), 14 * 12);
+        assert_eq!(m.train_artifact("micro", 64).unwrap(), "t.hlo.txt");
+        assert_eq!(m.preprocess_artifact(96, 32).unwrap(), "p.hlo.txt");
+    }
+
+    #[test]
+    fn missing_artifact_is_actionable_error() {
+        let m = ModelMeta::parse(SAMPLE).unwrap();
+        let err = m.train_artifact("micro", 7).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn arity_mismatch_rejected() {
+        let bad = SAMPLE.replace("\"num_inputs\": 9", "\"num_inputs\": 10");
+        assert!(ModelMeta::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn param_spec_helpers() {
+        let p = ParamSpec { name: "fc1/kernel".into(), shape: vec![8, 4] };
+        assert_eq!(p.num_elements(), 32);
+        assert_eq!(p.fan_in(), 8);
+        assert!(!p.is_bias());
+        let b = ParamSpec { name: "fc1/bias".into(), shape: vec![4] };
+        assert!(b.is_bias());
+        assert_eq!(b.fan_in(), 1);
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: loads AOT artifacts and executes them on the hot path.
+//!
+//! This is the boundary between L3 (rust) and L1/L2 (python, build-time
+//! only): `make artifacts` lowers the JAX/Pallas computations to HLO
+//! *text* (see `python/compile/aot.py` for why text, not serialized
+//! protos), and this module loads, compiles and runs them through the
+//! `xla` crate's PJRT CPU client.  Python never executes at runtime.
+
+pub mod executable;
+pub mod meta;
+
+pub use executable::{ExecSpec, Executable, Runtime};
+pub use meta::{ArtifactInfo, ModelMeta, ParamSpec, ProfileMeta};

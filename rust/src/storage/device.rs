@@ -1,0 +1,462 @@
+//! Simulated storage devices (DESIGN.md §2).
+//!
+//! The paper's experiments observe exactly one surface of the hardware:
+//! *service time of reads/writes as a function of request size and
+//! concurrency*.  [`DeviceModel`] reproduces that surface with four
+//! ingredients, each grounded in a physical mechanism:
+//!
+//! * `read_bw` / `write_bw` — aggregate transfer caps (Table I upper
+//!   bounds), enforced by a shared [`TokenBucket`] per direction.
+//! * `read_lat` / `write_lat` — per-operation setup cost (HDD seek,
+//!   SSD/NVMe command latency, Lustre RPC round-trip).  This is what
+//!   makes a *single* synchronous stream of small files land far below
+//!   the IOR bound — the effect behind Fig. 4's thread scaling.
+//! * `channels` — how many requests the device services concurrently
+//!   (HDD: 1 head; SSD: a few NAND channels; Optane: deep parallelism;
+//!   Lustre: many OSTs).
+//! * `elevator` — queue-depth → seek-time-reduction curve.  An HDD
+//!   with a deeper queue reorders accesses (elevator scheduling), so
+//!   the *effective* per-op latency shrinks with diminishing returns —
+//!   this is why the paper's HDD curve flattens past 4 threads.
+//!
+//! Requests perform *real* file I/O against backing storage and are
+//! *paced* with sleeps so that measured bandwidth and scaling match the
+//! modelled device.  All byte grants flow through an observer hook,
+//! which is how the dstat-style tracer (Figs. 8/10) sees traffic.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Transfer direction, for accounting and tracing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dir {
+    Read,
+    Write,
+}
+
+/// Byte-grant observer (implemented by `trace::Dstat`).
+pub trait IoObserver: Send + Sync {
+    fn record(&self, device: &str, dir: Dir, bytes: u64);
+}
+
+/// A no-op observer.
+pub struct NullObserver;
+
+impl IoObserver for NullObserver {
+    fn record(&self, _device: &str, _dir: Dir, _bytes: u64) {}
+}
+
+/// Static description of a device's performance envelope.
+#[derive(Debug, Clone)]
+pub struct DeviceModel {
+    pub name: String,
+    /// Aggregate read bandwidth cap, bytes/s (Table I "Max Read").
+    pub read_bw: f64,
+    /// Aggregate write bandwidth cap, bytes/s (Table I "Max Write").
+    pub write_bw: f64,
+    /// Per-operation read setup latency, seconds.
+    pub read_lat: f64,
+    /// Per-operation write setup latency, seconds.
+    pub write_lat: f64,
+    /// Requests serviced concurrently; extra requests queue.
+    pub channels: usize,
+    /// (queue_depth, seek-gain) control points; latency is divided by
+    /// the interpolated gain.  `[(1, 1.0)]` disables the effect.
+    pub elevator: Vec<(u32, f64)>,
+    /// Speed multiplier: 1.0 = modelled speed; >1 runs experiments
+    /// proportionally faster while preserving every ratio.
+    pub time_scale: f64,
+}
+
+impl DeviceModel {
+    /// Interpolated elevator gain at queue depth `k`.
+    pub fn elevator_gain(&self, k: u32) -> f64 {
+        let pts = &self.elevator;
+        if pts.is_empty() {
+            return 1.0;
+        }
+        if k <= pts[0].0 {
+            return pts[0].1;
+        }
+        for w in pts.windows(2) {
+            let (k0, g0) = w[0];
+            let (k1, g1) = w[1];
+            if k <= k1 {
+                let t = (k - k0) as f64 / (k1 - k0) as f64;
+                return g0 + t * (g1 - g0);
+            }
+        }
+        pts[pts.len() - 1].1
+    }
+
+    /// Analytic single-request service time (no queueing), seconds.
+    /// Used by calibration tests; the live path uses paced sleeps.
+    pub fn service_time(&self, dir: Dir, bytes: u64, queue_depth: u32) -> f64 {
+        let (lat, bw) = match dir {
+            Dir::Read => (self.read_lat, self.read_bw),
+            Dir::Write => (self.write_lat, self.write_bw),
+        };
+        (lat / self.elevator_gain(queue_depth) + bytes as f64 / bw)
+            / self.time_scale
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Token bucket
+// ---------------------------------------------------------------------------
+
+/// Demand-refilled token bucket enforcing an aggregate byte rate.
+///
+/// No background thread: `take()` refills from elapsed wall time, then
+/// either consumes or sleeps until enough tokens accrue.  Multiple
+/// waiters are served in mutex order, which approximates the fair
+/// sharing of a device's bandwidth between concurrent streams.
+pub struct TokenBucket {
+    state: Mutex<BucketState>,
+    rate: f64, // tokens (bytes) per second
+    burst: f64,
+}
+
+struct BucketState {
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    pub fn new(rate: f64) -> Self {
+        assert!(rate > 0.0, "rate must be positive");
+        // Allow ~2 ms of burst (clamped to [64 KB, 1 MB]): enough to
+        // smooth scheduler jitter, far too little for idle pauses to
+        // bank meaningful credit — a multi-MB probe must not ride
+        // through on burst tokens even on multi-GB/s scaled devices.
+        let burst = (rate * 0.002).clamp(64.0 * 1024.0, 1024.0 * 1024.0);
+        TokenBucket {
+            state: Mutex::new(BucketState { tokens: burst, last: Instant::now() }),
+            rate,
+            burst,
+        }
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// Block until `n` bytes of budget are available, then consume.
+    pub fn take(&self, n: u64) {
+        self.take_with_credit(n, 0.0)
+    }
+
+    /// Like [`take`](Self::take), but `credit` seconds of already-
+    /// elapsed real time are converted to byte budget first.  The
+    /// device simulator uses this to charge the *real* backing-file
+    /// I/O against the modelled service time, so total service is
+    /// max(modelled, real) rather than their sum.
+    pub fn take_with_credit(&self, n: u64, credit: f64) {
+        let mut need = n as f64 - credit.max(0.0) * self.rate;
+        if need <= 0.0 {
+            return;
+        }
+        while need > 0.0 {
+            let wait;
+            {
+                let mut st = self.state.lock().unwrap();
+                let now = Instant::now();
+                let dt = now.duration_since(st.last).as_secs_f64();
+                st.tokens = (st.tokens + dt * self.rate).min(self.burst);
+                st.last = now;
+                if st.tokens >= need {
+                    st.tokens -= need;
+                    return;
+                }
+                // Consume what is there and wait for the rest.
+                need -= st.tokens;
+                st.tokens = 0.0;
+                wait = need / self.rate;
+            }
+            // Cap individual sleeps so concurrent takers interleave.
+            let wait = wait.min(0.05);
+            if wait >= 0.001 {
+                std::thread::sleep(Duration::from_secs_f64(wait));
+            } else if wait > 0.0 {
+                // thread::sleep overshoots sub-ms requests by ~0.1 ms
+                // (timer slack), which would halve multi-GB/s devices;
+                // spin-wait instead.
+                let until = Instant::now()
+                    + Duration::from_secs_f64(wait);
+                while Instant::now() < until {
+                    std::hint::spin_loop();
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Live device
+// ---------------------------------------------------------------------------
+
+struct ChannelGate {
+    lock: Mutex<GateState>,
+    cv: Condvar,
+}
+
+struct GateState {
+    in_service: usize,
+    /// Total requests either in service or waiting — the queue depth
+    /// the elevator model sees.
+    depth: u32,
+}
+
+/// Runtime state for one simulated device.
+pub struct Device {
+    pub model: DeviceModel,
+    read_bucket: TokenBucket,
+    write_bucket: TokenBucket,
+    gate: ChannelGate,
+    observer: Arc<dyn IoObserver>,
+}
+
+/// Transfers are paced in chunks so no stream monopolizes the bucket
+/// and the tracer sees smooth per-interval traffic.
+const CHUNK: u64 = 256 * 1024;
+
+impl Device {
+    pub fn new(model: DeviceModel, observer: Arc<dyn IoObserver>) -> Self {
+        let ts = model.time_scale;
+        assert!(ts > 0.0, "time_scale must be positive");
+        Device {
+            read_bucket: TokenBucket::new(model.read_bw * ts),
+            write_bucket: TokenBucket::new(model.write_bw * ts),
+            gate: ChannelGate {
+                lock: Mutex::new(GateState { in_service: 0, depth: 0 }),
+                cv: Condvar::new(),
+            },
+            observer,
+            model,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.model.name
+    }
+
+    /// Pace a transfer of `bytes` in `dir`, invoking `io` for the real
+    /// backing-file operation once the device "positions" (after the
+    /// latency phase).  Returns the value produced by `io`.
+    pub fn transfer<T>(
+        &self,
+        dir: Dir,
+        bytes: u64,
+        io: impl FnOnce() -> T,
+    ) -> T {
+        // --- enter queue ---
+        let depth;
+        {
+            let mut g = self.gate.lock.lock().unwrap();
+            g.depth += 1;
+            while g.in_service >= self.model.channels.max(1) {
+                g = self.gate.cv.wait(g).unwrap();
+            }
+            g.in_service += 1;
+            depth = g.depth;
+        }
+
+        // --- latency phase (seek / command / RPC) ---
+        let lat = match dir {
+            Dir::Read => self.model.read_lat,
+            Dir::Write => self.model.write_lat,
+        } / self.model.elevator_gain(depth)
+            / self.model.time_scale;
+        if lat > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(lat));
+        }
+
+        // --- real backing I/O (timed: it counts toward service) ---
+        let io_t0 = Instant::now();
+        let out = io();
+        let io_elapsed = io_t0.elapsed().as_secs_f64();
+
+        // --- transfer phase: paced against the aggregate cap, with
+        //     the real I/O time credited so total service time is
+        //     max(modelled, real) ---
+        let bucket = match dir {
+            Dir::Read => &self.read_bucket,
+            Dir::Write => &self.write_bucket,
+        };
+        let mut credit = io_elapsed;
+        let mut remaining = bytes;
+        // Adaptive chunking: small transfers pace in 256 KB steps (fine
+        // tracer granularity); huge probes use bigger chunks so the
+        // per-chunk lock/sleep overhead cannot distort multi-GB/s
+        // devices.
+        let chunk = CHUNK.max(bytes / 64);
+        while remaining > 0 {
+            let take = remaining.min(chunk);
+            bucket.take_with_credit(take, credit);
+            credit = 0.0; // credit applies once
+            self.observer.record(&self.model.name, dir, take);
+            remaining -= take;
+        }
+
+        // --- leave ---
+        {
+            let mut g = self.gate.lock.lock().unwrap();
+            g.in_service -= 1;
+            g.depth -= 1;
+        }
+        self.gate.cv.notify_one();
+        out
+    }
+
+    /// Current queue depth (in-service + waiting).
+    pub fn queue_depth(&self) -> u32 {
+        self.gate.lock.lock().unwrap().depth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(name: &str) -> DeviceModel {
+        DeviceModel {
+            name: name.into(),
+            read_bw: 100e6,
+            write_bw: 50e6,
+            read_lat: 0.0,
+            write_lat: 0.0,
+            channels: 4,
+            elevator: vec![(1, 1.0)],
+            time_scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn elevator_interpolates() {
+        let mut m = model("hdd");
+        m.elevator = vec![(1, 1.0), (2, 1.65), (4, 1.95), (8, 2.3)];
+        assert!((m.elevator_gain(1) - 1.0).abs() < 1e-9);
+        assert!((m.elevator_gain(2) - 1.65).abs() < 1e-9);
+        assert!((m.elevator_gain(3) - 1.8).abs() < 1e-9);
+        assert!((m.elevator_gain(8) - 2.3).abs() < 1e-9);
+        assert!((m.elevator_gain(100) - 2.3).abs() < 1e-9); // clamped
+    }
+
+    #[test]
+    fn service_time_scales_with_size() {
+        let m = model("d");
+        let t1 = m.service_time(Dir::Read, 100_000_000, 1);
+        assert!((t1 - 1.0).abs() < 1e-9);
+        let t2 = m.service_time(Dir::Write, 50_000_000, 1);
+        assert!((t2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bucket_enforces_rate() {
+        // 10 MB at 100 MB/s must take ~0.1 s (minus burst credit).
+        let b = TokenBucket::new(100e6);
+        let t0 = Instant::now();
+        let mut left = 10_000_000u64;
+        while left > 0 {
+            let take = left.min(CHUNK);
+            b.take(take);
+            left -= take;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(dt > 0.06, "finished too fast: {dt}");
+        assert!(dt < 0.25, "finished too slow: {dt}");
+    }
+
+    #[test]
+    fn device_transfer_runs_io_and_paces() {
+        let d = Device::new(model("x"), Arc::new(NullObserver));
+        let t0 = Instant::now();
+        let v = d.transfer(Dir::Read, 5_000_000, || 42);
+        assert_eq!(v, 42);
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(dt > 0.02, "no pacing applied: {dt}");
+    }
+
+    #[test]
+    fn channels_limit_concurrency() {
+        let mut m = model("one");
+        m.channels = 1;
+        m.read_lat = 0.03;
+        m.read_bw = 1e12; // latency-only device
+        let d = Arc::new(Device::new(m, Arc::new(NullObserver)));
+        let t0 = Instant::now();
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let d = Arc::clone(&d);
+                std::thread::spawn(move || {
+                    d.transfer(Dir::Read, 1, || ());
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        // 4 x 30 ms on a single channel must serialize: >= ~120 ms.
+        assert!(t0.elapsed().as_secs_f64() > 0.1);
+    }
+
+    #[test]
+    fn elevator_speeds_up_queued_hdd() {
+        // Same workload, elevator on vs off: elevator must be faster.
+        let run = |elev: Vec<(u32, f64)>| {
+            let m = DeviceModel {
+                name: "hdd".into(),
+                read_bw: 1e12,
+                write_bw: 1e12,
+                read_lat: 0.02,
+                write_lat: 0.02,
+                channels: 1,
+                elevator: elev,
+                time_scale: 1.0,
+            };
+            let d = Arc::new(Device::new(m, Arc::new(NullObserver)));
+            let t0 = Instant::now();
+            let hs: Vec<_> = (0..6)
+                .map(|_| {
+                    let d = Arc::clone(&d);
+                    std::thread::spawn(move || d.transfer(Dir::Read, 1, || ()))
+                })
+                .collect();
+            for h in hs {
+                h.join().unwrap();
+            }
+            t0.elapsed().as_secs_f64()
+        };
+        let flat = run(vec![(1, 1.0)]);
+        let elev = run(vec![(1, 1.0), (8, 4.0)]);
+        assert!(elev < flat, "elevator {elev} !< flat {flat}");
+    }
+
+    #[test]
+    fn observer_sees_all_bytes() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        struct Counter(AtomicU64);
+        impl IoObserver for Counter {
+            fn record(&self, _d: &str, _dir: Dir, b: u64) {
+                self.0.fetch_add(b, Ordering::SeqCst);
+            }
+        }
+        let obs = Arc::new(Counter(AtomicU64::new(0)));
+        let mut m = model("x");
+        m.time_scale = 1000.0; // fast test
+        let d = Device::new(m, obs.clone());
+        d.transfer(Dir::Write, 3_000_000, || ());
+        assert_eq!(obs.0.load(Ordering::SeqCst), 3_000_000);
+    }
+
+    #[test]
+    fn time_scale_accelerates() {
+        let mut m = model("fast");
+        m.time_scale = 100.0;
+        let d = Device::new(m, Arc::new(NullObserver));
+        let t0 = Instant::now();
+        d.transfer(Dir::Read, 10_000_000, || ());
+        // 0.1 s of modelled time at 100x => ~1 ms wall.
+        assert!(t0.elapsed().as_secs_f64() < 0.05);
+    }
+}

@@ -1,0 +1,16 @@
+//! Simulated storage substrate (DESIGN.md §2).
+//!
+//! The paper's experiments run on physical HDD/SSD/Optane/Lustre; this
+//! module substitutes a calibrated queueing simulator over real backing
+//! files, reproducing the only surface the experiments observe: service
+//! time of reads/writes vs request size and concurrency.
+
+pub mod device;
+pub mod ior;
+pub mod page_cache;
+pub mod profiles;
+pub mod sim;
+
+pub use device::{Device, DeviceModel, Dir, IoObserver, NullObserver};
+pub use page_cache::PageCache;
+pub use sim::{SimPath, StorageSim};

@@ -1,0 +1,165 @@
+//! Simulated OS page cache.
+//!
+//! The paper goes out of its way to defeat the page cache
+//! (`posix_fadvise(POSIX_FADV_DONTNEED)`, `drop_caches`, one-epoch
+//! runs, §IV) because a warm cache hides the device entirely.  We model
+//! the cache explicitly so both regimes are measurable: a hit serves
+//! the read with **no device charge**; a miss pays the device and
+//! inserts the file.  Eviction is LRU over whole files with a byte
+//! capacity, which is the granularity that matters for the workloads
+//! here (whole-file `tf.read()`s).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+struct CacheState {
+    /// path -> (bytes, lru tick)
+    entries: HashMap<String, (u64, u64)>,
+    total: u64,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+}
+
+/// LRU whole-file page cache with a byte capacity.
+pub struct PageCache {
+    capacity: u64,
+    state: Mutex<CacheState>,
+}
+
+impl PageCache {
+    /// `capacity` = 0 disables caching (every access is a miss).
+    pub fn new(capacity: u64) -> Self {
+        PageCache {
+            capacity,
+            state: Mutex::new(CacheState {
+                entries: HashMap::new(),
+                total: 0,
+                tick: 0,
+                hits: 0,
+                misses: 0,
+            }),
+        }
+    }
+
+    /// Record an access; returns `true` on hit (no device charge).
+    pub fn access(&self, path: &str, bytes: u64) -> bool {
+        if self.capacity == 0 {
+            let mut st = self.state.lock().unwrap();
+            st.misses += 1;
+            return false;
+        }
+        let mut st = self.state.lock().unwrap();
+        st.tick += 1;
+        let tick = st.tick;
+        if let Some(e) = st.entries.get_mut(path) {
+            e.1 = tick;
+            st.hits += 1;
+            return true;
+        }
+        st.misses += 1;
+        // Insert (files larger than the cache are not cached).
+        if bytes <= self.capacity {
+            st.total += bytes;
+            st.entries.insert(path.to_string(), (bytes, tick));
+            while st.total > self.capacity {
+                // Evict LRU.
+                let victim = st
+                    .entries
+                    .iter()
+                    .min_by_key(|(_, (_, t))| *t)
+                    .map(|(k, (b, _))| (k.clone(), *b))
+                    .expect("non-empty cache over capacity");
+                st.entries.remove(&victim.0);
+                st.total -= victim.1;
+            }
+        }
+        false
+    }
+
+    /// Invalidate one file (fadvise DONTNEED).
+    pub fn invalidate(&self, path: &str) {
+        let mut st = self.state.lock().unwrap();
+        if let Some((b, _)) = st.entries.remove(path) {
+            st.total -= b;
+        }
+    }
+
+    /// Drop everything (`echo 1 > /proc/sys/vm/drop_caches`).
+    pub fn drop_all(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.entries.clear();
+        st.total = 0;
+    }
+
+    /// (hits, misses) counters.
+    pub fn stats(&self) -> (u64, u64) {
+        let st = self.state.lock().unwrap();
+        (st.hits, st.misses)
+    }
+
+    /// Bytes currently cached.
+    pub fn resident_bytes(&self) -> u64 {
+        self.state.lock().unwrap().total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_access_misses_second_hits() {
+        let c = PageCache::new(1 << 20);
+        assert!(!c.access("a", 100));
+        assert!(c.access("a", 100));
+        assert_eq!(c.stats(), (1, 1));
+    }
+
+    #[test]
+    fn zero_capacity_never_hits() {
+        let c = PageCache::new(0);
+        assert!(!c.access("a", 1));
+        assert!(!c.access("a", 1));
+        assert_eq!(c.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn lru_eviction_under_pressure() {
+        let c = PageCache::new(250);
+        c.access("a", 100);
+        c.access("b", 100);
+        c.access("a", 100); // refresh a
+        c.access("c", 100); // evicts b (LRU)
+        assert!(c.access("a", 100), "a should still be cached");
+        assert!(!c.access("b", 100), "b should have been evicted");
+    }
+
+    #[test]
+    fn oversized_file_not_cached() {
+        let c = PageCache::new(50);
+        assert!(!c.access("big", 100));
+        assert!(!c.access("big", 100));
+        assert_eq!(c.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn drop_all_flushes() {
+        let c = PageCache::new(1 << 20);
+        c.access("a", 10);
+        c.access("b", 20);
+        c.drop_all();
+        assert_eq!(c.resident_bytes(), 0);
+        assert!(!c.access("a", 10));
+    }
+
+    #[test]
+    fn invalidate_single_path() {
+        let c = PageCache::new(1 << 20);
+        c.access("a", 10);
+        c.access("b", 20);
+        c.invalidate("a");
+        assert!(!c.access("a", 10));
+        assert!(c.access("b", 20));
+    }
+}

@@ -1,0 +1,231 @@
+//! Calibrated device profiles for the paper's two testbeds (§IV).
+//!
+//! Bandwidth caps come straight from Table I (IOR upper bounds).
+//! Latency / channel / elevator parameters are calibrated so that the
+//! *derived* small-file thread-scaling ratios match §V-A and §VII:
+//!
+//! * Blackdog HDD: 1→2 = 1.65x, 1→4 = 1.95x, 1→8 = 2.3x, flattening
+//!   past 4 threads (single head, elevator gains).
+//! * Blackdog SSD / Optane: ≈2x from 1→2 threads then saturation at
+//!   the device cap (latency-bound single stream, internal channels).
+//! * Tegner Lustre: ≈7.8x at 8 threads (per-RPC latency dominates a
+//!   single synchronous stream; OSTs serve streams independently).
+//!
+//! The calibration tests at the bottom *prove* the ratios analytically
+//! from the queueing model, so profile edits that break the paper's
+//! shapes fail the suite.
+
+use super::device::{DeviceModel, Dir};
+
+/// Median file size of the ImageNet-subset corpus (§IV-A): 112 KB.
+pub const IMAGENET_MEDIAN_BYTES: u64 = 112 * 1024;
+/// Median file size of the Caltech-101-like corpus (§IV-B): ~12 KB.
+pub const CALTECH_MEDIAN_BYTES: u64 = 12 * 1024;
+
+/// Blackdog 4 TB HDD (Table I: 163.00 / 133.14 MB/s).
+pub fn blackdog_hdd(time_scale: f64) -> DeviceModel {
+    DeviceModel {
+        name: "hdd".into(),
+        read_bw: 163.00e6,
+        write_bw: 133.14e6,
+        // 7.2k-rpm class seek+rotate for dispersed small files.
+        read_lat: 8.0e-3,
+        write_lat: 8.0e-3,
+        channels: 1, // one actuator
+        // Elevator gain ≈ measured scaling (seek-dominated regime).
+        elevator: vec![(1, 1.0), (2, 1.70), (4, 2.05), (8, 2.55)],
+        time_scale,
+    }
+}
+
+/// Blackdog Samsung 850 EVO SATA SSD (Table I: 280.55 / 195.05 MB/s).
+pub fn blackdog_ssd(time_scale: f64) -> DeviceModel {
+    DeviceModel {
+        name: "ssd".into(),
+        read_bw: 280.55e6,
+        write_bw: 195.05e6,
+        // SATA command + FS overhead; calibrated so one stream of
+        // 112 KB reads lands at ~half the device cap.
+        read_lat: 0.40e-3,
+        write_lat: 0.45e-3,
+        channels: 4,
+        elevator: vec![(1, 1.0)],
+        time_scale,
+    }
+}
+
+/// Blackdog Intel Optane SSD 900p (Table I: 1603.06 / 511.78 MB/s).
+pub fn blackdog_optane(time_scale: f64) -> DeviceModel {
+    DeviceModel {
+        name: "optane".into(),
+        read_bw: 1603.06e6,
+        write_bw: 511.78e6,
+        // 3D-XPoint: ~10 us media, but the paper's stack (ext4 +
+        // synchronous pread) sees ~70 us per op.
+        read_lat: 0.070e-3,
+        write_lat: 0.030e-3,
+        channels: 7,
+        elevator: vec![(1, 1.0)],
+        time_scale,
+    }
+}
+
+/// Tegner Lustre parallel FS (Table I: 1968.618 / 991.914 MB/s).
+pub fn tegner_lustre(time_scale: f64) -> DeviceModel {
+    DeviceModel {
+        name: "lustre".into(),
+        read_bw: 1968.618e6,
+        write_bw: 991.914e6,
+        // Network RPC round-trip per file open+read; files are spread
+        // over OSTs so streams scale almost independently (§V-A).
+        read_lat: 2.0e-3,
+        write_lat: 2.5e-3,
+        channels: 32,
+        elevator: vec![(1, 1.0)],
+        time_scale,
+    }
+}
+
+/// All four devices of the paper, by name.
+pub fn by_name(name: &str, time_scale: f64) -> Option<DeviceModel> {
+    match name {
+        "hdd" => Some(blackdog_hdd(time_scale)),
+        "ssd" => Some(blackdog_ssd(time_scale)),
+        "optane" => Some(blackdog_optane(time_scale)),
+        "lustre" => Some(tegner_lustre(time_scale)),
+        _ => None,
+    }
+}
+
+/// The Blackdog workstation device set.
+pub fn blackdog(time_scale: f64) -> Vec<DeviceModel> {
+    vec![
+        blackdog_hdd(time_scale),
+        blackdog_ssd(time_scale),
+        blackdog_optane(time_scale),
+    ]
+}
+
+/// Analytic steady-state ingestion throughput (bytes/s) for `k`
+/// synchronous streams of `size`-byte reads — the closed form of the
+/// device queueing model, used for calibration and tests.
+pub fn analytic_throughput(m: &DeviceModel, dir: Dir, size: u64, k: u32) -> f64 {
+    let (lat0, bw) = match dir {
+        Dir::Read => (m.read_lat, m.read_bw),
+        Dir::Write => (m.write_lat, m.write_bw),
+    };
+    // Each synchronous stream cycles through latency + transfer; at
+    // most `channels` are in service, and the aggregate transfer rate
+    // is capped at the device bandwidth:
+    //     T(k) = min( min(k, c) * S / (lat/gain(k) + S/bw),  bw )
+    let lat = lat0 / m.elevator_gain(k);
+    let xfer = size as f64 / bw;
+    let served = (k as f64).min(m.channels.max(1) as f64);
+    (served * size as f64 / (lat + xfer)).min(bw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ratio(m: &DeviceModel, size: u64, k: u32) -> f64 {
+        analytic_throughput(m, Dir::Read, size, k)
+            / analytic_throughput(m, Dir::Read, size, 1)
+    }
+
+    #[test]
+    fn hdd_scaling_matches_paper_shape() {
+        // Paper §VII: 1.65x @2, 1.95x @4, 2.3x @8 for HDD small files.
+        let m = blackdog_hdd(1.0);
+        let s = IMAGENET_MEDIAN_BYTES;
+        let r2 = ratio(&m, s, 2);
+        let r4 = ratio(&m, s, 4);
+        let r8 = ratio(&m, s, 8);
+        assert!((r2 - 1.65).abs() < 0.25, "r2={r2}");
+        assert!((r4 - 1.95).abs() < 0.30, "r4={r4}");
+        assert!((r8 - 2.3).abs() < 0.35, "r8={r8}");
+        // Flattens: gain from 4->8 smaller than 1->2.
+        assert!(r8 / r4 < r2);
+    }
+
+    #[test]
+    fn hdd_8_threads_below_ior_bound() {
+        // §V-A: TF bandwidth is "unfavorable" vs IOR even at 8 threads.
+        let m = blackdog_hdd(1.0);
+        let bw8 = analytic_throughput(&m, Dir::Read, IMAGENET_MEDIAN_BYTES, 8);
+        assert!(bw8 < m.read_bw, "bw8={bw8}");
+    }
+
+    #[test]
+    fn ssd_doubles_then_saturates() {
+        // §V-A: "increasing from one to two effectively almost doubles
+        // the bandwidth ... particularly visible on fast storage".
+        let m = blackdog_ssd(1.0);
+        let s = IMAGENET_MEDIAN_BYTES;
+        let r2 = ratio(&m, s, 2);
+        assert!(r2 > 1.6, "r2={r2}");
+        // And saturates at the cap by 8 threads.
+        let bw8 = analytic_throughput(&m, Dir::Read, s, 8);
+        assert!(bw8 > 0.85 * m.read_bw, "bw8={bw8}");
+    }
+
+    #[test]
+    fn optane_fastest_blackdog_device() {
+        let s = IMAGENET_MEDIAN_BYTES;
+        for k in [1, 2, 4, 8] {
+            let o = analytic_throughput(&blackdog_optane(1.0), Dir::Read, s, k);
+            let d = analytic_throughput(&blackdog_ssd(1.0), Dir::Read, s, k);
+            let h = analytic_throughput(&blackdog_hdd(1.0), Dir::Read, s, k);
+            assert!(o > d && d > h, "k={k}: {o} {d} {h}");
+        }
+    }
+
+    #[test]
+    fn lustre_scales_to_7_8x() {
+        // §VII: "On Tegner, we observed a 7.8x increase of bandwidth
+        // when using eight threads."
+        let m = tegner_lustre(1.0);
+        let r8 = ratio(&m, IMAGENET_MEDIAN_BYTES, 8);
+        assert!((r8 - 7.8).abs() < 0.6, "r8={r8}");
+    }
+
+    #[test]
+    fn lustre_best_scalability_of_all_devices() {
+        // §V-A: "scaling on Tegner with Lustre shows the best
+        // scalability".
+        let s = IMAGENET_MEDIAN_BYTES;
+        let rl = ratio(&tegner_lustre(1.0), s, 8);
+        for m in blackdog(1.0) {
+            assert!(rl > ratio(&m, s, 8), "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn write_bandwidth_ordering_for_checkpoints() {
+        // Fig. 9 ordering: optane > ssd > hdd for large writes.
+        let big = 64 * 1024 * 1024;
+        let o = analytic_throughput(&blackdog_optane(1.0), Dir::Write, big, 1);
+        let s = analytic_throughput(&blackdog_ssd(1.0), Dir::Write, big, 1);
+        let h = analytic_throughput(&blackdog_hdd(1.0), Dir::Write, big, 1);
+        assert!(o > 2.0 * s, "optane {o} vs ssd {s}");
+        assert!(s > h, "ssd {s} vs hdd {h}");
+    }
+
+    #[test]
+    fn ior_large_sequential_hits_table1() {
+        // One big sequential stream approaches the Table I cap.
+        for m in [blackdog_hdd(1.0), blackdog_ssd(1.0),
+                  blackdog_optane(1.0), tegner_lustre(1.0)] {
+            let bw = analytic_throughput(&m, Dir::Read, 512 * 1024 * 1024, 1);
+            assert!(bw > 0.95 * m.read_bw, "{}: {bw}", m.name);
+        }
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["hdd", "ssd", "optane", "lustre"] {
+            assert_eq!(by_name(n, 1.0).unwrap().name, n);
+        }
+        assert!(by_name("floppy", 1.0).is_none());
+    }
+}

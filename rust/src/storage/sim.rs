@@ -1,0 +1,369 @@
+//! [`StorageSim`]: the facade tying devices, page cache and backing
+//! files together.
+//!
+//! Each simulated device owns a directory under the sim root; reads and
+//! writes perform *real* file I/O there (so checkpoints can actually be
+//! restored and corpora actually decoded) while service timing is paced
+//! by the [`Device`] queueing model.  This is the layer every consumer
+//! (pipeline map functions, the checkpoint saver, IOR) talks to — the
+//! equivalent of the paper's "file system adapter" interface (Fig. 1).
+
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::device::{Device, DeviceModel, Dir, IoObserver, NullObserver};
+use super::page_cache::PageCache;
+
+/// A path on a simulated device: `(device, relative path)`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct SimPath {
+    pub device: String,
+    pub rel: String,
+}
+
+impl SimPath {
+    pub fn new(device: impl Into<String>, rel: impl Into<String>) -> Self {
+        SimPath { device: device.into(), rel: rel.into() }
+    }
+
+    /// Parse `"device://rel/path"` (the paper's "substituting the
+    /// prefix of a file path" idiom, §II).
+    pub fn parse(s: &str) -> Result<SimPath> {
+        let (dev, rel) = s
+            .split_once("://")
+            .ok_or_else(|| anyhow!("expected device://path, got {s:?}"))?;
+        if dev.is_empty() || rel.is_empty() {
+            return Err(anyhow!("empty device or path in {s:?}"));
+        }
+        Ok(SimPath::new(dev, rel))
+    }
+}
+
+impl std::fmt::Display for SimPath {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}://{}", self.device, self.rel)
+    }
+}
+
+/// The simulated storage system: devices + page cache + backing dir.
+pub struct StorageSim {
+    root: PathBuf,
+    devices: HashMap<String, Arc<Device>>,
+    cache: PageCache,
+}
+
+impl StorageSim {
+    /// Create a sim rooted at `root` with the given device models.
+    /// `cache_capacity` = 0 reproduces the paper's cold-cache protocol.
+    pub fn new(
+        root: impl Into<PathBuf>,
+        models: Vec<DeviceModel>,
+        cache_capacity: u64,
+        observer: Arc<dyn IoObserver>,
+    ) -> Result<Self> {
+        let root = root.into();
+        let mut devices = HashMap::new();
+        for m in models {
+            std::fs::create_dir_all(root.join(&m.name))
+                .with_context(|| format!("mkdir device dir {}", m.name))?;
+            devices.insert(
+                m.name.clone(),
+                Arc::new(Device::new(m, Arc::clone(&observer))),
+            );
+        }
+        Ok(StorageSim { root, devices, cache: PageCache::new(cache_capacity) })
+    }
+
+    /// Convenience: no tracing, no cache.
+    pub fn cold(root: impl Into<PathBuf>, models: Vec<DeviceModel>) -> Result<Self> {
+        Self::new(root, models, 0, Arc::new(NullObserver))
+    }
+
+    pub fn device(&self, name: &str) -> Result<&Arc<Device>> {
+        self.devices
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown device {name:?}"))
+    }
+
+    pub fn device_names(&self) -> Vec<String> {
+        let mut v: Vec<_> = self.devices.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Absolute backing path for a sim path.
+    pub fn backing_path(&self, p: &SimPath) -> PathBuf {
+        self.root.join(&p.device).join(&p.rel)
+    }
+
+    pub fn cache(&self) -> &PageCache {
+        &self.cache
+    }
+
+    /// Read a whole file through the device model (tf.read_file()).
+    /// Page-cache hits bypass the device.
+    pub fn read(&self, p: &SimPath) -> Result<Vec<u8>> {
+        let dev = self.device(&p.device)?;
+        let path = self.backing_path(p);
+        let size = std::fs::metadata(&path)
+            .with_context(|| format!("stat {p}"))?
+            .len();
+        let key = p.to_string();
+        if self.cache.access(&key, size) {
+            // Warm: served from memory, no device charge.
+            return std::fs::read(&path).with_context(|| format!("read {p}"));
+        }
+        dev.transfer(Dir::Read, size, || {
+            std::fs::read(&path).with_context(|| format!("read {p}"))
+        })
+    }
+
+    /// Write a whole file through the device model (checkpoint path).
+    pub fn write(&self, p: &SimPath, data: &[u8]) -> Result<()> {
+        let dev = self.device(&p.device)?;
+        let path = self.backing_path(p);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        dev.transfer(Dir::Write, data.len() as u64, || -> Result<()> {
+            let mut f = std::fs::File::create(&path)
+                .with_context(|| format!("create {p}"))?;
+            f.write_all(data)?;
+            Ok(())
+        })?;
+        // Written data lands in the page cache (ext4 journaling
+        // behaviour the paper describes in §V-C).
+        self.cache.access(&p.to_string(), data.len() as u64);
+        Ok(())
+    }
+
+    /// Copy a file between devices, paying a read on `src`'s device and
+    /// a write on `dst`'s (the burst-buffer drain path).
+    pub fn copy(&self, src: &SimPath, dst: &SimPath) -> Result<u64> {
+        let data = self.read(src)?;
+        self.write(dst, &data)?;
+        Ok(data.len() as u64)
+    }
+
+    /// Remove a file (checkpoint retention cleanup).
+    pub fn remove(&self, p: &SimPath) -> Result<()> {
+        let _ = self.device(&p.device)?;
+        self.cache.invalidate(&p.to_string());
+        std::fs::remove_file(self.backing_path(p))
+            .with_context(|| format!("remove {p}"))
+    }
+
+    pub fn exists(&self, p: &SimPath) -> bool {
+        self.backing_path(p).exists()
+    }
+
+    pub fn file_size(&self, p: &SimPath) -> Result<u64> {
+        Ok(std::fs::metadata(self.backing_path(p))?.len())
+    }
+
+    /// Pace a read of `bytes` through the device model *without* any
+    /// backing-file I/O.  Used by bandwidth probes (IOR, Table I)
+    /// where only the service-time envelope matters — backing-store
+    /// speed must not cap the modelled device.
+    pub fn probe_read(&self, device: &str, bytes: u64) -> Result<()> {
+        self.device(device)?.transfer(Dir::Read, bytes, || ());
+        Ok(())
+    }
+
+    /// Pacing-only write probe (see [`probe_read`](Self::probe_read)).
+    pub fn probe_write(&self, device: &str, bytes: u64) -> Result<()> {
+        self.device(device)?.transfer(Dir::Write, bytes, || ());
+        Ok(())
+    }
+
+    /// `syncfs()` on the backing filesystem of a device directory —
+    /// the paper calls this after every checkpoint (§III-C).
+    pub fn syncfs(&self, device: &str) -> Result<()> {
+        let _ = self.device(device)?;
+        let dir = std::fs::File::open(self.root.join(device))?;
+        let rc = unsafe { libc::syncfs(std::os::fd::AsRawFd::as_raw_fd(&dir)) };
+        if rc != 0 {
+            return Err(anyhow!("syncfs failed: {}",
+                               std::io::Error::last_os_error()));
+        }
+        Ok(())
+    }
+
+    /// Drop the simulated page cache (the paper's
+    /// `echo 1 > /proc/sys/vm/drop_caches`).
+    pub fn drop_caches(&self) {
+        self.cache.drop_all();
+    }
+
+    /// List files under a device-relative directory, sorted.
+    pub fn list(&self, device: &str, rel_dir: &str) -> Result<Vec<SimPath>> {
+        let _ = self.device(device)?;
+        let dir = self.root.join(device).join(rel_dir);
+        if !dir.exists() {
+            return Ok(Vec::new());
+        }
+        let mut out: Vec<PathBuf> = Vec::new();
+        collect_files(&dir, &mut out)?;
+        let root = self.root.join(device);
+        let mut paths: Vec<SimPath> = out
+            .into_iter()
+            .map(|p| {
+                let rel = p
+                    .strip_prefix(&root)
+                    .expect("backing path under device root")
+                    .to_string_lossy()
+                    .into_owned();
+                SimPath::new(device, rel)
+            })
+            .collect();
+        paths.sort_by(|a, b| a.rel.cmp(&b.rel));
+        Ok(paths)
+    }
+}
+
+fn collect_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_files(&path, out)?;
+        } else {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::device::DeviceModel;
+
+    fn fast_model(name: &str) -> DeviceModel {
+        DeviceModel {
+            name: name.into(),
+            read_bw: 1e9,
+            write_bw: 1e9,
+            read_lat: 0.0,
+            write_lat: 0.0,
+            channels: 8,
+            elevator: vec![(1, 1.0)],
+            time_scale: 1000.0,
+        }
+    }
+
+    fn sim(tag: &str) -> StorageSim {
+        let dir = std::env::temp_dir().join(format!("dlio-sim-test-{tag}-{}",
+            std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        StorageSim::cold(dir, vec![fast_model("ssd"), fast_model("hdd")])
+            .unwrap()
+    }
+
+    #[test]
+    fn simpath_parse_and_display() {
+        let p = SimPath::parse("ssd://a/b.bin").unwrap();
+        assert_eq!(p.device, "ssd");
+        assert_eq!(p.rel, "a/b.bin");
+        assert_eq!(p.to_string(), "ssd://a/b.bin");
+        assert!(SimPath::parse("nope").is_err());
+        assert!(SimPath::parse("://x").is_err());
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let s = sim("rw");
+        let p = SimPath::new("ssd", "dir/file.bin");
+        s.write(&p, b"hello world").unwrap();
+        assert_eq!(s.read(&p).unwrap(), b"hello world");
+        assert_eq!(s.file_size(&p).unwrap(), 11);
+    }
+
+    #[test]
+    fn read_missing_file_errors() {
+        let s = sim("missing");
+        assert!(s.read(&SimPath::new("ssd", "nope.bin")).is_err());
+    }
+
+    #[test]
+    fn unknown_device_errors() {
+        let s = sim("unknown");
+        assert!(s.read(&SimPath::new("tape", "x")).is_err());
+        assert!(s.device("tape").is_err());
+    }
+
+    #[test]
+    fn copy_moves_bytes_across_devices() {
+        let s = sim("copy");
+        let src = SimPath::new("ssd", "x.bin");
+        let dst = SimPath::new("hdd", "x.bin");
+        s.write(&src, &vec![7u8; 1024]).unwrap();
+        let n = s.copy(&src, &dst).unwrap();
+        assert_eq!(n, 1024);
+        assert_eq!(s.read(&dst).unwrap(), vec![7u8; 1024]);
+    }
+
+    #[test]
+    fn remove_deletes_backing_file() {
+        let s = sim("rm");
+        let p = SimPath::new("ssd", "x.bin");
+        s.write(&p, b"x").unwrap();
+        assert!(s.exists(&p));
+        s.remove(&p).unwrap();
+        assert!(!s.exists(&p));
+    }
+
+    #[test]
+    fn list_returns_sorted_recursive() {
+        let s = sim("list");
+        for name in ["b/2.bin", "a/1.bin", "c.bin"] {
+            s.write(&SimPath::new("ssd", name), b"x").unwrap();
+        }
+        let files = s.list("ssd", "").unwrap();
+        let rels: Vec<_> = files.iter().map(|p| p.rel.as_str()).collect();
+        assert_eq!(rels, vec!["a/1.bin", "b/2.bin", "c.bin"]);
+    }
+
+    #[test]
+    fn syncfs_succeeds_on_real_fs() {
+        let s = sim("sync");
+        s.write(&SimPath::new("ssd", "x.bin"), b"x").unwrap();
+        s.syncfs("ssd").unwrap();
+    }
+
+    #[test]
+    fn warm_cache_serves_without_device() {
+        let dir = std::env::temp_dir()
+            .join(format!("dlio-sim-test-warm-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        // Slow device (1 MB/s, unscaled) + big cache: second read must
+        // be near-instant.
+        let model = DeviceModel {
+            name: "slow".into(),
+            read_bw: 1e6,
+            write_bw: 1e9,
+            read_lat: 0.0,
+            write_lat: 0.0,
+            channels: 1,
+            elevator: vec![(1, 1.0)],
+            time_scale: 1.0,
+        };
+        let s = StorageSim::new(dir, vec![model], 1 << 30,
+                                Arc::new(crate::storage::device::NullObserver))
+            .unwrap();
+        let p = SimPath::new("slow", "f.bin");
+        // write goes through write_bucket (fast) and caches the file
+        s.write(&p, &vec![1u8; 200_000]).unwrap();
+        let t0 = std::time::Instant::now();
+        s.read(&p).unwrap(); // cache hit
+        assert!(t0.elapsed().as_secs_f64() < 0.05);
+        s.drop_caches();
+        let t0 = std::time::Instant::now();
+        s.read(&p).unwrap(); // cold: 200 KB at 1 MB/s ≈ 0.2 s
+        assert!(t0.elapsed().as_secs_f64() > 0.1);
+    }
+}

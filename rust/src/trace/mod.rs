@@ -1,0 +1,11 @@
+//! dstat-style I/O activity tracing (§IV-B, Figs. 8 & 10).
+//!
+//! The paper samples disk activity once per second with *dstat* and
+//! plots MB read/written per interval.  [`Dstat`] implements the
+//! [`IoObserver`] hook of the device simulator: every byte grant is
+//! binned into a fixed-width interval per (device, direction), and the
+//! series can be rendered as the paper's CSV.
+
+pub mod dstat;
+
+pub use dstat::{Dstat, TraceRow};

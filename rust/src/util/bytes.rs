@@ -1,0 +1,47 @@
+//! Byte-size formatting helpers for reports.
+
+/// Render a byte count as a human-readable string (`1.5 MB`, `113 KB`).
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1000.0 && u < UNITS.len() - 1 {
+        v /= 1000.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else if v >= 100.0 {
+        format!("{v:.0} {}", UNITS[u])
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// MB/s from bytes and seconds (decimal MB, as IOR reports).
+pub fn mb_per_sec(bytes: u64, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        return 0.0;
+    }
+    bytes as f64 / 1e6 / secs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats_scales() {
+        assert_eq!(human_bytes(0), "0 B");
+        assert_eq!(human_bytes(999), "999 B");
+        assert_eq!(human_bytes(112_000), "112 KB");
+        assert_eq!(human_bytes(1_500_000), "1.50 MB");
+        assert_eq!(human_bytes(5_000_000_000), "5.00 GB");
+    }
+
+    #[test]
+    fn bandwidth_math() {
+        assert!((mb_per_sec(163_000_000, 1.0) - 163.0).abs() < 1e-9);
+        assert_eq!(mb_per_sec(100, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Small self-contained utilities shared by every subsystem.
+//!
+//! The build is fully offline against a vendored crate set that only
+//! covers the `xla` dependency closure, so the usual ecosystem crates
+//! (rand, serde, rayon, …) are re-implemented here at the scale this
+//! project needs: a deterministic PRNG, a minimal JSON codec for the
+//! artifact ABI, and a fixed thread pool.
+
+pub mod bytes;
+pub mod json;
+pub mod pool;
+pub mod rng;
+
+pub use bytes::human_bytes;
+pub use pool::ThreadPool;
+pub use rng::Rng;

@@ -1,0 +1,177 @@
+//! Fixed-size thread pool.
+//!
+//! Backs the `num_parallel_calls` worker set of [`crate::pipeline::map`]
+//! and the burst-buffer drainer.  Plain `std::sync` implementation: a
+//! shared `Mutex<VecDeque>` job queue with a condvar, matching the
+//! TensorFlow runtime's own thread-pool granularity (one job = one
+//! element-level map call).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+    in_flight: AtomicUsize,
+    done: Condvar,
+    done_lock: Mutex<()>,
+}
+
+/// A fixed set of worker threads consuming a FIFO job queue.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (min 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            in_flight: AtomicUsize::new(0),
+            done: Condvar::new(),
+            done_lock: Mutex::new(()),
+        });
+        let workers = (0..size)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("dlio-pool-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { shared, workers, size }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Enqueue a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(Box::new(job));
+        }
+        self.shared.available.notify_one();
+    }
+
+    /// Block until every enqueued job has completed.
+    pub fn wait_idle(&self) {
+        let mut guard = self.shared.done_lock.lock().unwrap();
+        while self.shared.in_flight.load(Ordering::SeqCst) != 0 {
+            guard = self.shared.done.wait(guard).unwrap();
+        }
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                if sh.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = sh.available.wait(q).unwrap();
+            }
+        };
+        job();
+        if sh.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
+            let _g = sh.done_lock.lock().unwrap();
+            sh.done.notify_all();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..1000 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 1000);
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool_returns() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn zero_size_clamped_to_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+        let flag = Arc::new(AtomicBool::new(false));
+        let f = Arc::clone(&flag);
+        pool.execute(move || f.store(true, Ordering::SeqCst));
+        pool.wait_idle();
+        assert!(flag.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(3);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..64 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        drop(pool);
+        assert_eq!(counter.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn jobs_actually_run_concurrently() {
+        let pool = ThreadPool::new(4);
+        let t0 = std::time::Instant::now();
+        for _ in 0..4 {
+            pool.execute(|| {
+                std::thread::sleep(std::time::Duration::from_millis(50))
+            });
+        }
+        pool.wait_idle();
+        // 4 x 50 ms on 4 workers should take ~50 ms, not 200 ms.
+        assert!(t0.elapsed() < std::time::Duration::from_millis(150));
+    }
+}

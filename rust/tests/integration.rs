@@ -1,0 +1,539 @@
+//! Cross-module integration tests: sim + corpus + pipeline +
+//! checkpointing together (no PJRT needed except where noted).
+
+use std::sync::Arc;
+
+use dlio::checkpoint::{BurstBuffer, Saver};
+use dlio::config::Testbed;
+use dlio::coordinator::fixtures::{ensure_corpus, make_sim};
+use dlio::data::{format, CorpusSpec};
+use dlio::model::ModelState;
+use dlio::pipeline::{from_manifest, DatasetExt};
+use dlio::runtime::meta::{ParamSpec, ProfileMeta};
+use dlio::storage::{SimPath, StorageSim};
+use dlio::trace::Dstat;
+use dlio::util::Rng;
+
+/// Pacing-sensitive tests hold this lock so they never run
+/// concurrently with each other (cargo runs tests in parallel;
+/// concurrent sleeps + real I/O skew wall-clock assertions).
+static PACING: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn pacing_lock() -> std::sync::MutexGuard<'static, ()> {
+    PACING.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Wall-clock assertions can be perturbed by sibling tests competing
+/// for CPU; retry the measurement a few times before declaring failure.
+fn retry_timing(attempts: usize, mut f: impl FnMut() -> Result<(), String>) {
+    let mut last = String::new();
+    for i in 0..attempts {
+        match f() {
+            Ok(()) => return,
+            Err(e) => {
+                eprintln!("timing attempt {}/{} failed: {e}", i + 1, attempts);
+                last = e;
+                std::thread::sleep(std::time::Duration::from_millis(200));
+            }
+        }
+    }
+    panic!("timing property failed after {attempts} attempts: {last}");
+}
+
+fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    // tmpfs when available: the sim credits real I/O time against the
+    // modelled pacing, so backing storage must be fast.
+    let base = if std::path::Path::new("/dev/shm").is_dir() {
+        std::path::PathBuf::from("/dev/shm")
+    } else {
+        std::env::temp_dir()
+    };
+    base.join(format!("dlio-int-{tag}-{}", std::process::id()))
+}
+
+fn fast_testbed(tag: &str) -> Testbed {
+    let dir = scratch_dir(tag);
+    let _ = std::fs::remove_dir_all(&dir);
+    // Paper devices, hugely accelerated so tests run in ms while
+    // preserving every ratio.
+    let mut tb = Testbed::paper(2000.0);
+    tb.workdir = dir.to_string_lossy().into_owned();
+    tb
+}
+
+/// Testbed at a moderate speed-up: modelled service times stay well
+/// above OS sleep resolution so pacing-sensitive assertions hold.
+fn paced_testbed(tag: &str, time_scale: f64) -> Testbed {
+    let dir = scratch_dir(tag);
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut tb = Testbed::paper(time_scale);
+    tb.workdir = dir.to_string_lossy().into_owned();
+    tb
+}
+
+fn small_profile() -> ProfileMeta {
+    ProfileMeta {
+        name: "t".into(),
+        input_size: 8,
+        num_classes: 4,
+        num_params: 4 * 3 + 3,
+        params: vec![
+            ParamSpec { name: "fc1/kernel".into(), shape: vec![4, 3] },
+            ParamSpec { name: "fc1/bias".into(), shape: vec![3] },
+        ],
+    }
+}
+
+#[test]
+fn pipeline_reads_full_corpus_through_sim() {
+    let tb = fast_testbed("pipe");
+    let sim = make_sim(&tb, None).unwrap();
+    let spec = CorpusSpec {
+        name: "c".into(),
+        num_files: 120,
+        num_classes: 7,
+        src_size: 16,
+        median_bytes: 2048,
+        sigma: 0.3,
+        corrupt_frac: 0.0,
+        seed: 2,
+    };
+    let m = ensure_corpus(&sim, "ssd", &spec).unwrap();
+    let sim2 = Arc::clone(&sim);
+    let ds = from_manifest(&m)
+        .shuffle(m.len(), Rng::new(1))
+        .parallel_map(4, move |s| {
+            let bytes = sim2.read(&s.path)?;
+            let img = format::decode(&bytes)?;
+            anyhow::ensure!(img.label == s.label, "label mismatch");
+            Ok(img.label)
+        })
+        .ignore_errors()
+        .batch(16, false)
+        .prefetch(2);
+    let batches = dlio::pipeline::collect(ds).unwrap();
+    let total: usize = batches.iter().map(Vec::len).sum();
+    assert_eq!(total, 120);
+    assert_eq!(batches.len(), 8); // 7 full + partial 8
+}
+
+#[test]
+fn corrupt_files_are_dropped_not_fatal() {
+    let tb = fast_testbed("corrupt");
+    let sim = make_sim(&tb, None).unwrap();
+    let spec = CorpusSpec {
+        name: "c".into(),
+        num_files: 80,
+        num_classes: 4,
+        src_size: 16,
+        median_bytes: 2048,
+        sigma: 0.2,
+        corrupt_frac: 0.25,
+        seed: 3,
+    };
+    let m = ensure_corpus(&sim, "ssd", &spec).unwrap();
+    let sim2 = Arc::clone(&sim);
+    let ds = from_manifest(&m)
+        .parallel_map(4, move |s| {
+            let bytes = sim2.read(&s.path)?;
+            format::decode(&bytes).map(|i| i.label)
+        })
+        .ignore_errors();
+    let counter = ds.dropped_counter();
+    let out = dlio::pipeline::collect(ds).unwrap();
+    let dropped = counter.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(out.len() + dropped as usize, 80);
+    assert!(dropped > 5, "dropped={dropped}");
+}
+
+#[test]
+fn thread_scaling_shapes_hold_end_to_end() {
+    // Fig. 4's shape, measured through the real pipeline + device sim:
+    // HDD scales sub-linearly and flattens; Lustre scales near-linearly.
+    // Scale 5: lustre per-op latency stays ~0.4 ms, well above sleep
+    // jitter, so the near-linear RPC-bound scaling is measurable.
+    let _serial = pacing_lock();
+    let tb = paced_testbed("scaling", 5.0);
+    let sim = make_sim(&tb, None).unwrap();
+    let spec = CorpusSpec {
+        name: "c".into(),
+        num_files: 192,
+        num_classes: 4,
+        src_size: 16,
+        median_bytes: 112 * 1024, // paper's median
+        sigma: 0.0,
+        corrupt_frac: 0.0,
+        seed: 4,
+    };
+    retry_timing(3, || {
+        let mut bw = std::collections::HashMap::new();
+        for dev in ["hdd", "lustre"] {
+            let m = ensure_corpus(&sim, dev, &spec).unwrap();
+            for threads in [1usize, 8] {
+                let sim2 = Arc::clone(&sim);
+                let ds = from_manifest(&m)
+                    .parallel_map(threads, move |s| {
+                        sim2.read(&s.path).map(|b| b.len() as u64)
+                    })
+                    .batch(64, false);
+                let t0 = std::time::Instant::now();
+                let batches = dlio::pipeline::collect(ds).unwrap();
+                let total: u64 = batches.iter().flatten().sum();
+                bw.insert((dev, threads),
+                          total as f64 / t0.elapsed().as_secs_f64());
+            }
+        }
+        let hdd_scale = bw[&("hdd", 8)] / bw[&("hdd", 1)];
+        let lustre_scale = bw[&("lustre", 8)] / bw[&("lustre", 1)];
+        if !(hdd_scale > 1.3 && hdd_scale < 4.0) {
+            return Err(format!("hdd {hdd_scale}"));
+        }
+        if lustre_scale <= 4.0 {
+            return Err(format!("lustre {lustre_scale}"));
+        }
+        if lustre_scale <= hdd_scale {
+            return Err("lustre !> hdd".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn saver_writes_triple_syncs_and_retains_five() {
+    let tb = fast_testbed("saver");
+    let sim = make_sim(&tb, None).unwrap();
+    let profile = small_profile();
+    let state = ModelState::init(&profile, 1);
+    let mut saver =
+        Saver::new(Arc::clone(&sim), profile.clone(), "ssd", "ck/m", 5);
+    for step in 1..=8u64 {
+        let h = saver.save(&state, step * 10).unwrap();
+        for f in h.files() {
+            assert!(sim.exists(&f), "{f} missing");
+        }
+    }
+    // Keep-5: steps 40..80 retained, 10..30 cleaned up.
+    let retained: Vec<u64> =
+        saver.retained().iter().map(|h| h.step).collect();
+    assert_eq!(retained, vec![40, 50, 60, 70, 80]);
+    assert!(!sim.exists(&SimPath::new("ssd", "ck/m-10.data")));
+    // Latest discovery matches.
+    let latest = Saver::latest(&sim, "ssd", "ck/m").unwrap().unwrap();
+    assert_eq!(latest.step, 80);
+}
+
+#[test]
+fn checkpoint_restore_roundtrip_through_sim() {
+    let tb = fast_testbed("restore");
+    let sim = make_sim(&tb, None).unwrap();
+    let profile = small_profile();
+    let mut state = ModelState::init(&profile, 9);
+    state.step = 30.0;
+    state.m[0][2] = 0.5;
+    let mut saver =
+        Saver::new(Arc::clone(&sim), profile.clone(), "optane", "ck/m", 5);
+    let h = saver.save(&state, 30).unwrap();
+    let back = Saver::restore(&sim, &profile, &h).unwrap();
+    assert_eq!(back.params, state.params);
+    assert_eq!(back.m, state.m);
+    assert_eq!(back.step, 30.0);
+}
+
+#[test]
+fn restore_rejects_wrong_profile() {
+    let tb = fast_testbed("wrongprof");
+    let sim = make_sim(&tb, None).unwrap();
+    let profile = small_profile();
+    let state = ModelState::init(&profile, 1);
+    let mut saver =
+        Saver::new(Arc::clone(&sim), profile.clone(), "ssd", "ck/m", 5);
+    let h = saver.save(&state, 1).unwrap();
+    let mut other = profile.clone();
+    other.name = "other".into();
+    assert!(Saver::restore(&sim, &other, &h).is_err());
+}
+
+#[test]
+fn burst_buffer_drains_to_slow_device_and_restores_from_both() {
+    let tb = fast_testbed("bb");
+    let sim = make_sim(&tb, None).unwrap();
+    let profile = small_profile();
+    let state = ModelState::init(&profile, 5);
+    let mut bb = BurstBuffer::new(
+        Arc::clone(&sim), profile.clone(), "optane", "hdd", "ck/m", 5);
+    let h1 = bb.save(&state, 20).unwrap();
+    let h2 = bb.save(&state, 40).unwrap();
+    assert_eq!(h1.device, "optane");
+    bb.wait_drained();
+    assert_eq!(bb.drained_count(), 2);
+    assert_eq!(bb.drain_error_count(), 0);
+    // Slow copies exist and restore identically.
+    let slow = dlio::checkpoint::CheckpointHandle {
+        device: "hdd".into(),
+        prefix: "ck/m".into(),
+        step: 40,
+    };
+    let from_fast = Saver::restore(&sim, &profile, &h2).unwrap();
+    let from_slow = Saver::restore(&sim, &profile, &slow).unwrap();
+    assert_eq!(from_fast.params, from_slow.params);
+}
+
+#[test]
+fn burst_buffer_save_latency_beats_direct_hdd() {
+    // The paper's headline mechanism: staging to fast NVM returns much
+    // faster than checkpointing straight to slow storage.  Custom
+    // device models (20 vs 600 MB/s writes, no time scaling) keep the
+    // modelled service times far above real-I/O noise on the backing
+    // tmpfs, so the wall-clock assertion is robust.
+    let _serial = pacing_lock();
+    let dir = scratch_dir("bblat");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mk = |name: &str, write_bw: f64| dlio::storage::DeviceModel {
+        name: name.into(),
+        read_bw: 1e9,
+        write_bw,
+        read_lat: 0.0,
+        write_lat: 0.0,
+        channels: 4,
+        elevator: vec![(1, 1.0)],
+        time_scale: 1.0,
+    };
+    let sim = Arc::new(
+        StorageSim::cold(dir, vec![mk("slow", 20e6), mk("fast", 600e6)])
+            .unwrap(),
+    );
+    let profile = ProfileMeta {
+        name: "big".into(),
+        input_size: 8,
+        num_classes: 4,
+        num_params: 700_000,
+        params: vec![ParamSpec {
+            name: "fc1/kernel".into(),
+            shape: vec![700, 1000],
+        }],
+    };
+    let state = ModelState::init(&profile, 1); // ~8.4 MB triple
+
+    let mut direct = Saver::new(
+        Arc::clone(&sim), profile.clone(), "slow", "d/m", 5);
+    direct.sync_on_save = false; // isolate device pacing
+    let t0 = std::time::Instant::now();
+    direct.save(&state, 1).unwrap();
+    let t_slow = t0.elapsed().as_secs_f64();
+
+    let mut bb = BurstBuffer::new(
+        Arc::clone(&sim), profile.clone(), "fast", "slow", "b/m", 5);
+    bb.saver_mut().sync_on_save = false;
+    let t0 = std::time::Instant::now();
+    bb.save(&state, 1).unwrap();
+    let t_bb = t0.elapsed().as_secs_f64();
+    bb.wait_drained();
+    assert_eq!(bb.drained_count(), 1);
+
+    // Modelled: 8.4 MB at 20 MB/s = 420 ms vs 600 MB/s = 14 ms.
+    assert!(t_slow > 0.25, "direct save suspiciously fast: {t_slow}");
+    assert!(t_bb < t_slow / 2.5, "bb {t_bb:.4}s vs slow {t_slow:.4}s");
+}
+
+#[test]
+fn dstat_trace_captures_checkpoint_writes_per_device() {
+    let tb = fast_testbed("trace");
+    let tracer = Arc::new(Dstat::new(10.0));
+    let sim = Arc::new(
+        StorageSim::new(
+            tb.workdir.clone(),
+            tb.devices.clone(),
+            0,
+            tracer.clone(),
+        )
+        .unwrap(),
+    );
+    let profile = small_profile();
+    let state = ModelState::init(&profile, 1);
+    let mut bb = BurstBuffer::new(
+        Arc::clone(&sim), profile.clone(), "optane", "hdd", "ck/m", 5);
+    bb.save(&state, 1).unwrap();
+    bb.wait_drained();
+    drop(bb);
+    let (opt_r, opt_w) = tracer.totals("optane");
+    let (_hdd_r, hdd_w) = tracer.totals("hdd");
+    assert!(opt_w > 0, "optane writes traced");
+    assert!(opt_r > 0, "drain reads from optane traced");
+    assert!(hdd_w > 0, "drain writes to hdd traced");
+    assert_eq!(opt_w, hdd_w, "full triple drained");
+    // CSV renders with both devices.
+    let csv = tracer.to_csv();
+    assert!(csv.contains("optane") && csv.contains("hdd"));
+}
+
+#[test]
+fn page_cache_warm_epoch_avoids_device_traffic() {
+    // §IV: "after the first epoch all samples will be seen by the OS
+    // and potentially cached" — reproduce both regimes.
+    let dir = scratch_dir("cache");
+    let _ = std::fs::remove_dir_all(&dir);
+    let tracer = Arc::new(Dstat::new(10.0));
+    let mut tb = Testbed::paper(2000.0);
+    tb.workdir = dir.to_string_lossy().into_owned();
+    let sim = Arc::new(
+        StorageSim::new(tb.workdir.clone(), tb.devices.clone(),
+                        1 << 30, tracer.clone()).unwrap(),
+    );
+    let spec = CorpusSpec {
+        name: "c".into(),
+        num_files: 40,
+        num_classes: 4,
+        src_size: 16,
+        median_bytes: 4096,
+        sigma: 0.0,
+        corrupt_frac: 0.0,
+        seed: 5,
+    };
+    let m = ensure_corpus(&sim, "ssd", &spec).unwrap();
+    let read_all = || {
+        for s in &m.samples {
+            sim.read(&s.path).unwrap();
+        }
+    };
+    read_all(); // epoch 1: cold
+    let (r1, _) = tracer.totals("ssd");
+    read_all(); // epoch 2: warm
+    let (r2, _) = tracer.totals("ssd");
+    assert!(r1 > 0);
+    assert_eq!(r2, r1, "warm epoch must add no device reads");
+    sim.drop_caches();
+    read_all(); // epoch 3: dropped caches -> cold again
+    let (r3, _) = tracer.totals("ssd");
+    assert_eq!(r3, 2 * r1);
+}
+
+#[test]
+fn ior_table1_ordering_holds() {
+    let _serial = pacing_lock();
+    let tb = paced_testbed("ior", 4.0);
+    let sim = make_sim(&tb, None).unwrap();
+    let cfg = dlio::storage::ior::IorConfig {
+        file_bytes: 16_000_000,
+        reps: 3,
+    };
+    retry_timing(3, || {
+        let rows = dlio::storage::ior::run_all(&sim, &cfg).unwrap();
+        let get = |n: &str| {
+            rows.iter().find(|r| r.device == n).unwrap().clone()
+        };
+        // Table I ordering on reads.  (lustre vs optane differ by only
+        // ~20% in the table — below live-pacing resolution — so we
+        // assert the robust orderings.)
+        let checks = [
+            (get("lustre").max_read_mbs > get("ssd").max_read_mbs,
+             "lustre read !> ssd"),
+            (get("optane").max_read_mbs > get("ssd").max_read_mbs,
+             "optane read !> ssd"),
+            (get("ssd").max_read_mbs > get("hdd").max_read_mbs,
+             "ssd read !> hdd"),
+            (get("ssd").max_write_mbs > get("hdd").max_write_mbs,
+             "ssd write !> hdd"),
+        ];
+        for (ok, msg) in checks {
+            if !ok {
+                return Err(msg.into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn device_write_ordering_via_transfer_times() {
+    // Direct check of Fig. 9's mechanism at the device level.
+    // Low speed-up + large payload: modelled write times (optane 62ms
+    // / ssd 164ms / hdd 240ms at 1.5x) dominate real-backing noise.
+    let _serial = pacing_lock();
+    let tb = paced_testbed("wr", 1.5);
+    let sim = make_sim(&tb, None).unwrap();
+    let data = vec![0u8; 48_000_000];
+    retry_timing(3, || {
+        let mut times = std::collections::HashMap::new();
+        for dev in ["hdd", "ssd", "optane"] {
+            let p = SimPath::new(dev, "x.bin");
+            let t0 = std::time::Instant::now();
+            sim.write(&p, &data).unwrap();
+            times.insert(dev, t0.elapsed().as_secs_f64());
+        }
+        if times["optane"] >= times["ssd"] {
+            return Err(format!("optane {} !< ssd {}",
+                               times["optane"], times["ssd"]));
+        }
+        if times["ssd"] >= times["hdd"] {
+            return Err(format!("ssd {} !< hdd {}",
+                               times["ssd"], times["hdd"]));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn elevator_gain_observable_under_concurrency() {
+    // HDD small-read throughput with 8 streams must beat 1 stream by
+    // roughly the paper's 2.3x (elevator model), measured live.
+    let _serial = pacing_lock();
+    let tb = paced_testbed("elev", 20.0);
+    let sim = make_sim(&tb, None).unwrap();
+    let spec = CorpusSpec {
+        name: "c".into(),
+        num_files: 160,
+        num_classes: 2,
+        src_size: 16,
+        median_bytes: 112 * 1024,
+        sigma: 0.0,
+        corrupt_frac: 0.0,
+        seed: 6,
+    };
+    let m = ensure_corpus(&sim, "hdd", &spec).unwrap();
+    let run = |threads: usize| {
+        let t0 = std::time::Instant::now();
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let sim = Arc::clone(&sim);
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for s in m.samples.iter().skip(t).step_by(threads) {
+                        sim.read(&s.path).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        m.len() as f64 / t0.elapsed().as_secs_f64()
+    };
+    retry_timing(3, || {
+        let r1 = run(1);
+        let r8 = run(8);
+        let scale = r8 / r1;
+        if scale > 1.5 && scale < 3.5 {
+            Ok(())
+        } else {
+            Err(format!("hdd 8-thread scale {scale}"))
+        }
+    });
+}
+
+#[test]
+fn trace_dir_read_write_separation() {
+    let tb = fast_testbed("dirsep");
+    let tracer = Arc::new(Dstat::new(10.0));
+    let sim = Arc::new(StorageSim::new(
+        tb.workdir.clone(), tb.devices.clone(), 0, tracer.clone())
+        .unwrap());
+    sim.write(&SimPath::new("ssd", "a.bin"), &[0u8; 1000]).unwrap();
+    sim.drop_caches(); // written data is page-cached; force device read
+    sim.read(&SimPath::new("ssd", "a.bin")).unwrap();
+    let rows = tracer.rows();
+    let ssd: Vec<_> = rows.iter().filter(|r| r.device == "ssd").collect();
+    let reads: u64 = ssd.iter().map(|r| r.read_bytes).sum();
+    let writes: u64 = ssd.iter().map(|r| r.write_bytes).sum();
+    assert_eq!(reads, 1000);
+    assert_eq!(writes, 1000);
+}

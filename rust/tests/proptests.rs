@@ -1,0 +1,378 @@
+//! Property-based tests over coordinator invariants.
+//!
+//! The vendored offline crate set has no `proptest`, so this file uses
+//! a minimal in-repo harness: each property runs against many cases
+//! generated from a deterministic seed sweep (failures print the
+//! offending seed; re-running with that seed reproduces exactly).
+
+use std::collections::BTreeMap;
+
+use dlio::model::ModelState;
+use dlio::pipeline::{from_vec, DatasetExt};
+use dlio::runtime::meta::{ParamSpec, ProfileMeta};
+use dlio::storage::device::{DeviceModel, Dir};
+use dlio::storage::page_cache::PageCache;
+use dlio::storage::profiles::analytic_throughput;
+use dlio::util::json::{to_string, Json};
+use dlio::util::Rng;
+
+/// Run `prop` for `cases` deterministic seeds.
+fn forall(cases: u64, mut prop: impl FnMut(&mut Rng, u64)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xD110 ^ seed.wrapping_mul(0x9E3779B9));
+        prop(&mut rng, seed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pipeline invariants (the paper's §II-A machinery)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_full_pipeline_loses_and_duplicates_nothing() {
+    forall(40, |rng, seed| {
+        let n = rng.index(300) + 1;
+        let threads = rng.index(8) + 1;
+        let batch = rng.index(16) + 1;
+        let shuffle_buf = rng.index(n) + 1;
+        let prefetch = rng.index(4);
+        let items: Vec<u64> = (0..n as u64).collect();
+        let ds = from_vec(items.clone())
+            .shuffle(shuffle_buf, rng.fork())
+            .parallel_map(threads, Ok)
+            .ignore_errors()
+            .batch(batch, false)
+            .prefetch(prefetch);
+        let out: Vec<u64> = dlio::pipeline::collect(ds)
+            .unwrap()
+            .into_iter()
+            .flatten()
+            .collect();
+        let mut sorted = out.clone();
+        sorted.sort();
+        assert_eq!(sorted, items, "seed {seed}: lost/duplicated elements");
+    });
+}
+
+#[test]
+fn prop_parallel_map_preserves_order_any_thread_count() {
+    forall(30, |rng, seed| {
+        let n = rng.index(200) + 1;
+        let threads = rng.index(12) + 1;
+        let items: Vec<u64> = (0..n as u64).collect();
+        let ds = from_vec(items.clone())
+            .parallel_map(threads, |x| Ok(x * 3));
+        let out = dlio::pipeline::collect(ds).unwrap();
+        assert_eq!(
+            out,
+            items.iter().map(|x| x * 3).collect::<Vec<_>>(),
+            "seed {seed}"
+        );
+    });
+}
+
+#[test]
+fn prop_batch_geometry() {
+    forall(50, |rng, seed| {
+        let n = rng.index(500);
+        let batch = rng.index(32) + 1;
+        let drop_rem = rng.next_f64() < 0.5;
+        let ds = from_vec((0..n).collect::<Vec<_>>()).batch(batch, drop_rem);
+        let out = dlio::pipeline::collect(ds).unwrap();
+        let expected_batches =
+            if drop_rem { n / batch } else { n.div_ceil(batch) };
+        assert_eq!(out.len(), expected_batches, "seed {seed}");
+        for (i, b) in out.iter().enumerate() {
+            if i + 1 < out.len() || drop_rem {
+                assert_eq!(b.len(), batch, "seed {seed} batch {i}");
+            } else {
+                assert!(b.len() <= batch && !b.is_empty());
+            }
+        }
+        // Flattened content preserved in order (minus a dropped tail).
+        let kept = if drop_rem { (n / batch) * batch } else { n };
+        let flat: Vec<usize> = out.into_iter().flatten().collect();
+        assert_eq!(flat, (0..kept).collect::<Vec<_>>(), "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_shuffle_displacement_bounded_by_buffer() {
+    forall(30, |rng, seed| {
+        let n = rng.index(300) + 2;
+        let buf = rng.index(n) + 1;
+        let ds = from_vec((0..n as i64).collect::<Vec<_>>())
+            .shuffle(buf, rng.fork());
+        let out = dlio::pipeline::collect(ds).unwrap();
+        // tf.data reservoir property: element v cannot be emitted
+        // before position v - buf.
+        for (pos, &v) in out.iter().enumerate() {
+            assert!(
+                v <= (pos + buf) as i64,
+                "seed {seed}: v={v} at pos={pos} buf={buf}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_ignore_errors_keeps_exactly_the_ok_subset() {
+    forall(30, |rng, seed| {
+        let n = rng.index(200) + 1;
+        let fail_mod = rng.index(7) + 2;
+        let ds = from_vec((0..n as u64).collect::<Vec<_>>())
+            .parallel_map(rng.index(6) + 1, move |x| {
+                if x % fail_mod as u64 == 0 {
+                    Err(anyhow::anyhow!("x"))
+                } else {
+                    Ok(x)
+                }
+            })
+            .ignore_errors();
+        let out = dlio::pipeline::collect(ds).unwrap();
+        let expect: Vec<u64> = (0..n as u64)
+            .filter(|x| x % fail_mod as u64 != 0)
+            .collect();
+        assert_eq!(out, expect, "seed {seed}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Storage model invariants
+// ---------------------------------------------------------------------------
+
+fn random_model(rng: &mut Rng) -> DeviceModel {
+    let mut elevator = vec![(1u32, 1.0f64)];
+    let mut k = 1u32;
+    let mut g = 1.0f64;
+    for _ in 0..rng.index(4) {
+        k += 1 + rng.index(4) as u32;
+        g += rng.next_f64() * 0.8;
+        elevator.push((k, g));
+    }
+    DeviceModel {
+        name: "p".into(),
+        read_bw: 1e6 + rng.next_f64() * 2e9,
+        write_bw: 1e6 + rng.next_f64() * 1e9,
+        read_lat: rng.next_f64() * 0.02,
+        write_lat: rng.next_f64() * 0.02,
+        channels: rng.index(32) + 1,
+        elevator,
+        time_scale: 1.0,
+    }
+}
+
+#[test]
+fn prop_throughput_monotone_in_threads_and_capped() {
+    forall(200, |rng, seed| {
+        let m = random_model(rng);
+        let size = 1024 + rng.next_below(1 << 20);
+        let mut prev = 0.0;
+        for k in 1..=16u32 {
+            let t = analytic_throughput(&m, Dir::Read, size, k);
+            assert!(t > 0.0, "seed {seed}");
+            assert!(
+                t >= prev - 1e-6,
+                "seed {seed}: k={k} throughput dropped {prev} -> {t}"
+            );
+            assert!(t <= m.read_bw + 1e-6, "seed {seed}: exceeds cap");
+            prev = t;
+        }
+    });
+}
+
+#[test]
+fn prop_elevator_gain_monotone_and_clamped() {
+    forall(200, |rng, seed| {
+        let m = random_model(rng);
+        let mut prev = 0.0;
+        for k in 1..=64u32 {
+            let g = m.elevator_gain(k);
+            assert!(g >= prev - 1e-9, "seed {seed}: gain dropped at {k}");
+            prev = g;
+        }
+        let last = m.elevator.last().unwrap().1;
+        assert!((m.elevator_gain(1000) - last).abs() < 1e-9, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_bigger_requests_never_slower_throughput() {
+    // Amortizing latency: per-byte cost must not increase with size.
+    forall(100, |rng, seed| {
+        let m = random_model(rng);
+        let k = rng.index(8) as u32 + 1;
+        let s1 = 1024 + rng.next_below(1 << 18);
+        let s2 = s1 * 2;
+        let t1 = analytic_throughput(&m, Dir::Write, s1, k);
+        let t2 = analytic_throughput(&m, Dir::Write, s2, k);
+        assert!(t2 >= t1 - 1e-6, "seed {seed}: {t1} -> {t2}");
+    });
+}
+
+#[test]
+fn prop_page_cache_resident_never_exceeds_capacity() {
+    forall(60, |rng, seed| {
+        let cap = 1 + rng.next_below(10_000);
+        let cache = PageCache::new(cap);
+        for i in 0..200 {
+            let path = format!("f{}", rng.index(40));
+            let size = 1 + rng.next_below(cap * 2);
+            cache.access(&path, size);
+            assert!(
+                cache.resident_bytes() <= cap,
+                "seed {seed} step {i}: resident {} > cap {cap}",
+                cache.resident_bytes()
+            );
+        }
+        let (h, m) = cache.stats();
+        assert_eq!(h + m, 200, "seed {seed}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Serialization invariants
+// ---------------------------------------------------------------------------
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.index(4) } else { rng.index(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.next_f64() < 0.5),
+        2 => Json::Num((rng.next_f64() * 2e6).round() / 8.0),
+        3 => {
+            let n = rng.index(12);
+            Json::Str(
+                (0..n)
+                    .map(|_| {
+                        char::from_u32(32 + rng.next_below(500) as u32)
+                            .unwrap_or('x')
+                    })
+                    .collect(),
+            )
+        }
+        4 => Json::Arr(
+            (0..rng.index(5))
+                .map(|_| random_json(rng, depth - 1))
+                .collect(),
+        ),
+        _ => Json::Obj(
+            (0..rng.index(5))
+                .map(|i| {
+                    (format!("k{i}"), random_json(rng, depth - 1))
+                })
+                .collect::<BTreeMap<_, _>>(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    forall(300, |rng, seed| {
+        let v = random_json(rng, 3);
+        let text = to_string(&v);
+        let back = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e} in {text}"));
+        assert_eq!(back, v, "seed {seed}: {text}");
+    });
+}
+
+fn random_profile(rng: &mut Rng) -> ProfileMeta {
+    let n = rng.index(6) + 1;
+    let params: Vec<ParamSpec> = (0..n)
+        .map(|i| {
+            let dims = rng.index(3) + 1;
+            let shape: Vec<usize> =
+                (0..dims).map(|_| rng.index(6) + 1).collect();
+            ParamSpec {
+                name: if i % 2 == 0 {
+                    format!("l{i}/kernel")
+                } else {
+                    format!("l{i}/bias")
+                },
+                shape,
+            }
+        })
+        .collect();
+    let num_params = params.iter().map(|p| p.num_elements()).sum();
+    ProfileMeta {
+        name: "p".into(),
+        input_size: 8,
+        num_classes: 4,
+        num_params,
+        params,
+    }
+}
+
+#[test]
+fn prop_model_state_bytes_roundtrip() {
+    forall(80, |rng, seed| {
+        let profile = random_profile(rng);
+        let mut state = ModelState::init(&profile, rng.next_u64());
+        state.step = rng.index(10_000) as f32;
+        // Perturb moments.
+        if !state.m.is_empty() && !state.m[0].is_empty() {
+            state.m[0][0] = rng.next_f32();
+            state.v[0][0] = rng.next_f32();
+        }
+        let bytes = state.to_bytes();
+        assert_eq!(bytes.len() as u64, state.data_bytes(), "seed {seed}");
+        let back = ModelState::from_bytes(&profile, &bytes).unwrap();
+        assert_eq!(back.params, state.params, "seed {seed}");
+        assert_eq!(back.m, state.m, "seed {seed}");
+        assert_eq!(back.v, state.v, "seed {seed}");
+        assert_eq!(back.step, state.step, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_manifest_text_roundtrip() {
+    forall(60, |rng, seed| {
+        let n = rng.index(40);
+        let m = dlio::data::Manifest {
+            samples: (0..n)
+                .map(|i| dlio::data::Sample {
+                    path: dlio::storage::SimPath::new(
+                        "ssd",
+                        format!("c/{i:05}.simg"),
+                    ),
+                    label: rng.next_below(102) as u32,
+                })
+                .collect(),
+            num_classes: 102,
+            src_size: 96,
+        };
+        let back =
+            dlio::data::Manifest::from_text(&m.to_text()).unwrap();
+        assert_eq!(back.samples, m.samples, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_simg_roundtrip_random_geometry() {
+    forall(40, |rng, seed| {
+        let w = rng.index(48) as u32 + 1;
+        let h = rng.index(48) as u32 + 1;
+        let label = rng.next_below(1000) as u32;
+        let mut pixels = vec![0u8; (w * h * 3) as usize];
+        rng.fill_bytes(&mut pixels);
+        let img = dlio::data::Image {
+            width: w,
+            height: h,
+            channels: 3,
+            label,
+            pixels,
+        };
+        let target = if rng.next_f64() < 0.5 {
+            Some(rng.index(100_000) + 32)
+        } else {
+            None
+        };
+        let bytes =
+            dlio::data::encode(&img, target, rng.next_u64()).unwrap();
+        if let Some(t) = target {
+            assert!(bytes.len() >= t.min(bytes.len()), "seed {seed}");
+        }
+        let back = dlio::data::decode(&bytes).unwrap();
+        assert_eq!(back, img, "seed {seed}");
+    });
+}

@@ -1,0 +1,208 @@
+//! End-to-end runtime tests against the real AOT artifacts.
+//!
+//! These are the cross-language integration proof: the HLO text emitted
+//! by `python/compile/aot.py` (JAX L2 + Pallas L1) loads, compiles and
+//! executes correctly from rust via PJRT, and the training loop built
+//! on it learns.  Requires `make artifacts` (skipped otherwise).
+
+use dlio::model::Trainer;
+use dlio::pipeline::ImageBatch;
+use dlio::runtime::executable::lit;
+use dlio::runtime::Runtime;
+use dlio::util::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::env::var("DLIO_ARTIFACTS")
+        .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")));
+    match Runtime::open(&dir) {
+        Ok(rt) => Some(rt),
+        Err(_) => {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+/// Reference normalize+resize for a constant image: every output pixel
+/// of channel c is (v/255 - mean[c]) / std[c] regardless of resampling
+/// (rows of the interpolation matrices sum to 1).
+fn expected_constant(v: u8) -> [f32; 3] {
+    const MEAN: [f32; 3] = [0.485, 0.456, 0.406];
+    const STD: [f32; 3] = [0.229, 0.224, 0.225];
+    let x = v as f32 / 255.0;
+    [
+        (x - MEAN[0]) / STD[0],
+        (x - MEAN[1]) / STD[1],
+        (x - MEAN[2]) / STD[2],
+    ]
+}
+
+#[test]
+fn preprocess_kernel_executes_and_matches_oracle() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.preprocess(96, 64).expect("96->64 bucket");
+    let exe = spec.get().expect("compile preprocess");
+
+    // Constant image: closed-form expected output.
+    let raw = vec![128u8; 96 * 96 * 3];
+    let out = dlio::coordinator::workload::run_preprocess(&exe, &raw, 96, 64)
+        .expect("run preprocess");
+    assert_eq!(out.len(), 64 * 64 * 3);
+    let want = expected_constant(128);
+    for (i, v) in out.iter().enumerate() {
+        let c = i % 3;
+        assert!(
+            (v - want[c]).abs() < 1e-4,
+            "pixel {i} channel {c}: {v} vs {}", want[c]
+        );
+    }
+}
+
+#[test]
+fn preprocess_interpolates_gradients_monotonically() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.preprocess(96, 64).unwrap().get().unwrap();
+    // Horizontal ramp: resized rows must stay monotonically increasing.
+    let mut raw = vec![0u8; 96 * 96 * 3];
+    for y in 0..96 {
+        for x in 0..96 {
+            for c in 0..3 {
+                raw[(y * 96 + x) * 3 + c] = ((x * 255) / 95) as u8;
+            }
+        }
+    }
+    let out = dlio::coordinator::workload::run_preprocess(&exe, &raw, 96, 64)
+        .unwrap();
+    for x in 1..64 {
+        let prev = out[(32 * 64 + (x - 1)) * 3];
+        let cur = out[(32 * 64 + x) * 3];
+        assert!(cur >= prev - 1e-5, "x={x}: {cur} < {prev}");
+    }
+}
+
+#[test]
+fn preprocess_runs_concurrently_from_many_threads() {
+    // The map fan-out executes the kernel from `num_parallel_calls`
+    // threads, each with its own thread-local client (see
+    // runtime::executable docs).  This must be race-free and correct.
+    let Some(rt) = runtime() else { return };
+    let rt = std::sync::Arc::new(rt);
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let rt = std::sync::Arc::clone(&rt);
+            std::thread::spawn(move || {
+                let exe = rt.preprocess(96, 64).unwrap().get().unwrap();
+                for i in 0..8 {
+                    let v = (t * 40 + i * 5) as u8;
+                    let raw = vec![v; 96 * 96 * 3];
+                    let out = dlio::coordinator::workload::run_preprocess(
+                        &exe, &raw, 96, 64).unwrap();
+                    let want = expected_constant(v);
+                    assert!((out[0] - want[0]).abs() < 1e-4);
+                    assert!((out[1] - want[1]).abs() < 1e-4);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("worker panicked");
+    }
+}
+
+fn synthetic_batch(rng: &mut Rng, size: usize, batch: usize,
+                   classes: u32) -> ImageBatch {
+    let samples = (0..batch)
+        .map(|_| dlio::pipeline::ProcessedImage {
+            pixels: (0..size * size * 3)
+                .map(|_| rng.next_f32() * 2.0 - 1.0)
+                .collect(),
+            size: size as u32,
+            label: rng.next_below(classes as u64) as u32,
+            bytes_read: 0,
+        })
+        .collect();
+    ImageBatch::assemble(samples, classes).unwrap()
+}
+
+#[test]
+fn train_step_decreases_loss_on_fixed_batch() {
+    let Some(rt) = runtime() else { return };
+    let mut trainer = Trainer::new(&rt, "micro", 16, 1).expect("trainer");
+    let prof = trainer.profile().clone();
+    let mut rng = Rng::new(3);
+    let batch = synthetic_batch(&mut rng, prof.input_size, 16,
+                                prof.num_classes as u32);
+    let mut losses = Vec::new();
+    for _ in 0..8 {
+        losses.push(trainer.step(&batch).expect("step"));
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss did not decrease: {losses:?}"
+    );
+    assert_eq!(trainer.step_count(), 8);
+    assert!(trainer.state().max_abs_param().is_finite());
+}
+
+#[test]
+fn train_step_rejects_wrong_batch_size() {
+    let Some(rt) = runtime() else { return };
+    let mut trainer = Trainer::new(&rt, "micro", 16, 1).unwrap();
+    let prof = trainer.profile().clone();
+    let mut rng = Rng::new(4);
+    let batch = synthetic_batch(&mut rng, prof.input_size, 8,
+                                prof.num_classes as u32);
+    assert!(trainer.step(&batch).is_err());
+}
+
+#[test]
+fn trainer_restore_roundtrip_continues_from_step() {
+    let Some(rt) = runtime() else { return };
+    let mut t1 = Trainer::new(&rt, "micro", 16, 1).unwrap();
+    let prof = t1.profile().clone();
+    let mut rng = Rng::new(5);
+    let batch = synthetic_batch(&mut rng, prof.input_size, 16,
+                                prof.num_classes as u32);
+    for _ in 0..3 {
+        t1.step(&batch).unwrap();
+    }
+    let snapshot = t1.state().clone();
+
+    let mut t2 = Trainer::new(&rt, "micro", 16, 99).unwrap();
+    t2.restore(snapshot).unwrap();
+    assert_eq!(t2.step_count(), 3);
+    // Both trainers take the same next step -> identical loss.
+    let l1 = t1.step(&batch).unwrap();
+    let l2 = t2.step(&batch).unwrap();
+    assert!((l1 - l2).abs() < 1e-6, "{l1} vs {l2}");
+}
+
+#[test]
+fn all_default_artifacts_compile_and_have_right_arity() {
+    let Some(rt) = runtime() else { return };
+    // Preprocess buckets: execute with a zero image and check shape.
+    for (src, out) in [(96usize, 32usize), (256, 32), (96, 64), (256, 64)] {
+        let exe = rt.preprocess(src, out).unwrap().get().unwrap();
+        let raw = vec![0u8; src * src * 3];
+        let r = dlio::coordinator::workload::run_preprocess(
+            &exe, &raw, src, out).unwrap();
+        assert_eq!(r.len(), out * out * 3, "bucket {src}->{out}");
+    }
+    // Train artifacts: run one step at each batch size for micro.
+    for batch in [16usize, 32] {
+        let mut trainer = Trainer::new(&rt, "micro", batch, 1).unwrap();
+        let prof = trainer.profile().clone();
+        let mut rng = Rng::new(batch as u64);
+        let b = synthetic_batch(&mut rng, prof.input_size, batch,
+                                prof.num_classes as u32);
+        let loss = trainer.step(&b).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+    }
+}
+
+#[test]
+fn scalar_literal_roundtrip() {
+    // Marshalling sanity for the step counter.
+    let l = lit::scalar_f32(12.5);
+    assert_eq!(l.to_vec::<f32>().unwrap(), vec![12.5]);
+}
