@@ -52,6 +52,7 @@ fn main() -> anyhow::Result<()> {
                     iterations: files.min(512) / 64,
                     preprocess,
                     out_size: 64,
+                    readahead: 0,
                 };
                 let r = microbench::run(
                     Arc::clone(&sim), &rt, &manifest, &cfg, 7)?;

@@ -93,6 +93,7 @@ fn main() -> anyhow::Result<()> {
             iterations: files / 64,
             preprocess: false,
             out_size: 64,
+            readahead: 0,
         };
         let mut t = Table::new(&["epoch", "MB/s", "cache hits"]);
         for epoch in ["cold", "warm"] {

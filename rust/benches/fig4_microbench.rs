@@ -46,6 +46,7 @@ fn main() -> anyhow::Result<()> {
                 iterations,
                 preprocess: true,
                 out_size: 64,
+                readahead: 0,
             };
             env.sim.drop_caches();
             let r = microbench::run(

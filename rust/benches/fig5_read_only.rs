@@ -43,6 +43,7 @@ fn main() -> anyhow::Result<()> {
                 iterations,
                 preprocess: false,
                 out_size: 64,
+                readahead: 0,
             };
             env.sim.drop_caches();
             let r = microbench::run(

@@ -12,7 +12,10 @@
 //!
 //! Implementation: a [`Saver`] targeting the fast device + one drainer
 //! thread consuming a queue of drain jobs (copy triple to the slow
-//! device, then optionally delete the staged files).
+//! device via the engine's chunked pipelined copy, then optionally
+//! delete the staged files).  Drains complete strictly oldest-first,
+//! and the saver's retention cleanup is guarded so it can never delete
+//! a staged checkpoint that is still queued for (or in) drain.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -34,6 +37,15 @@ struct DrainQueue {
     shutdown: Mutex<bool>,
 }
 
+impl DrainQueue {
+    /// Is `handle` still queued for (or currently in) drain?  Jobs are
+    /// popped only after their copy finishes, so a `true` here means
+    /// the staged files must not be deleted yet.
+    fn contains(&self, handle: &CheckpointHandle) -> bool {
+        self.jobs.lock().unwrap().iter().any(|j| j == handle)
+    }
+}
+
 /// Burst-buffer checkpointer: synchronous save to `fast`, asynchronous
 /// drain to `slow`.
 pub struct BurstBuffer {
@@ -44,6 +56,8 @@ pub struct BurstBuffer {
     drained: Arc<AtomicU64>,
     drain_errors: Arc<AtomicU64>,
     cleanup_staged: Arc<AtomicBool>,
+    /// Steps in the order their drains completed (oldest-first proof).
+    drained_steps: Arc<Mutex<Vec<u64>>>,
 }
 
 impl BurstBuffer {
@@ -55,7 +69,7 @@ impl BurstBuffer {
         prefix: &str,
         max_to_keep: usize,
     ) -> BurstBuffer {
-        let saver = Saver::new(
+        let mut saver = Saver::new(
             Arc::clone(&sim),
             profile,
             fast_device,
@@ -68,9 +82,16 @@ impl BurstBuffer {
             idle: Condvar::new(),
             shutdown: Mutex::new(false),
         });
+        // Retention cleanup must never race the drainer: staged files
+        // still queued for drain are vetoed until their copy lands.
+        {
+            let q = Arc::clone(&queue);
+            saver.set_retention_guard(Arc::new(move |h| !q.contains(h)));
+        }
         let drained = Arc::new(AtomicU64::new(0));
         let drain_errors = Arc::new(AtomicU64::new(0));
         let cleanup_staged = Arc::new(AtomicBool::new(false));
+        let drained_steps = Arc::new(Mutex::new(Vec::new()));
 
         let drainer = {
             let q = Arc::clone(&queue);
@@ -79,10 +100,11 @@ impl BurstBuffer {
             let drained = Arc::clone(&drained);
             let errors = Arc::clone(&drain_errors);
             let cleanup = Arc::clone(&cleanup_staged);
+            let steps = Arc::clone(&drained_steps);
             std::thread::Builder::new()
                 .name("dlio-bb-drain".into())
                 .spawn(move || drain_loop(q, sim, slow, drained, errors,
-                                          cleanup))
+                                          cleanup, steps))
                 .expect("spawn burst-buffer drainer")
         };
 
@@ -94,6 +116,7 @@ impl BurstBuffer {
             drained,
             drain_errors,
             cleanup_staged,
+            drained_steps,
         }
     }
 
@@ -122,6 +145,12 @@ impl BurstBuffer {
     /// Number of checkpoints fully drained to the slow device.
     pub fn drained_count(&self) -> u64 {
         self.drained.load(Ordering::SeqCst)
+    }
+
+    /// Steps in drain-completion order (the queue is FIFO, so this is
+    /// save order — oldest first).
+    pub fn drained_steps(&self) -> Vec<u64> {
+        self.drained_steps.lock().unwrap().clone()
     }
 
     pub fn drain_error_count(&self) -> u64 {
@@ -159,6 +188,7 @@ fn drain_loop(
     drained: Arc<AtomicU64>,
     errors: Arc<AtomicU64>,
     cleanup: Arc<AtomicBool>,
+    drained_steps: Arc<Mutex<Vec<u64>>>,
 ) {
     loop {
         let job = {
@@ -173,9 +203,11 @@ fn drain_loop(
                 jobs = q.available.wait(jobs).unwrap();
             }
         };
-        // Copy the triple to the slow device.  No syncfs: "it is not
-        // necessary to enforce immediate synchronization ... when moved
-        // to HDD" (§V-C).
+        // Copy the triple to the slow device — engine-level chunked
+        // copies, so the fast-device read overlaps the slow-device
+        // write and drain memory stays bounded by the stream window.
+        // No syncfs: "it is not necessary to enforce immediate
+        // synchronization ... when moved to HDD" (§V-C).
         let mut ok = true;
         for f in job.files() {
             let dst = crate::storage::SimPath::new(slow.clone(), f.rel.clone());
@@ -188,6 +220,7 @@ fn drain_loop(
         }
         if ok {
             drained.fetch_add(1, Ordering::SeqCst);
+            drained_steps.lock().unwrap().push(job.step);
             if cleanup.load(Ordering::SeqCst) {
                 for f in job.files() {
                     if sim.exists(&f) {
@@ -196,7 +229,8 @@ fn drain_loop(
                 }
             }
         }
-        // Pop the job and wake any wait_drained() callers.
+        // Pop the job (lifting the retention-guard veto) and wake any
+        // wait_drained() callers.
         let mut jobs = q.jobs.lock().unwrap();
         jobs.pop_front();
         let empty = jobs.is_empty();
@@ -210,10 +244,145 @@ fn drain_loop(
 impl Drop for BurstBuffer {
     fn drop(&mut self) {
         self.wait_drained();
+        // Every veto has lifted: apply any retention deletes that were
+        // deferred while their checkpoints drained.
+        let _ = self.saver.sweep_retention();
         *self.queue.shutdown.lock().unwrap() = true;
         self.queue.available.notify_all();
         if let Some(d) = self.drainer.take() {
             let _ = d.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::meta::{ParamSpec, ProfileMeta};
+    use crate::storage::DeviceModel;
+
+    fn model(name: &str, write_lat: f64) -> DeviceModel {
+        DeviceModel {
+            name: name.into(),
+            read_bw: 1e9,
+            write_bw: 1e9,
+            read_lat: 0.0,
+            write_lat,
+            channels: 4,
+            elevator: vec![(1, 1.0)],
+            time_scale: 1.0,
+        }
+    }
+
+    fn profile() -> ProfileMeta {
+        ProfileMeta {
+            name: "t".into(),
+            input_size: 8,
+            num_classes: 4,
+            num_params: 4 * 3 + 3,
+            params: vec![
+                ParamSpec { name: "fc1/kernel".into(), shape: vec![4, 3] },
+                ParamSpec { name: "fc1/bias".into(), shape: vec![3] },
+            ],
+        }
+    }
+
+    fn sim(tag: &str, slow_write_lat: f64) -> Arc<StorageSim> {
+        let dir = std::env::temp_dir()
+            .join(format!("dlio-bb-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        Arc::new(
+            StorageSim::cold(
+                dir,
+                vec![model("fast", 0.0), model("slow", slow_write_lat)],
+            )
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn back_to_back_saves_drain_oldest_first_without_retention_races() {
+        // Slow drain target (10 ms write latency per file => >=30 ms
+        // per triple) + rapid saves with a small retention quota: the
+        // old implementation's cleanup deleted staged files before the
+        // drainer copied them.  The guard must make every drain land,
+        // oldest first, with zero errors.
+        let sim = sim("order", 0.010);
+        let profile = profile();
+        let state = ModelState::init(&profile, 7);
+        let steps: Vec<u64> = (1..=6).map(|i| i * 10).collect();
+        {
+            let mut bb = BurstBuffer::new(
+                Arc::clone(&sim),
+                profile.clone(),
+                "fast",
+                "slow",
+                "ck/m",
+                2, // far fewer than the drain backlog
+            );
+            bb.saver_mut().sync_on_save = false;
+            for &s in &steps {
+                bb.save(&state, s).unwrap();
+            }
+            bb.wait_drained();
+            assert_eq!(bb.drain_error_count(), 0, "cleanup raced the drainer");
+            assert_eq!(bb.drained_count(), steps.len() as u64);
+            assert_eq!(bb.drained_steps(), steps, "drains not oldest-first");
+        }
+        // Every checkpoint reached the slow device intact.
+        for &s in &steps {
+            let h = CheckpointHandle {
+                device: "slow".into(),
+                prefix: "ck/m".into(),
+                step: s,
+            };
+            let back = Saver::restore(&sim, &profile, &h).unwrap();
+            assert_eq!(back.params, state.params);
+        }
+        // After drop (drains settled + deferred sweep), retention
+        // holds on the fast device: only the newest 2 staged remain.
+        for &s in &steps[..4] {
+            assert!(
+                !sim.exists(&crate::storage::SimPath::new(
+                    "fast",
+                    format!("ck/m-{s}.data"),
+                )),
+                "step {s} staged files should be cleaned up"
+            );
+        }
+        for &s in &steps[4..] {
+            assert!(sim.exists(&crate::storage::SimPath::new(
+                "fast",
+                format!("ck/m-{s}.data"),
+            )));
+        }
+    }
+
+    #[test]
+    fn cleanup_staged_removes_fast_copies_after_drain() {
+        let sim = sim("staged", 0.0);
+        let profile = profile();
+        let state = ModelState::init(&profile, 1);
+        let mut bb = BurstBuffer::new(
+            Arc::clone(&sim),
+            profile.clone(),
+            "fast",
+            "slow",
+            "ck/m",
+            5,
+        );
+        bb.saver_mut().sync_on_save = false;
+        bb.set_cleanup_staged(true);
+        let h = bb.save(&state, 10).unwrap();
+        bb.wait_drained();
+        assert_eq!(bb.drain_error_count(), 0);
+        // Staged copy gone, slow copy restorable.
+        assert!(!sim.exists(&h.file("data")));
+        let slow = CheckpointHandle {
+            device: "slow".into(),
+            prefix: "ck/m".into(),
+            step: 10,
+        };
+        assert!(Saver::restore(&sim, &profile, &slow).is_ok());
     }
 }

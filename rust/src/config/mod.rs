@@ -79,6 +79,9 @@ pub struct MicrobenchConfig {
     pub preprocess: bool,
     /// Model input size the resize targets.
     pub out_size: usize,
+    /// File reads kept in flight on the I/O engine ahead of the
+    /// consumer (0 = classic blocking reads inside the map workers).
+    pub readahead: usize,
 }
 
 impl Default for MicrobenchConfig {
@@ -90,6 +93,7 @@ impl Default for MicrobenchConfig {
             iterations: 32,
             preprocess: true,
             out_size: 64,
+            readahead: 0,
         }
     }
 }

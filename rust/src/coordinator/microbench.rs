@@ -12,12 +12,12 @@ use anyhow::Result;
 use crate::config::MicrobenchConfig;
 use crate::data::manifest::Manifest;
 use crate::metrics::Timer;
-use crate::pipeline::{from_manifest, Dataset, DatasetExt};
+use crate::pipeline::{from_manifest, read_ahead, Dataset, DatasetExt};
 use crate::runtime::Runtime;
 use crate::storage::StorageSim;
 use crate::util::Rng;
 
-use super::workload::{preprocess_fn, read_only_fn};
+use super::workload::{preprocess_fn, preprocess_loaded_fn, read_only_fn};
 
 /// Micro-benchmark outcome.
 #[derive(Debug, Clone)]
@@ -57,7 +57,30 @@ pub fn run(
     let mut dropped = 0u64;
     let timer;
 
-    if cfg.preprocess {
+    if cfg.preprocess && cfg.readahead > 0 {
+        // Engine readahead: file reads queue on the device engine
+        // ahead of the decode workers (no thread parked per read).
+        let f = preprocess_loaded_fn(rt, m.src_size as usize, cfg.out_size)?;
+        let src = read_ahead(
+            from_manifest(&m).shuffle(shuffle_buf, Rng::new(seed)),
+            Arc::clone(&sim),
+            cfg.readahead,
+        );
+        // The decode window mirrors the read window so loaded bytes
+        // keep flowing while the consumer drains a batch.
+        let ds = src
+            .parallel_map_ahead(cfg.threads, cfg.readahead, f)
+            .ignore_errors();
+        let counter = ds.dropped_counter();
+        let mut ds = ds.batch(cfg.batch, false).take(cfg.iterations);
+        timer = Timer::start();
+        while let Some(batch) = ds.next() {
+            let batch = batch?;
+            images += batch.len() as u64;
+            bytes += batch.iter().map(|p| p.bytes_read).sum::<u64>();
+        }
+        dropped += counter.load(std::sync::atomic::Ordering::Relaxed);
+    } else if cfg.preprocess {
         let f = preprocess_fn(
             Arc::clone(&sim),
             rt,
@@ -75,6 +98,22 @@ pub fn run(
             let batch = batch?;
             images += batch.len() as u64;
             bytes += batch.iter().map(|p| p.bytes_read).sum::<u64>();
+        }
+        dropped += counter.load(std::sync::atomic::Ordering::Relaxed);
+    } else if cfg.readahead > 0 {
+        let src = read_ahead(
+            from_manifest(&m).shuffle(shuffle_buf, Rng::new(seed)),
+            Arc::clone(&sim),
+            cfg.readahead,
+        );
+        let ds = src.ignore_errors();
+        let counter = ds.dropped_counter();
+        let mut ds = ds.batch(cfg.batch, false).take(cfg.iterations);
+        timer = Timer::start();
+        while let Some(batch) = ds.next() {
+            let batch = batch?;
+            images += batch.len() as u64;
+            bytes += batch.iter().map(|ls| ls.bytes.len() as u64).sum::<u64>();
         }
         dropped += counter.load(std::sync::atomic::Ordering::Relaxed);
     } else {

@@ -13,7 +13,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::data::format;
 use crate::data::manifest::Sample;
-use crate::pipeline::ProcessedImage;
+use crate::pipeline::{LoadedSample, ProcessedImage};
 use crate::runtime::executable::{lit, ExecSpec, Executable};
 use crate::runtime::Runtime;
 use crate::storage::StorageSim;
@@ -34,6 +34,34 @@ pub fn read_only_fn(
     }
 }
 
+/// Decode + fused normalize/resize on already-fetched bytes: the
+/// compute half shared by [`preprocess_fn`] (which also reads) and
+/// [`preprocess_loaded_fn`] (fed by the engine readahead source).
+fn process_bytes(
+    spec: &ExecSpec,
+    sample: &Sample,
+    bytes: &[u8],
+    src_size: usize,
+    out_size: usize,
+) -> Result<ProcessedImage> {
+    let exe = spec.get()?; // per-thread compile cache
+    let img = format::decode(bytes)
+        .with_context(|| format!("decoding {}", sample.path))?;
+    if img.width as usize != src_size || img.height as usize != src_size {
+        return Err(anyhow!(
+            "{}: geometry {}x{} outside the {src_size} bucket",
+            sample.path, img.width, img.height
+        ));
+    }
+    let pixels = run_preprocess(&exe, &img.pixels, src_size, out_size)?;
+    Ok(ProcessedImage {
+        pixels,
+        size: out_size as u32,
+        label: sample.label,
+        bytes_read: bytes.len() as u64,
+    })
+}
+
 /// Figs. 4/6 map function: read -> decode (DEFLATE, the JPEG-decode
 /// stand-in) -> fused normalize+resize via the L1 Pallas kernel
 /// (executed through PJRT).
@@ -45,25 +73,22 @@ pub fn preprocess_fn(
 ) -> Result<impl Fn(Sample) -> Result<ProcessedImage> + Send + Sync> {
     let spec: ExecSpec = rt.preprocess(src_size, out_size)?;
     Ok(move |sample: Sample| {
-        let exe = spec.get()?; // per-thread compile cache
         let bytes = sim.read(&sample.path)?;
-        let n_read = bytes.len() as u64;
-        let img = format::decode(&bytes)
-            .with_context(|| format!("decoding {}", sample.path))?;
-        if img.width as usize != src_size || img.height as usize != src_size
-        {
-            return Err(anyhow!(
-                "{}: geometry {}x{} outside the {src_size} bucket",
-                sample.path, img.width, img.height
-            ));
-        }
-        let pixels = run_preprocess(&exe, &img.pixels, src_size, out_size)?;
-        Ok(ProcessedImage {
-            pixels,
-            size: out_size as u32,
-            label: sample.label,
-            bytes_read: n_read,
-        })
+        process_bytes(&spec, &sample, &bytes, src_size, out_size)
+    })
+}
+
+/// Readahead variant of [`preprocess_fn`]: the engine already fetched
+/// the bytes (`source::read_ahead`), the map workers only decode and
+/// resize.
+pub fn preprocess_loaded_fn(
+    rt: &Runtime,
+    src_size: usize,
+    out_size: usize,
+) -> Result<impl Fn(LoadedSample) -> Result<ProcessedImage> + Send + Sync> {
+    let spec: ExecSpec = rt.preprocess(src_size, out_size)?;
+    Ok(move |loaded: LoadedSample| {
+        process_bytes(&spec, &loaded.sample, &loaded.bytes, src_size, out_size)
     })
 }
 

@@ -4,8 +4,9 @@
 //! PNG/JPEG (mini-app, Caltech 101).  We cannot ship those datasets, so
 //! the generator synthesizes files whose *I/O-relevant properties*
 //! match (§IV-A/B file-size distributions) and whose *decode cost* is
-//! real CPU work (DEFLATE entropy decoding, the same family of work as
-//! JPEG's Huffman stage):
+//! real CPU work (entropy decoding via the `flate2` codec — the
+//! offline build vendors a delta+Huffman shim with the same surface —
+//! the same family of work as JPEG's Huffman stage):
 //!
 //! ```text
 //! offset  size  field

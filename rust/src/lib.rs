@@ -5,11 +5,14 @@
 //! Rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — the coordinator: a faithful `tf.data`-style
-//!   input pipeline (shuffle / parallel map / batch / prefetch), a
-//!   calibrated storage-device simulator (HDD / SSD / Optane / Lustre),
-//!   a `tf.train.Saver`-style checkpointer with a burst-buffer staging
-//!   path, dstat-style tracing, and the experiment drivers regenerating
-//!   every table and figure of the paper.
+//!   input pipeline (shuffle / parallel map / batch / prefetch, plus an
+//!   engine-backed readahead source), a calibrated storage-device
+//!   simulator (HDD / SSD / Optane / Lustre) scheduled by a
+//!   request-level submission/completion [`IoEngine`](storage::IoEngine),
+//!   a `tf.train.Saver`-style checkpointer (overlapped triple writes)
+//!   with a burst-buffer staging path, dstat-style tracing, and the
+//!   experiment drivers regenerating every table and figure of the
+//!   paper.
 //! * **L2 (python/compile/model.py)** — AlexNet fwd/bwd + Adam in JAX,
 //!   AOT-lowered to HLO text once at build time.
 //! * **L1 (python/compile/kernels/)** — the per-image decode/normalize/

@@ -6,7 +6,8 @@
 //! dlio ior         [--size-mb 512] [--reps 6] [--time-scale 8]
 //! dlio gen-corpus  [--corpus imagenet|caltech101] [--files N] [--device D]
 //! dlio microbench  [--device D] [--threads N] [--batch 64]
-//!                  [--iterations N] [--no-preprocess]
+//!                  [--iterations N] [--no-preprocess] [--readahead N]
+//!                  [--engine-stats]
 //! dlio train       [--device D] [--threads N] [--batch 64] [--prefetch 1]
 //!                  [--iterations N] [--profile micro|mini]
 //! dlio ckpt-study  [--target none|hdd|ssd|optane|bb:optane:hdd]
@@ -158,14 +159,36 @@ fn cmd_microbench(args: &Args) -> Result<()> {
         iterations: args.get_usize("iterations", 16)?,
         preprocess: !args.has_flag("no-preprocess"),
         out_size: args.get_usize("out-size", 64)?,
+        readahead: args.get_usize("readahead", 0)?,
     };
     let r = microbench::run(Arc::clone(&sim), &rt, &manifest, &cfg, 7)?;
     println!(
-        "device={device} threads={} preprocess={} : {:.1} images/s  \
-         {:.2} MB/s  ({} images in {:.2}s, {} dropped)",
-        cfg.threads, cfg.preprocess, r.images_per_sec(), r.mb_per_sec(),
-        r.images, r.elapsed_secs, r.dropped
+        "device={device} threads={} preprocess={} readahead={} : \
+         {:.1} images/s  {:.2} MB/s  ({} images in {:.2}s, {} dropped)",
+        cfg.threads, cfg.preprocess, cfg.readahead, r.images_per_sec(),
+        r.mb_per_sec(), r.images, r.elapsed_secs, r.dropped
     );
+    if args.has_flag("engine-stats") {
+        let mut t = Table::new(&[
+            "Device", "reqs", "mean queue ms", "mean service ms",
+            "max depth", "MB read", "MB written",
+        ]);
+        for s in sim.engine().stats() {
+            if s.completed == 0 {
+                continue;
+            }
+            t.row(&[
+                s.device.clone(),
+                s.completed.to_string(),
+                format!("{:.3}", s.mean_queue_secs() * 1e3),
+                format!("{:.3}", s.mean_service_secs() * 1e3),
+                s.max_queue_depth.to_string(),
+                format!("{:.1}", s.bytes_read as f64 / 1e6),
+                format!("{:.1}", s.bytes_written as f64 / 1e6),
+            ]);
+        }
+        print!("{}", t.render());
+    }
     Ok(())
 }
 

@@ -52,29 +52,45 @@ impl ModelState {
         (self.num_values() * 3 * 4 + 4) as u64
     }
 
-    /// Serialize `params + m + v + step` as little-endian f32 bytes —
-    /// the checkpoint `.data` payload.
+    /// Stream the checkpoint `.data` payload (`params + m + v + step`,
+    /// little-endian f32) through `sink`, one tensor slice at a time.
+    /// This is what the saver feeds into the engine's chunked write
+    /// stream, so a checkpoint never needs one contiguous
+    /// payload-sized buffer.
     ///
-    /// Perf note (EXPERIMENTS.md §Perf): whole-tensor slice copies, not
+    /// Perf note (DESIGN.md §Perf): whole-tensor slice views, not
     /// per-value `to_le_bytes` — checkpoint serialization sits on the
     /// synchronous save path the paper measures, and the naive loop
     /// cost ~10x more than the simulated Optane write it precedes.
-    pub fn to_bytes(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(self.data_bytes() as usize);
+    pub fn stream_bytes(
+        &self,
+        mut sink: impl FnMut(&[u8]) -> Result<()>,
+    ) -> Result<()> {
         for group in [&self.params, &self.m, &self.v] {
             for tensor in group {
                 // f32 slices are plain little-endian bytes on every
-                // supported target; bulk-copy the raw representation.
+                // supported target; view the raw representation.
                 let bytes = unsafe {
                     std::slice::from_raw_parts(
                         tensor.as_ptr() as *const u8,
                         tensor.len() * 4,
                     )
                 };
-                out.extend_from_slice(bytes);
+                sink(bytes)?;
             }
         }
-        out.extend_from_slice(&self.step.to_le_bytes());
+        sink(&self.step.to_le_bytes())
+    }
+
+    /// Serialize the full `.data` payload into one buffer (tests and
+    /// small states; the saver streams instead).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data_bytes() as usize);
+        self.stream_bytes(|bytes| {
+            out.extend_from_slice(bytes);
+            Ok(())
+        })
+        .expect("in-memory sink is infallible");
         out
     }
 

@@ -55,6 +55,27 @@ pub trait DatasetExt: Dataset + Sized + 'static {
         super::map::ParallelMap::new(self, threads, f)
     }
 
+    /// [`parallel_map`](Self::parallel_map) with a readahead window:
+    /// up to `threads + readahead` elements in flight or buffered
+    /// ahead of the consumer (readahead 0 = plain `parallel_map`).
+    fn parallel_map_ahead<U, F>(
+        self,
+        threads: usize,
+        readahead: usize,
+        f: F,
+    ) -> super::map::ParallelMap<U>
+    where
+        U: Send + 'static,
+        F: Fn(Self::Item) -> Result<U> + Send + Sync + 'static,
+    {
+        super::map::ParallelMap::with_window(
+            self,
+            threads,
+            threads.max(1) + readahead,
+            f,
+        )
+    }
+
     /// `tf.contrib.data.ignore_errors()`.
     fn ignore_errors(self) -> super::ignore_errors::IgnoreErrors<Self> {
         super::ignore_errors::IgnoreErrors::new(self)

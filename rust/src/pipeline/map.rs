@@ -12,8 +12,13 @@
 //!   a shared lock (upstream pulls are serialized; the *map function*
 //!   runs in parallel — exactly TF's contract).
 //! * Results are delivered **in input order** via a reorder buffer.
-//! * At most `num_parallel_calls` elements are in flight or buffered,
-//!   which provides the backpressure that keeps memory bounded.
+//! * At most `window` elements are in flight or buffered (default:
+//!   `num_parallel_calls`), which provides the backpressure that keeps
+//!   memory bounded.  A larger window — `parallel_map_ahead`'s
+//!   readahead — lets workers run ahead of a bursty consumer without
+//!   adding threads, the map-side half of the engine-backed readahead
+//!   (`source::read_ahead` keeps the *reads* in flight; the window
+//!   keeps their *decoded results* flowing).
 //! * Element-level errors (from upstream or from `f`) are delivered in
 //!   order as `Err` values, to be dropped by `ignore_errors`.
 
@@ -91,7 +96,24 @@ impl<U: Send + 'static> ParallelMap<U> {
         D: Dataset + 'static,
         F: Fn(D::Item) -> Result<U> + Send + Sync + 'static,
     {
+        Self::with_window(upstream, threads, threads, f)
+    }
+
+    /// Like [`new`](Self::new) but with an explicit in-flight window
+    /// (clamped to at least `threads`): up to `window` elements may be
+    /// running or buffered ahead of the consumer.
+    pub fn with_window<D, F>(
+        upstream: D,
+        threads: usize,
+        window: usize,
+        f: F,
+    ) -> Self
+    where
+        D: Dataset + 'static,
+        F: Fn(D::Item) -> Result<U> + Send + Sync + 'static,
+    {
         let threads = threads.max(1);
+        let window = window.max(threads);
         let shared = Arc::new(Shared::<D::Item, U> {
             state: Mutex::new(MapState {
                 upstream: Some(Box::new(upstream) as BoxedDataset<D::Item>),
@@ -103,7 +125,7 @@ impl<U: Send + 'static> ParallelMap<U> {
             }),
             ready: Condvar::new(),
             slot: Condvar::new(),
-            capacity: threads,
+            capacity: window,
         });
         let f = Arc::new(f);
         let workers = (0..threads)
@@ -316,5 +338,48 @@ mod tests {
     fn thread_count_zero_clamped() {
         let d = from_vec(vec![1]).parallel_map(0, Ok);
         assert_eq!(collect(d).unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn readahead_window_widens_in_flight_bound() {
+        // With window 12 over 2 threads, workers may buffer up to 12
+        // results ahead of an idle consumer (vs 2 without readahead).
+        let pulled = Arc::new(AtomicUsize::new(0));
+        struct Counting<D> {
+            inner: D,
+            n: Arc<AtomicUsize>,
+        }
+        impl<D: crate::pipeline::dataset::Dataset> crate::pipeline::dataset::Dataset
+            for Counting<D>
+        {
+            type Item = D::Item;
+            fn next(&mut self) -> Option<anyhow::Result<D::Item>> {
+                self.n.fetch_add(1, Ordering::SeqCst);
+                self.inner.next()
+            }
+        }
+        let src = Counting {
+            inner: from_vec((0..1000).collect::<Vec<i32>>()),
+            n: Arc::clone(&pulled),
+        };
+        let d = src.parallel_map_ahead(2, 10, Ok);
+        std::thread::sleep(Duration::from_millis(150));
+        let consumed = pulled.load(Ordering::SeqCst);
+        // Ran ahead beyond the thread count, but bounded by the window
+        // (+1 per worker possibly blocked at the check).
+        assert!(consumed > 4, "no readahead: {consumed}");
+        assert!(consumed <= 14, "unbounded readahead: {consumed}");
+        let out = collect(d).unwrap();
+        assert_eq!(out.len(), 1000);
+    }
+
+    #[test]
+    fn readahead_preserves_order() {
+        let d = from_vec((0..100).collect::<Vec<u64>>())
+            .parallel_map_ahead(4, 16, |x| Ok(x * 2));
+        assert_eq!(
+            collect(d).unwrap(),
+            (0..100).map(|x| x * 2).collect::<Vec<u64>>()
+        );
     }
 }

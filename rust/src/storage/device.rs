@@ -240,28 +240,60 @@ impl Device {
         &self.model.name
     }
 
-    /// Pace a transfer of `bytes` in `dir`, invoking `io` for the real
-    /// backing-file operation once the device "positions" (after the
-    /// latency phase).  Returns the value produced by `io`.
-    pub fn transfer<T>(
-        &self,
-        dir: Dir,
-        bytes: u64,
-        io: impl FnOnce() -> T,
-    ) -> T {
-        // --- enter queue ---
-        let depth;
+    /// Join the device queue: the request becomes visible to the
+    /// elevator model (queue depth) without claiming a service channel
+    /// yet.  Returns the queue depth at entry — callers pass it to
+    /// [`service_begin`](Self::service_begin) so a request co-queued
+    /// in a deep burst keeps the burst's elevator gain even if the
+    /// queue has partially drained by the time it is serviced (the
+    /// NCQ batch semantics: one sweep services the co-queued set).
+    /// Balanced by [`service_end`](Self::service_end) (after service)
+    /// or [`queue_leave`](Self::queue_leave) (cancelled).
+    ///
+    /// The engine (`super::engine`) calls this at submit time so
+    /// queued-but-unserviced requests deepen the queue exactly like
+    /// blocked caller threads used to.
+    pub fn queue_enter(&self) -> u32 {
+        let mut g = self.gate.lock.lock().unwrap();
+        g.depth += 1;
+        g.depth
+    }
+
+    /// Leave the queue without having claimed a channel (cancelled /
+    /// shut-down request).
+    pub fn queue_leave(&self) {
+        let mut g = self.gate.lock.lock().unwrap();
+        g.depth -= 1;
+        drop(g);
+        self.gate.cv.notify_one();
+    }
+
+    /// Claim a service channel (blocks while all `channels` are busy).
+    /// Returns the queue depth the elevator model sees: the current
+    /// depth or `enqueue_depth` (from
+    /// [`queue_enter`](Self::queue_enter)), whichever is deeper.
+    pub fn service_begin(&self, enqueue_depth: u32) -> u32 {
+        let mut g = self.gate.lock.lock().unwrap();
+        while g.in_service >= self.model.channels.max(1) {
+            g = self.gate.cv.wait(g).unwrap();
+        }
+        g.in_service += 1;
+        g.depth.max(enqueue_depth)
+    }
+
+    /// Release the service channel and leave the queue.
+    pub fn service_end(&self) {
         {
             let mut g = self.gate.lock.lock().unwrap();
-            g.depth += 1;
-            while g.in_service >= self.model.channels.max(1) {
-                g = self.gate.cv.wait(g).unwrap();
-            }
-            g.in_service += 1;
-            depth = g.depth;
+            g.in_service -= 1;
+            g.depth -= 1;
         }
+        self.gate.cv.notify_one();
+    }
 
-        // --- latency phase (seek / command / RPC) ---
+    /// Sleep the latency phase (seek / command / RPC) for one request
+    /// at queue depth `depth`.
+    pub fn latency_phase(&self, dir: Dir, depth: u32) {
         let lat = match dir {
             Dir::Read => self.model.read_lat,
             Dir::Write => self.model.write_lat,
@@ -270,6 +302,51 @@ impl Device {
         if lat > 0.0 {
             std::thread::sleep(Duration::from_secs_f64(lat));
         }
+    }
+
+    /// Pace `bytes` through the direction's bandwidth bucket, crediting
+    /// `credit` seconds of already-elapsed real I/O, and record the
+    /// grant with the observer.  One call = one tracer grant; callers
+    /// chunk as appropriate.
+    pub fn pace(&self, dir: Dir, bytes: u64, credit: f64) {
+        if bytes == 0 {
+            return;
+        }
+        let bucket = match dir {
+            Dir::Read => &self.read_bucket,
+            Dir::Write => &self.write_bucket,
+        };
+        bucket.take_with_credit(bytes, credit);
+        self.observer.record(&self.model.name, dir, bytes);
+    }
+
+    /// Chunk size for pacing a `bytes`-long transfer: small transfers
+    /// pace in 256 KB steps (fine tracer granularity); huge probes use
+    /// bigger chunks so per-chunk lock/sleep overhead cannot distort
+    /// multi-GB/s devices.
+    pub fn pacing_chunk(&self, bytes: u64) -> u64 {
+        CHUNK.max(bytes / 64)
+    }
+
+    /// Pace a transfer of `bytes` in `dir`, invoking `io` for the real
+    /// backing-file operation once the device "positions" (after the
+    /// latency phase).  Returns the value produced by `io`.
+    ///
+    /// This is the blocking single-request path, now expressed over the
+    /// same primitives the request-level [`IoEngine`]
+    /// (`super::engine`) schedules with.
+    pub fn transfer<T>(
+        &self,
+        dir: Dir,
+        bytes: u64,
+        io: impl FnOnce() -> T,
+    ) -> T {
+        // --- enter queue + claim a channel ---
+        let enq = self.queue_enter();
+        let depth = self.service_begin(enq);
+
+        // --- latency phase (seek / command / RPC) ---
+        self.latency_phase(dir, depth);
 
         // --- real backing I/O (timed: it counts toward service) ---
         let io_t0 = Instant::now();
@@ -279,32 +356,18 @@ impl Device {
         // --- transfer phase: paced against the aggregate cap, with
         //     the real I/O time credited so total service time is
         //     max(modelled, real) ---
-        let bucket = match dir {
-            Dir::Read => &self.read_bucket,
-            Dir::Write => &self.write_bucket,
-        };
         let mut credit = io_elapsed;
         let mut remaining = bytes;
-        // Adaptive chunking: small transfers pace in 256 KB steps (fine
-        // tracer granularity); huge probes use bigger chunks so the
-        // per-chunk lock/sleep overhead cannot distort multi-GB/s
-        // devices.
-        let chunk = CHUNK.max(bytes / 64);
+        let chunk = self.pacing_chunk(bytes);
         while remaining > 0 {
             let take = remaining.min(chunk);
-            bucket.take_with_credit(take, credit);
+            self.pace(dir, take, credit);
             credit = 0.0; // credit applies once
-            self.observer.record(&self.model.name, dir, take);
             remaining -= take;
         }
 
         // --- leave ---
-        {
-            let mut g = self.gate.lock.lock().unwrap();
-            g.in_service -= 1;
-            g.depth -= 1;
-        }
-        self.gate.cv.notify_one();
+        self.service_end();
         out
     }
 

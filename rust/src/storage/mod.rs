@@ -6,11 +6,15 @@
 //! time of reads/writes vs request size and concurrency.
 
 pub mod device;
+pub mod engine;
 pub mod ior;
 pub mod page_cache;
 pub mod profiles;
 pub mod sim;
 
 pub use device::{Device, DeviceModel, Dir, IoObserver, NullObserver};
+pub use engine::{
+    ChunkWriter, EngineDeviceStats, IoCompletion, IoEngine, IoRequest, IoTicket,
+};
 pub use page_cache::PageCache;
-pub use sim::{SimPath, StorageSim};
+pub use sim::{PendingRead, PendingWrite, SimPath, StorageSim};

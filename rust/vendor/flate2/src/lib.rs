@@ -1,0 +1,567 @@
+//! Offline `flate2` API shim.
+//!
+//! The SIMG container compresses pixel payloads and decodes them with
+//! *this same crate* — the stream format is internal to the repo, so
+//! an RFC 1951 bitstream is not required, only (a) exact round-trips,
+//! (b) real compression on structured pixel data, and (c) real
+//! entropy-decoding CPU work per byte (the JPEG-Huffman-stage stand-in
+//! the paper's decode cost models).
+//!
+//! This shim therefore implements a self-contained **stride-3 delta
+//! filter + order-0 canonical Huffman codec** (PNG's Sub predictor
+//! feeding the entropy core of DEFLATE, minus LZ77).  The delta makes
+//! smooth RGB pixel fields low-entropy exactly like an image codec's
+//! predictor stage:
+//!
+//! ```text
+//! [0..4)    original length N, u32 LE  (0 = empty stream, nothing else)
+//! [4..260)  canonical code length per delta byte value (u8, 0 = unused)
+//! [260..]   bitstream: each symbol's code emitted MSB-first into
+//!           LSB-first-filled bytes (RFC 1951 bit order)
+//! ```
+//!
+//! Swapping in the real `flate2` crate (same `DeflateEncoder` /
+//! `DeflateDecoder` / `Compression` surface) only changes the byte
+//! format, which nothing outside this crate inspects.
+
+use std::io::{self, Read, Write};
+
+/// Compression level knob (accepted for API compatibility; the
+/// canonical-Huffman codec has a single operating point).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Compression(u32);
+
+impl Compression {
+    pub fn new(level: u32) -> Compression {
+        Compression(level)
+    }
+
+    pub fn fast() -> Compression {
+        Compression(1)
+    }
+
+    pub fn best() -> Compression {
+        Compression(9)
+    }
+
+    pub fn none() -> Compression {
+        Compression(0)
+    }
+
+    pub fn level(&self) -> u32 {
+        self.0
+    }
+}
+
+impl Default for Compression {
+    fn default() -> Compression {
+        Compression(6)
+    }
+}
+
+const MAX_BITS: usize = 64;
+/// Decoded-size guard against corrupt headers.
+const MAX_DECODED: u32 = 1 << 30;
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+// ---------------------------------------------------------------------------
+// Huffman table construction
+// ---------------------------------------------------------------------------
+
+/// Code length per symbol for an order-0 Huffman code over `freq`.
+fn build_lengths(freq: &[u64; 256]) -> [u8; 256] {
+    let mut lens = [0u8; 256];
+    let live: Vec<usize> = (0..256).filter(|&s| freq[s] > 0).collect();
+    match live.len() {
+        0 => return lens,
+        1 => {
+            lens[live[0]] = 1;
+            return lens;
+        }
+        _ => {}
+    }
+
+    // Node arena: leaves first, then internal nodes.
+    struct Node {
+        freq: u64,
+        left: usize,
+        right: usize, // usize::MAX marks a leaf
+        parent: usize,
+    }
+    let mut nodes: Vec<Node> = live
+        .iter()
+        .map(|&s| Node {
+            freq: freq[s],
+            left: usize::MAX,
+            right: usize::MAX,
+            parent: usize::MAX,
+        })
+        .collect();
+
+    // O(n^2) two-smallest merge: 256 symbols max, negligible cost.
+    let mut active: Vec<usize> = (0..nodes.len()).collect();
+    while active.len() > 1 {
+        let mut a = 0usize; // index into `active` of smallest
+        let mut b = 1usize; // second smallest
+        if nodes[active[b]].freq < nodes[active[a]].freq {
+            std::mem::swap(&mut a, &mut b);
+        }
+        for i in 2..active.len() {
+            let f = nodes[active[i]].freq;
+            if f < nodes[active[a]].freq {
+                b = a;
+                a = i;
+            } else if f < nodes[active[b]].freq {
+                b = i;
+            }
+        }
+        let (ia, ib) = (active[a], active[b]);
+        let merged = Node {
+            freq: nodes[ia].freq + nodes[ib].freq,
+            left: ia,
+            right: ib,
+            parent: usize::MAX,
+        };
+        let mi = nodes.len();
+        nodes.push(merged);
+        nodes[ia].parent = mi;
+        nodes[ib].parent = mi;
+        // Remove the two (larger active-index first) and add merged.
+        let (hi, lo) = if a > b { (a, b) } else { (b, a) };
+        active.swap_remove(hi);
+        active.swap_remove(lo);
+        active.push(mi);
+    }
+
+    // Depth of each leaf = walk to root.
+    for (leaf, &sym) in live.iter().enumerate() {
+        let mut depth = 0u8;
+        let mut n = leaf;
+        while nodes[n].parent != usize::MAX {
+            n = nodes[n].parent;
+            depth += 1;
+        }
+        lens[sym] = depth;
+    }
+    lens
+}
+
+/// RFC 1951 canonical code assignment from lengths.
+fn assign_codes(lens: &[u8; 256]) -> ([u64; 256], [u32; MAX_BITS + 1]) {
+    let mut bl_count = [0u32; MAX_BITS + 1];
+    for &l in lens.iter() {
+        bl_count[l as usize] += 1;
+    }
+    bl_count[0] = 0;
+    let mut next_code = [0u64; MAX_BITS + 2];
+    let mut code = 0u64;
+    for bits in 1..=MAX_BITS {
+        code = (code + bl_count[bits - 1] as u64) << 1;
+        next_code[bits] = code;
+    }
+    let mut codes = [0u64; 256];
+    for sym in 0..256 {
+        let l = lens[sym] as usize;
+        if l > 0 {
+            codes[sym] = next_code[l];
+            next_code[l] += 1;
+        }
+    }
+    (codes, bl_count)
+}
+
+/// Reject oversubscribed (garbage) length tables.
+fn check_kraft(bl_count: &[u32; MAX_BITS + 1]) -> io::Result<()> {
+    let mut left: i128 = 1;
+    for &count in bl_count.iter().skip(1) {
+        left <<= 1;
+        left -= count as i128;
+        if left < 0 {
+            return Err(bad("oversubscribed code length table"));
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Bit I/O (RFC 1951 order: bytes filled LSB-first)
+// ---------------------------------------------------------------------------
+
+struct BitWriter {
+    out: Vec<u8>,
+    cur: u8,
+    nbits: u8,
+}
+
+impl BitWriter {
+    fn new(out: Vec<u8>) -> BitWriter {
+        BitWriter { out, cur: 0, nbits: 0 }
+    }
+
+    fn push_bit(&mut self, bit: u8) {
+        self.cur |= bit << self.nbits;
+        self.nbits += 1;
+        if self.nbits == 8 {
+            self.out.push(self.cur);
+            self.cur = 0;
+            self.nbits = 0;
+        }
+    }
+
+    /// Emit `len` bits of `code`, MSB first.
+    fn push_code(&mut self, code: u64, len: u8) {
+        for i in (0..len).rev() {
+            self.push_bit(((code >> i) & 1) as u8);
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.out.push(self.cur);
+        }
+        self.out
+    }
+}
+
+struct BitReader<'a> {
+    data: &'a [u8],
+    byte: usize,
+    bit: u8,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(data: &'a [u8]) -> BitReader<'a> {
+        BitReader { data, byte: 0, bit: 0 }
+    }
+
+    fn read_bit(&mut self) -> io::Result<u64> {
+        let b = *self
+            .data
+            .get(self.byte)
+            .ok_or_else(|| bad("bitstream exhausted"))?;
+        let v = (b >> self.bit) & 1;
+        self.bit += 1;
+        if self.bit == 8 {
+            self.bit = 0;
+            self.byte += 1;
+        }
+        Ok(v as u64)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Whole-buffer codec
+// ---------------------------------------------------------------------------
+
+/// RGB channel stride for the delta predictor (SIMG payloads are
+/// interleaved 3-channel pixels; for other data the transform is still
+/// a bijection, merely less compressive).
+const DELTA_STRIDE: usize = 3;
+
+fn delta_filter(input: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(input.len());
+    for (i, &b) in input.iter().enumerate() {
+        if i < DELTA_STRIDE {
+            out.push(b);
+        } else {
+            out.push(b.wrapping_sub(input[i - DELTA_STRIDE]));
+        }
+    }
+    out
+}
+
+fn delta_unfilter(data: &mut [u8]) {
+    for i in DELTA_STRIDE..data.len() {
+        data[i] = data[i].wrapping_add(data[i - DELTA_STRIDE]);
+    }
+}
+
+fn compress(input: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(input.len() / 2 + 261);
+    out.extend_from_slice(&(input.len() as u32).to_le_bytes());
+    if input.is_empty() {
+        return out;
+    }
+    let deltas = delta_filter(input);
+    let mut freq = [0u64; 256];
+    for &b in &deltas {
+        freq[b as usize] += 1;
+    }
+    let lens = build_lengths(&freq);
+    let (codes, _) = assign_codes(&lens);
+    out.extend_from_slice(&lens);
+    let mut bw = BitWriter::new(out);
+    for &b in &deltas {
+        bw.push_code(codes[b as usize], lens[b as usize]);
+    }
+    bw.finish()
+}
+
+fn decompress(input: &[u8]) -> io::Result<Vec<u8>> {
+    if input.len() < 4 {
+        return Err(bad("truncated stream header"));
+    }
+    let n = u32::from_le_bytes([input[0], input[1], input[2], input[3]]);
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    if n > MAX_DECODED {
+        return Err(bad("implausible decoded length"));
+    }
+    if input.len() < 4 + 256 {
+        return Err(bad("truncated code length table"));
+    }
+    let mut lens = [0u8; 256];
+    lens.copy_from_slice(&input[4..260]);
+    // Symbols sorted by (length, value) — canonical decode order.
+    let mut symbols: Vec<u8> = Vec::new();
+    let mut bl_count = [0u32; MAX_BITS + 1];
+    for &l in lens.iter() {
+        if l as usize > MAX_BITS {
+            return Err(bad("code length out of range"));
+        }
+        if l > 0 {
+            bl_count[l as usize] += 1;
+        }
+    }
+    check_kraft(&bl_count)?;
+    for want in 1..=MAX_BITS {
+        for (sym, &l) in lens.iter().enumerate() {
+            if l as usize == want {
+                symbols.push(sym as u8);
+            }
+        }
+    }
+    if symbols.is_empty() {
+        return Err(bad("no symbols in code table"));
+    }
+
+    // puff-style canonical decoding.
+    let mut br = BitReader::new(&input[260..]);
+    let mut out = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        let mut code: u64 = 0;
+        let mut first: u64 = 0;
+        let mut index: usize = 0;
+        let mut matched = false;
+        for len in 1..=MAX_BITS {
+            code |= br.read_bit()?;
+            let count = bl_count[len] as u64;
+            if code < first + count {
+                out.push(symbols[index + (code - first) as usize]);
+                matched = true;
+                break;
+            }
+            index += count as usize;
+            first = (first + count) << 1;
+            code <<= 1;
+        }
+        if !matched {
+            return Err(bad("invalid code in bitstream"));
+        }
+    }
+    delta_unfilter(&mut out);
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// flate2-compatible surface
+// ---------------------------------------------------------------------------
+
+pub mod write {
+    use super::*;
+
+    /// Buffering encoder: bytes written are compressed on `finish()`,
+    /// and the compressed stream is written to the inner writer.
+    pub struct DeflateEncoder<W: Write> {
+        inner: W,
+        buf: Vec<u8>,
+    }
+
+    impl<W: Write> DeflateEncoder<W> {
+        pub fn new(inner: W, _level: Compression) -> DeflateEncoder<W> {
+            DeflateEncoder { inner, buf: Vec::new() }
+        }
+
+        /// Compress, flush to the inner writer, and return it.
+        pub fn finish(mut self) -> io::Result<W> {
+            let packed = compress(&self.buf);
+            self.inner.write_all(&packed)?;
+            self.inner.flush()?;
+            Ok(self.inner)
+        }
+    }
+
+    impl<W: Write> Write for DeflateEncoder<W> {
+        fn write(&mut self, data: &[u8]) -> io::Result<usize> {
+            self.buf.extend_from_slice(data);
+            Ok(data.len())
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+}
+
+pub mod read {
+    use super::*;
+
+    /// Decoder over any `Read`: decompresses lazily on first read.
+    pub struct DeflateDecoder<R: Read> {
+        inner: Option<R>,
+        decoded: Vec<u8>,
+        pos: usize,
+    }
+
+    impl<R: Read> DeflateDecoder<R> {
+        pub fn new(inner: R) -> DeflateDecoder<R> {
+            DeflateDecoder { inner: Some(inner), decoded: Vec::new(), pos: 0 }
+        }
+
+        fn ensure_decoded(&mut self) -> io::Result<()> {
+            if let Some(mut r) = self.inner.take() {
+                let mut raw = Vec::new();
+                r.read_to_end(&mut raw)?;
+                self.decoded = decompress(&raw)?;
+                self.pos = 0;
+            }
+            Ok(())
+        }
+    }
+
+    impl<R: Read> Read for DeflateDecoder<R> {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            self.ensure_decoded()?;
+            let left = &self.decoded[self.pos..];
+            let n = left.len().min(buf.len());
+            buf[..n].copy_from_slice(&left[..n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::read::DeflateDecoder;
+    use super::write::DeflateEncoder;
+    use super::*;
+
+    fn roundtrip(data: &[u8]) -> Vec<u8> {
+        let mut enc = DeflateEncoder::new(Vec::new(), Compression::fast());
+        enc.write_all(data).unwrap();
+        let packed = enc.finish().unwrap();
+        let mut out = Vec::new();
+        DeflateDecoder::new(&packed[..]).read_to_end(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn roundtrips_exactly() {
+        for data in [
+            &b""[..],
+            &b"a"[..],
+            &b"aaaaaaaaaab"[..],
+            &[0u8, 255, 127, 128, 1, 2, 3, 3, 3][..],
+        ] {
+            assert_eq!(roundtrip(data), data);
+        }
+        // Larger structured buffer.
+        let big: Vec<u8> = (0..100_000u32).map(|i| (i % 97) as u8).collect();
+        assert_eq!(roundtrip(&big), big);
+        // Pseudo-random buffer (all 256 symbols).
+        let mut x = 0x12345678u32;
+        let rnd: Vec<u8> = (0..50_000)
+            .map(|_| {
+                x = x.wrapping_mul(1664525).wrapping_add(1013904223);
+                (x >> 24) as u8
+            })
+            .collect();
+        assert_eq!(roundtrip(&rnd), rnd);
+    }
+
+    #[test]
+    fn compresses_smooth_pixel_fields() {
+        // Gradient-like interleaved RGB (what SIMG payloads look
+        // like): the delta filter must push it well below raw size.
+        let (w, h) = (96usize, 96usize);
+        let mut pixels = Vec::with_capacity(w * h * 3);
+        for y in 0..h {
+            for x in 0..w {
+                for c in 0..3usize {
+                    pixels.push(((x + y * 2 + c * 37) % 256) as u8);
+                }
+            }
+        }
+        let mut enc = DeflateEncoder::new(Vec::new(), Compression::fast());
+        enc.write_all(&pixels).unwrap();
+        let packed = enc.finish().unwrap();
+        assert!(
+            packed.len() < pixels.len() / 2,
+            "gradient not compressed: {} vs {}",
+            packed.len(),
+            pixels.len()
+        );
+        let mut out = Vec::new();
+        DeflateDecoder::new(&packed[..]).read_to_end(&mut out).unwrap();
+        assert_eq!(out, pixels);
+    }
+
+    #[test]
+    fn compresses_skewed_data() {
+        // Low-entropy input must shrink well below raw size.
+        let data: Vec<u8> =
+            (0..30_000).map(|i| if i % 10 == 0 { 1u8 } else { 0u8 }).collect();
+        let mut enc = DeflateEncoder::new(Vec::new(), Compression::fast());
+        enc.write_all(&data).unwrap();
+        let packed = enc.finish().unwrap();
+        assert!(
+            packed.len() < data.len() / 2,
+            "no compression: {} vs {}",
+            packed.len(),
+            data.len()
+        );
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(decompress(&[1, 2]).is_err());
+        // Claims 100 bytes but provides an all-zero length table.
+        let mut junk = vec![0u8; 300];
+        junk[0] = 100;
+        assert!(decompress(&junk).is_err());
+        // Oversubscribed table.
+        let mut over = vec![0u8; 400];
+        over[0] = 10;
+        for slot in over.iter_mut().take(260).skip(4) {
+            *slot = 1; // 256 codes of length 1
+        }
+        assert!(decompress(&over).is_err());
+    }
+
+    #[test]
+    fn truncated_bitstream_errors() {
+        let data = vec![7u8; 1000];
+        let mut enc = DeflateEncoder::new(Vec::new(), Compression::fast());
+        enc.write_all(&data).unwrap();
+        let packed = enc.finish().unwrap();
+        let cut = &packed[..packed.len() - 1];
+        // Either fails outright or yields short output — never panics.
+        let mut out = Vec::new();
+        let res = DeflateDecoder::new(cut).read_to_end(&mut out);
+        assert!(res.is_err() || out.len() < data.len());
+    }
+
+    #[test]
+    fn compression_levels_accepted() {
+        assert_eq!(Compression::fast().level(), 1);
+        assert_eq!(Compression::best().level(), 9);
+        assert_eq!(Compression::default().level(), 6);
+        assert_eq!(Compression::new(3).level(), 3);
+        assert_eq!(Compression::none().level(), 0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Minimal `libc` surface for the offline build: only the symbols the
+//! storage sim needs (`syncfs`, used after checkpoint saves, §III-C).
+//! Links directly against the system C library.
+
+#![allow(non_camel_case_types)]
+
+pub type c_int = i32;
+
+extern "C" {
+    /// Flush the filesystem containing the file referred to by `fd`.
+    pub fn syncfs(fd: c_int) -> c_int;
+}

@@ -1,0 +1,237 @@
+//! The `xla` binding surface `dlio::runtime` compiles against.
+//!
+//! Two halves:
+//!
+//! * **Host-side literals** ([`Literal`], [`ElementType`]) are fully
+//!   functional — the marshalling layer and its tests run everywhere.
+//! * **Device paths** ([`PjRtClient`], [`PjRtLoadedExecutable`],
+//!   [`HloModuleProto`]) are stubs that return a clear error on hosts
+//!   without the vendored XLA/PJRT toolchain.  Every caller already
+//!   handles runtime-unavailable gracefully (the e2e suite skips when
+//!   artifacts are missing; benches print "skipping PJRT rows"), so
+//!   the offline build runs the full non-PJRT test suite.
+//!
+//! Swapping this crate for the real PJRT binding (same API) re-enables
+//! kernel execution without touching `dlio` itself.
+
+use std::fmt;
+use std::path::Path;
+
+/// Binding-level error (Display-able; `dlio` wraps it in anyhow).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT runtime not available in this build \
+         (offline xla stub; vendor the XLA toolchain to enable)"
+    ))
+}
+
+/// Element dtypes used by the dlio artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    U8,
+}
+
+impl ElementType {
+    fn byte_width(self) -> usize {
+        match self {
+            ElementType::F32 => 4,
+            ElementType::U8 => 1,
+        }
+    }
+}
+
+/// Element types a [`Literal`] can be read back as.
+pub trait NativeType: Sized {
+    const TY: ElementType;
+    fn read_le(bytes: &[u8]) -> Vec<Self>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn read_le(bytes: &[u8]) -> Vec<f32> {
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+}
+
+impl NativeType for u8 {
+    const TY: ElementType = ElementType::U8;
+    fn read_le(bytes: &[u8]) -> Vec<u8> {
+        bytes.to_vec()
+    }
+}
+
+/// A host-side tensor: dtype + dims + packed little-endian data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal, Error> {
+        let want = dims.iter().product::<usize>() * ty.byte_width();
+        if data.len() != want {
+            return Err(Error(format!(
+                "literal data {} bytes does not match shape {dims:?} \
+                 ({want} bytes)",
+                data.len()
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), data: data.to_vec() })
+    }
+
+    /// Rank-0 f32 literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal {
+            ty: ElementType::F32,
+            dims: Vec::new(),
+            data: v.to_le_bytes().to_vec(),
+        }
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Read the packed data back as `T` values.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        if self.ty != T::TY {
+            return Err(Error(format!(
+                "literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        Ok(T::read_le(&self.data))
+    }
+
+    /// Decompose a tuple literal (only produced by executions, which
+    /// the stub cannot perform).
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable("to_tuple"))
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &Path) -> Result<HloModuleProto, Error> {
+        Err(unavailable(&format!("parse {}", path.display())))
+    }
+}
+
+/// An XLA computation handle (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-resident buffer (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("to_literal_sync"))
+    }
+}
+
+/// PJRT client (stub: construction reports the missing toolchain).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(
+        &self,
+        _computation: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("compile"))
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("execute"))
+    }
+
+    pub fn execute_b<T>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("execute_b"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let vals = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> =
+            vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let l = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[3],
+            &bytes,
+        )
+        .unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vals);
+        assert_eq!(l.dims(), &[3]);
+    }
+
+    #[test]
+    fn literal_rejects_shape_mismatch() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2],
+            &[0u8; 4],
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn scalar_reads_back() {
+        assert_eq!(Literal::scalar(12.5).to_vec::<f32>().unwrap(), vec![12.5]);
+    }
+
+    #[test]
+    fn device_paths_report_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file(Path::new("/x")).is_err());
+    }
+}
