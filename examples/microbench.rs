@@ -53,6 +53,7 @@ fn main() -> anyhow::Result<()> {
                     preprocess,
                     out_size: 64,
                     readahead: 0,
+                    shards: 1,
                 };
                 let r = microbench::run(
                     Arc::clone(&sim), &rt, &manifest, &cfg, 7)?;

@@ -94,6 +94,7 @@ fn main() -> anyhow::Result<()> {
             preprocess: false,
             out_size: 64,
             readahead: 0,
+            shards: 1,
         };
         let mut t = Table::new(&["epoch", "MB/s", "cache hits"]);
         for epoch in ["cold", "warm"] {

@@ -9,17 +9,29 @@
 //! 2. **Bounded drain memory** — a burst-buffer style cross-device
 //!    copy streams chunks through a bounded window; peak buffered
 //!    bytes are a function of the chunk size, not the file size.
+//! 3. **Class isolation (QoS)** — with a saturating checkpoint burst
+//!    on the HDD profile, ingest p99 queue latency under the DRR
+//!    scheduler is <= 0.5x the single-FIFO baseline while checkpoint
+//!    completion degrades <= 20% (§V's interference, removed).
+//! 4. **Sharded read scaling** — 4 reader shards reach >= 2x the
+//!    single-shard read bandwidth on a parallel device (Fig. 4/8's
+//!    2.3x-7.8x thread scaling, reproduced without threads).
 //!
 //! No PJRT artifacts needed.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use dlio::checkpoint::Saver;
+use dlio::data::manifest::Sample;
 use dlio::metrics::{median, Table};
 use dlio::model::ModelState;
+use dlio::pipeline::{sharded_reader, Dataset};
 use dlio::runtime::meta::{ParamSpec, ProfileMeta};
 use dlio::storage::engine::{DEFAULT_CHUNK, STREAM_WINDOW};
-use dlio::storage::{profiles, SimPath, StorageSim};
+use dlio::storage::{
+    profiles, DeviceModel, IoClass, IoRequest, QosConfig, SimPath, StorageSim,
+};
 
 fn small_profile() -> ProfileMeta {
     // ~26 KB data payload: seek-dominated on an HDD, which is the
@@ -159,6 +171,139 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     print!("{}", t.render());
+
+    // ---- 4. class isolation: ingest vs checkpoint on the HDD ----
+    // Mixed load, same in both runs: 16 x 2 MB checkpoint writes
+    // submitted first (a ~90 ms modelled backlog at 4x scale), then
+    // 10 x 32 KB ingest reads.  FIFO: the reads wait out the whole
+    // backlog.  DRR: they are served after the in-flight write.
+    let qos_run = |qos: QosConfig, tag: &str| -> anyhow::Result<(f64, f64)> {
+        let sim = Arc::new(StorageSim::cold_with_qos(
+            workdir(&format!("qos-{tag}")),
+            vec![profiles::blackdog_hdd(4.0)],
+            qos,
+        )?);
+        let eng = sim.engine();
+        let t0 = Instant::now();
+        let writes: Vec<_> = (0..16)
+            .map(|_| {
+                eng.submit(IoRequest::ProbeWrite {
+                    device: "hdd".into(),
+                    bytes: 2_000_000,
+                })
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let reads: Vec<_> = (0..10)
+            .map(|_| {
+                eng.submit(IoRequest::ProbeRead {
+                    device: "hdd".into(),
+                    bytes: 32_768,
+                })
+            })
+            .collect::<anyhow::Result<_>>()?;
+        for t in writes {
+            t.wait()?;
+        }
+        let ckpt_secs = t0.elapsed().as_secs_f64();
+        for t in reads {
+            t.wait()?;
+        }
+        let stats = eng.stats();
+        let s = stats
+            .iter()
+            .find(|s| s.device == "hdd")
+            .expect("hdd stats");
+        Ok((s.class(IoClass::Ingest).p99_queue_secs(), ckpt_secs))
+    };
+    // Best-of-two per mode: a single noisy-neighbor stall on a shared
+    // CI runner cannot fake a scheduling regression.
+    let best = |qos: &QosConfig, tag: &str| -> anyhow::Result<(f64, f64)> {
+        let (p99_a, ck_a) = qos_run(qos.clone(), &format!("{tag}-a"))?;
+        let (p99_b, ck_b) = qos_run(qos.clone(), &format!("{tag}-b"))?;
+        Ok((p99_a.min(p99_b), ck_a.min(ck_b)))
+    };
+    let (fifo_p99, fifo_ckpt) = best(&QosConfig::fifo(), "fifo")?;
+    let (drr_p99, drr_ckpt) = best(&QosConfig::default(), "drr")?;
+
+    let mut t = Table::new(&[
+        "scheduler", "ingest p99 queue ms", "checkpoint makespan ms",
+    ]);
+    t.row(&["single FIFO (baseline)".into(),
+            format!("{:.1}", fifo_p99 * 1e3),
+            format!("{:.1}", fifo_ckpt * 1e3)]);
+    t.row(&["weighted DRR (QoS)".into(),
+            format!("{:.1}", drr_p99 * 1e3),
+            format!("{:.1}", drr_ckpt * 1e3)]);
+    print!("{}", t.render());
+    println!("target: ingest p99 <= 0.5x FIFO, checkpoint makespan <= 1.2x");
+    assert!(
+        drr_p99 <= 0.5 * fifo_p99,
+        "ingest p99 {:.1} ms !<= 0.5 * FIFO {:.1} ms",
+        drr_p99 * 1e3,
+        fifo_p99 * 1e3
+    );
+    assert!(
+        drr_ckpt <= 1.2 * fifo_ckpt,
+        "checkpoint makespan {:.1} ms degraded past 20% vs {:.1} ms",
+        drr_ckpt * 1e3,
+        fifo_ckpt * 1e3
+    );
+
+    // ---- 5. sharded reader scaling ----
+    // Latency-bound parallel device (4 ms per read, 32 channels): a
+    // single shard's window of 4 caps concurrency at 4; four shards
+    // quadruple it.  Modelled speedup ~4x; the gate is 2x.
+    let ost = DeviceModel {
+        name: "ost".into(),
+        read_bw: 2e9,
+        write_bw: 2e9,
+        read_lat: 4.0e-3,
+        write_lat: 0.1e-3,
+        channels: 32,
+        elevator: vec![(1, 1.0)],
+        time_scale: 1.0,
+    };
+    const SHARD_FILES: usize = 144;
+    let sim = Arc::new(StorageSim::cold(workdir("shard"), vec![ost])?);
+    let samples: Vec<Sample> = (0..SHARD_FILES)
+        .map(|i| {
+            let p = SimPath::new("ost", format!("f{i}.bin"));
+            sim.write(&p, &vec![(i % 251) as u8; 16 * 1024]).unwrap();
+            Sample { path: p, label: i as u32 }
+        })
+        .collect();
+    let shard_run = |shards: usize| -> anyhow::Result<f64> {
+        sim.drop_caches();
+        let t0 = Instant::now();
+        let mut ds =
+            sharded_reader(samples.clone(), Arc::clone(&sim), shards, 4);
+        let mut n = 0usize;
+        while let Some(item) = ds.next() {
+            let ls = item?;
+            assert_eq!(ls.bytes.len(), 16 * 1024);
+            n += 1;
+        }
+        assert_eq!(n, SHARD_FILES, "sharded reader dropped samples");
+        Ok(t0.elapsed().as_secs_f64())
+    };
+    // Best-of-two per config: a CI scheduler stall in one short run
+    // cannot sink the modelled ~4x ratio below the 2x gate.
+    let t1 = shard_run(1)?.min(shard_run(1)?);
+    let t4 = shard_run(4)?.min(shard_run(4)?);
+    let speedup = t1 / t4;
+
+    let mut t = Table::new(&["reader", "wall ms", "speedup"]);
+    t.row(&["1 shard x window 4".into(),
+            format!("{:.1}", t1 * 1e3), "1.00x".into()]);
+    t.row(&["4 shards x window 4".into(),
+            format!("{:.1}", t4 * 1e3), format!("{speedup:.2}x")]);
+    print!("{}", t.render());
+    println!("target: >= 2x single-shard read bandwidth with 4 shards");
+    assert!(
+        speedup >= 2.0,
+        "sharded speedup {speedup:.2}x below the 2x target"
+    );
+
     println!("\nengine acceptance: PASS");
     Ok(())
 }

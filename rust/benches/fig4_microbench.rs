@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
                 preprocess: true,
                 out_size: 64,
                 readahead: 0,
+                shards: 1,
             };
             env.sim.drop_caches();
             let r = microbench::run(

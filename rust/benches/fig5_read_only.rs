@@ -44,6 +44,7 @@ fn main() -> anyhow::Result<()> {
                 preprocess: false,
                 out_size: 64,
                 readahead: 0,
+                shards: 1,
             };
             env.sim.drop_caches();
             let r = microbench::run(

@@ -211,7 +211,9 @@ fn drain_loop(
         let mut ok = true;
         for f in job.files() {
             let dst = crate::storage::SimPath::new(slow.clone(), f.rel.clone());
-            if let Err(e) = sim.copy(&f, &dst) {
+            if let Err(e) =
+                sim.copy_class(&f, &dst, crate::storage::IoClass::Drain)
+            {
                 eprintln!("[burst-buffer] drain {f}: {e:#}");
                 errors.fetch_add(1, Ordering::SeqCst);
                 ok = false;

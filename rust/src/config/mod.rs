@@ -6,7 +6,7 @@ use std::collections::HashMap;
 
 use anyhow::{anyhow, Result};
 
-use crate::storage::{profiles, DeviceModel};
+use crate::storage::{profiles, DeviceModel, QosConfig};
 
 /// Testbed description: which simulated devices exist and how fast the
 /// simulation runs relative to the modelled hardware.
@@ -18,6 +18,9 @@ pub struct Testbed {
     pub cache_bytes: u64,
     /// Working directory for backing files.
     pub workdir: String,
+    /// Engine scheduler: weighted per-class DRR by default;
+    /// `QosConfig::fifo()` restores the single-queue baseline.
+    pub qos: QosConfig,
 }
 
 impl Testbed {
@@ -34,6 +37,7 @@ impl Testbed {
             ],
             cache_bytes: 0,
             workdir: default_workdir(),
+            qos: QosConfig::default(),
         }
     }
 }
@@ -80,8 +84,32 @@ pub struct MicrobenchConfig {
     /// Model input size the resize targets.
     pub out_size: usize,
     /// File reads kept in flight on the I/O engine ahead of the
-    /// consumer (0 = classic blocking reads inside the map workers).
+    /// consumer, per shard (0 = classic blocking reads inside the map
+    /// workers).
     pub readahead: usize,
+    /// Reader shards the file list is partitioned across (each with
+    /// its own `readahead` window; Fig. 4/8's parallelism knob).
+    pub shards: usize,
+}
+
+/// Per-shard inflight window used when shards are requested without
+/// an explicit readahead (sharding only exists on the engine-backed
+/// source, so asking for shards implies it).
+pub const DEFAULT_SHARD_WINDOW: usize = 4;
+
+impl MicrobenchConfig {
+    /// Per-shard engine read window actually in force: `shards > 1`
+    /// with `readahead == 0` gets [`DEFAULT_SHARD_WINDOW`] instead of
+    /// silently falling back to the blocking path.  Used by both the
+    /// runner and the CLI's result line, so logged configurations
+    /// always match what ran.
+    pub fn effective_readahead(&self) -> usize {
+        if self.readahead == 0 && self.shards.max(1) > 1 {
+            DEFAULT_SHARD_WINDOW
+        } else {
+            self.readahead
+        }
+    }
 }
 
 impl Default for MicrobenchConfig {
@@ -94,6 +122,7 @@ impl Default for MicrobenchConfig {
             preprocess: true,
             out_size: 64,
             readahead: 0,
+            shards: 1,
         }
     }
 }

@@ -14,11 +14,12 @@ pub fn make_sim(testbed: &Testbed, observer: Option<Arc<dyn IoObserver>>)
     -> Result<Arc<StorageSim>>
 {
     let obs = observer.unwrap_or_else(|| Arc::new(NullObserver));
-    Ok(Arc::new(StorageSim::new(
+    Ok(Arc::new(StorageSim::with_qos(
         testbed.workdir.clone(),
         testbed.devices.clone(),
         testbed.cache_bytes,
         obs,
+        testbed.qos.clone(),
     )?))
 }
 
@@ -84,6 +85,7 @@ mod tests {
             }],
             cache_bytes: 0,
             workdir: dir.to_string_lossy().into_owned(),
+            qos: crate::storage::QosConfig::default(),
         }
     }
 

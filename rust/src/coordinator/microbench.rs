@@ -10,9 +10,11 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::config::MicrobenchConfig;
-use crate::data::manifest::Manifest;
+use crate::data::manifest::{Manifest, Sample};
 use crate::metrics::Timer;
-use crate::pipeline::{from_manifest, read_ahead, Dataset, DatasetExt};
+use crate::pipeline::{
+    collect, from_manifest, sharded_reader, Dataset, DatasetExt,
+};
 use crate::runtime::Runtime;
 use crate::storage::StorageSim;
 use crate::util::Rng;
@@ -57,19 +59,32 @@ pub fn run(
     let mut dropped = 0u64;
     let timer;
 
-    if cfg.preprocess && cfg.readahead > 0 {
-        // Engine readahead: file reads queue on the device engine
-        // ahead of the decode workers (no thread parked per read).
+    // Shuffled sample list for the engine-backed sharded source (the
+    // shuffle buffer covers the whole list, so materializing it first
+    // is semantics-preserving).
+    let shuffled = |seed: u64| -> Result<Vec<Sample>> {
+        collect(from_manifest(&m).shuffle(shuffle_buf, Rng::new(seed)))
+    };
+    let shards = cfg.shards.max(1);
+    // `--shards N` alone implies the engine-backed source with the
+    // default per-shard window (never the blocking path silently).
+    let readahead = cfg.effective_readahead();
+
+    if cfg.preprocess && readahead > 0 {
+        // Engine sharded readahead: file reads queue on the device
+        // engine across `shards` reader shards ahead of the decode
+        // workers (no thread parked per read).
         let f = preprocess_loaded_fn(rt, m.src_size as usize, cfg.out_size)?;
-        let src = read_ahead(
-            from_manifest(&m).shuffle(shuffle_buf, Rng::new(seed)),
+        let src = sharded_reader(
+            shuffled(seed)?,
             Arc::clone(&sim),
-            cfg.readahead,
+            shards,
+            readahead,
         );
-        // The decode window mirrors the read window so loaded bytes
-        // keep flowing while the consumer drains a batch.
+        // The decode window mirrors the total read window so loaded
+        // bytes keep flowing while the consumer drains a batch.
         let ds = src
-            .parallel_map_ahead(cfg.threads, cfg.readahead, f)
+            .parallel_map_ahead(cfg.threads, readahead * shards, f)
             .ignore_errors();
         let counter = ds.dropped_counter();
         let mut ds = ds.batch(cfg.batch, false).take(cfg.iterations);
@@ -100,11 +115,12 @@ pub fn run(
             bytes += batch.iter().map(|p| p.bytes_read).sum::<u64>();
         }
         dropped += counter.load(std::sync::atomic::Ordering::Relaxed);
-    } else if cfg.readahead > 0 {
-        let src = read_ahead(
-            from_manifest(&m).shuffle(shuffle_buf, Rng::new(seed)),
+    } else if readahead > 0 {
+        let src = sharded_reader(
+            shuffled(seed)?,
             Arc::clone(&sim),
-            cfg.readahead,
+            shards,
+            readahead,
         );
         let ds = src.ignore_errors();
         let counter = ds.dropped_counter();

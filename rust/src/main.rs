@@ -7,7 +7,7 @@
 //! dlio gen-corpus  [--corpus imagenet|caltech101] [--files N] [--device D]
 //! dlio microbench  [--device D] [--threads N] [--batch 64]
 //!                  [--iterations N] [--no-preprocess] [--readahead N]
-//!                  [--engine-stats]
+//!                  [--shards N] [--engine-stats]
 //! dlio train       [--device D] [--threads N] [--batch 64] [--prefetch 1]
 //!                  [--iterations N] [--profile micro|mini]
 //! dlio ckpt-study  [--target none|hdd|ssd|optane|bb:optane:hdd]
@@ -75,6 +75,8 @@ dlio — Characterizing Deep-Learning I/O Workloads (PDSW-DISCS'18) repro
 
 Common options: --time-scale F (default $DLIO_TIME_SCALE or 8),
 --device hdd|ssd|optane|lustre, --threads N, --batch N.
+Engine QoS: --fifo (single-queue baseline), --preempt-chunks N,
+--engine-stats (per-device, per-class queue/latency table).
 Artifacts: run `make artifacts` first or set DLIO_ARTIFACTS.
 ";
 
@@ -88,7 +90,63 @@ fn testbed(args: &Args) -> Result<Testbed> {
         tb.workdir = dir.to_string();
     }
     tb.cache_bytes = args.get_usize("cache-mb", 0)? as u64 * 1_000_000;
+    // Engine QoS: `--fifo` restores the single-queue baseline (for
+    // A/B-ing the class scheduler), `--preempt-chunks N` tunes how
+    // often streams yield to higher classes (0 = never).
+    if args.has_flag("fifo") {
+        tb.qos = dlio::storage::QosConfig::fifo();
+    }
+    if let Some(n) = args.get("preempt-chunks") {
+        tb.qos.preempt_chunks =
+            n.parse().map_err(|e| anyhow!("--preempt-chunks: {e}"))?;
+    }
     Ok(tb)
+}
+
+/// Per-device, per-class engine stats table — the Fig. 4/8-style
+/// queue-depth/latency surface, straight from the engine.
+fn print_engine_stats(sim: &dlio::storage::StorageSim) {
+    let mut t = Table::new(&[
+        "Device", "class", "reqs", "err", "max qdepth",
+        "mean queue ms", "p99 queue ms", "mean svc ms",
+        "MB read", "MB written",
+    ]);
+    for s in sim.engine().stats() {
+        if s.completed == 0 {
+            continue;
+        }
+        for class in dlio::storage::IoClass::ALL {
+            let c = s.class(class);
+            if c.submitted == 0 {
+                continue;
+            }
+            t.row(&[
+                s.device.clone(),
+                class.name().into(),
+                c.completed.to_string(),
+                c.errors.to_string(),
+                c.max_queue_depth.to_string(),
+                format!("{:.3}", c.mean_queue_secs() * 1e3),
+                format!("{:.3}", c.p99_queue_secs() * 1e3),
+                format!("{:.3}", c.mean_service_secs() * 1e3),
+                format!("{:.1}", c.bytes_read as f64 / 1e6),
+                format!("{:.1}", c.bytes_written as f64 / 1e6),
+            ]);
+        }
+        t.row(&[
+            s.device.clone(),
+            "total".into(),
+            s.completed.to_string(),
+            s.errors.to_string(),
+            s.max_queue_depth.to_string(),
+            format!("{:.3}", s.mean_queue_secs() * 1e3),
+            "-".into(),
+            format!("{:.3}", s.mean_service_secs() * 1e3),
+            format!("{:.1}", s.bytes_read as f64 / 1e6),
+            format!("{:.1}", s.bytes_written as f64 / 1e6),
+        ]);
+    }
+    print!("{}", t.render());
 }
 
 fn corpus_spec(args: &Args) -> Result<CorpusSpec> {
@@ -160,34 +218,20 @@ fn cmd_microbench(args: &Args) -> Result<()> {
         preprocess: !args.has_flag("no-preprocess"),
         out_size: args.get_usize("out-size", 64)?,
         readahead: args.get_usize("readahead", 0)?,
+        shards: args.get_usize("shards", 1)?,
     };
     let r = microbench::run(Arc::clone(&sim), &rt, &manifest, &cfg, 7)?;
+    // Print the readahead actually in force (--shards alone implies
+    // the default per-shard window), so logged configs match the run.
     println!(
-        "device={device} threads={} preprocess={} readahead={} : \
+        "device={device} threads={} preprocess={} readahead={} shards={} : \
          {:.1} images/s  {:.2} MB/s  ({} images in {:.2}s, {} dropped)",
-        cfg.threads, cfg.preprocess, cfg.readahead, r.images_per_sec(),
-        r.mb_per_sec(), r.images, r.elapsed_secs, r.dropped
+        cfg.threads, cfg.preprocess, cfg.effective_readahead(), cfg.shards,
+        r.images_per_sec(), r.mb_per_sec(), r.images, r.elapsed_secs,
+        r.dropped
     );
     if args.has_flag("engine-stats") {
-        let mut t = Table::new(&[
-            "Device", "reqs", "mean queue ms", "mean service ms",
-            "max depth", "MB read", "MB written",
-        ]);
-        for s in sim.engine().stats() {
-            if s.completed == 0 {
-                continue;
-            }
-            t.row(&[
-                s.device.clone(),
-                s.completed.to_string(),
-                format!("{:.3}", s.mean_queue_secs() * 1e3),
-                format!("{:.3}", s.mean_service_secs() * 1e3),
-                s.max_queue_depth.to_string(),
-                format!("{:.1}", s.bytes_read as f64 / 1e6),
-                format!("{:.1}", s.bytes_written as f64 / 1e6),
-            ]);
-        }
-        print!("{}", t.render());
+        print_engine_stats(&sim);
     }
     Ok(())
 }
@@ -251,6 +295,11 @@ fn cmd_ckpt_study(args: &Args) -> Result<()> {
         r.ckpt_durations.len(),
         dlio::metrics::median(&mut r.ckpt_durations.clone()),
     );
+    if args.has_flag("engine-stats") {
+        // Checkpoint-vs-ingest interference, per class (§V): the
+        // table the QoS scheduler's isolation claims are read from.
+        print_engine_stats(&sim);
+    }
     Ok(())
 }
 

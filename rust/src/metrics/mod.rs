@@ -48,6 +48,79 @@ pub fn median_of_reps(reps: usize, mut run: impl FnMut(usize) -> f64) -> f64 {
     median(&mut vals)
 }
 
+/// Number of log2 latency buckets: bucket `i` covers
+/// `[2^i, 2^(i+1))` microseconds, so 40 buckets span 1 µs .. 2^40 µs
+/// (~12.7 days — nothing a simulated request can plausibly exceed).
+pub const LAT_BUCKETS: usize = 40;
+
+/// Fixed-size log2 latency histogram: bounded memory regardless of
+/// request count, good to a factor-of-two resolution — exactly what
+/// per-class queue-latency percentiles (tf-Darshan-style) need.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: [u64; LAT_BUCKETS],
+    total: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { counts: [0; LAT_BUCKETS], total: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket(secs: f64) -> usize {
+        let us = (secs * 1e6).max(1.0);
+        (us.log2().floor() as usize).min(LAT_BUCKETS - 1)
+    }
+
+    /// Record one sample (seconds).
+    pub fn record(&mut self, secs: f64) {
+        self.counts[Self::bucket(secs)] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+
+    /// Quantile estimate in seconds: the *upper bound* of the first
+    /// bucket whose cumulative count reaches `q * total` (conservative
+    /// — never under-reports a tail latency).  Empty histogram -> 0.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil().max(1.0)
+            as u64;
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return 2f64.powi(i as i32 + 1) * 1e-6;
+            }
+        }
+        2f64.powi(LAT_BUCKETS as i32) * 1e-6
+    }
+
+    /// p99 shorthand (the Fig. 4/8 tail-latency headline number).
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+}
+
 /// Simple wall-clock stopwatch.
 pub struct Timer(Instant);
 
@@ -170,6 +243,42 @@ mod tests {
     fn table_rejects_wrong_arity() {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn latency_histogram_quantiles() {
+        let mut h = LatencyHistogram::new();
+        assert_eq!(h.quantile(0.99), 0.0);
+        // 99 fast samples (~10 us) + 1 slow (~100 ms): p50 stays in the
+        // fast bucket, p99+ reaches the slow one.
+        for _ in 0..99 {
+            h.record(10e-6);
+        }
+        h.record(0.1);
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile(0.50);
+        assert!(p50 <= 32e-6, "p50 {p50}");
+        // The single 100 ms outlier is the max: quantile(1.0) lands in
+        // its bucket (conservative: never below the true sample, at
+        // most 2x above).
+        let pmax = h.quantile(1.0);
+        assert!((0.1..=0.2).contains(&pmax), "pmax {pmax}");
+        // Sub-microsecond samples clamp into the first bucket.
+        let mut tiny = LatencyHistogram::new();
+        tiny.record(0.0);
+        assert!(tiny.quantile(1.0) <= 4e-6);
+    }
+
+    #[test]
+    fn latency_histogram_merge() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(1e-3);
+        b.record(1e-3);
+        b.record(0.5);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert!(a.quantile(1.0) >= 0.5);
     }
 
     #[test]

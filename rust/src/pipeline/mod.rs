@@ -13,4 +13,7 @@ pub mod source;
 
 pub use dataset::{collect, BoxedDataset, Dataset, DatasetExt};
 pub use elements::{ImageBatch, ProcessedImage};
-pub use source::{from_manifest, from_vec, read_ahead, LoadedSample, ReadAhead};
+pub use source::{
+    from_manifest, from_vec, read_ahead, sharded_reader, LoadedSample,
+    ShardedReader,
+};

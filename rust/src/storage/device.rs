@@ -205,6 +205,12 @@ struct GateState {
     /// Total requests either in service or waiting — the queue depth
     /// the elevator model sees.
     depth: u32,
+    /// Deepest queue ever observed.  Updated on *every* entry —
+    /// including per-chunk stream entries that bypass the engine's
+    /// submit paths — so depth bursts that drain between submits are
+    /// still recorded (the engine folds this into
+    /// `EngineDeviceStats::max_queue_depth`).
+    peak_depth: u32,
 }
 
 /// Runtime state for one simulated device.
@@ -228,7 +234,11 @@ impl Device {
             read_bucket: TokenBucket::new(model.read_bw * ts),
             write_bucket: TokenBucket::new(model.write_bw * ts),
             gate: ChannelGate {
-                lock: Mutex::new(GateState { in_service: 0, depth: 0 }),
+                lock: Mutex::new(GateState {
+                    in_service: 0,
+                    depth: 0,
+                    peak_depth: 0,
+                }),
                 cv: Condvar::new(),
             },
             observer,
@@ -256,6 +266,9 @@ impl Device {
     pub fn queue_enter(&self) -> u32 {
         let mut g = self.gate.lock.lock().unwrap();
         g.depth += 1;
+        if g.depth > g.peak_depth {
+            g.peak_depth = g.depth;
+        }
         g.depth
     }
 
@@ -374,6 +387,13 @@ impl Device {
     /// Current queue depth (in-service + waiting).
     pub fn queue_depth(&self) -> u32 {
         self.gate.lock.lock().unwrap().depth
+    }
+
+    /// Deepest queue ever observed (monotone: sampled on every entry,
+    /// so it can never under-report a burst that drained between
+    /// engine submits).
+    pub fn peak_queue_depth(&self) -> u32 {
+        self.gate.lock.lock().unwrap().peak_depth
     }
 }
 
@@ -510,6 +530,27 @@ mod tests {
         let d = Device::new(m, obs.clone());
         d.transfer(Dir::Write, 3_000_000, || ());
         assert_eq!(obs.0.load(Ordering::SeqCst), 3_000_000);
+    }
+
+    #[test]
+    fn peak_depth_is_monotone_and_survives_drain() {
+        let d = Device::new(model("pk"), Arc::new(NullObserver));
+        assert_eq!(d.peak_queue_depth(), 0);
+        let a = d.queue_enter();
+        let b = d.queue_enter();
+        let c = d.queue_enter();
+        assert_eq!((a, b, c), (1, 2, 3));
+        assert_eq!(d.peak_queue_depth(), 3);
+        d.queue_leave();
+        d.queue_leave();
+        d.queue_leave();
+        // The queue drained, but the peak is monotone.
+        assert_eq!(d.queue_depth(), 0);
+        assert_eq!(d.peak_queue_depth(), 3);
+        // Re-entering below the old peak does not lower it.
+        d.queue_enter();
+        assert_eq!(d.peak_queue_depth(), 3);
+        d.queue_leave();
     }
 
     #[test]

@@ -12,7 +12,13 @@
 //! * [`IoEngine::submit`] enqueues an [`IoRequest`] and returns an
 //!   [`IoTicket`] immediately; [`IoTicket::wait`] blocks only the
 //!   caller that actually needs the completion.
-//! * Each device owns a FIFO submission queue drained by a small
+//! * Every request carries an [`IoClass`] and each device schedules a
+//!   weighted deficit-round-robin over per-class queues
+//!   ([`QosConfig`]), so a checkpoint burst can no longer
+//!   head-of-line-block ingest reads — the §V interference the paper
+//!   measures.  Streams yield to queued higher-priority work at
+//!   configurable chunk-boundary preemption points.
+//! * Each device's class queues are drained by a small
 //!   worker pool (≤ the device's `channels`), so any number of
 //!   in-flight requests are multiplexed over a bounded set of OS
 //!   threads.  Submitted requests join the device queue immediately
@@ -37,11 +43,122 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::metrics::LatencyHistogram;
+
 use super::device::{Device, Dir};
+
+// ---------------------------------------------------------------------------
+// Traffic classes + QoS configuration
+// ---------------------------------------------------------------------------
+
+/// Traffic class of an I/O request — the paper's central contention
+/// pair plus the two background flows around it:
+///
+/// * `Ingest`     — dataset reads feeding training (latency-critical:
+///   a stalled read stalls the accelerator, §V-A).
+/// * `Checkpoint` — saver writes (training is paused while they run,
+///   §V-C, so they deserve bandwidth but must not head-of-line-block
+///   ingest once training resumes).
+/// * `Drain`      — burst-buffer stage→archive copies ("continues
+///   after the application ends", §V-C: pure background bandwidth).
+/// * `Background` — maintenance and any explicitly-tagged low-priority
+///   traffic.  Probes deliberately default to their direction's class
+///   (reads → `Ingest`, writes → `Checkpoint`): they emulate real
+///   ingest/checkpoint requests, and the IOR bounds they measure must
+///   not run at starvation weight.
+///
+/// Order is priority order: preemption points let a stream yield to
+/// any strictly-lower-index class with queued work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IoClass {
+    Ingest,
+    Checkpoint,
+    Drain,
+    Background,
+}
+
+impl IoClass {
+    pub const COUNT: usize = 4;
+    pub const ALL: [IoClass; IoClass::COUNT] = [
+        IoClass::Ingest,
+        IoClass::Checkpoint,
+        IoClass::Drain,
+        IoClass::Background,
+    ];
+
+    pub fn index(self) -> usize {
+        match self {
+            IoClass::Ingest => 0,
+            IoClass::Checkpoint => 1,
+            IoClass::Drain => 2,
+            IoClass::Background => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            IoClass::Ingest => "ingest",
+            IoClass::Checkpoint => "checkpoint",
+            IoClass::Drain => "drain",
+            IoClass::Background => "background",
+        }
+    }
+}
+
+impl std::fmt::Display for IoClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Per-device scheduler configuration.
+///
+/// The default is a weighted deficit-round-robin over the four class
+/// queues: class `c` is granted `weights[c] * chunk_size` bytes of
+/// deficit per scheduler round, so bandwidth shares converge to the
+/// weight ratio under saturation while every class keeps making
+/// progress (no starvation).  `fifo: true` collapses all classes into
+/// one arrival-order queue — the pre-QoS behaviour, kept as the
+/// baseline the isolation tests and benches compare against.
+#[derive(Debug, Clone)]
+pub struct QosConfig {
+    /// Single arrival-order queue (the old engine): baseline mode.
+    pub fifo: bool,
+    /// DRR quantum multipliers, indexed by [`IoClass::index`].
+    pub weights: [u32; IoClass::COUNT],
+    /// A stream (checkpoint data / drain copy) re-checks for queued
+    /// higher-priority work every `preempt_chunks` chunks and yields
+    /// until it drains (0 disables preemption points).
+    pub preempt_chunks: usize,
+    /// Upper bound, **modelled** seconds, on any single preemption
+    /// yield — keeps a stream live even under a persistent
+    /// higher-class flood.  Divided by the device's `time_scale` at
+    /// the yield point, so accelerated testbeds bound the yield at the
+    /// same point in modelled time (ratio preservation).
+    pub max_yield_wait: f64,
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        QosConfig {
+            fifo: false,
+            weights: [8, 4, 2, 1],
+            preempt_chunks: 4,
+            max_yield_wait: 0.25,
+        }
+    }
+}
+
+impl QosConfig {
+    /// The pre-QoS single-FIFO baseline.
+    pub fn fifo() -> QosConfig {
+        QosConfig { fifo: true, ..QosConfig::default() }
+    }
+}
 
 /// Default streaming chunk: 1 MiB.
 pub const DEFAULT_CHUNK: usize = 1 << 20;
@@ -83,6 +200,22 @@ pub enum IoRequest {
         dst_device: String,
         dst_path: PathBuf,
     },
+}
+
+impl IoRequest {
+    /// Class used when the caller doesn't tag explicitly: reads are
+    /// ingest traffic, writes checkpoint traffic, copies drains.
+    pub fn default_class(&self) -> IoClass {
+        match self {
+            IoRequest::ReadFile { .. } | IoRequest::ProbeRead { .. } => {
+                IoClass::Ingest
+            }
+            IoRequest::WriteFile { .. } | IoRequest::ProbeWrite { .. } => {
+                IoClass::Checkpoint
+            }
+            IoRequest::Copy { .. } => IoClass::Drain,
+        }
+    }
 }
 
 /// What a finished request reports.
@@ -176,8 +309,33 @@ impl BufferGauge {
 // Bounded chunk queue (stream producer -> device worker)
 // ---------------------------------------------------------------------------
 
+/// A failed stream, tagged with whether some stats counter already
+/// charged the error (`counted: true` -> the paced producer recorded
+/// it against *its* device; the consumer must fail the ticket without
+/// double-counting).  This is what makes `EngineDeviceStats::errors`
+/// exactly-once across the read and write halves of a copy.
+struct StreamFailure {
+    error: anyhow::Error,
+    counted: bool,
+}
+
+impl StreamFailure {
+    fn new(error: anyhow::Error, counted: bool) -> StreamFailure {
+        StreamFailure { error, counted }
+    }
+
+    fn context(self, msg: &'static str) -> StreamFailure {
+        StreamFailure { error: self.error.context(msg), counted: self.counted }
+    }
+}
+
+enum StreamChunk {
+    Data(Vec<u8>),
+    Fail(StreamFailure),
+}
+
 struct ChunkQueueState {
-    chunks: VecDeque<Result<Vec<u8>>>,
+    chunks: VecDeque<StreamChunk>,
     /// Producer finished successfully.
     closed: bool,
     /// Consumer gave up (write error / shutdown): producers must stop.
@@ -215,8 +373,11 @@ impl ChunkQueue {
 
     /// Enqueue a chunk (blocking on a full queue).  Returns `false`
     /// when the consumer aborted — the producer should stop.
-    fn push(&self, chunk: Result<Vec<u8>>) -> bool {
-        let bytes = chunk.as_ref().map(|c| c.len() as u64).unwrap_or(0);
+    fn push(&self, chunk: StreamChunk) -> bool {
+        let bytes = match &chunk {
+            StreamChunk::Data(c) => c.len() as u64,
+            StreamChunk::Fail(_) => 0,
+        };
         let mut st = self.state.lock().unwrap();
         while st.chunks.len() >= self.capacity && !st.aborted {
             st = self.space.wait(st).unwrap();
@@ -233,6 +394,16 @@ impl ChunkQueue {
         true
     }
 
+    fn push_data(&self, chunk: Vec<u8>) -> bool {
+        self.push(StreamChunk::Data(chunk))
+    }
+
+    /// Fail the stream; `counted` = the producer already charged this
+    /// error to its own device's stats.
+    fn push_fail(&self, error: anyhow::Error, counted: bool) -> bool {
+        self.push(StreamChunk::Fail(StreamFailure::new(error, counted)))
+    }
+
     /// Producer-side end-of-stream marker.
     fn close(&self) {
         let mut st = self.state.lock().unwrap();
@@ -245,16 +416,19 @@ impl ChunkQueue {
     /// drained; `Some(Err)` if the stream was aborted (engine
     /// shutdown) so the consumer fails the ticket instead of
     /// reporting a truncated success.
-    fn pop(&self) -> Option<Result<Vec<u8>>> {
+    fn pop(&self) -> Option<Result<Vec<u8>, StreamFailure>> {
         let mut st = self.state.lock().unwrap();
         loop {
             if let Some(c) = st.chunks.pop_front() {
                 drop(st);
-                if let Ok(bytes) = &c {
-                    self.gauge.sub(bytes.len() as u64);
-                }
                 self.space.notify_one();
-                return Some(c);
+                return match c {
+                    StreamChunk::Data(bytes) => {
+                        self.gauge.sub(bytes.len() as u64);
+                        Some(Ok(bytes))
+                    }
+                    StreamChunk::Fail(f) => Some(Err(f)),
+                };
             }
             if st.closed && !st.discarded {
                 // Producer finished and everything was delivered:
@@ -264,7 +438,10 @@ impl ChunkQueue {
             if st.aborted {
                 // Discarded chunks always imply an abort, so this
                 // also covers closed-but-truncated streams.
-                return Some(Err(anyhow!("stream aborted (engine shutdown)")));
+                return Some(Err(StreamFailure::new(
+                    anyhow!("stream aborted (engine shutdown)"),
+                    false,
+                )));
             }
             st = self.filled.wait(st).unwrap();
         }
@@ -280,7 +457,7 @@ impl ChunkQueue {
         }
         let mut freed = 0u64;
         for c in st.chunks.drain(..) {
-            if let Ok(bytes) = c {
+            if let StreamChunk::Data(bytes) = c {
                 freed += bytes.len() as u64;
             }
         }
@@ -325,7 +502,7 @@ impl ChunkWriter {
         }
         let chunk =
             std::mem::replace(&mut self.pending, Vec::with_capacity(self.chunk_size));
-        if !self.queue.push(Ok(chunk)) {
+        if !self.queue.push_data(chunk) {
             return Err(anyhow!(
                 "stream write aborted by the device worker \
                  (see the ticket for the underlying error)"
@@ -350,7 +527,8 @@ impl Drop for ChunkWriter {
             // Dropped without finish(): poison the stream so the
             // worker fails the ticket instead of persisting a
             // truncated file as success.
-            self.queue.push(Err(anyhow!("stream writer dropped mid-write")));
+            self.queue
+                .push_fail(anyhow!("stream writer dropped mid-write"), false);
             self.queue.close();
         }
     }
@@ -360,8 +538,53 @@ impl Drop for ChunkWriter {
 // Per-device queue + stats
 // ---------------------------------------------------------------------------
 
+/// Per-class aggregates for one device (the tf-Darshan-style
+/// per-queue surface: depth, queue/service time, bytes, tail
+/// latency).
+#[derive(Debug, Clone, Default)]
+pub struct ClassStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub errors: u64,
+    /// Total submit → service-start seconds across requests.
+    pub queue_secs: f64,
+    /// Total service seconds across requests.
+    pub service_secs: f64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    /// Deepest scheduler queue this class ever reached (requests
+    /// submitted but not yet picked by a worker).
+    pub max_queue_depth: u32,
+    /// Queue-latency distribution (log2 buckets) — p99 comes from
+    /// here.
+    pub queue_hist: LatencyHistogram,
+}
+
+impl ClassStats {
+    pub fn mean_queue_secs(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.queue_secs / self.completed as f64
+        }
+    }
+
+    pub fn mean_service_secs(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.service_secs / self.completed as f64
+        }
+    }
+
+    /// p99 queue latency, seconds (conservative bucket upper bound).
+    pub fn p99_queue_secs(&self) -> f64 {
+        self.queue_hist.p99()
+    }
+}
+
 /// Per-request aggregates for one device (snapshot via
-/// [`IoEngine::stats`]).
+/// [`IoEngine::stats`]), with a per-[`IoClass`] breakdown.
 #[derive(Debug, Clone, Default)]
 pub struct EngineDeviceStats {
     pub device: String,
@@ -374,8 +597,13 @@ pub struct EngineDeviceStats {
     pub service_secs: f64,
     pub bytes_read: u64,
     pub bytes_written: u64,
-    /// Deepest device queue observed at submit time.
+    /// Deepest device queue observed — sampled at submit time *and*
+    /// folded with the device's own entry-side peak gauge, so bursts
+    /// that drain between submits (stream chunks, copy read halves)
+    /// are never under-reported.
     pub max_queue_depth: u32,
+    /// Per-class breakdown, indexed by [`IoClass::index`].
+    pub classes: [ClassStats; IoClass::COUNT],
 }
 
 impl EngineDeviceStats {
@@ -396,6 +624,59 @@ impl EngineDeviceStats {
             self.service_secs / self.completed as f64
         }
     }
+
+    /// Stats row for one class.
+    pub fn class(&self, class: IoClass) -> &ClassStats {
+        &self.classes[class.index()]
+    }
+}
+
+/// Submit-side accounting (aggregate + class), shared by every submit
+/// path so no request can enter a queue untracked.
+fn record_submit(stats: &mut EngineDeviceStats, class: IoClass, enq_depth: u32) {
+    stats.submitted += 1;
+    if enq_depth > stats.max_queue_depth {
+        stats.max_queue_depth = enq_depth;
+    }
+    stats.classes[class.index()].submitted += 1;
+}
+
+/// Completion-side accounting.  `ok` carries (bytes, direction) on
+/// success; on failure `count_error` is false when the error was
+/// already charged elsewhere (the copy read half), keeping `errors`
+/// exactly-once per failed request.
+fn record_done(
+    stats: &mut EngineDeviceStats,
+    class: IoClass,
+    queue_secs: f64,
+    service_secs: f64,
+    ok: Option<(u64, Dir)>,
+    count_error: bool,
+) {
+    stats.completed += 1;
+    stats.queue_secs += queue_secs;
+    stats.service_secs += service_secs;
+    let cs = &mut stats.classes[class.index()];
+    cs.completed += 1;
+    cs.queue_secs += queue_secs;
+    cs.service_secs += service_secs;
+    cs.queue_hist.record(queue_secs);
+    match ok {
+        Some((bytes, Dir::Read)) => {
+            stats.bytes_read += bytes;
+            cs.bytes_read += bytes;
+        }
+        Some((bytes, Dir::Write)) => {
+            stats.bytes_written += bytes;
+            cs.bytes_written += bytes;
+        }
+        None => {
+            if count_error {
+                stats.errors += 1;
+                cs.errors += 1;
+            }
+        }
+    }
 }
 
 enum JobOp {
@@ -406,6 +687,12 @@ enum JobOp {
 
 struct Job {
     op: JobOp,
+    class: IoClass,
+    /// DRR cost, bytes (known payload size, or the chunk size for
+    /// reads whose backing file can't be statted).
+    cost: u64,
+    /// Arrival order across all classes (the FIFO-baseline sort key).
+    seq: u64,
     ticket: Arc<TicketShared>,
     submitted: Instant,
     /// Queue depth when this request joined the device queue (0 for
@@ -415,24 +702,151 @@ struct Job {
 }
 
 struct QueueState {
-    jobs: VecDeque<Job>,
+    /// One queue per class, indexed by [`IoClass::index`].
+    classes: [VecDeque<Job>; IoClass::COUNT],
+    /// DRR byte deficits per class.
+    deficit: [u64; IoClass::COUNT],
+    /// Class the scheduler is currently visiting.
+    cursor: usize,
+    /// Whether the cursor class already received its quantum for the
+    /// current visit.
+    visit_granted: bool,
+    /// Total jobs across all class queues.
+    queued: usize,
+    /// Arrival counter feeding `Job::seq`.
+    next_seq: u64,
+    /// Streams (chunked writes / copy read halves) currently live per
+    /// class: they occupy the device without sitting in a scheduler
+    /// queue, but the per-class depth gauge must still see them.
+    class_live: [u32; IoClass::COUNT],
+    /// Deepest each class has been (queued jobs + live streams).
+    class_peak: [u32; IoClass::COUNT],
     shutdown: bool,
 }
 
 struct DeviceQueue {
     device: Arc<Device>,
     state: Mutex<QueueState>,
+    /// Workers wait here for jobs.
     available: Condvar,
+    /// Yielded streams wait here for higher-priority queues to drain.
+    drained: Condvar,
     stats: Mutex<EngineDeviceStats>,
+    qos: QosConfig,
+    /// Per-round DRR byte grants (`weights[c] * chunk_size`).
+    quanta: [u64; IoClass::COUNT],
 }
 
 impl DeviceQueue {
-    fn push(&self, job: Job) {
+    fn push(&self, mut job: Job) {
         {
             let mut st = self.state.lock().unwrap();
-            st.jobs.push_back(job);
+            job.seq = st.next_seq;
+            st.next_seq += 1;
+            let c = job.class.index();
+            st.classes[c].push_back(job);
+            st.queued += 1;
+            let depth = st.classes[c].len() as u32 + st.class_live[c];
+            if depth > st.class_peak[c] {
+                st.class_peak[c] = depth;
+            }
         }
         self.available.notify_one();
+    }
+
+    /// A stream joined `class` (called at submit time; balanced by
+    /// [`stream_end`](Self::stream_end) when its thread finishes).
+    fn stream_begin(&self, class: IoClass) {
+        let mut st = self.state.lock().unwrap();
+        let c = class.index();
+        st.class_live[c] += 1;
+        let depth = st.classes[c].len() as u32 + st.class_live[c];
+        if depth > st.class_peak[c] {
+            st.class_peak[c] = depth;
+        }
+    }
+
+    fn stream_end(&self, class: IoClass) {
+        let mut st = self.state.lock().unwrap();
+        st.class_live[class.index()] -= 1;
+    }
+
+    /// Pick the next job.  FIFO mode: global arrival order.  DRR mode:
+    /// visit classes round-robin; each visit grants one quantum and
+    /// serves head jobs while the class's byte deficit covers them.
+    /// Deficits carry over, so a class whose head exceeds its quantum
+    /// accumulates across rounds — every class always progresses.
+    fn sched_pop(&self, st: &mut QueueState) -> Option<Job> {
+        if st.queued == 0 {
+            return None;
+        }
+        if self.qos.fifo {
+            let mut best: Option<(usize, u64)> = None;
+            for (c, queue) in st.classes.iter().enumerate() {
+                if let Some(j) = queue.front() {
+                    if best.map_or(true, |(_, s)| j.seq < s) {
+                        best = Some((c, j.seq));
+                    }
+                }
+            }
+            let (c, _) = best?;
+            st.queued -= 1;
+            return st.classes[c].pop_front();
+        }
+        loop {
+            let c = st.cursor;
+            if st.classes[c].is_empty() {
+                st.deficit[c] = 0;
+                st.visit_granted = false;
+                st.cursor = (c + 1) % IoClass::COUNT;
+                continue;
+            }
+            if !st.visit_granted {
+                st.deficit[c] = st.deficit[c].saturating_add(self.quanta[c]);
+                st.visit_granted = true;
+            }
+            let cost = st.classes[c].front().map(|j| j.cost).unwrap_or(1);
+            if st.deficit[c] >= cost {
+                st.deficit[c] -= cost;
+                st.queued -= 1;
+                return st.classes[c].pop_front();
+            }
+            // This visit's grant is spent; the deficit carries over.
+            st.visit_granted = false;
+            st.cursor = (c + 1) % IoClass::COUNT;
+        }
+    }
+
+    /// Preemption point: block (bounded) while any strictly
+    /// higher-priority class has queued work.  Streams call this at
+    /// chunk boundaries *before* claiming the device, so they hold
+    /// neither a channel nor a pool worker while yielding — queued
+    /// ingest drains through the freed channel.  No-op in FIFO mode.
+    fn yield_to_higher(&self, class: IoClass) {
+        if self.qos.fifo || self.qos.preempt_chunks == 0 {
+            return;
+        }
+        let hi = class.index();
+        if hi == 0 {
+            return;
+        }
+        // max_yield_wait is modelled seconds: convert to wall time at
+        // this device's simulation speed-up.
+        let wall_bound =
+            self.qos.max_yield_wait / self.device.model.time_scale.max(1e-9);
+        let deadline = Instant::now() + Duration::from_secs_f64(wall_bound);
+        let mut st = self.state.lock().unwrap();
+        while !st.shutdown
+            && st.classes[..hi].iter().any(|q| !q.is_empty())
+        {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _) =
+                self.drained.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
     }
 }
 
@@ -445,6 +859,7 @@ pub struct IoEngine {
     queues: HashMap<String, Arc<DeviceQueue>>,
     workers: Vec<JoinHandle<()>>,
     chunk_size: usize,
+    qos: QosConfig,
     gauge: Arc<BufferGauge>,
     /// Live stream queues, aborted at shutdown so a producer that
     /// outlives the engine can never leave a stream thread parked in
@@ -463,27 +878,50 @@ impl IoEngine {
         Self::with_chunk_size(devices, DEFAULT_CHUNK)
     }
 
-    /// Build an engine with an explicit streaming chunk size.
+    /// Build an engine with an explicit streaming chunk size and the
+    /// default QoS config.
     pub fn with_chunk_size(
         devices: &HashMap<String, Arc<Device>>,
         chunk_size: usize,
     ) -> IoEngine {
+        Self::with_config(devices, chunk_size, QosConfig::default())
+    }
+
+    /// Build an engine with explicit chunk size and scheduler config.
+    pub fn with_config(
+        devices: &HashMap<String, Arc<Device>>,
+        chunk_size: usize,
+        qos: QosConfig,
+    ) -> IoEngine {
         let chunk_size = chunk_size.max(4 * 1024);
         let gauge = Arc::new(BufferGauge::new());
+        let quanta: [u64; IoClass::COUNT] = std::array::from_fn(|i| {
+            qos.weights[i].max(1) as u64 * chunk_size as u64
+        });
         let mut queues = HashMap::new();
         let mut workers = Vec::new();
         for (name, device) in devices {
             let q = Arc::new(DeviceQueue {
                 device: Arc::clone(device),
                 state: Mutex::new(QueueState {
-                    jobs: VecDeque::new(),
+                    classes: std::array::from_fn(|_| VecDeque::new()),
+                    deficit: [0; IoClass::COUNT],
+                    cursor: 0,
+                    visit_granted: false,
+                    queued: 0,
+                    next_seq: 0,
+                    class_live: [0; IoClass::COUNT],
+                    class_peak: [0; IoClass::COUNT],
                     shutdown: false,
                 }),
                 available: Condvar::new(),
+                drained: Condvar::new(),
                 stats: Mutex::new(EngineDeviceStats {
                     device: name.clone(),
                     ..EngineDeviceStats::default()
                 }),
+                qos: qos.clone(),
+                quanta,
             });
             let n_workers = device
                 .model
@@ -505,10 +943,16 @@ impl IoEngine {
             queues,
             workers,
             chunk_size,
+            qos,
             gauge,
             streams: Mutex::new(Vec::new()),
             stream_threads: Mutex::new(Vec::new()),
         }
+    }
+
+    /// Scheduler configuration in force.
+    pub fn qos(&self) -> &QosConfig {
+        &self.qos
     }
 
     /// Track a stream queue for shutdown aborts (pruning dead ones).
@@ -527,46 +971,79 @@ impl IoEngine {
     }
 
     /// Spawn the consumer half of a stream write on its own thread:
-    /// claims the device per chunk, fills `ticket` on completion.
+    /// claims the device per chunk (yielding to higher classes at
+    /// preemption points), fills `ticket` on completion.
     fn spawn_stream_writer(
         &self,
         q: &Arc<DeviceQueue>,
         path: PathBuf,
         rx: Arc<ChunkQueue>,
         enq_depth: u32,
+        class: IoClass,
         ticket: Arc<TicketShared>,
     ) {
         let q = Arc::clone(q);
         let submitted = Instant::now();
+        q.stream_begin(class);
         let handle = std::thread::Builder::new()
             .name(format!("dlio-io-stream-{}", q.device.name()))
             .spawn(move || {
-                let t0 = Instant::now();
-                let queue_secs = t0.duration_since(submitted).as_secs_f64();
-                let result = write_stream_paced(&q.device, &path, &rx, enq_depth);
+                let mut first_service: Option<Instant> = None;
+                let result = write_stream_paced(&q, &path, &rx, enq_depth,
+                                                class, &mut first_service);
                 if result.is_err() {
                     // Unblock and drain the producer before failing.
                     rx.abort();
                 }
-                let service_secs = t0.elapsed().as_secs_f64();
+                // Queue time = submit -> first chunk claiming the
+                // device (channel contention + preemption yields show
+                // up here, where tf-Darshan-style analysis expects
+                // them); everything after is service.
+                let t_end = Instant::now();
+                let (queue_secs, service_secs) = match first_service {
+                    Some(ts) => (
+                        ts.duration_since(submitted).as_secs_f64(),
+                        t_end.duration_since(ts).as_secs_f64(),
+                    ),
+                    None => {
+                        (t_end.duration_since(submitted).as_secs_f64(), 0.0)
+                    }
+                };
+                q.stream_end(class);
                 {
                     let mut stats = q.stats.lock().unwrap();
-                    stats.completed += 1;
-                    stats.queue_secs += queue_secs;
-                    stats.service_secs += service_secs;
                     match &result {
-                        Ok(total) => stats.bytes_written += total,
-                        Err(_) => stats.errors += 1,
+                        Ok(total) => record_done(
+                            &mut stats,
+                            class,
+                            queue_secs,
+                            service_secs,
+                            Some((*total, Dir::Write)),
+                            false,
+                        ),
+                        // A failure whose producer already charged it
+                        // (copy read half) must not be double-counted
+                        // here.
+                        Err(f) => record_done(
+                            &mut stats,
+                            class,
+                            queue_secs,
+                            service_secs,
+                            None,
+                            !f.counted,
+                        ),
                     }
                 }
                 complete(
                     &ticket,
-                    result.map(|total| IoCompletion {
-                        bytes: total,
-                        data: None,
-                        queue_secs,
-                        service_secs,
-                    }),
+                    result
+                        .map(|total| IoCompletion {
+                            bytes: total,
+                            data: None,
+                            queue_secs,
+                            service_secs,
+                        })
+                        .map_err(|f| f.error),
                 );
             })
             .expect("spawn stream writer");
@@ -584,42 +1061,93 @@ impl IoEngine {
             .ok_or_else(|| anyhow!("unknown device {device:?}"))
     }
 
-    /// Submit a request; returns its completion ticket immediately.
+    /// Submit a request under its default class; returns its
+    /// completion ticket immediately.
     pub fn submit(&self, req: IoRequest) -> Result<IoTicket> {
+        let class = req.default_class();
+        self.submit_class(req, class)
+    }
+
+    /// Submit a request under an explicit traffic class.
+    pub fn submit_class(&self, req: IoRequest, class: IoClass) -> Result<IoTicket> {
         match req {
             IoRequest::ReadFile { device, path } => {
-                self.submit_unit(&device, JobOp::Read { path })
+                self.submit_unit(&device, JobOp::Read { path }, class)
             }
             IoRequest::WriteFile { device, path, data } => {
-                self.submit_unit(&device, JobOp::Write { path, data })
+                self.submit_unit(&device, JobOp::Write { path, data }, class)
             }
-            IoRequest::ProbeRead { device, bytes } => {
-                self.submit_unit(&device, JobOp::Probe { dir: Dir::Read, bytes })
-            }
-            IoRequest::ProbeWrite { device, bytes } => {
-                self.submit_unit(&device, JobOp::Probe { dir: Dir::Write, bytes })
-            }
+            IoRequest::ProbeRead { device, bytes } => self.submit_unit(
+                &device,
+                JobOp::Probe { dir: Dir::Read, bytes },
+                class,
+            ),
+            IoRequest::ProbeWrite { device, bytes } => self.submit_unit(
+                &device,
+                JobOp::Probe { dir: Dir::Write, bytes },
+                class,
+            ),
             IoRequest::Copy { src_device, src_path, dst_device, dst_path } => {
-                self.submit_copy(&src_device, src_path, &dst_device, dst_path)
+                self.submit_copy(&src_device, src_path, &dst_device, dst_path,
+                                 class)
             }
         }
     }
 
+    /// DRR cost of a unit job, bytes.
+    fn job_cost(op: &JobOp, chunk_size: usize) -> u64 {
+        match op {
+            JobOp::Read { path } => std::fs::metadata(path)
+                .map(|m| m.len())
+                .unwrap_or(chunk_size as u64),
+            JobOp::Write { data, .. } => data.len() as u64,
+            JobOp::Probe { bytes, .. } => *bytes,
+        }
+        .max(1)
+    }
+
+    /// Submit a whole-file read whose size the caller already knows
+    /// (the sim's cache check statted the file an instant ago): skips
+    /// `job_cost`'s metadata lookup on the hot ingest path.
+    pub fn submit_read_sized(
+        &self,
+        device: &str,
+        path: PathBuf,
+        size: u64,
+        class: IoClass,
+    ) -> Result<IoTicket> {
+        self.submit_unit_with_cost(device, JobOp::Read { path }, class,
+                                   size.max(1))
+    }
+
     /// Unit jobs join the device queue at submit time so the elevator
     /// model sees queued requests (the paper's queue-depth effect).
-    fn submit_unit(&self, device: &str, op: JobOp) -> Result<IoTicket> {
+    fn submit_unit(
+        &self,
+        device: &str,
+        op: JobOp,
+        class: IoClass,
+    ) -> Result<IoTicket> {
+        let cost = Self::job_cost(&op, self.chunk_size);
+        self.submit_unit_with_cost(device, op, class, cost)
+    }
+
+    fn submit_unit_with_cost(
+        &self,
+        device: &str,
+        op: JobOp,
+        class: IoClass,
+        cost: u64,
+    ) -> Result<IoTicket> {
         let q = self.queue(device)?;
         let (ticket, shared) = new_ticket();
         let enq_depth = q.device.queue_enter();
-        {
-            let mut stats = q.stats.lock().unwrap();
-            stats.submitted += 1;
-            if enq_depth > stats.max_queue_depth {
-                stats.max_queue_depth = enq_depth;
-            }
-        }
+        record_submit(&mut q.stats.lock().unwrap(), class, enq_depth);
         q.push(Job {
             op,
+            class,
+            cost,
+            seq: 0, // assigned by push
             ticket: Arc::clone(&shared),
             submitted: Instant::now(),
             enq_depth,
@@ -633,8 +1161,26 @@ impl IoEngine {
     /// many-SQEs-one-doorbell semantics).  This is what makes an
     /// overlapped checkpoint triple on an HDD faster than three serial
     /// writes even with a single channel.  Tickets are returned in
-    /// request order.
+    /// request order.  Each request runs under its default class; use
+    /// [`submit_batch_class`](Self::submit_batch_class) to override.
     pub fn submit_batch(&self, reqs: Vec<IoRequest>) -> Result<Vec<IoTicket>> {
+        self.submit_batch_tagged(reqs, None)
+    }
+
+    /// One-doorbell batch with every request under `class`.
+    pub fn submit_batch_class(
+        &self,
+        reqs: Vec<IoRequest>,
+        class: IoClass,
+    ) -> Result<Vec<IoTicket>> {
+        self.submit_batch_tagged(reqs, Some(class))
+    }
+
+    fn submit_batch_tagged(
+        &self,
+        reqs: Vec<IoRequest>,
+        class: Option<IoClass>,
+    ) -> Result<Vec<IoTicket>> {
         // Validate every target device before entering any queue.
         for req in &reqs {
             match req {
@@ -650,11 +1196,18 @@ impl IoEngine {
                 }
             }
         }
-        // Phase 1: enter every unit request's device queue.
-        let mut slots: Vec<(Option<(String, JobOp)>, Option<IoTicket>)> =
+        // Phase 1: enter every unit request's device queue.  A copy
+        // submission mid-batch can still fail (dst directory
+        // creation), so memberships taken so far are tracked and
+        // released on that path — an early return must never leave a
+        // device's queue depth permanently inflated.
+        type UnitSlot = (String, JobOp, IoClass);
+        let mut slots: Vec<(Option<UnitSlot>, Option<IoTicket>)> =
             Vec::with_capacity(reqs.len());
         let mut burst_depth: HashMap<String, u32> = HashMap::new();
+        let mut entered: Vec<String> = Vec::new();
         for req in reqs {
+            let req_class = class.unwrap_or_else(|| req.default_class());
             let unit = match req {
                 IoRequest::ReadFile { device, path } => {
                     (device, JobOp::Read { path })
@@ -671,7 +1224,18 @@ impl IoEngine {
                 copy @ IoRequest::Copy { .. } => {
                     // Copies are stream pairs; they don't take part in
                     // the unit doorbell.
-                    slots.push((None, Some(self.submit(copy)?)));
+                    match self.submit_class(copy, req_class) {
+                        Ok(t) => slots.push((None, Some(t))),
+                        Err(e) => {
+                            for device in entered {
+                                self.queue(&device)
+                                    .expect("validated above")
+                                    .device
+                                    .queue_leave();
+                            }
+                            return Err(e);
+                        }
+                    }
                     continue;
                 }
             };
@@ -681,9 +1245,10 @@ impl IoEngine {
                 .expect("validated above")
                 .device
                 .queue_enter();
+            entered.push(device.clone());
             let entry = burst_depth.entry(device.clone()).or_insert(0);
             *entry = (*entry).max(depth);
-            slots.push((Some((device, op)), None));
+            slots.push((Some((device, op, req_class)), None));
         }
         // Phase 2: push jobs, every one carrying its device's full
         // burst depth.
@@ -691,19 +1256,21 @@ impl IoEngine {
         for (unit, ready) in slots {
             match (unit, ready) {
                 (None, Some(t)) => tickets.push(t),
-                (Some((device, op)), None) => {
+                (Some((device, op, req_class)), None) => {
                     let q = self.queue(&device).expect("validated above");
                     let enq_depth = burst_depth[&device];
                     let (ticket, shared) = new_ticket();
-                    {
-                        let mut stats = q.stats.lock().unwrap();
-                        stats.submitted += 1;
-                        if enq_depth > stats.max_queue_depth {
-                            stats.max_queue_depth = enq_depth;
-                        }
-                    }
+                    let cost = Self::job_cost(&op, self.chunk_size);
+                    record_submit(
+                        &mut q.stats.lock().unwrap(),
+                        req_class,
+                        enq_depth,
+                    );
                     q.push(Job {
                         op,
+                        class: req_class,
+                        cost,
+                        seq: 0, // assigned by push
                         ticket: Arc::clone(&shared),
                         submitted: Instant::now(),
                         enq_depth,
@@ -716,14 +1283,25 @@ impl IoEngine {
         Ok(tickets)
     }
 
-    /// Open a streamed write: returns the producer handle and the
-    /// completion ticket.  The stream runs on a dedicated thread and
-    /// claims the device per chunk, so a stalled producer holds
-    /// neither a channel nor a pool worker hostage.
+    /// Open a streamed write under [`IoClass::Checkpoint`] (the saver
+    /// `.data` path): returns the producer handle and the completion
+    /// ticket.  The stream runs on a dedicated thread and claims the
+    /// device per chunk, so a stalled producer holds neither a channel
+    /// nor a pool worker hostage.
     pub fn write_stream(
         &self,
         device: &str,
         path: PathBuf,
+    ) -> Result<(ChunkWriter, IoTicket)> {
+        self.write_stream_class(device, path, IoClass::Checkpoint)
+    }
+
+    /// Streamed write under an explicit class.
+    pub fn write_stream_class(
+        &self,
+        device: &str,
+        path: PathBuf,
+        class: IoClass,
     ) -> Result<(ChunkWriter, IoTicket)> {
         let q = self.queue(device)?;
         if let Some(parent) = path.parent() {
@@ -737,14 +1315,9 @@ impl IoEngine {
         // consumes the membership), so it counts toward any burst
         // submitted alongside it.
         let enq_depth = q.device.queue_enter();
-        {
-            let mut stats = q.stats.lock().unwrap();
-            stats.submitted += 1;
-            if enq_depth > stats.max_queue_depth {
-                stats.max_queue_depth = enq_depth;
-            }
-        }
-        self.spawn_stream_writer(q, path, Arc::clone(&rx), enq_depth, shared);
+        record_submit(&mut q.stats.lock().unwrap(), class, enq_depth);
+        self.spawn_stream_writer(q, path, Arc::clone(&rx), enq_depth, class,
+                                 shared);
         let writer = ChunkWriter {
             queue: rx,
             chunk_size: self.chunk_size,
@@ -764,6 +1337,18 @@ impl IoEngine {
         src_path: PathBuf,
         dst_path: PathBuf,
     ) -> Result<IoTicket> {
+        self.write_from_file_class(device, src_path, dst_path, IoClass::Drain)
+    }
+
+    /// [`write_from_file`](Self::write_from_file) under an explicit
+    /// class.
+    pub fn write_from_file_class(
+        &self,
+        device: &str,
+        src_path: PathBuf,
+        dst_path: PathBuf,
+        class: IoClass,
+    ) -> Result<IoTicket> {
         let q = self.queue(device)?;
         if let Some(parent) = dst_path.parent() {
             std::fs::create_dir_all(parent)
@@ -773,14 +1358,9 @@ impl IoEngine {
         self.register_stream(&rx);
         let (ticket, shared) = new_ticket();
         let enq_depth = q.device.queue_enter();
-        {
-            let mut stats = q.stats.lock().unwrap();
-            stats.submitted += 1;
-            if enq_depth > stats.max_queue_depth {
-                stats.max_queue_depth = enq_depth;
-            }
-        }
-        self.spawn_stream_writer(q, dst_path, Arc::clone(&rx), enq_depth, shared);
+        record_submit(&mut q.stats.lock().unwrap(), class, enq_depth);
+        self.spawn_stream_writer(q, dst_path, Arc::clone(&rx), enq_depth,
+                                 class, shared);
         let chunk_size = self.chunk_size;
         let handle = std::thread::Builder::new()
             .name("dlio-io-warmread".into())
@@ -799,6 +1379,7 @@ impl IoEngine {
         src_path: PathBuf,
         dst_device: &str,
         dst_path: PathBuf,
+        class: IoClass,
     ) -> Result<IoTicket> {
         let src_q = Arc::clone(self.queue(src_device)?);
         let dst_q = self.queue(dst_device)?;
@@ -810,30 +1391,52 @@ impl IoEngine {
         self.register_stream(&rx);
         let (ticket, shared) = new_ticket();
         let dst_enq = dst_q.device.queue_enter();
-        {
-            let mut stats = dst_q.stats.lock().unwrap();
-            stats.submitted += 1;
-            if dst_enq > stats.max_queue_depth {
-                stats.max_queue_depth = dst_enq;
-            }
-        }
-        self.spawn_stream_writer(dst_q, dst_path, Arc::clone(&rx), dst_enq, shared);
+        record_submit(&mut dst_q.stats.lock().unwrap(), class, dst_enq);
+        self.spawn_stream_writer(dst_q, dst_path, Arc::clone(&rx), dst_enq,
+                                 class, shared);
         let src_enq = src_q.device.queue_enter();
+        // The read half is a request against the source device:
+        // account its submission now (completion lands in
+        // `copy_reader`), so src stats can never miss an in-flight
+        // copy.
+        record_submit(&mut src_q.stats.lock().unwrap(), class, src_enq);
+        src_q.stream_begin(class);
+        let submitted = Instant::now();
         let chunk_size = self.chunk_size;
         let handle = std::thread::Builder::new()
             .name("dlio-io-copy".into())
-            .spawn(move || copy_reader(src_q, src_path, rx, chunk_size, src_enq))
+            .spawn(move || {
+                copy_reader(src_q, src_path, rx, chunk_size, src_enq, class,
+                            submitted)
+            })
             .expect("spawn copy reader");
         self.track_thread(handle);
         Ok(ticket)
     }
 
-    /// Per-device request aggregates.
+    /// Per-device request aggregates (with per-class breakdown).
     pub fn stats(&self) -> Vec<EngineDeviceStats> {
         let mut out: Vec<EngineDeviceStats> = self
             .queues
             .values()
-            .map(|q| q.stats.lock().unwrap().clone())
+            .map(|q| {
+                let mut s = q.stats.lock().unwrap().clone();
+                {
+                    let st = q.state.lock().unwrap();
+                    for (cs, peak) in
+                        s.classes.iter_mut().zip(st.class_peak.iter())
+                    {
+                        cs.max_queue_depth = *peak;
+                    }
+                }
+                // Fold in the device's entry-side peak gauge: stream
+                // chunks and copy read halves enter the device queue
+                // without passing a submit path, and bursts can drain
+                // between submits — the gauge sees every entry.
+                s.max_queue_depth =
+                    s.max_queue_depth.max(q.device.peak_queue_depth());
+                s
+            })
             .collect();
         out.sort_by(|a, b| a.device.cmp(&b.device));
         out
@@ -868,6 +1471,8 @@ impl Drop for IoEngine {
             st.shutdown = true;
             drop(st);
             q.available.notify_all();
+            // Wake any stream parked at a preemption point.
+            q.drained.notify_all();
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -887,7 +1492,7 @@ fn worker_loop(q: Arc<DeviceQueue>, chunk_size: usize) {
         let job = {
             let mut st = q.state.lock().unwrap();
             loop {
-                if let Some(job) = st.jobs.pop_front() {
+                if let Some(job) = q.sched_pop(&mut st) {
                     break job;
                 }
                 if st.shutdown {
@@ -896,26 +1501,32 @@ fn worker_loop(q: Arc<DeviceQueue>, chunk_size: usize) {
                 st = q.available.wait(st).unwrap();
             }
         };
+        // A queue may just have emptied: wake streams parked at a
+        // preemption point so they re-check their yield predicate.
+        q.drained.notify_all();
         let queue_secs = job.submitted.elapsed().as_secs_f64();
         let t0 = Instant::now();
         let outcome = run_job(&q.device, job.op, job.enq_depth, chunk_size);
         let service_secs = t0.elapsed().as_secs_f64();
         {
             let mut stats = q.stats.lock().unwrap();
-            stats.queue_secs += queue_secs;
-            stats.service_secs += service_secs;
             match &outcome {
-                Ok((bytes, dir, _)) => {
-                    stats.completed += 1;
-                    match dir {
-                        Dir::Read => stats.bytes_read += bytes,
-                        Dir::Write => stats.bytes_written += bytes,
-                    }
-                }
-                Err(_) => {
-                    stats.completed += 1;
-                    stats.errors += 1;
-                }
+                Ok((bytes, dir, _)) => record_done(
+                    &mut stats,
+                    job.class,
+                    queue_secs,
+                    service_secs,
+                    Some((*bytes, *dir)),
+                    false,
+                ),
+                Err(_) => record_done(
+                    &mut stats,
+                    job.class,
+                    queue_secs,
+                    service_secs,
+                    None,
+                    true,
+                ),
             }
         }
         complete(
@@ -1024,36 +1635,57 @@ fn write_paced(
 /// first chunk, at the submit-time burst depth (`enq_depth`) or
 /// deeper.  The stream's submit-time queue membership is consumed by
 /// the first chunk's service (or released if no chunk arrives).
+/// Every `preempt_chunks` chunks the stream yields to queued
+/// higher-priority classes before re-claiming the device — the
+/// configurable preemption point that stops a large checkpoint from
+/// head-of-line-blocking ingest.
 fn write_stream_paced(
-    dev: &Arc<Device>,
+    q: &Arc<DeviceQueue>,
     path: &Path,
     rx: &Arc<ChunkQueue>,
     enq_depth: u32,
-) -> Result<u64> {
+    class: IoClass,
+    first_service: &mut Option<Instant>,
+) -> Result<u64, StreamFailure> {
     let mut first = true;
-    let result = write_stream_chunks(dev, path, rx, enq_depth, &mut first);
+    let result = write_stream_chunks(q, path, rx, enq_depth, &mut first,
+                                     class, first_service);
     if first {
         // No chunk ever claimed the submit-time queue membership.
-        dev.queue_leave();
+        q.device.queue_leave();
     }
     result
 }
 
+#[allow(clippy::too_many_arguments)]
 fn write_stream_chunks(
-    dev: &Arc<Device>,
+    q: &Arc<DeviceQueue>,
     path: &Path,
     rx: &Arc<ChunkQueue>,
     enq_depth: u32,
     first: &mut bool,
-) -> Result<u64> {
+    class: IoClass,
+    first_service: &mut Option<Instant>,
+) -> Result<u64, StreamFailure> {
+    let dev = &q.device;
+    let preempt = q.qos.preempt_chunks;
     let mut file = std::fs::File::create(path)
-        .with_context(|| format!("create {}", path.display()))?;
+        .with_context(|| format!("create {}", path.display()))
+        .map_err(|e| StreamFailure::new(e, false))?;
     let mut total = 0u64;
+    let mut chunk_idx = 0usize;
     while let Some(chunk) = rx.pop() {
-        let chunk = chunk.context("stream source failed")?;
+        let chunk = match chunk {
+            Ok(c) => c,
+            Err(fail) => return Err(fail.context("stream source failed")),
+        };
         if chunk.is_empty() {
             continue;
         }
+        if chunk_idx > 0 && preempt != 0 && chunk_idx % preempt == 0 {
+            q.yield_to_higher(class);
+        }
+        chunk_idx += 1;
         let depth = if *first {
             dev.service_begin(enq_depth)
         } else {
@@ -1061,6 +1693,9 @@ fn write_stream_chunks(
             dev.service_begin(enq)
         };
         if *first {
+            // The stream's queue phase ends here: the first chunk
+            // holds the device.
+            *first_service = Some(Instant::now());
             dev.latency_phase(Dir::Write, depth);
             *first = false;
         }
@@ -1072,7 +1707,7 @@ fn write_stream_chunks(
             dev.pace(Dir::Write, chunk.len() as u64, t0.elapsed().as_secs_f64());
         }
         dev.service_end();
-        io?;
+        io.map_err(|e| StreamFailure::new(e, false))?;
         total += chunk.len() as u64;
     }
     Ok(total)
@@ -1094,13 +1729,15 @@ fn unpaced_file_reader(path: PathBuf, tx: Arc<ChunkQueue>, chunk_size: usize) {
                 return Ok(());
             }
             buf.truncate(n);
-            if !tx.push(Ok(buf)) {
+            if !tx.push_data(buf) {
                 return Ok(()); // consumer aborted
             }
         }
     })();
     if let Err(e) = result {
-        tx.push(Err(e));
+        // Unpaced reads charge no device, so the error has no stats
+        // row of its own: the destination writer counts it.
+        tx.push_fail(e, false);
     }
     tx.close();
 }
@@ -1115,14 +1752,23 @@ fn copy_reader(
     tx: Arc<ChunkQueue>,
     chunk_size: usize,
     src_enq: u32,
+    class: IoClass,
+    submitted: Instant,
 ) {
     let dev = &q.device;
+    let preempt = q.qos.preempt_chunks;
     let mut first = true;
+    let mut first_service: Option<Instant> = None;
     let result = (|| -> Result<u64> {
         let mut file = std::fs::File::open(&path)
             .with_context(|| format!("read {}", path.display()))?;
         let mut total = 0u64;
+        let mut chunk_idx = 0usize;
         loop {
+            if chunk_idx > 0 && preempt != 0 && chunk_idx % preempt == 0 {
+                q.yield_to_higher(class);
+            }
+            chunk_idx += 1;
             let mut buf = vec![0u8; chunk_size];
             let depth = if first {
                 dev.service_begin(src_enq)
@@ -1131,6 +1777,7 @@ fn copy_reader(
                 dev.service_begin(enq)
             };
             if first {
+                first_service = Some(Instant::now());
                 dev.latency_phase(Dir::Read, depth);
                 first = false;
             }
@@ -1156,7 +1803,7 @@ fn copy_reader(
             }
             buf.truncate(n);
             total += n as u64;
-            if !tx.push(Ok(buf)) {
+            if !tx.push_data(buf) {
                 break; // consumer aborted
             }
         }
@@ -1167,24 +1814,44 @@ fn copy_reader(
         // consumed by a read.
         dev.queue_leave();
     }
+    // Queue = submit -> first chunk holding the device; the rest is
+    // service (mirrors the stream writer's accounting).
+    let t_end = Instant::now();
+    let (queue_secs, service_secs) = match first_service {
+        Some(ts) => (
+            ts.duration_since(submitted).as_secs_f64(),
+            t_end.duration_since(ts).as_secs_f64(),
+        ),
+        None => (t_end.duration_since(submitted).as_secs_f64(), 0.0),
+    };
+    q.stream_end(class);
+    // The read half is a request against the source device (its
+    // submission was recorded in submit_copy): account the completion
+    // — and on failure, charge the error HERE, exactly once, then
+    // hand the destination a `counted` failure so the write side
+    // fails its ticket without double-counting.
     match result {
         Ok(bytes) => {
-            // The read half is a request against the source device:
-            // account it so copy traffic shows up in stats().
-            let mut stats = q.stats.lock().unwrap();
-            stats.submitted += 1;
-            stats.completed += 1;
-            stats.bytes_read += bytes;
-            drop(stats);
+            record_done(
+                &mut q.stats.lock().unwrap(),
+                class,
+                queue_secs,
+                service_secs,
+                Some((bytes, Dir::Read)),
+                false,
+            );
             tx.close();
         }
         Err(e) => {
-            let mut stats = q.stats.lock().unwrap();
-            stats.submitted += 1;
-            stats.completed += 1;
-            stats.errors += 1;
-            drop(stats);
-            tx.push(Err(e));
+            record_done(
+                &mut q.stats.lock().unwrap(),
+                class,
+                queue_secs,
+                service_secs,
+                None,
+                true,
+            );
+            tx.push_fail(e, true);
             tx.close();
         }
     }
@@ -1212,6 +1879,14 @@ mod tests {
         models: Vec<DeviceModel>,
         chunk: usize,
     ) -> (IoEngine, HashMap<String, Arc<Device>>) {
+        engine_with_qos(models, chunk, QosConfig::default())
+    }
+
+    fn engine_with_qos(
+        models: Vec<DeviceModel>,
+        chunk: usize,
+        qos: QosConfig,
+    ) -> (IoEngine, HashMap<String, Arc<Device>>) {
         let mut devices = HashMap::new();
         for m in models {
             devices.insert(
@@ -1219,7 +1894,7 @@ mod tests {
                 Arc::new(Device::new(m, Arc::new(NullObserver))),
             );
         }
-        let engine = IoEngine::with_chunk_size(&devices, chunk);
+        let engine = IoEngine::with_config(&devices, chunk, qos);
         (engine, devices)
     }
 
@@ -1380,6 +2055,10 @@ mod tests {
         w.push(&[1u8; 100]).unwrap();
         drop(w); // no finish()
         assert!(t.wait().is_err());
+        // The abandoned stream is one failed request: one error.
+        let s = &eng.stats()[0];
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.class(IoClass::Checkpoint).errors, 1);
     }
 
     #[test]
@@ -1497,5 +2176,313 @@ mod tests {
         assert_eq!(devices["q"].queue_depth(), 0, "gate drained");
         let s = &eng.stats()[0];
         assert!(s.max_queue_depth >= 4, "stat depth {}", s.max_queue_depth);
+    }
+
+    // -- satellite: every failed request counts exactly one error ----
+
+    #[test]
+    fn copy_read_failure_counts_error_exactly_once() {
+        let (eng, _) = engine_with(
+            vec![model("a", 2, 1000.0), model("b", 2, 1000.0)],
+            8 * 1024,
+        );
+        let dir = scratch("copyerr");
+        let t = eng
+            .submit(IoRequest::Copy {
+                src_device: "a".into(),
+                src_path: dir.join("absent.bin"),
+                dst_device: "b".into(),
+                dst_path: dir.join("dst.bin"),
+            })
+            .unwrap();
+        assert!(t.wait().is_err());
+        let stats = eng.stats(); // sorted: a, b
+        let (a, b) = (&stats[0], &stats[1]);
+        // The failing read half charges the source device, once; the
+        // destination write half fails its ticket WITHOUT recounting.
+        assert_eq!(a.errors, 1, "src errors");
+        assert_eq!(b.errors, 0, "dst must not double-count");
+        assert_eq!(a.errors + b.errors, 1, "exactly once");
+        assert_eq!(a.submitted, 1);
+        assert_eq!(a.completed, 1);
+        assert_eq!(b.submitted, 1);
+        assert_eq!(b.completed, 1);
+        assert_eq!(a.class(IoClass::Drain).errors, 1);
+        assert_eq!(b.class(IoClass::Drain).errors, 0);
+    }
+
+    #[test]
+    fn warm_copy_read_failure_counts_on_destination() {
+        // write_from_file has no paced read half, so its source
+        // failure is charged to the destination — still exactly once.
+        let (eng, _) = engine_with(vec![model("d", 2, 1000.0)], 8 * 1024);
+        let dir = scratch("warmerr");
+        let t = eng
+            .write_from_file("d", dir.join("absent.bin"), dir.join("out.bin"))
+            .unwrap();
+        assert!(t.wait().is_err());
+        let s = &eng.stats()[0];
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.class(IoClass::Drain).errors, 1);
+    }
+
+    #[test]
+    fn failed_chunked_read_counts_error_once() {
+        let (eng, _) = engine_with(vec![model("d", 2, 1000.0)], 8 * 1024);
+        let dir = scratch("readerr");
+        let t = eng
+            .submit(IoRequest::ReadFile {
+                device: "d".into(),
+                path: dir.join("absent.bin"),
+            })
+            .unwrap();
+        assert!(t.wait().is_err());
+        let s = &eng.stats()[0];
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.class(IoClass::Ingest).errors, 1);
+    }
+
+    // -- satellite: queue depth tracked beyond submit-time samples ---
+
+    #[test]
+    fn max_depth_sees_copy_read_halves_and_is_monotone() {
+        // Three concurrent copies raise the SOURCE device's queue to 3
+        // at submit time, but no unit submit ever samples that side:
+        // the entry-side peak gauge must catch it.
+        let mut src = model("src", 1, 1.0);
+        src.read_lat = 0.002;
+        let (eng, devices) =
+            engine_with(vec![src, model("dst", 4, 1.0)], 8 * 1024);
+        let dir = scratch("depthcopy");
+        let file = dir.join("s.bin");
+        std::fs::write(&file, vec![3u8; 8 * 1024]).unwrap();
+        let tickets: Vec<_> = (0..3)
+            .map(|i| {
+                eng.submit(IoRequest::Copy {
+                    src_device: "src".into(),
+                    src_path: file.clone(),
+                    dst_device: "dst".into(),
+                    dst_path: dir.join(format!("d{i}.bin")),
+                })
+                .unwrap()
+            })
+            .collect();
+        // Mid-flight snapshot, then settle.
+        let mid = eng.stats();
+        let mid_src = mid.iter().find(|s| s.device == "src").unwrap().clone();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let fin = eng.stats();
+        let fin_src = fin.iter().find(|s| s.device == "src").unwrap();
+        // All three memberships were taken synchronously at submit.
+        assert!(
+            fin_src.max_queue_depth >= 3,
+            "src depth {} missed the copy read halves",
+            fin_src.max_queue_depth
+        );
+        // Monotone across snapshots, and never below the live gate.
+        assert!(fin_src.max_queue_depth >= mid_src.max_queue_depth);
+        assert!(fin_src.max_queue_depth >= devices["src"].queue_depth());
+    }
+
+    // -- tentpole: per-class stats + DRR isolation -------------------
+
+    #[test]
+    fn per_class_stats_tag_rows_by_class() {
+        let (eng, _) = engine_with(vec![model("d", 4, 1000.0)], 8 * 1024);
+        eng.submit(IoRequest::ProbeRead { device: "d".into(), bytes: 1000 })
+            .unwrap()
+            .wait()
+            .unwrap();
+        eng.submit(IoRequest::ProbeWrite { device: "d".into(), bytes: 2000 })
+            .unwrap()
+            .wait()
+            .unwrap();
+        eng.submit_class(
+            IoRequest::ProbeRead { device: "d".into(), bytes: 3000 },
+            IoClass::Background,
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+        let s = &eng.stats()[0];
+        assert_eq!(s.class(IoClass::Ingest).completed, 1);
+        assert_eq!(s.class(IoClass::Ingest).bytes_read, 1000);
+        assert_eq!(s.class(IoClass::Checkpoint).completed, 1);
+        assert_eq!(s.class(IoClass::Checkpoint).bytes_written, 2000);
+        assert_eq!(s.class(IoClass::Background).completed, 1);
+        assert_eq!(s.class(IoClass::Background).bytes_read, 3000);
+        assert_eq!(s.class(IoClass::Drain).completed, 0);
+        // Aggregates are the sum of the class rows.
+        let sum: u64 = IoClass::ALL.iter().map(|c| s.class(*c).completed).sum();
+        assert_eq!(s.completed, sum);
+        assert_eq!(s.class(IoClass::Ingest).queue_hist.count(), 1);
+    }
+
+    /// Mixed checkpoint+ingest load; returns (ingest p99 queue secs,
+    /// checkpoint makespan secs).
+    fn isolation_run(qos: QosConfig) -> (f64, f64) {
+        // 1-channel 50 MB/s device: each 250 KB checkpoint write is
+        // ~5 ms of modelled service, each 50 KB ingest read ~1 ms.
+        let mut m = model("d", 1, 1.0);
+        m.read_bw = 50e6;
+        m.write_bw = 50e6;
+        let (eng, _) = engine_with_qos(vec![m], 64 * 1024, qos);
+        let t0 = Instant::now();
+        let writes: Vec<_> = (0..10)
+            .map(|_| {
+                eng.submit(IoRequest::ProbeWrite {
+                    device: "d".into(),
+                    bytes: 250_000,
+                })
+                .unwrap()
+            })
+            .collect();
+        let reads: Vec<_> = (0..4)
+            .map(|_| {
+                eng.submit(IoRequest::ProbeRead {
+                    device: "d".into(),
+                    bytes: 50_000,
+                })
+                .unwrap()
+            })
+            .collect();
+        for t in writes {
+            t.wait().unwrap();
+        }
+        let ckpt_makespan = t0.elapsed().as_secs_f64();
+        for t in reads {
+            t.wait().unwrap();
+        }
+        let s = &eng.stats()[0];
+        assert_eq!(s.class(IoClass::Ingest).completed, 4);
+        assert_eq!(s.class(IoClass::Checkpoint).completed, 10);
+        (s.class(IoClass::Ingest).p99_queue_secs(), ckpt_makespan)
+    }
+
+    #[test]
+    fn drr_halves_ingest_tail_latency_under_checkpoint_backlog() {
+        // FIFO: ingest reads submitted behind a 50 ms checkpoint
+        // backlog wait for all of it.  DRR: they are served after the
+        // in-flight write, ~an order of magnitude earlier — the §V
+        // interference the QoS layer exists to remove.
+        let (fifo_p99, fifo_makespan) = isolation_run(QosConfig::fifo());
+        let (drr_p99, drr_makespan) = isolation_run(QosConfig::default());
+        assert!(
+            drr_p99 <= 0.5 * fifo_p99,
+            "ingest p99 {:.1} ms !<= 0.5 * fifo {:.1} ms",
+            drr_p99 * 1e3,
+            fifo_p99 * 1e3
+        );
+        // Work conservation: prioritizing ~4 ms of reads costs the
+        // checkpoint stream at most that plus noise.
+        assert!(
+            drr_makespan <= 1.25 * fifo_makespan,
+            "checkpoint makespan {:.1} ms degraded past 25% vs {:.1} ms",
+            drr_makespan * 1e3,
+            fifo_makespan * 1e3
+        );
+    }
+
+    #[test]
+    fn background_still_completes_under_ingest_flood() {
+        // 12 x 4 ms ingest reads saturate the single channel; DRR's
+        // per-round quantum still serves the background probe within a
+        // couple of rounds instead of after the whole flood.
+        let mut m = model("d", 1, 1.0);
+        m.read_bw = 50e6;
+        let (eng, _) = engine_with_qos(vec![m], 8 * 1024, QosConfig::default());
+        let reads: Vec<_> = (0..12)
+            .map(|_| {
+                eng.submit(IoRequest::ProbeRead {
+                    device: "d".into(),
+                    bytes: 200_000,
+                })
+                .unwrap()
+            })
+            .collect();
+        let bg = eng
+            .submit_class(
+                IoRequest::ProbeRead { device: "d".into(), bytes: 10_000 },
+                IoClass::Background,
+            )
+            .unwrap();
+        bg.wait().unwrap();
+        for t in reads {
+            t.wait().unwrap();
+        }
+        let s = &eng.stats()[0];
+        assert_eq!(s.class(IoClass::Background).completed, 1);
+        assert_eq!(s.class(IoClass::Background).errors, 0);
+        // Served mid-flood, not starved until the end of it.
+        let bg_wait = s.class(IoClass::Background).mean_queue_secs();
+        let ingest_tail = s.class(IoClass::Ingest).p99_queue_secs();
+        assert!(
+            bg_wait <= 0.6 * ingest_tail,
+            "background waited {:.1} ms vs ingest tail {:.1} ms — starved",
+            bg_wait * 1e3,
+            ingest_tail * 1e3
+        );
+    }
+
+    #[test]
+    fn checkpoint_stream_yields_to_ingest_at_chunk_boundaries() {
+        // 1-channel 20 MB/s device, 64 KB chunks (~3.2 ms each): a
+        // 24-chunk checkpoint stream with preemption every 2 chunks
+        // must let 3 ingest reads through long before it finishes.
+        let mut m = model("d", 1, 1.0);
+        m.read_bw = 20e6;
+        m.write_bw = 20e6;
+        let qos = QosConfig {
+            preempt_chunks: 2,
+            max_yield_wait: 0.5,
+            ..QosConfig::default()
+        };
+        let (eng, _) = engine_with_qos(vec![m], 64 * 1024, qos);
+        let dir = scratch("yield");
+        let (mut w, stream_ticket) =
+            eng.write_stream("d", dir.join("ck.data")).unwrap();
+        let piece = vec![9u8; 64 * 1024];
+        for _ in 0..6 {
+            w.push(&piece).unwrap();
+        }
+        // Stream is mid-flight (the window bounds how far ahead the
+        // producer can run): ingest arrives now.
+        let reads: Vec<_> = (0..3)
+            .map(|_| {
+                eng.submit(IoRequest::ProbeRead {
+                    device: "d".into(),
+                    bytes: 64 * 1024,
+                })
+                .unwrap()
+            })
+            .collect();
+        for _ in 6..24 {
+            w.push(&piece).unwrap();
+        }
+        w.finish().unwrap();
+        // The producer only finishes pushing once the consumer has
+        // drained most of the stream — by which point the preemption
+        // points must have let every read through.
+        for t in &reads {
+            assert!(t.ready(), "ingest read still queued behind the stream");
+        }
+        assert!(
+            !stream_ticket.ready(),
+            "stream finished before its tail chunks — can't witness yields"
+        );
+        let c = stream_ticket.wait().unwrap();
+        assert_eq!(c.bytes, 24 * 64 * 1024);
+        let s = &eng.stats()[0];
+        // Reads cut in at a chunk boundary: their tail wait is a small
+        // fraction of the stream's total service time.
+        assert!(
+            s.class(IoClass::Ingest).p99_queue_secs() <= 0.5 * c.service_secs,
+            "ingest p99 {:.1} ms vs stream service {:.1} ms",
+            s.class(IoClass::Ingest).p99_queue_secs() * 1e3,
+            c.service_secs * 1e3
+        );
     }
 }

@@ -14,7 +14,8 @@ pub mod sim;
 
 pub use device::{Device, DeviceModel, Dir, IoObserver, NullObserver};
 pub use engine::{
-    ChunkWriter, EngineDeviceStats, IoCompletion, IoEngine, IoRequest, IoTicket,
+    ChunkWriter, ClassStats, EngineDeviceStats, IoClass, IoCompletion,
+    IoEngine, IoRequest, IoTicket, QosConfig,
 };
 pub use page_cache::PageCache;
 pub use sim::{PendingRead, PendingWrite, SimPath, StorageSim};

@@ -52,10 +52,22 @@ impl PageCache {
         let mut st = self.state.lock().unwrap();
         st.tick += 1;
         let tick = st.tick;
-        if let Some(e) = st.entries.get_mut(path) {
-            e.1 = tick;
-            st.hits += 1;
-            return true;
+        let cached_size = st.entries.get(path).map(|&(b, _)| b);
+        match cached_size {
+            Some(b) if b == bytes => {
+                st.entries.get_mut(path).expect("entry present").1 = tick;
+                st.hits += 1;
+                return true;
+            }
+            Some(b) => {
+                // Size changed under us (the file was overwritten via
+                // a path that bypassed invalidation): the cached entry
+                // is stale — drop it and treat this access as a miss,
+                // so accounting can never carry a phantom size.
+                st.entries.remove(path);
+                st.total -= b;
+            }
+            None => {}
         }
         st.misses += 1;
         // Insert (files larger than the cache are not cached).
@@ -151,6 +163,18 @@ mod tests {
         c.drop_all();
         assert_eq!(c.resident_bytes(), 0);
         assert!(!c.access("a", 10));
+    }
+
+    #[test]
+    fn size_change_is_a_miss_and_reconciles_accounting() {
+        let c = PageCache::new(1 << 20);
+        assert!(!c.access("a", 100));
+        assert!(c.access("a", 100));
+        // The file was overwritten with a different size: stale entry
+        // must not hit, and the accounting must follow the new size.
+        assert!(!c.access("a", 60));
+        assert_eq!(c.resident_bytes(), 60);
+        assert!(c.access("a", 60));
     }
 
     #[test]

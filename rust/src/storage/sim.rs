@@ -17,12 +17,14 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
 use super::device::{Device, DeviceModel, IoObserver, NullObserver};
-use super::engine::{ChunkWriter, IoEngine, IoRequest, IoTicket};
+use super::engine::{
+    ChunkWriter, IoClass, IoEngine, IoRequest, IoTicket, QosConfig,
+};
 use super::page_cache::PageCache;
 
 /// A path on a simulated device: `(device, relative path)`.
@@ -63,6 +65,14 @@ pub struct StorageSim {
     devices: HashMap<String, Arc<Device>>,
     engine: IoEngine,
     cache: PageCache,
+    /// Cache keys with engine writes/copies in flight (count per key).
+    /// While a key is dirty, reads bypass the page cache entirely —
+    /// without this, a read during an overwrite would re-insert the
+    /// key on its miss and the NEXT read would be served warm from the
+    /// stale/partial backing file.  `finish_write` (or the blocking
+    /// copy, or a dropped `PendingWrite`) releases the count; the
+    /// cache only re-learns the file once the key is fully clean.
+    dirty: DirtyMap,
 }
 
 /// An in-flight (or cache-served) read; resolve with
@@ -95,11 +105,68 @@ impl PendingRead {
     }
 }
 
+/// Keys with engine overwrites in flight (count per key), shared with
+/// every [`PendingWrite`] so abandoning one still releases its mark.
+type DirtyMap = Arc<Mutex<HashMap<String, u32>>>;
+
+/// Decrement `key`'s in-flight-overwrite count; returns `true` when
+/// no overwrites remain (only then may the cache re-learn the file).
+fn release_dirty(dirty: &DirtyMap, key: &str) -> bool {
+    let mut d = dirty.lock().unwrap();
+    match d.get_mut(key) {
+        Some(n) if *n > 1 => {
+            *n -= 1;
+            false
+        }
+        Some(_) => {
+            d.remove(key);
+            true
+        }
+        // Untracked: treat as clean.
+        None => true,
+    }
+}
+
 /// An in-flight write; resolve with [`StorageSim::finish_write`] so
 /// the page cache learns about the written file.
 pub struct PendingWrite {
-    ticket: IoTicket,
+    ticket: Option<IoTicket>,
     cache_key: String,
+    dirty: DirtyMap,
+    released: bool,
+}
+
+impl PendingWrite {
+    fn new(ticket: IoTicket, cache_key: String, dirty: &DirtyMap)
+        -> PendingWrite
+    {
+        PendingWrite {
+            ticket: Some(ticket),
+            cache_key,
+            dirty: Arc::clone(dirty),
+            released: false,
+        }
+    }
+
+    /// Release this write's dirty mark (once); `true` = key now clean.
+    fn release(&mut self) -> bool {
+        if self.released {
+            return false;
+        }
+        self.released = true;
+        release_dirty(&self.dirty, &self.cache_key)
+    }
+}
+
+impl Drop for PendingWrite {
+    fn drop(&mut self) {
+        // Abandoned without finish_write (an error-path `?` in the
+        // caller): lift the mark so the key is not uncacheable
+        // forever.  The write may still be in flight, but a read that
+        // then caches a partial file self-corrects via the page
+        // cache's stale-size reconciliation on the next access.
+        self.release();
+    }
 }
 
 impl StorageSim {
@@ -111,6 +178,19 @@ impl StorageSim {
         cache_capacity: u64,
         observer: Arc<dyn IoObserver>,
     ) -> Result<Self> {
+        Self::with_qos(root, models, cache_capacity, observer,
+                       QosConfig::default())
+    }
+
+    /// Create a sim with an explicit engine scheduler config (FIFO
+    /// baseline vs weighted DRR; see [`QosConfig`]).
+    pub fn with_qos(
+        root: impl Into<PathBuf>,
+        models: Vec<DeviceModel>,
+        cache_capacity: u64,
+        observer: Arc<dyn IoObserver>,
+        qos: QosConfig,
+    ) -> Result<Self> {
         let root = root.into();
         let mut devices = HashMap::new();
         for m in models {
@@ -121,18 +201,32 @@ impl StorageSim {
                 Arc::new(Device::new(m, Arc::clone(&observer))),
             );
         }
-        let engine = IoEngine::new(&devices);
+        let engine = IoEngine::with_config(
+            &devices,
+            super::engine::DEFAULT_CHUNK,
+            qos,
+        );
         Ok(StorageSim {
             root,
             devices,
             engine,
             cache: PageCache::new(cache_capacity),
+            dirty: Arc::new(Mutex::new(HashMap::new())),
         })
     }
 
     /// Convenience: no tracing, no cache.
     pub fn cold(root: impl Into<PathBuf>, models: Vec<DeviceModel>) -> Result<Self> {
         Self::new(root, models, 0, Arc::new(NullObserver))
+    }
+
+    /// Convenience: no tracing, no cache, explicit scheduler config.
+    pub fn cold_with_qos(
+        root: impl Into<PathBuf>,
+        models: Vec<DeviceModel>,
+        qos: QosConfig,
+    ) -> Result<Self> {
+        Self::with_qos(root, models, 0, Arc::new(NullObserver), qos)
     }
 
     pub fn device(&self, name: &str) -> Result<&Arc<Device>> {
@@ -156,6 +250,17 @@ impl StorageSim {
         &self.cache
     }
 
+    /// Mark `key` as having an overwrite in flight (and drop any
+    /// cached entry for it).
+    fn mark_dirty(&self, key: &str) {
+        *self.dirty.lock().unwrap().entry(key.to_string()).or_insert(0) += 1;
+        self.cache.invalidate(key);
+    }
+
+    fn is_dirty(&self, key: &str) -> bool {
+        self.dirty.lock().unwrap().contains_key(key)
+    }
+
     /// The request-level I/O engine scheduling this sim's devices.
     pub fn engine(&self) -> &IoEngine {
         &self.engine
@@ -168,26 +273,39 @@ impl StorageSim {
         self.read_async(p)?.wait()
     }
 
-    /// Submit a read; returns immediately with a [`PendingRead`].
+    /// Submit a read under [`IoClass::Ingest`] (the dataset-source
+    /// default); returns immediately with a [`PendingRead`].
     /// The cache is consulted (and populated on a miss) at submit
     /// time, matching the blocking path's semantics.
     pub fn read_async(&self, p: &SimPath) -> Result<PendingRead> {
+        self.read_async_class(p, IoClass::Ingest)
+    }
+
+    /// Submit a read under an explicit traffic class.
+    pub fn read_async_class(
+        &self,
+        p: &SimPath,
+        class: IoClass,
+    ) -> Result<PendingRead> {
         let _ = self.device(&p.device)?;
         let path = self.backing_path(p);
         let size = std::fs::metadata(&path)
             .with_context(|| format!("stat {p}"))?
             .len();
         let key = p.to_string();
-        if self.cache.access(&key, size) {
+        // A key with an overwrite in flight bypasses the cache both
+        // ways: no stale hit, and no miss-insert that would let the
+        // NEXT read hit stale.
+        if !self.is_dirty(&key) && self.cache.access(&key, size) {
             // Warm: served from memory, no device charge.
             let data =
                 std::fs::read(&path).with_context(|| format!("read {p}"))?;
             return Ok(PendingRead::Ready(data));
         }
-        let ticket = self.engine.submit(IoRequest::ReadFile {
-            device: p.device.clone(),
-            path,
-        })?;
+        // The stat above already sized the file: pass it through so
+        // the engine's DRR cost doesn't re-stat on the hot path.
+        let ticket =
+            self.engine.submit_read_sized(&p.device, path, size, class)?;
         Ok(PendingRead::InFlight(ticket))
     }
 
@@ -195,7 +313,17 @@ impl StorageSim {
     /// Streams the borrowed payload through the engine in bounded
     /// chunks — no payload-sized intermediate buffer.
     pub fn write(&self, p: &SimPath, data: &[u8]) -> Result<()> {
-        let (mut writer, pending) = self.write_stream(p)?;
+        self.write_class(p, data, IoClass::Checkpoint)
+    }
+
+    /// Blocking whole-file write under an explicit class.
+    pub fn write_class(
+        &self,
+        p: &SimPath,
+        data: &[u8],
+        class: IoClass,
+    ) -> Result<()> {
+        let (mut writer, pending) = self.write_stream_class(p, class)?;
         writer.push(data)?;
         writer.finish()?;
         self.finish_write(pending)?;
@@ -205,17 +333,38 @@ impl StorageSim {
     /// Submit a whole-buffer write; returns immediately.  Resolve with
     /// [`finish_write`](Self::finish_write).
     pub fn write_async(&self, p: &SimPath, data: Vec<u8>) -> Result<PendingWrite> {
+        self.write_async_class(p, data, IoClass::Checkpoint)
+    }
+
+    /// [`write_async`](Self::write_async) under an explicit class.
+    pub fn write_async_class(
+        &self,
+        p: &SimPath,
+        data: Vec<u8>,
+        class: IoClass,
+    ) -> Result<PendingWrite> {
         let _ = self.device(&p.device)?;
         let path = self.backing_path(p);
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
-        let ticket = self.engine.submit(IoRequest::WriteFile {
-            device: p.device.clone(),
-            path,
-            data,
-        })?;
-        Ok(PendingWrite { ticket, cache_key: p.to_string() })
+        // The overwrite is in flight from this point: a cached entry
+        // for the old contents must not serve (stale-size accounting,
+        // torn mid-overwrite reads).  finish_write re-inserts the new
+        // file once it is durable.
+        let key = p.to_string();
+        self.mark_dirty(&key);
+        let ticket = match self.engine.submit_class(
+            IoRequest::WriteFile { device: p.device.clone(), path, data },
+            class,
+        ) {
+            Ok(t) => t,
+            Err(e) => {
+                release_dirty(&self.dirty, &key);
+                return Err(e);
+            }
+        };
+        Ok(PendingWrite::new(ticket, key, &self.dirty))
     }
 
     /// Submit several whole-buffer writes through one engine doorbell:
@@ -226,6 +375,17 @@ impl StorageSim {
         &self,
         writes: Vec<(&SimPath, Vec<u8>)>,
     ) -> Result<Vec<PendingWrite>> {
+        self.write_batch_async_class(writes, IoClass::Checkpoint)
+    }
+
+    /// One-doorbell batch of writes under an explicit class.
+    pub fn write_batch_async_class(
+        &self,
+        writes: Vec<(&SimPath, Vec<u8>)>,
+        class: IoClass,
+    ) -> Result<Vec<PendingWrite>> {
+        // Build (and run every fallible per-item step) BEFORE marking
+        // anything dirty, so an early `?` cannot leak a mark.
         let mut reqs = Vec::with_capacity(writes.len());
         let mut keys = Vec::with_capacity(writes.len());
         for (p, data) in writes {
@@ -241,11 +401,23 @@ impl StorageSim {
                 data,
             });
         }
-        let tickets = self.engine.submit_batch(reqs)?;
+        // Overwrites in flight: stale cache entries must not serve.
+        for key in &keys {
+            self.mark_dirty(key);
+        }
+        let tickets = match self.engine.submit_batch_class(reqs, class) {
+            Ok(t) => t,
+            Err(e) => {
+                for key in &keys {
+                    release_dirty(&self.dirty, key);
+                }
+                return Err(e);
+            }
+        };
         Ok(tickets
             .into_iter()
             .zip(keys)
-            .map(|(ticket, cache_key)| PendingWrite { ticket, cache_key })
+            .map(|(ticket, key)| PendingWrite::new(ticket, key, &self.dirty))
             .collect())
     }
 
@@ -253,18 +425,50 @@ impl StorageSim {
     /// the returned [`ChunkWriter`], `finish()` it, then resolve the
     /// [`PendingWrite`].
     pub fn write_stream(&self, p: &SimPath) -> Result<(ChunkWriter, PendingWrite)> {
+        self.write_stream_class(p, IoClass::Checkpoint)
+    }
+
+    /// Streaming write under an explicit class.
+    pub fn write_stream_class(
+        &self,
+        p: &SimPath,
+        class: IoClass,
+    ) -> Result<(ChunkWriter, PendingWrite)> {
         let _ = self.device(&p.device)?;
         let path = self.backing_path(p);
-        let (writer, ticket) = self.engine.write_stream(&p.device, path)?;
-        Ok((writer, PendingWrite { ticket, cache_key: p.to_string() }))
+        // The stream truncates the backing file as soon as its worker
+        // thread starts: any cached copy of the old contents is stale
+        // from here on, so mark before the engine call (and release
+        // the mark if that call never opened a stream).
+        let key = p.to_string();
+        self.mark_dirty(&key);
+        let (writer, ticket) =
+            match self.engine.write_stream_class(&p.device, path, class) {
+                Ok(pair) => pair,
+                Err(e) => {
+                    release_dirty(&self.dirty, &key);
+                    return Err(e);
+                }
+            };
+        Ok((writer, PendingWrite::new(ticket, key, &self.dirty)))
     }
 
     /// Wait for a submitted write and record it in the page cache
     /// (ext4 journaling behaviour the paper describes in §V-C).
     /// Returns the bytes written.
-    pub fn finish_write(&self, pending: PendingWrite) -> Result<u64> {
-        let c = pending.ticket.wait()?;
-        self.cache.access(&pending.cache_key, c.bytes);
+    pub fn finish_write(&self, mut pending: PendingWrite) -> Result<u64> {
+        let ticket = pending
+            .ticket
+            .take()
+            .expect("PendingWrite resolved exactly once");
+        let result = ticket.wait();
+        // Lift the in-flight-overwrite mark whatever the outcome — a
+        // failed write leaves the key uncached, not stuck dirty.
+        let clean = pending.release();
+        let c = result?;
+        if clean {
+            self.cache.access(&pending.cache_key, c.bytes);
+        }
         Ok(c.bytes)
     }
 
@@ -273,38 +477,83 @@ impl StorageSim {
     /// pipelined by the engine: peak memory is bounded by the stream
     /// window, and the source read overlaps the destination write.
     pub fn copy(&self, src: &SimPath, dst: &SimPath) -> Result<u64> {
-        let ticket = self.copy_async(src, dst)?;
-        let c = ticket.wait()?;
-        self.cache.access(&dst.to_string(), c.bytes);
-        Ok(c.bytes)
+        self.copy_class(src, dst, IoClass::Drain)
+    }
+
+    /// Blocking copy under an explicit class.
+    pub fn copy_class(
+        &self,
+        src: &SimPath,
+        dst: &SimPath,
+        class: IoClass,
+    ) -> Result<u64> {
+        let pending = self.copy_async_class(src, dst, class)?;
+        self.finish_write(pending)
     }
 
     /// Submit a chunked cross-device copy; returns immediately.
     /// As with [`read_async`](Self::read_async), a page-cache hit on
     /// the source serves the read from memory (only the destination
     /// write is charged), matching the blocking path's old semantics.
-    pub fn copy_async(&self, src: &SimPath, dst: &SimPath) -> Result<IoTicket> {
+    /// Resolve with [`finish_write`](Self::finish_write) — a copy is a
+    /// write to its destination, and the returned [`PendingWrite`]
+    /// carries the destination's in-flight-overwrite mark (released
+    /// on resolve or drop, never leaked).
+    pub fn copy_async(&self, src: &SimPath, dst: &SimPath)
+        -> Result<PendingWrite>
+    {
+        self.copy_async_class(src, dst, IoClass::Drain)
+    }
+
+    /// Asynchronous copy under an explicit class (the burst buffer
+    /// drains as [`IoClass::Drain`]).
+    pub fn copy_async_class(
+        &self,
+        src: &SimPath,
+        dst: &SimPath,
+        class: IoClass,
+    ) -> Result<PendingWrite> {
         let _ = self.device(&src.device)?;
         let _ = self.device(&dst.device)?;
         let src_path = self.backing_path(src);
         let size = std::fs::metadata(&src_path)
             .with_context(|| format!("stat {src}"))?
             .len();
-        if self.cache.access(&src.to_string(), size) {
+        // The destination is being overwritten: drop any stale cache
+        // entry and keep it uncacheable until the copy resolves
+        // (finish_write, or the PendingWrite's drop, releases the
+        // mark).  A failed submission releases it here.
+        let dst_key = dst.to_string();
+        self.mark_dirty(&dst_key);
+        let submitted = if !self.is_dirty(&src.to_string())
+            && self.cache.access(&src.to_string(), size)
+        {
             // Warm source: no device charge for the read half; the
             // write still streams in bounded chunks.
-            return self.engine.write_from_file(
+            self.engine.write_from_file_class(
                 &dst.device,
                 src_path,
                 self.backing_path(dst),
-            );
+                class,
+            )
+        } else {
+            self.engine.submit_class(
+                IoRequest::Copy {
+                    src_device: src.device.clone(),
+                    src_path,
+                    dst_device: dst.device.clone(),
+                    dst_path: self.backing_path(dst),
+                },
+                class,
+            )
+        };
+        match submitted {
+            Ok(ticket) => Ok(PendingWrite::new(ticket, dst_key, &self.dirty)),
+            Err(e) => {
+                release_dirty(&self.dirty, &dst_key);
+                Err(e)
+            }
         }
-        self.engine.submit(IoRequest::Copy {
-            src_device: src.device.clone(),
-            src_path,
-            dst_device: dst.device.clone(),
-            dst_path: self.backing_path(dst),
-        })
     }
 
     /// Remove a file (checkpoint retention cleanup).
@@ -596,6 +845,116 @@ mod tests {
             "peak {} exceeds bound {bound}",
             s.engine().peak_stream_bytes()
         );
+    }
+
+    #[test]
+    fn engine_overwrite_invalidates_page_cache() {
+        // Satellite regression: legacy StorageSim paths invalidated on
+        // remove, but engine write/copy overwrites left stale entries
+        // (stale size accounting; torn reads during the overwrite).
+        let dir = std::env::temp_dir()
+            .join(format!("dlio-sim-inval-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = StorageSim::new(
+            dir,
+            vec![fast_model("ssd")],
+            1 << 30, // warm cache
+            Arc::new(crate::storage::device::NullObserver),
+        )
+        .unwrap();
+        let p = SimPath::new("ssd", "ck.bin");
+        s.write(&p, &vec![1u8; 100]).unwrap();
+        // Cached: a read is served without the device.
+        assert!(matches!(s.read_async(&p).unwrap(), PendingRead::Ready(_)));
+        assert_eq!(s.cache().resident_bytes(), 100);
+        // Overwrite through the engine with a different size: the
+        // cache must track the new file, not the stale 100 bytes.
+        let payload = vec![2u8; 50_000];
+        s.write(&p, &payload).unwrap();
+        assert_eq!(s.cache().resident_bytes(), 50_000, "stale cached size");
+        assert_eq!(s.read(&p).unwrap(), payload);
+        // Copy overwrites invalidate the destination too.
+        let src = SimPath::new("ssd", "src.bin");
+        s.write(&src, &vec![3u8; 256]).unwrap();
+        s.copy(&src, &p).unwrap();
+        assert_eq!(s.read(&p).unwrap(), vec![3u8; 256]);
+        // src (256) + freshly re-inserted dst (256): the 50 KB entry
+        // was dropped when the copy overwrote it.
+        assert_eq!(s.cache().resident_bytes(), 512);
+    }
+
+    #[test]
+    fn in_flight_stream_overwrite_is_not_served_from_cache() {
+        let dir = std::env::temp_dir()
+            .join(format!("dlio-sim-torn-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = StorageSim::new(
+            dir,
+            vec![fast_model("ssd")],
+            1 << 30,
+            Arc::new(crate::storage::device::NullObserver),
+        )
+        .unwrap();
+        let p = SimPath::new("ssd", "x.bin");
+        s.write(&p, &vec![7u8; 4096]).unwrap();
+        assert!(matches!(s.read_async(&p).unwrap(), PendingRead::Ready(_)));
+        // Open a streaming overwrite (truncates the backing file) and
+        // read while it is in flight: the cache MUST NOT serve the old
+        // entry — the read has to go through the engine.
+        let (mut w, pending) = s.write_stream(&p).unwrap();
+        w.push(&[8u8; 10]).unwrap();
+        let pr = s.read_async(&p).unwrap();
+        assert!(
+            matches!(pr, PendingRead::InFlight(_)),
+            "cache served a file with an overwrite in flight"
+        );
+        // The first read's miss must NOT have re-inserted the key: a
+        // second read during the overwrite is also forced through the
+        // engine (the reader-repopulation hole).
+        let pr2 = s.read_async(&p).unwrap();
+        assert!(
+            matches!(pr2, PendingRead::InFlight(_)),
+            "first miss re-cached a dirty key; second read served stale"
+        );
+        w.finish().unwrap();
+        s.finish_write(pending).unwrap();
+        let _ = pr.wait(); // whatever it raced to see; must not hang
+        let _ = pr2.wait();
+        assert_eq!(s.read(&p).unwrap(), vec![8u8; 10]);
+    }
+
+    #[test]
+    fn abandoned_pending_write_releases_dirty_mark() {
+        // Dropping a PendingWrite without finish_write (an error-path
+        // `?` in a caller) must not leave the key dirty forever —
+        // later, properly-finished writes must make it cacheable
+        // again.
+        let dir = std::env::temp_dir()
+            .join(format!("dlio-sim-abandon-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut m = fast_model("one");
+        m.channels = 1; // single worker: probe below is a barrier
+        let s = StorageSim::new(
+            dir,
+            vec![m],
+            1 << 30,
+            Arc::new(crate::storage::device::NullObserver),
+        )
+        .unwrap();
+        let p = SimPath::new("one", "x.bin");
+        s.write(&p, &vec![1u8; 100]).unwrap();
+        let pending = s.write_async(&p, vec![2u8; 50]).unwrap();
+        drop(pending); // abandoned, write still in flight
+        // Same-class FIFO on the single worker: once the probe is
+        // done, the abandoned write has fully landed.
+        s.probe_write("one", 1).unwrap();
+        s.write(&p, &vec![3u8; 77]).unwrap();
+        // The key is clean again: cached and served warm.
+        assert!(
+            matches!(s.read_async(&p).unwrap(), PendingRead::Ready(_)),
+            "abandoned write left the key permanently uncacheable"
+        );
+        assert_eq!(s.read(&p).unwrap(), vec![3u8; 77]);
     }
 
     #[test]
