@@ -279,6 +279,33 @@ impl Args {
         }
     }
 
+    /// Comma-separated list option: `--modes fifo,static` →
+    /// `Some(["fifo", "static"])`; `None` when absent.  Empty items
+    /// (trailing commas) are dropped.
+    pub fn get_list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key).map(|v| {
+            v.split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect()
+        })
+    }
+
+    /// Comma-separated usize list: `--shards 1,2,4`.
+    pub fn get_usize_list(
+        &self,
+        key: &str,
+        default: &[usize],
+    ) -> Result<Vec<usize>> {
+        match self.get_list(key) {
+            None => Ok(default.to_vec()),
+            Some(items) => items
+                .iter()
+                .map(|s| s.parse().map_err(|e| anyhow!("--{key}: {e}")))
+                .collect(),
+        }
+    }
+
     pub fn has_flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
@@ -302,6 +329,22 @@ mod tests {
         assert_eq!(a.get_usize("threads", 1).unwrap(), 8);
         assert_eq!(a.get_usize("missing", 3).unwrap(), 3);
         assert!(a.get_usize("device", 1).is_err());
+    }
+
+    #[test]
+    fn args_parse_lists() {
+        let a = Args::parse(
+            ["sweep", "--modes", "fifo, static,", "--shards", "1,2,4"]
+                .into_iter()
+                .map(String::from),
+        );
+        assert_eq!(
+            a.get_list("modes").unwrap(),
+            vec!["fifo".to_string(), "static".to_string()]
+        );
+        assert_eq!(a.get_usize_list("shards", &[8]).unwrap(), vec![1, 2, 4]);
+        assert_eq!(a.get_usize_list("missing", &[8]).unwrap(), vec![8]);
+        assert!(a.get_usize_list("modes", &[1]).is_err());
     }
 
     #[test]

@@ -1,0 +1,442 @@
+//! `dlio qos-sweep` — the adaptive-QoS characterization driver.
+//!
+//! Runs a matrix of (scheduler mode × checkpoint interval × reader
+//! shards) cells over the microbench-style ingest workload with
+//! periodic checkpoint bursts, and reports each cell's per-class
+//! queue-depth/latency numbers straight from `EngineDeviceStats` —
+//! the Fig. 4/8-style curves (per-class time-resolved I/O, as
+//! tf-Darshan plots them) that EXPERIMENTS.md used to describe as a
+//! hand-run recipe.
+//!
+//! Every cell is self-contained: a fresh sim (fresh scheduler state)
+//! over a shared on-disk corpus, `IoEngine::reset_stats` bracketing
+//! the measured phase so fixture setup never pollutes the curves.
+//! Output is one CSV/JSON row per cell.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::Testbed;
+use crate::data::manifest::Sample;
+use crate::pipeline::{sharded_reader, Dataset};
+use crate::storage::{
+    ClassStats, IoClass, IoRequest, IoTicket, QosConfig, SimPath, StorageSim,
+};
+use crate::util::json::{obj, to_string, Json};
+
+/// Sweep matrix + workload shape.
+#[derive(Debug, Clone)]
+pub struct QosSweepConfig {
+    /// Device profile the cells run against.
+    pub device: String,
+    /// Scheduler modes: `fifo` | `static` | `adaptive`.
+    pub modes: Vec<String>,
+    /// Checkpoint burst every N ingest batches (0 = no checkpoints).
+    pub intervals: Vec<usize>,
+    /// Reader shard counts.
+    pub shards: Vec<usize>,
+    /// Corpus size, files.
+    pub files: usize,
+    /// Bytes per corpus file.
+    pub file_bytes: usize,
+    /// Per-shard in-flight read window.
+    pub window: usize,
+    /// Images consumed per batch.
+    pub batch: usize,
+    /// Checkpoint writes per burst.
+    pub ckpt_writes: usize,
+    /// Bytes per checkpoint write.
+    pub ckpt_bytes: u64,
+    /// Ingest p99 queue-wait target for the adaptive mode, modelled
+    /// seconds.
+    pub adaptive_target: f64,
+    /// Simulation speed-up (devices run `time_scale`x the modelled
+    /// speed; reported latencies are wall — scale back to compare
+    /// against modelled targets).
+    pub time_scale: f64,
+    /// Working directory root (each cell gets a subdirectory).
+    pub workdir: String,
+}
+
+impl QosSweepConfig {
+    /// Full default matrix: 3 modes x 3 intervals x 3 shard counts.
+    pub fn standard(workdir: String, time_scale: f64) -> QosSweepConfig {
+        QosSweepConfig {
+            device: "hdd".into(),
+            modes: vec!["fifo".into(), "static".into(), "adaptive".into()],
+            intervals: vec![0, 2, 8],
+            shards: vec![1, 2, 4],
+            files: 96,
+            file_bytes: 64 * 1024,
+            window: 4,
+            batch: 16,
+            ckpt_writes: 4,
+            ckpt_bytes: 2_000_000,
+            adaptive_target: 0.005,
+            time_scale,
+            workdir,
+        }
+    }
+
+    /// Tiny matrix for CI: 3 modes x 1 interval x 2 shard counts on
+    /// the (low-latency) SSD profile — seconds, not minutes.
+    pub fn smoke(workdir: String, time_scale: f64) -> QosSweepConfig {
+        QosSweepConfig {
+            device: "ssd".into(),
+            modes: vec!["fifo".into(), "static".into(), "adaptive".into()],
+            intervals: vec![2],
+            shards: vec![1, 2],
+            files: 32,
+            file_bytes: 16 * 1024,
+            window: 4,
+            batch: 8,
+            ckpt_writes: 2,
+            ckpt_bytes: 1_000_000,
+            adaptive_target: 0.005,
+            time_scale,
+            workdir,
+        }
+    }
+
+    /// Resolve a mode name to the scheduler config it denotes.
+    pub fn qos_for(&self, mode: &str) -> Result<QosConfig> {
+        match mode {
+            "fifo" => Ok(QosConfig::fifo()),
+            "static" => Ok(QosConfig::default()),
+            "adaptive" => Ok(QosConfig::adaptive(self.adaptive_target)),
+            other => Err(anyhow!(
+                "unknown qos mode {other:?} (fifo|static|adaptive)"
+            )),
+        }
+    }
+}
+
+/// Per-class slice of a cell row (wall seconds converted to ms).
+#[derive(Debug, Clone, Default)]
+pub struct ClassRow {
+    pub completed: u64,
+    pub max_queue_depth: u32,
+    pub mean_queue_ms: f64,
+    pub p99_queue_ms: f64,
+    pub mean_service_ms: f64,
+    pub mbytes: f64,
+}
+
+impl ClassRow {
+    fn from_stats(c: &ClassStats) -> ClassRow {
+        ClassRow {
+            completed: c.completed,
+            max_queue_depth: c.max_queue_depth,
+            mean_queue_ms: c.mean_queue_secs() * 1e3,
+            p99_queue_ms: c.p99_queue_secs() * 1e3,
+            mean_service_ms: c.mean_service_secs() * 1e3,
+            mbytes: (c.bytes_read + c.bytes_written) as f64 / 1e6,
+        }
+    }
+}
+
+/// One (mode, interval, shards) cell of the sweep.
+#[derive(Debug, Clone)]
+pub struct QosSweepCell {
+    pub mode: String,
+    pub interval: usize,
+    pub shards: usize,
+    pub device: String,
+    pub images: u64,
+    pub elapsed_secs: f64,
+    pub images_per_sec: f64,
+    pub ingest: ClassRow,
+    pub checkpoint: ClassRow,
+    /// Effective Ingest DRR weight at the end of the cell (static
+    /// weight unless the adaptive controller moved it).
+    pub ingest_weight: u32,
+    /// Points in the adaptive controller's weight trajectory.
+    pub weight_changes: usize,
+}
+
+/// CSV column order — kept in one place so the header and the row
+/// writer can never drift apart.
+const CSV_COLUMNS: [&str; 19] = [
+    "mode",
+    "interval",
+    "shards",
+    "device",
+    "images",
+    "elapsed_secs",
+    "images_per_sec",
+    "ingest_completed",
+    "ingest_max_qdepth",
+    "ingest_mean_queue_ms",
+    "ingest_p99_queue_ms",
+    "ingest_mean_svc_ms",
+    "ingest_mb",
+    "ckpt_completed",
+    "ckpt_max_qdepth",
+    "ckpt_mean_queue_ms",
+    "ckpt_p99_queue_ms",
+    "ckpt_mb",
+    "ingest_weight",
+];
+
+impl QosSweepCell {
+    fn csv_row(&self) -> String {
+        [
+            self.mode.clone(),
+            self.interval.to_string(),
+            self.shards.to_string(),
+            self.device.clone(),
+            self.images.to_string(),
+            format!("{:.4}", self.elapsed_secs),
+            format!("{:.1}", self.images_per_sec),
+            self.ingest.completed.to_string(),
+            self.ingest.max_queue_depth.to_string(),
+            format!("{:.4}", self.ingest.mean_queue_ms),
+            format!("{:.4}", self.ingest.p99_queue_ms),
+            format!("{:.4}", self.ingest.mean_service_ms),
+            format!("{:.2}", self.ingest.mbytes),
+            self.checkpoint.completed.to_string(),
+            self.checkpoint.max_queue_depth.to_string(),
+            format!("{:.4}", self.checkpoint.mean_queue_ms),
+            format!("{:.4}", self.checkpoint.p99_queue_ms),
+            format!("{:.2}", self.checkpoint.mbytes),
+            self.ingest_weight.to_string(),
+        ]
+        .join(",")
+    }
+
+    fn json_value(&self) -> Json {
+        let class = |c: &ClassRow| {
+            obj(vec![
+                ("completed", Json::Num(c.completed as f64)),
+                ("max_qdepth", Json::Num(c.max_queue_depth as f64)),
+                ("mean_queue_ms", Json::Num(c.mean_queue_ms)),
+                ("p99_queue_ms", Json::Num(c.p99_queue_ms)),
+                ("mean_svc_ms", Json::Num(c.mean_service_ms)),
+                ("mb", Json::Num(c.mbytes)),
+            ])
+        };
+        obj(vec![
+            ("mode", Json::Str(self.mode.clone())),
+            ("interval", Json::Num(self.interval as f64)),
+            ("shards", Json::Num(self.shards as f64)),
+            ("device", Json::Str(self.device.clone())),
+            ("images", Json::Num(self.images as f64)),
+            ("elapsed_secs", Json::Num(self.elapsed_secs)),
+            ("images_per_sec", Json::Num(self.images_per_sec)),
+            ("ingest", class(&self.ingest)),
+            ("checkpoint", class(&self.checkpoint)),
+            ("ingest_weight", Json::Num(self.ingest_weight as f64)),
+            ("weight_changes", Json::Num(self.weight_changes as f64)),
+        ])
+    }
+}
+
+/// Render cells as CSV (header + one line per cell).
+pub fn to_csv(cells: &[QosSweepCell]) -> String {
+    let mut out = CSV_COLUMNS.join(",");
+    out.push('\n');
+    for c in cells {
+        out.push_str(&c.csv_row());
+        out.push('\n');
+    }
+    out
+}
+
+/// Render cells as a JSON array (one object per cell).
+pub fn to_json(cells: &[QosSweepCell]) -> String {
+    to_string(&Json::Arr(cells.iter().map(|c| c.json_value()).collect()))
+}
+
+/// Run the full matrix; cells come back in (mode, interval, shards)
+/// iteration order.
+pub fn run(cfg: &QosSweepConfig) -> Result<Vec<QosSweepCell>> {
+    let mut cells = Vec::new();
+    for mode in &cfg.modes {
+        for &interval in &cfg.intervals {
+            for &shards in &cfg.shards {
+                cells.push(run_cell(cfg, mode, interval, shards)?);
+            }
+        }
+    }
+    Ok(cells)
+}
+
+/// Device model for the configured profile name, at the sweep's time
+/// scale.
+fn device_model(cfg: &QosSweepConfig) -> Result<crate::storage::DeviceModel> {
+    Testbed::paper(cfg.time_scale)
+        .devices
+        .into_iter()
+        .find(|m| m.name == cfg.device)
+        .ok_or_else(|| anyhow!("unknown device {:?}", cfg.device))
+}
+
+fn run_cell(
+    cfg: &QosSweepConfig,
+    mode: &str,
+    interval: usize,
+    shards: usize,
+) -> Result<QosSweepCell> {
+    let qos = cfg.qos_for(mode)?;
+    // Record the canonical scheduler-mode label, not the raw token:
+    // the two can only agree because qos_for is the name→config map,
+    // and this keeps the output honest if that map ever grows.
+    let mode = qos.mode_name();
+    let dir = std::path::Path::new(&cfg.workdir)
+        .join(format!("qos-sweep-{mode}-i{interval}-s{shards}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    let sim = Arc::new(StorageSim::cold_with_qos(
+        dir,
+        vec![device_model(cfg)?],
+        qos,
+    )?);
+
+    // Fixture: the ingest corpus, written through the sim (so backing
+    // files exist), then excluded from the measured stats.
+    let samples: Vec<Sample> = (0..cfg.files)
+        .map(|i| -> Result<Sample> {
+            let p = SimPath::new(&cfg.device, format!("corpus/f{i}.bin"));
+            sim.write(&p, &vec![(i % 251) as u8; cfg.file_bytes])?;
+            Ok(Sample { path: p, label: i as u32 })
+        })
+        .collect::<Result<_>>()?;
+    sim.drop_caches();
+    sim.engine().reset_stats();
+
+    // Measured phase: sharded ingest with a checkpoint burst every
+    // `interval` batches (the paper's §V contention pattern).
+    let mut ds =
+        sharded_reader(samples, Arc::clone(&sim), shards, cfg.window);
+    let mut ckpt_tickets: Vec<IoTicket> = Vec::new();
+    let mut images = 0u64;
+    let mut batch_idx = 0usize;
+    // batch = 0 would never call ds.next(), so the loop below would
+    // spin submitting checkpoint bursts forever: clamp like the
+    // reader clamps shards/window.
+    let batch = cfg.batch.max(1);
+    let t0 = Instant::now();
+    'outer: loop {
+        for _ in 0..batch {
+            match ds.next() {
+                Some(item) => {
+                    item.context("sweep ingest read failed")?;
+                    images += 1;
+                }
+                None => break 'outer,
+            }
+        }
+        batch_idx += 1;
+        if interval > 0 && batch_idx % interval == 0 {
+            for _ in 0..cfg.ckpt_writes {
+                ckpt_tickets.push(sim.engine().submit(
+                    IoRequest::ProbeWrite {
+                        device: cfg.device.clone(),
+                        bytes: cfg.ckpt_bytes,
+                    },
+                )?);
+            }
+        }
+    }
+    // Stop the ingest clock *before* draining the checkpoint
+    // backlog: adaptive/static exist to defer checkpoint service, so
+    // charging their larger undrained backlog to elapsed_secs would
+    // deflate images_per_sec for exactly the modes that protected
+    // ingest (inverting the comparison this tool emits).  The drain
+    // still completes below so the checkpoint class rows are final.
+    let elapsed = t0.elapsed().as_secs_f64();
+    for t in ckpt_tickets {
+        t.wait()?;
+    }
+
+    let stats = sim.engine().stats();
+    let s = stats
+        .iter()
+        .find(|s| s.device == cfg.device)
+        .ok_or_else(|| anyhow!("no stats for device {:?}", cfg.device))?;
+    Ok(QosSweepCell {
+        mode: mode.to_string(),
+        interval,
+        shards,
+        device: cfg.device.clone(),
+        images,
+        elapsed_secs: elapsed,
+        images_per_sec: if elapsed > 0.0 {
+            images as f64 / elapsed
+        } else {
+            0.0
+        },
+        ingest: ClassRow::from_stats(s.class(IoClass::Ingest)),
+        checkpoint: ClassRow::from_stats(s.class(IoClass::Checkpoint)),
+        ingest_weight: s.ingest_weight,
+        weight_changes: s.weight_trajectory.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(tag: &str) -> QosSweepConfig {
+        let dir = std::env::temp_dir()
+            .join(format!("dlio-qos-sweep-test-{tag}-{}", std::process::id()));
+        QosSweepConfig {
+            device: "ssd".into(),
+            modes: vec!["static".into(), "adaptive".into()],
+            intervals: vec![1],
+            shards: vec![2],
+            files: 12,
+            file_bytes: 4 * 1024,
+            window: 2,
+            batch: 4,
+            ckpt_writes: 1,
+            ckpt_bytes: 100_000,
+            adaptive_target: 0.005,
+            time_scale: 1000.0,
+            workdir: dir.to_string_lossy().into_owned(),
+        }
+    }
+
+    #[test]
+    fn sweep_emits_one_row_per_cell_with_sane_fields() {
+        let cfg = tiny_cfg("rows");
+        let cells = run(&cfg).unwrap();
+        assert_eq!(cells.len(), 2); // 2 modes x 1 interval x 1 shard
+        for c in &cells {
+            assert_eq!(c.images, 12, "every sample read exactly once");
+            assert_eq!(c.ingest.completed, 12);
+            // 12 images / batch 4 = 3 batches, a burst after each.
+            assert_eq!(c.checkpoint.completed, 3);
+            assert!(c.elapsed_secs > 0.0);
+            assert!(c.ingest_weight >= 1);
+        }
+        // CSV: header + one line per cell, constant column count.
+        let csv = to_csv(&cells);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let ncols = lines[0].split(',').count();
+        for l in &lines {
+            assert_eq!(l.split(',').count(), ncols, "ragged CSV: {l}");
+        }
+        // JSON round-trips through the in-repo parser.
+        let parsed = Json::parse(&to_json(&cells)).unwrap();
+        match parsed {
+            Json::Arr(rows) => {
+                assert_eq!(rows.len(), 2);
+                for r in rows {
+                    assert!(r.get("mode").and_then(Json::as_str).is_some());
+                    assert!(r.get("ingest").is_some());
+                }
+            }
+            other => panic!("expected a JSON array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_mode_is_rejected() {
+        let mut cfg = tiny_cfg("badmode");
+        cfg.modes = vec!["banana".into()];
+        assert!(run(&cfg).is_err());
+    }
+}

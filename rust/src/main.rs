@@ -12,6 +12,8 @@
 //!                  [--iterations N] [--profile micro|mini]
 //! dlio ckpt-study  [--target none|hdd|ssd|optane|bb:optane:hdd]
 //!                  [--interval 5] [--iterations 20]
+//! dlio qos-sweep   [--smoke] [--modes fifo,static,adaptive]
+//!                  [--intervals 0,2,8] [--shards 1,2,4] [--format csv|json]
 //! dlio trace       [--device D] [--prefetch 0|1] ... (dstat CSV to stdout)
 //! ```
 //!
@@ -24,10 +26,12 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use dlio::config::{
-    default_time_scale, Args, CheckpointTarget, CkptStudyConfig,
-    MicrobenchConfig, MiniAppConfig, Testbed,
+    default_time_scale, default_workdir, Args, CheckpointTarget,
+    CkptStudyConfig, MicrobenchConfig, MiniAppConfig, Testbed,
 };
-use dlio::coordinator::{ensure_corpus, make_sim, microbench, miniapp};
+use dlio::coordinator::{
+    ensure_corpus, make_sim, microbench, miniapp, qos_sweep,
+};
 use dlio::data::CorpusSpec;
 use dlio::metrics::Table;
 use dlio::runtime::Runtime;
@@ -54,6 +58,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "microbench" => cmd_microbench(args),
         "train" => cmd_train(args),
         "ckpt-study" => cmd_ckpt_study(args),
+        "qos-sweep" => cmd_qos_sweep(args),
         "trace" => cmd_trace(args),
         "help" | "--help" => {
             print!("{}", HELP);
@@ -71,12 +76,16 @@ dlio — Characterizing Deep-Learning I/O Workloads (PDSW-DISCS'18) repro
   dlio microbench  Figs 4/5  tf.data ingestion bandwidth
   dlio train       Figs 6/7  AlexNet mini-app (prefetch study)
   dlio ckpt-study  Fig 9     checkpoint targets incl. burst buffer
+  dlio qos-sweep   Figs 4/8  (mode x ckpt interval x shards) matrix ->
+                             per-class queue/latency rows, CSV or JSON
   dlio trace       Figs 8/10 dstat-style I/O trace (CSV on stdout)
 
 Common options: --time-scale F (default $DLIO_TIME_SCALE or 8),
 --device hdd|ssd|optane|lustre, --threads N, --batch N.
-Engine QoS: --fifo (single-queue baseline), --preempt-chunks N,
---engine-stats (per-device, per-class queue/latency table).
+Engine QoS: --fifo (single-queue baseline), --adaptive-qos MS (AIMD
+ingest-weight controller targeting MS modelled ms of ingest p99 wait),
+--ckpt-cap-mbs N (hard token-bucket cap on the Checkpoint class),
+--preempt-chunks N, --engine-stats (per-device, per-class table).
 Artifacts: run `make artifacts` first or set DLIO_ARTIFACTS.
 ";
 
@@ -91,10 +100,33 @@ fn testbed(args: &Args) -> Result<Testbed> {
     }
     tb.cache_bytes = args.get_usize("cache-mb", 0)? as u64 * 1_000_000;
     // Engine QoS: `--fifo` restores the single-queue baseline (for
-    // A/B-ing the class scheduler), `--preempt-chunks N` tunes how
-    // often streams yield to higher classes (0 = never).
+    // A/B-ing the class scheduler), `--adaptive-qos MS` turns on the
+    // AIMD ingest-weight controller (target = MS modelled ms of
+    // ingest p99 queue wait; overrides --fifo), `--ckpt-cap-mbs N`
+    // hard-caps the Checkpoint class at N modelled MB/s, and
+    // `--preempt-chunks N` tunes how often streams yield to higher
+    // classes (0 = never).
     if args.has_flag("fifo") {
         tb.qos = dlio::storage::QosConfig::fifo();
+    }
+    if let Some(ms) = args.get("adaptive-qos") {
+        let ms: f64 = ms.parse().map_err(|e| anyhow!("--adaptive-qos: {e}"))?;
+        if ms <= 0.0 {
+            return Err(anyhow!("--adaptive-qos must be positive (ms)"));
+        }
+        tb.qos = dlio::storage::QosConfig::adaptive(ms * 1e-3);
+    }
+    if let Some(mbs) = args.get("ckpt-cap-mbs") {
+        let mbs: f64 =
+            mbs.parse().map_err(|e| anyhow!("--ckpt-cap-mbs: {e}"))?;
+        if mbs <= 0.0 {
+            return Err(anyhow!("--ckpt-cap-mbs must be positive"));
+        }
+        tb.qos = tb.qos.clone().with_rate_cap(
+            dlio::storage::IoClass::Checkpoint,
+            mbs * 1e6,
+            2 << 20, // 2 MiB burst
+        );
     }
     if let Some(n) = args.get("preempt-chunks") {
         tb.qos.preempt_chunks =
@@ -111,7 +143,10 @@ fn print_engine_stats(sim: &dlio::storage::StorageSim) {
         "mean queue ms", "p99 queue ms", "mean svc ms",
         "MB read", "MB written",
     ]);
-    for s in sim.engine().stats() {
+    // One snapshot: stats() clones per-class histograms (and the
+    // adaptive trajectory) per device, so don't pay for it twice.
+    let stats = sim.engine().stats();
+    for s in &stats {
         if s.completed == 0 {
             continue;
         }
@@ -147,6 +182,18 @@ fn print_engine_stats(sim: &dlio::storage::StorageSim) {
         ]);
     }
     print!("{}", t.render());
+    // The AIMD controller's story, when it ran: where the ingest
+    // weight ended up and how many times it moved.
+    for s in &stats {
+        if !s.weight_trajectory.is_empty() {
+            println!(
+                "{}: adaptive ingest weight {} ({} changes)",
+                s.device,
+                s.ingest_weight,
+                s.weight_trajectory.len()
+            );
+        }
+    }
 }
 
 fn corpus_spec(args: &Args) -> Result<CorpusSpec> {
@@ -299,6 +346,61 @@ fn cmd_ckpt_study(args: &Args) -> Result<()> {
         // Checkpoint-vs-ingest interference, per class (§V): the
         // table the QoS scheduler's isolation claims are read from.
         print_engine_stats(&sim);
+    }
+    Ok(())
+}
+
+/// `dlio qos-sweep`: run the (qos mode × checkpoint interval ×
+/// shards) matrix over the microbench-style workload and emit one
+/// CSV/JSON row of per-class queue-depth/latency numbers per cell —
+/// the Fig. 4/8 curves, machine-readable (replaces the hand-run
+/// recipe EXPERIMENTS.md used to carry).
+fn cmd_qos_sweep(args: &Args) -> Result<()> {
+    let ts = args.get_f64("time-scale", default_time_scale())?;
+    if ts <= 0.0 {
+        return Err(anyhow!("--time-scale must be positive"));
+    }
+    let workdir = args
+        .get("workdir")
+        .map(str::to_string)
+        .unwrap_or_else(default_workdir);
+    let mut cfg = if args.has_flag("smoke") {
+        qos_sweep::QosSweepConfig::smoke(workdir, ts)
+    } else {
+        qos_sweep::QosSweepConfig::standard(workdir, ts)
+    };
+    if let Some(device) = args.get("device") {
+        cfg.device = device.to_string();
+    }
+    if let Some(modes) = args.get_list("modes") {
+        cfg.modes = modes;
+    }
+    cfg.intervals = args.get_usize_list("intervals", &cfg.intervals)?;
+    cfg.shards = args.get_usize_list("shards", &cfg.shards)?;
+    cfg.files = args.get_usize("files", cfg.files)?;
+    cfg.file_bytes = args.get_usize("file-kb", cfg.file_bytes / 1024)? * 1024;
+    cfg.batch = args.get_usize("batch", cfg.batch)?;
+    cfg.window = args.get_usize("window", cfg.window)?;
+    cfg.ckpt_writes = args.get_usize("ckpt-writes", cfg.ckpt_writes)?;
+    cfg.ckpt_bytes =
+        args.get_usize("ckpt-mb", (cfg.ckpt_bytes / 1_000_000) as usize)?
+            as u64
+            * 1_000_000;
+    cfg.adaptive_target = args.get_f64(
+        "adaptive-target-ms",
+        cfg.adaptive_target * 1e3,
+    )? * 1e-3;
+    // Validate the output format *before* running the matrix: a typo
+    // must fail instantly, not after minutes of sweep cells.
+    let format = args.get_or("format", "csv");
+    if format != "csv" && format != "json" {
+        return Err(anyhow!("unknown --format {format:?} (csv|json)"));
+    }
+    let cells = qos_sweep::run(&cfg)?;
+    match format.as_str() {
+        "csv" => print!("{}", qos_sweep::to_csv(&cells)),
+        "json" => println!("{}", qos_sweep::to_json(&cells)),
+        _ => unreachable!("validated above"),
     }
     Ok(())
 }

@@ -8,7 +8,9 @@ pub fn median(xs: &mut [f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
-    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp, not partial_cmp().unwrap(): a NaN sample (e.g. a 0/0
+    // rate from an empty interval) must not panic the whole report.
+    xs.sort_by(|a, b| a.total_cmp(b));
     let n = xs.len();
     if n % 2 == 1 {
         xs[n / 2]
@@ -200,6 +202,15 @@ mod tests {
         assert_eq!(median(&mut []), 0.0);
         assert_eq!(median(&mut [3.0, 1.0, 2.0]), 2.0);
         assert_eq!(median(&mut [4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn median_survives_nan_samples() {
+        // Regression: partial_cmp().unwrap() panicked here.  Under
+        // total_cmp a NaN sorts after every number, so the median of
+        // the remaining finite samples is still returned.
+        let m = median(&mut [1.0, f64::NAN, 2.0]);
+        assert_eq!(m, 2.0);
     }
 
     #[test]

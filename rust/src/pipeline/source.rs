@@ -404,6 +404,36 @@ mod tests {
         }
 
         #[test]
+        fn steal_accounting_is_exact_and_loses_nothing() {
+            // Deterministic steal pinning (satellite): 2 shards x 6
+            // items each, window 8 > 6.  The first top_up fills shard
+            // 0 from its own backlog (6 items), then steals the back
+            // half of shard 1's 6-item backlog (3 items, steals = 1)
+            // and keeps filling; shard 1 then fills from its
+            // remaining 3 and finds nothing worth splitting (every
+            // other backlog is 0 or 1 item), so the count must end
+            // at exactly 1 — and stealing must neither duplicate nor
+            // drop a sample even though the victim's own top_up runs
+            // in the same pass, after the split.
+            let s = sim("stealexact");
+            let samples = corpus(&s, 12);
+            s.drop_caches();
+            let mut ds = sharded_reader(samples, Arc::clone(&s), 2, 8);
+            let mut labels = Vec::new();
+            while let Some(item) = ds.next() {
+                labels.push(item.unwrap().sample.label);
+            }
+            assert_eq!(
+                ds.steal_count(),
+                1,
+                "steal accounting drifted from the deterministic layout"
+            );
+            assert_eq!(labels.len(), 12, "stolen items dropped or doubled");
+            labels.sort_unstable();
+            assert_eq!(labels, (0..12).collect::<Vec<u32>>());
+        }
+
+        #[test]
         fn missing_file_is_element_error_not_fatal() {
             let s = sim("missing");
             let mut samples = corpus(&s, 6);

@@ -124,12 +124,20 @@ struct BucketState {
 
 impl TokenBucket {
     pub fn new(rate: f64) -> Self {
-        assert!(rate > 0.0, "rate must be positive");
         // Allow ~2 ms of burst (clamped to [64 KB, 1 MB]): enough to
         // smooth scheduler jitter, far too little for idle pauses to
         // bank meaningful credit — a multi-MB probe must not ride
         // through on burst tokens even on multi-GB/s scaled devices.
         let burst = (rate * 0.002).clamp(64.0 * 1024.0, 1024.0 * 1024.0);
+        Self::with_burst(rate, burst)
+    }
+
+    /// A bucket with an explicit burst capacity in bytes (the QoS
+    /// per-class rate caps configure their own burst instead of the
+    /// device default above).
+    pub fn with_burst(rate: f64, burst: f64) -> Self {
+        assert!(rate > 0.0, "rate must be positive");
+        let burst = burst.max(1.0);
         TokenBucket {
             state: Mutex::new(BucketState { tokens: burst, last: Instant::now() }),
             rate,
@@ -139,6 +147,70 @@ impl TokenBucket {
 
     pub fn rate(&self) -> f64 {
         self.rate
+    }
+
+    fn refill(&self, st: &mut BucketState) {
+        let now = Instant::now();
+        let dt = now.duration_since(st.last).as_secs_f64();
+        st.last = now;
+        st.tokens = (st.tokens + dt * self.rate).min(self.burst);
+    }
+
+    /// Current balance after a refill, bytes; negative means the
+    /// bucket is in debt from a [`charge`](Self::charge).
+    pub fn balance(&self) -> f64 {
+        let mut st = self.state.lock().unwrap();
+        self.refill(&mut st);
+        st.tokens
+    }
+
+    /// Debt-mode charge: deduct `n` bytes immediately, letting the
+    /// balance go negative.  Callers gate dispatch on `balance() > 0`
+    /// (or [`until_positive`](Self::until_positive)), so a job of any
+    /// size passes once the bucket shows positive budget while the
+    /// long-run rate stays capped at `rate` (+ the one-burst,
+    /// one-job overshoot inherent to deficit policing).
+    pub fn charge(&self, n: u64) {
+        let mut st = self.state.lock().unwrap();
+        self.refill(&mut st);
+        st.tokens -= n as f64;
+    }
+
+    /// Atomic check-and-charge: if the balance is positive, charge
+    /// `n` (debt-mode, like [`charge`](Self::charge)) and return
+    /// `None`; otherwise return how long until it turns positive.
+    /// One lock hold for the test *and* the deduction, so concurrent
+    /// throttled streams serialize — each admission puts the bucket
+    /// in debt before the next waiter's check, keeping the
+    /// short-window overshoot at one job, not one job per waiter.
+    pub fn try_charge(&self, n: u64) -> Option<Duration> {
+        let mut st = self.state.lock().unwrap();
+        self.refill(&mut st);
+        if st.tokens > 0.0 {
+            st.tokens -= n as f64;
+            None
+        } else {
+            Some(Duration::from_secs_f64(
+                ((1.0 - st.tokens) / self.rate).clamp(1e-6, 3600.0),
+            ))
+        }
+    }
+
+    /// How long until the balance turns positive (zero if it already
+    /// is) — the scheduler's throttle-wait hint.
+    pub fn until_positive(&self) -> Duration {
+        let mut st = self.state.lock().unwrap();
+        self.refill(&mut st);
+        if st.tokens > 0.0 {
+            Duration::ZERO
+        } else {
+            // Wait until one byte of budget accrues; clamped so a
+            // pathological rate can never produce an unrepresentable
+            // Duration.
+            Duration::from_secs_f64(
+                ((1.0 - st.tokens) / self.rate).clamp(1e-6, 3600.0),
+            )
+        }
     }
 
     /// Block until `n` bytes of budget are available, then consume.
@@ -395,6 +467,15 @@ impl Device {
     pub fn peak_queue_depth(&self) -> u32 {
         self.gate.lock.lock().unwrap().peak_depth
     }
+
+    /// Re-seed the peak gauge from the live depth.  Bench and sweep
+    /// drivers call this (via `IoEngine::reset_stats`) to bracket a
+    /// measured phase after fixture setup; only meaningful at
+    /// quiescence.
+    pub fn reset_peak_queue_depth(&self) {
+        let mut g = self.gate.lock.lock().unwrap();
+        g.peak_depth = g.depth;
+    }
 }
 
 #[cfg(test)]
@@ -448,6 +529,37 @@ mod tests {
         let dt = t0.elapsed().as_secs_f64();
         assert!(dt > 0.06, "finished too fast: {dt}");
         assert!(dt < 0.25, "finished too slow: {dt}");
+    }
+
+    #[test]
+    fn bucket_debt_mode_charges_and_recovers() {
+        // 1 MB/s, 10 KB burst: a 100 KB charge rides through on the
+        // burst but leaves the bucket deep in debt, and the debt pays
+        // off at the configured rate.
+        let b = TokenBucket::with_burst(1e6, 10.0 * 1024.0);
+        assert!(b.balance() > 0.0);
+        assert_eq!(b.until_positive(), Duration::ZERO);
+        b.charge(100 * 1024);
+        assert!(b.balance() < 0.0);
+        let wait = b.until_positive().as_secs_f64();
+        // ~(100 KB - 10 KB burst) / 1 MB/s ≈ 92 ms of debt.
+        assert!(wait > 0.05, "debt repaid too fast: {wait}");
+        assert!(wait < 0.2, "debt overestimated: {wait}");
+        std::thread::sleep(Duration::from_secs_f64(wait));
+        assert_eq!(b.until_positive(), Duration::ZERO);
+    }
+
+    #[test]
+    fn peak_depth_resets_to_live_depth() {
+        let d = Device::new(model("rst"), Arc::new(NullObserver));
+        d.queue_enter();
+        d.queue_enter();
+        d.queue_leave();
+        assert_eq!(d.peak_queue_depth(), 2);
+        d.reset_peak_queue_depth();
+        // One request is still live: the gauge re-seeds from it.
+        assert_eq!(d.peak_queue_depth(), 1);
+        d.queue_leave();
     }
 
     #[test]

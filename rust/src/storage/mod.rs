@@ -14,8 +14,8 @@ pub mod sim;
 
 pub use device::{Device, DeviceModel, Dir, IoObserver, NullObserver};
 pub use engine::{
-    ChunkWriter, ClassStats, EngineDeviceStats, IoClass, IoCompletion,
-    IoEngine, IoRequest, IoTicket, QosConfig,
+    AdaptiveQos, ChunkWriter, ClassStats, EngineDeviceStats, IoClass,
+    IoCompletion, IoEngine, IoRequest, IoTicket, QosConfig, RateCap,
 };
 pub use page_cache::PageCache;
 pub use sim::{PendingRead, PendingWrite, SimPath, StorageSim};
