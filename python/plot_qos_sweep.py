@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""Plot the `dlio qos-sweep --format json` matrix (ROADMAP follow-up).
+
+Reads the sweep's JSON rows (one object per (mode, interval, shards)
+cell, schema in EXPERIMENTS.md) and renders the Fig. 4/8-style curves:
+one line per (mode, checkpoint interval), ingest metric vs reader
+shards.
+
+Stub-safe: when matplotlib is unavailable (offline CI), prints an
+aligned ASCII summary of the same numbers instead of an image and
+exits 0 — the JSON schema is exercised either way.
+
+Usage:
+    dlio qos-sweep --format json > sweep.json
+    python3 python/plot_qos_sweep.py sweep.json --out sweep.png \
+        [--metric ingest_p99_queue_ms]
+"""
+
+import argparse
+import json
+import sys
+
+# Metric name -> extractor over one sweep cell.
+METRICS = {
+    "ingest_p99_queue_ms": lambda row: row["ingest"]["p99_queue_ms"],
+    "ingest_mean_queue_ms": lambda row: row["ingest"]["mean_queue_ms"],
+    "ingest_max_qdepth": lambda row: row["ingest"]["max_qdepth"],
+    "images_per_sec": lambda row: row["images_per_sec"],
+    "ckpt_p99_queue_ms": lambda row: row["checkpoint"]["p99_queue_ms"],
+}
+
+
+def load_rows(path):
+    with open(path) as f:
+        rows = json.load(f)
+    if not isinstance(rows, list) or not rows:
+        raise SystemExit(f"{path}: expected a non-empty JSON array of cells")
+    for key in ("mode", "interval", "shards", "ingest"):
+        if key not in rows[0]:
+            raise SystemExit(f"{path}: cell missing {key!r} (schema drift?)")
+    return rows
+
+
+def curves(rows, metric):
+    """(mode, interval) -> sorted [(shards, value)]."""
+    out = {}
+    pick = METRICS[metric]
+    for row in rows:
+        out.setdefault((row["mode"], int(row["interval"])), []).append(
+            (int(row["shards"]), pick(row))
+        )
+    return {k: sorted(v) for k, v in out.items()}
+
+
+def ascii_summary(series, metric):
+    print(f"# qos-sweep: {metric} vs shards (matplotlib unavailable: "
+          "ASCII fallback)")
+    width = max(len(f"{mode} i={iv}") for mode, iv in series) + 2
+    for (mode, iv), points in sorted(series.items()):
+        label = f"{mode} i={iv}".ljust(width)
+        vals = "  ".join(f"s={s}:{v:.3f}" for s, v in points)
+        print(f"{label}{vals}")
+
+
+def plot(series, metric, out):
+    import matplotlib
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    fig, ax = plt.subplots(figsize=(6, 4))
+    for (mode, iv), points in sorted(series.items()):
+        xs = [s for s, _ in points]
+        ys = [v for _, v in points]
+        ax.plot(xs, ys, marker="o", label=f"{mode}, ckpt interval {iv}")
+    ax.set_xlabel("reader shards")
+    ax.set_ylabel(metric)
+    ax.set_title("dlio qos-sweep")
+    ax.legend(fontsize=8)
+    ax.grid(True, alpha=0.3)
+    fig.tight_layout()
+    fig.savefig(out, dpi=120)
+    print(f"wrote {out}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("sweep_json", help="output of dlio qos-sweep --format json")
+    ap.add_argument("--out", default="qos-sweep.png", help="PNG path")
+    ap.add_argument(
+        "--metric",
+        default="ingest_p99_queue_ms",
+        choices=sorted(METRICS),
+    )
+    args = ap.parse_args()
+    series = curves(load_rows(args.sweep_json), args.metric)
+    try:
+        plot(series, args.metric, args.out)
+    except ImportError:
+        ascii_summary(series, args.metric)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,9 +22,19 @@
 //! 6. **Rate caps** — a token-bucket-capped Checkpoint class stays
 //!    within 1.1x of its configured bytes/sec while uncapped ingest
 //!    proceeds at device speed.
+//! 7. **Drain-rate study** — a capped Drain class stretches its own
+//!    makespan >= 2x (staying within 1.1x of its cap) while ingest p99
+//!    stays flat: the burst-buffer drain knob bounds background
+//!    bandwidth without taxing the foreground.
+//! 8. **Trace replay** — a recorded contention trace closed-loop
+//!    replayed on the slow HDD profile reproduces per-class byte
+//!    totals exactly, and replaying the SAME file under FIFO vs
+//!    static DRR shows the PR-2 isolation effect end-to-end from a
+//!    trace file.
 //!
 //! No PJRT artifacts needed.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -36,7 +46,12 @@ use dlio::pipeline::{sharded_reader, Dataset};
 use dlio::runtime::meta::{ParamSpec, ProfileMeta};
 use dlio::storage::engine::{DEFAULT_CHUNK, STREAM_WINDOW};
 use dlio::storage::{
-    profiles, DeviceModel, IoClass, IoRequest, QosConfig, SimPath, StorageSim,
+    profiles, Device, DeviceModel, IoClass, IoEngine, IoRequest, NullObserver,
+    QosConfig, SimPath, StorageSim,
+};
+use dlio::trace::{
+    analyze, replay, ReplayConfig, Trace, TraceManifest, TraceRecorder,
+    TRACE_VERSION,
 };
 
 fn small_profile() -> ProfileMeta {
@@ -462,6 +477,210 @@ fn main() -> anyhow::Result<()> {
          ({:.1} ms)",
         ingest_secs * 1e3,
         ckpt_secs * 1e3
+    );
+
+    // ---- 8. drain-rate study: capped Drain slows itself, not ingest ----
+    // Burst-buffer drain traffic (Drain-class writes) against live
+    // ingest reads on the HDD profile.  Uncapped, 24 MB of drain runs
+    // at device speed; capped at 20 modelled MB/s it must stretch its
+    // own makespan >= 2x (and stay within 1.1x of the cap) while the
+    // ingest tail stays flat — the ROADMAP's drain-rate study, gated.
+    let drain_run = |cap: Option<f64>, tag: &str| -> anyhow::Result<(f64, f64)> {
+        let mut qos = QosConfig::default();
+        if let Some(mbs) = cap {
+            qos = qos.with_rate_cap(IoClass::Drain, mbs, 256 * 1024);
+        }
+        let sim = Arc::new(StorageSim::cold_with_qos(
+            workdir(&format!("draincap-{tag}")),
+            vec![profiles::blackdog_hdd(8.0)],
+            qos,
+        )?);
+        let eng = sim.engine();
+        let t0 = Instant::now();
+        let drains: Vec<_> = (0..24)
+            .map(|_| {
+                eng.submit_class(
+                    IoRequest::ProbeWrite {
+                        device: "hdd".into(),
+                        bytes: 1_000_000,
+                    },
+                    IoClass::Drain,
+                )
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let reads: Vec<_> = (0..16)
+            .map(|_| {
+                eng.submit(IoRequest::ProbeRead {
+                    device: "hdd".into(),
+                    bytes: 128 * 1024,
+                })
+            })
+            .collect::<anyhow::Result<_>>()?;
+        for t in reads {
+            t.wait()?;
+        }
+        for t in drains {
+            t.wait()?;
+        }
+        let drain_secs = t0.elapsed().as_secs_f64();
+        let stats = eng.stats();
+        let s = stats.iter().find(|s| s.device == "hdd").expect("hdd");
+        Ok((s.class(IoClass::Ingest).p99_queue_secs(), drain_secs))
+    };
+    // Best-of-two per config: CI noise can't fake a rate regression.
+    let best2 = |cap: Option<f64>, tag: &str| -> anyhow::Result<(f64, f64)> {
+        let (p_a, d_a) = drain_run(cap, &format!("{tag}-a"))?;
+        let (p_b, d_b) = drain_run(cap, &format!("{tag}-b"))?;
+        Ok((p_a.min(p_b), d_a.min(d_b)))
+    };
+    let drain_cap_modelled = 20e6;
+    let (free_p99, free_drain) = best2(None, "free")?;
+    let (cap_p99, cap_drain) = best2(Some(drain_cap_modelled), "capped")?;
+    // Wall window -> modelled rate at the 8x time scale.
+    let achieved_modelled = 24e6 / cap_drain / 8.0;
+
+    let mut t = Table::new(&[
+        "drain mode", "drain makespan ms", "modelled MB/s", "ingest p99 ms",
+    ]);
+    t.row(&["uncapped".into(),
+            format!("{:.1}", free_drain * 1e3),
+            format!("{:.1}", 24e6 / free_drain / 8.0 / 1e6),
+            format!("{:.2}", free_p99 * 1e3)]);
+    t.row(&["capped 20 MB/s".into(),
+            format!("{:.1}", cap_drain * 1e3),
+            format!("{:.1}", achieved_modelled / 1e6),
+            format!("{:.2}", cap_p99 * 1e3)]);
+    print!("{}", t.render());
+    println!("target: capped drain >= 2x uncapped makespan, <= 1.1x its \
+              cap; ingest p99 flat");
+    assert!(
+        cap_drain >= 2.0 * free_drain,
+        "capped drain ({:.1} ms) did not slow vs uncapped ({:.1} ms)",
+        cap_drain * 1e3,
+        free_drain * 1e3
+    );
+    assert!(
+        achieved_modelled <= 1.1 * drain_cap_modelled,
+        "capped drain ran at {:.1} MB/s, cap {:.1} MB/s",
+        achieved_modelled / 1e6,
+        drain_cap_modelled / 1e6
+    );
+    // "Flat": within one log2 histogram bucket (2x) of the uncapped
+    // tail, with a small absolute floor for near-zero baselines.
+    assert!(
+        cap_p99 <= (2.0 * free_p99).max(0.004),
+        "capping the DRAIN class moved the INGEST tail: {:.2} ms vs \
+         uncapped {:.2} ms",
+        cap_p99 * 1e3,
+        free_p99 * 1e3
+    );
+
+    // ---- 9. trace replay: QoS isolation end-to-end from a trace ----
+    // Record the §V contention pattern (a 16 x 2 MB checkpoint burst
+    // with 10 small ingest reads behind it, everything co-in-flight)
+    // on a near-instant device, then closed-loop replay the SAME file
+    // on the slow HDD profile under FIFO vs static DRR.  The replayed
+    // byte totals must reproduce the recording exactly, and the PR-2
+    // isolation effect must emerge from the trace alone.
+    let dir = workdir("tracereplay");
+    std::fs::create_dir_all(&dir)?;
+    let fast = DeviceModel {
+        name: "hdd".into(), // traced name; the replay profile keys on it
+        read_bw: 1e9,
+        write_bw: 1e9,
+        read_lat: 1.0,
+        write_lat: 1.0,
+        channels: 1,
+        elevator: vec![(1, 1.0)],
+        time_scale: 1000.0, // 1 ms wall per op: nothing completes
+                            // before the whole burst is submitted
+    };
+    let trace_path = dir.join("contention.jsonl");
+    {
+        let mut devices = HashMap::new();
+        devices.insert(
+            "hdd".to_string(),
+            Arc::new(Device::new(fast.clone(), Arc::new(NullObserver))),
+        );
+        let engine =
+            IoEngine::with_config(&devices, DEFAULT_CHUNK, QosConfig::fifo());
+        let rec = TraceRecorder::create(
+            &trace_path,
+            &TraceManifest {
+                version: TRACE_VERSION,
+                workload: "bench-contention".into(),
+                qos_mode: "fifo".into(),
+                qos: Some(QosConfig::fifo()),
+                time_scale: 1000.0,
+                devices: vec![fast],
+            },
+        )?;
+        engine.set_observer(rec.observer());
+        let writes: Vec<_> = (0..16)
+            .map(|_| {
+                engine.submit(IoRequest::ProbeWrite {
+                    device: "hdd".into(),
+                    bytes: 2_000_000,
+                })
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let reads: Vec<_> = (0..10)
+            .map(|_| {
+                engine.submit(IoRequest::ProbeRead {
+                    device: "hdd".into(),
+                    bytes: 32_768,
+                })
+            })
+            .collect::<anyhow::Result<_>>()?;
+        for t in writes {
+            t.wait()?;
+        }
+        for t in reads {
+            t.wait()?;
+        }
+        engine.clear_observer();
+        drop(engine);
+        rec.finish()?;
+    }
+    let trace = Trace::load(&trace_path)?;
+    let recorded = trace.recorded_aggregates();
+    let replay_run = |qos: QosConfig| -> anyhow::Result<f64> {
+        let cfg = ReplayConfig {
+            qos,
+            profile: Some("hdd".into()),
+            time_scale: Some(4.0),
+            ..ReplayConfig::default()
+        };
+        let outcome = replay(&trace, &cfg)?;
+        assert_eq!(outcome.errors, 0);
+        let aggs = analyze::class_aggregates(&outcome.replayed);
+        for c in [IoClass::Ingest, IoClass::Checkpoint] {
+            assert_eq!(
+                aggs[c.index()].bytes,
+                recorded[c.index()].bytes,
+                "{c}: replayed byte totals diverged from the recording"
+            );
+        }
+        Ok(aggs[IoClass::Ingest.index()].p99_queue_secs)
+    };
+    // Best-of-two per mode, as everywhere in this bench.
+    let fifo_p99 = replay_run(QosConfig::fifo())?
+        .min(replay_run(QosConfig::fifo())?);
+    let static_p99 = replay_run(QosConfig::default())?
+        .min(replay_run(QosConfig::default())?);
+
+    let mut t = Table::new(&["replayed scheduler", "ingest p99 queue ms"]);
+    t.row(&["fifo".into(), format!("{:.1}", fifo_p99 * 1e3)]);
+    t.row(&["static DRR".into(), format!("{:.1}", static_p99 * 1e3)]);
+    print!("{}", t.render());
+    println!("target: static ingest p99 <= 0.75x fifo, from the same \
+              trace file on the slow profile");
+    assert!(
+        static_p99 <= 0.75 * fifo_p99,
+        "trace replay lost the isolation effect: static {:.1} ms !<= \
+         0.75 * fifo {:.1} ms",
+        static_p99 * 1e3,
+        fifo_p99 * 1e3
     );
 
     println!("\nengine acceptance: PASS");

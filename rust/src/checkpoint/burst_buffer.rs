@@ -211,9 +211,11 @@ fn drain_loop(
         let mut ok = true;
         for f in job.files() {
             let dst = crate::storage::SimPath::new(slow.clone(), f.rel.clone());
-            if let Err(e) =
+            // Origin-tagged: trace events attribute drain copies to
+            // the burst buffer.
+            if let Err(e) = crate::storage::with_origin("bb-drain", || {
                 sim.copy_class(&f, &dst, crate::storage::IoClass::Drain)
-            {
+            }) {
                 eprintln!("[burst-buffer] drain {f}: {e:#}");
                 errors.fetch_add(1, Ordering::SeqCst);
                 ok = false;

@@ -32,7 +32,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::model::ModelState;
 use crate::runtime::meta::ProfileMeta;
-use crate::storage::{IoClass, SimPath, StorageSim};
+use crate::storage::{with_origin, IoClass, SimPath, StorageSim};
 use crate::util::json::{obj, to_string, Json};
 
 /// Decides whether a retention victim may be deleted yet (the burst
@@ -235,18 +235,23 @@ impl Saver {
         };
         // One doorbell for meta+index so the device sees the burst,
         // then the data payload streams behind them in bounded chunks.
+        // Submissions are origin-tagged so trace events attribute the
+        // triple to the saver.
         let meta_path = handle.file("meta");
         let index_path = handle.file("index");
-        let small = self.sim.write_batch_async_class(
-            vec![
-                (&meta_path, self.meta_json().into_bytes()),
-                (&index_path, self.index_json().into_bytes()),
-            ],
-            IoClass::Checkpoint,
-        )?;
-        let (mut data_writer, data) = self
-            .sim
-            .write_stream_class(&handle.file("data"), IoClass::Checkpoint)?;
+        let small = with_origin("saver", || {
+            self.sim.write_batch_async_class(
+                vec![
+                    (&meta_path, self.meta_json().into_bytes()),
+                    (&index_path, self.index_json().into_bytes()),
+                ],
+                IoClass::Checkpoint,
+            )
+        })?;
+        let (mut data_writer, data) = with_origin("saver", || {
+            self.sim
+                .write_stream_class(&handle.file("data"), IoClass::Checkpoint)
+        })?;
         state.stream_bytes(|bytes| data_writer.push(bytes))?;
         data_writer.finish()?;
         for pending in small {

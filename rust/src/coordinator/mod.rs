@@ -6,9 +6,11 @@ pub mod fixtures;
 pub mod microbench;
 pub mod miniapp;
 pub mod qos_sweep;
+pub mod trace_record;
 pub mod workload;
 
 pub use fixtures::{ensure_corpus, make_sim};
 pub use microbench::MicrobenchResult;
 pub use miniapp::MiniAppResult;
 pub use qos_sweep::{QosSweepCell, QosSweepConfig};
+pub use trace_record::{TraceRecordConfig, TraceRecordResult};

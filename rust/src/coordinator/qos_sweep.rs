@@ -100,16 +100,11 @@ impl QosSweepConfig {
         }
     }
 
-    /// Resolve a mode name to the scheduler config it denotes.
+    /// Resolve a mode name to the scheduler config it denotes (the
+    /// shared `QosConfig::parse_mode` map, with this sweep's adaptive
+    /// target).
     pub fn qos_for(&self, mode: &str) -> Result<QosConfig> {
-        match mode {
-            "fifo" => Ok(QosConfig::fifo()),
-            "static" => Ok(QosConfig::default()),
-            "adaptive" => Ok(QosConfig::adaptive(self.adaptive_target)),
-            other => Err(anyhow!(
-                "unknown qos mode {other:?} (fifo|static|adaptive)"
-            )),
-        }
+        QosConfig::parse_mode(mode, self.adaptive_target)
     }
 }
 

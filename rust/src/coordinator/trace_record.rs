@@ -1,0 +1,375 @@
+//! `dlio trace-record` — run a workload with the request-level
+//! recorder attached and write the trace file (DESIGN.md §11).
+//!
+//! Workloads mirror the paper's studies without needing PJRT
+//! artifacts:
+//!
+//! * `microbench` — fixed-seed sharded ingest reads over a synthetic
+//!   corpus with periodic checkpoint bursts (the §V contention
+//!   pattern behind Figs. 4/8).
+//! * `miniapp` — same ingest, but each burst writes real checkpoint
+//!   files on the primary device and then drains them to the slow
+//!   device as Drain-class copies — the burst-buffer Fig. 10 pattern,
+//!   so traces carry all three traffic classes.
+//!
+//! Corpus generation is fixture setup: the recorder attaches *after*
+//! it (and after a stats reset), so a trace holds exactly the
+//! measured phase.  Every stochastic choice derives from `cfg.seed`,
+//! which is what makes record → closed-loop-replay determinism
+//! testable end-to-end.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::Testbed;
+use crate::data::manifest::Sample;
+use crate::pipeline::{sharded_reader, Dataset};
+use crate::storage::{
+    with_origin, IoClass, IoRequest, IoTicket, PendingWrite, QosConfig,
+    SimPath, StorageSim,
+};
+use crate::trace::{TraceManifest, TraceRecorder, TRACE_VERSION};
+use crate::util::Rng;
+
+/// Workload shape for a recording run.
+#[derive(Debug, Clone)]
+pub struct TraceRecordConfig {
+    /// `microbench` | `miniapp`.
+    pub workload: String,
+    /// Ingest (and checkpoint) device profile name.
+    pub device: String,
+    /// Drain target for the `miniapp` workload.
+    pub drain_device: String,
+    /// Corpus size, files.
+    pub files: usize,
+    /// Bytes per corpus file.
+    pub file_bytes: usize,
+    /// Reader shards / per-shard in-flight window.
+    pub shards: usize,
+    pub window: usize,
+    /// Images consumed per batch.
+    pub batch: usize,
+    /// Checkpoint burst every N batches (0 = no bursts).
+    pub ckpt_interval: usize,
+    /// Writes per burst / bytes per write.
+    pub ckpt_writes: usize,
+    pub ckpt_bytes: u64,
+    /// Shuffle seed (the "fixed-seed" in fixed-seed microbench).
+    pub seed: u64,
+    /// Simulation speed-up.
+    pub time_scale: f64,
+    /// Working directory root (the run gets a subdirectory).
+    pub workdir: String,
+}
+
+impl TraceRecordConfig {
+    pub fn standard(workdir: String, time_scale: f64) -> TraceRecordConfig {
+        TraceRecordConfig {
+            workload: "microbench".into(),
+            device: "ssd".into(),
+            drain_device: "hdd".into(),
+            files: 96,
+            file_bytes: 64 * 1024,
+            shards: 2,
+            window: 4,
+            batch: 16,
+            ckpt_interval: 2,
+            ckpt_writes: 4,
+            ckpt_bytes: 2_000_000,
+            seed: 7,
+            time_scale,
+            workdir,
+        }
+    }
+
+    /// CI-sized run: seconds, not minutes.
+    pub fn smoke(workdir: String, time_scale: f64) -> TraceRecordConfig {
+        TraceRecordConfig {
+            files: 32,
+            file_bytes: 16 * 1024,
+            batch: 8,
+            ckpt_writes: 2,
+            ckpt_bytes: 1_000_000,
+            ..TraceRecordConfig::standard(workdir, time_scale)
+        }
+    }
+}
+
+/// What a recording run produced.
+#[derive(Debug, Clone)]
+pub struct TraceRecordResult {
+    pub path: PathBuf,
+    /// Events written to the trace file.
+    pub events: u64,
+    /// Ingest reads consumed.
+    pub images: u64,
+    pub ckpt_bursts: u64,
+    /// Drain copies issued (miniapp only).
+    pub drains: u64,
+    pub elapsed_secs: f64,
+}
+
+/// Run `cfg`'s workload under `qos` with the recorder attached;
+/// writes the trace to `out`.
+pub fn run(
+    cfg: &TraceRecordConfig,
+    qos: QosConfig,
+    out: &Path,
+) -> Result<TraceRecordResult> {
+    let miniapp = match cfg.workload.as_str() {
+        "microbench" => false,
+        "miniapp" => true,
+        other => {
+            return Err(anyhow!(
+                "unknown trace-record workload {other:?} \
+                 (microbench|miniapp)"
+            ))
+        }
+    };
+    if !(cfg.time_scale > 0.0) {
+        return Err(anyhow!("time scale must be positive"));
+    }
+    // Device models: the primary, plus the drain target for miniapp.
+    let paper = Testbed::paper(cfg.time_scale).devices;
+    let pick = |name: &str| {
+        paper
+            .iter()
+            .find(|m| m.name == name)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown device {name:?}"))
+    };
+    let mut models = vec![pick(&cfg.device)?];
+    if miniapp && cfg.drain_device != cfg.device {
+        models.push(pick(&cfg.drain_device)?);
+    }
+
+    let dir = Path::new(&cfg.workdir)
+        .join(format!("trace-record-{}", cfg.workload));
+    let _ = std::fs::remove_dir_all(&dir);
+    let sim = Arc::new(StorageSim::cold_with_qos(
+        dir,
+        models.clone(),
+        qos.clone(),
+    )?);
+
+    // Fixture: corpus + deterministic shuffle, excluded from the trace.
+    let mut samples: Vec<Sample> = (0..cfg.files)
+        .map(|i| -> Result<Sample> {
+            let p = SimPath::new(&cfg.device, format!("corpus/f{i}.bin"));
+            sim.write(&p, &vec![(i % 251) as u8; cfg.file_bytes])?;
+            Ok(Sample { path: p, label: i as u32 })
+        })
+        .collect::<Result<_>>()?;
+    let mut rng = Rng::new(cfg.seed);
+    for i in (1..samples.len()).rev() {
+        let j = rng.index(i + 1);
+        samples.swap(i, j);
+    }
+    sim.drop_caches();
+    sim.engine().reset_stats();
+
+    let manifest = TraceManifest {
+        version: TRACE_VERSION,
+        workload: format!(
+            "{} device={} files={} file_bytes={} shards={} window={} \
+             batch={} ckpt_interval={} ckpt_writes={} ckpt_bytes={} seed={}",
+            cfg.workload,
+            cfg.device,
+            cfg.files,
+            cfg.file_bytes,
+            cfg.shards,
+            cfg.window,
+            cfg.batch,
+            cfg.ckpt_interval,
+            cfg.ckpt_writes,
+            cfg.ckpt_bytes,
+            cfg.seed,
+        ),
+        qos_mode: qos.mode_name().to_string(),
+        qos: Some(qos.clone()),
+        time_scale: cfg.time_scale,
+        devices: models,
+    };
+    let recorder = TraceRecorder::create(out, &manifest)?;
+    sim.engine().set_observer(recorder.observer());
+
+    // Measured phase (mirrors the qos-sweep cell workload).
+    let timer = crate::metrics::Timer::start();
+    let mut ds = sharded_reader(
+        samples,
+        Arc::clone(&sim),
+        cfg.shards.max(1),
+        cfg.window.max(1),
+    );
+    let mut ckpt_tickets: Vec<IoTicket> = Vec::new();
+    let mut drains: Vec<PendingWrite> = Vec::new();
+    let mut images = 0u64;
+    let mut bursts = 0u64;
+    let mut drain_count = 0u64;
+    let mut batch_idx = 0usize;
+    let batch = cfg.batch.max(1);
+    'outer: loop {
+        for _ in 0..batch {
+            match ds.next() {
+                Some(item) => {
+                    item.context("trace-record ingest read failed")?;
+                    images += 1;
+                }
+                None => break 'outer,
+            }
+        }
+        batch_idx += 1;
+        if cfg.ckpt_interval > 0 && batch_idx % cfg.ckpt_interval == 0 {
+            bursts += 1;
+            if miniapp {
+                // Real checkpoint files, then Drain-class copies to
+                // the slow device (the Fig. 10 burst-buffer pattern).
+                for j in 0..cfg.ckpt_writes {
+                    let p = SimPath::new(
+                        &cfg.device,
+                        format!("ck/b{bursts}-{j}.data"),
+                    );
+                    with_origin("saver", || {
+                        sim.write_class(
+                            &p,
+                            &vec![0xCD; cfg.ckpt_bytes as usize],
+                            IoClass::Checkpoint,
+                        )
+                    })?;
+                    // Distinct archive path: with --drain-device equal
+                    // to --device the drain would otherwise be a
+                    // self-copy whose writer truncates the file its
+                    // reader is mid-way through.
+                    let dst = SimPath::new(
+                        &cfg.drain_device,
+                        format!("archive/{}", p.rel),
+                    );
+                    drains.push(with_origin("bb-drain", || {
+                        sim.copy_async_class(&p, &dst, IoClass::Drain)
+                    })?);
+                    drain_count += 1;
+                }
+            } else {
+                for _ in 0..cfg.ckpt_writes {
+                    ckpt_tickets.push(with_origin("saver", || {
+                        sim.engine().submit(IoRequest::ProbeWrite {
+                            device: cfg.device.clone(),
+                            bytes: cfg.ckpt_bytes,
+                        })
+                    })?);
+                }
+            }
+        }
+    }
+    for t in ckpt_tickets {
+        t.wait()?;
+    }
+    for d in drains {
+        sim.finish_write(d)?;
+    }
+    let elapsed_secs = timer.secs();
+
+    sim.engine().clear_observer();
+    let events = recorder.finish()?;
+    Ok(TraceRecordResult {
+        path: out.to_path_buf(),
+        events,
+        images,
+        ckpt_bursts: bursts,
+        drains: drain_count,
+        elapsed_secs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::IoClass;
+    use crate::trace::{replay, ReplayConfig, Trace};
+
+    fn cfg(tag: &str, workload: &str) -> (TraceRecordConfig, PathBuf) {
+        let dir = std::env::temp_dir().join(format!(
+            "dlio-trace-record-test-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut c = TraceRecordConfig::smoke(
+            dir.to_string_lossy().into_owned(),
+            1000.0,
+        );
+        c.workload = workload.into();
+        c.files = 16;
+        c.file_bytes = 8 * 1024;
+        c.batch = 4;
+        c.ckpt_bytes = 200_000;
+        (c, dir.join("trace.jsonl"))
+    }
+
+    #[test]
+    fn microbench_trace_carries_the_measured_phase_only() {
+        let (c, out) = cfg("micro", "microbench");
+        let r = run(&c, QosConfig::default(), &out).unwrap();
+        assert_eq!(r.images, 16);
+        assert_eq!(r.ckpt_bursts, 2); // 16 images / batch 4 / interval 2
+        let trace = Trace::load(&out).unwrap();
+        assert_eq!(trace.manifest.qos_mode, "static");
+        assert!(trace.manifest.workload.contains("microbench"));
+        let aggs = trace.recorded_aggregates();
+        let ing = &aggs[IoClass::Ingest.index()];
+        // Exactly the measured ingest: corpus fixture writes excluded.
+        assert_eq!(ing.completed, 16);
+        assert_eq!(ing.bytes, 16 * 8 * 1024);
+        assert_eq!(
+            aggs[IoClass::Checkpoint.index()].completed as usize,
+            2 * c.ckpt_writes
+        );
+        assert_eq!(aggs[IoClass::Drain.index()].completed, 0);
+        assert_eq!(r.events, trace.events.len() as u64);
+        // Origin tags attribute the traffic.
+        assert!(trace
+            .events
+            .iter()
+            .filter(|e| e.class == IoClass::Ingest)
+            .all(|e| e.origin == "sharded-reader"));
+        assert!(trace
+            .events
+            .iter()
+            .filter(|e| e.class == IoClass::Checkpoint)
+            .all(|e| e.origin == "saver"));
+    }
+
+    #[test]
+    fn miniapp_trace_records_all_three_classes() {
+        let (c, out) = cfg("mini", "miniapp");
+        let r = run(&c, QosConfig::default(), &out).unwrap();
+        assert!(r.drains > 0);
+        let trace = Trace::load(&out).unwrap();
+        assert_eq!(trace.manifest.devices.len(), 2, "drain device recorded");
+        let aggs = trace.recorded_aggregates();
+        assert!(aggs[IoClass::Ingest.index()].completed > 0);
+        assert!(aggs[IoClass::Checkpoint.index()].completed > 0);
+        // Each drain copy = read half + write half, both Drain-class.
+        assert_eq!(aggs[IoClass::Drain.index()].completed, 2 * r.drains);
+        assert!(trace
+            .events
+            .iter()
+            .filter(|e| e.class == IoClass::Drain)
+            .all(|e| e.origin == "bb-drain"));
+        // And the whole trace closed-loop replays cleanly against its
+        // recorded two-device setup.
+        let outcome = replay(&trace, &ReplayConfig::default()).unwrap();
+        assert_eq!(outcome.errors, 0);
+        assert_eq!(outcome.replayed.len(), trace.events.len());
+    }
+
+    #[test]
+    fn unknown_workload_and_device_are_rejected() {
+        let (mut c, out) = cfg("bad", "banana");
+        assert!(run(&c, QosConfig::default(), &out).is_err());
+        c.workload = "microbench".into();
+        c.device = "floppy".into();
+        assert!(run(&c, QosConfig::default(), &out).is_err());
+    }
+}

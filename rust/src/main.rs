@@ -15,12 +15,16 @@
 //! dlio qos-sweep   [--smoke] [--modes fifo,static,adaptive]
 //!                  [--intervals 0,2,8] [--shards 1,2,4] [--format csv|json]
 //! dlio trace       [--device D] [--prefetch 0|1] ... (dstat CSV to stdout)
+//! dlio trace-record [microbench|miniapp] [--smoke] [--out FILE]
+//! dlio trace-replay <file> [--profile P] [--qos fifo|static|adaptive]
+//!                  [--speed X] [--open-loop] [--json|--csv]
 //! ```
 //!
 //! Every run needs `make artifacts` first (or `DLIO_ARTIFACTS` pointing
 //! at a built artifact dir).  `DLIO_TIME_SCALE` (default 8) uniformly
 //! accelerates the simulated devices; ratios are scale-invariant.
 
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
@@ -30,13 +34,14 @@ use dlio::config::{
     CkptStudyConfig, MicrobenchConfig, MiniAppConfig, Testbed,
 };
 use dlio::coordinator::{
-    ensure_corpus, make_sim, microbench, miniapp, qos_sweep,
+    ensure_corpus, make_sim, microbench, miniapp, qos_sweep, trace_record,
 };
 use dlio::data::CorpusSpec;
 use dlio::metrics::Table;
 use dlio::runtime::Runtime;
 use dlio::storage::ior;
-use dlio::trace::Dstat;
+use dlio::storage::{profiles, IoClass, QosConfig};
+use dlio::trace::{replay, Dstat, ReplayConfig, ReplayMode, Trace};
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
@@ -60,6 +65,8 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "ckpt-study" => cmd_ckpt_study(args),
         "qos-sweep" => cmd_qos_sweep(args),
         "trace" => cmd_trace(args),
+        "trace-record" => cmd_trace_record(args),
+        "trace-replay" => cmd_trace_replay(args),
         "help" | "--help" => {
             print!("{}", HELP);
             Ok(())
@@ -79,15 +86,71 @@ dlio — Characterizing Deep-Learning I/O Workloads (PDSW-DISCS'18) repro
   dlio qos-sweep   Figs 4/8  (mode x ckpt interval x shards) matrix ->
                              per-class queue/latency rows, CSV or JSON
   dlio trace       Figs 8/10 dstat-style I/O trace (CSV on stdout)
+  dlio trace-record [microbench|miniapp]  record a request-level JSONL
+                             trace ([--smoke] [--out FILE])
+  dlio trace-replay <file>   re-run a trace against any profile/QoS
+                             ([--profile P] [--qos fifo|static|adaptive]
+                              [--speed X] [--open-loop] [--json|--csv])
 
 Common options: --time-scale F (default $DLIO_TIME_SCALE or 8),
 --device hdd|ssd|optane|lustre, --threads N, --batch N.
-Engine QoS: --fifo (single-queue baseline), --adaptive-qos MS (AIMD
-ingest-weight controller targeting MS modelled ms of ingest p99 wait),
---ckpt-cap-mbs N (hard token-bucket cap on the Checkpoint class),
+Engine QoS: --fifo (single-queue baseline), --adaptive-qos MS|auto
+(AIMD ingest-weight controller targeting MS modelled ms of ingest p99
+wait; `auto` = per-profile targets), --ckpt-cap-mbs N / --drain-cap-mbs
+N (hard token-bucket caps on the Checkpoint / Drain classes),
 --preempt-chunks N, --engine-stats (per-device, per-class table).
 Artifacts: run `make artifacts` first or set DLIO_ARTIFACTS.
 ";
+
+/// Engine QoS from CLI flags (shared by every subcommand that builds
+/// an engine): `--fifo` restores the single-queue baseline (for
+/// A/B-ing the class scheduler); `--adaptive-qos MS` turns on the
+/// AIMD ingest-weight controller (target = MS modelled ms of ingest
+/// p99 queue wait; overrides --fifo), `--adaptive-qos auto` uses the
+/// per-profile targets in `storage::profiles`; `--ckpt-cap-mbs N` /
+/// `--drain-cap-mbs N` hard-cap the Checkpoint / Drain classes at N
+/// modelled MB/s; `--preempt-chunks N` tunes how often streams yield
+/// to higher classes (0 = never).
+fn qos_from_args(args: &Args) -> Result<QosConfig> {
+    let mut qos = QosConfig::default();
+    if args.has_flag("fifo") {
+        qos = QosConfig::fifo();
+    }
+    if let Some(ms) = args.get("adaptive-qos") {
+        qos = if ms == "auto" {
+            profiles::adaptive_auto()
+        } else {
+            let ms: f64 =
+                ms.parse().map_err(|e| anyhow!("--adaptive-qos: {e}"))?;
+            if ms <= 0.0 {
+                return Err(anyhow!(
+                    "--adaptive-qos must be positive (ms) or `auto`"
+                ));
+            }
+            QosConfig::adaptive(ms * 1e-3)
+        };
+    }
+    let cap = |key: &str, class: IoClass, qos: QosConfig| -> Result<QosConfig> {
+        match args.get(key) {
+            None => Ok(qos),
+            Some(mbs) => {
+                let mbs: f64 =
+                    mbs.parse().map_err(|e| anyhow!("--{key}: {e}"))?;
+                if mbs <= 0.0 {
+                    return Err(anyhow!("--{key} must be positive"));
+                }
+                Ok(qos.with_rate_cap(class, mbs * 1e6, 2 << 20))
+            }
+        }
+    };
+    qos = cap("ckpt-cap-mbs", IoClass::Checkpoint, qos)?;
+    qos = cap("drain-cap-mbs", IoClass::Drain, qos)?;
+    if let Some(n) = args.get("preempt-chunks") {
+        qos.preempt_chunks =
+            n.parse().map_err(|e| anyhow!("--preempt-chunks: {e}"))?;
+    }
+    Ok(qos)
+}
 
 fn testbed(args: &Args) -> Result<Testbed> {
     let ts = args.get_f64("time-scale", default_time_scale())?;
@@ -99,39 +162,7 @@ fn testbed(args: &Args) -> Result<Testbed> {
         tb.workdir = dir.to_string();
     }
     tb.cache_bytes = args.get_usize("cache-mb", 0)? as u64 * 1_000_000;
-    // Engine QoS: `--fifo` restores the single-queue baseline (for
-    // A/B-ing the class scheduler), `--adaptive-qos MS` turns on the
-    // AIMD ingest-weight controller (target = MS modelled ms of
-    // ingest p99 queue wait; overrides --fifo), `--ckpt-cap-mbs N`
-    // hard-caps the Checkpoint class at N modelled MB/s, and
-    // `--preempt-chunks N` tunes how often streams yield to higher
-    // classes (0 = never).
-    if args.has_flag("fifo") {
-        tb.qos = dlio::storage::QosConfig::fifo();
-    }
-    if let Some(ms) = args.get("adaptive-qos") {
-        let ms: f64 = ms.parse().map_err(|e| anyhow!("--adaptive-qos: {e}"))?;
-        if ms <= 0.0 {
-            return Err(anyhow!("--adaptive-qos must be positive (ms)"));
-        }
-        tb.qos = dlio::storage::QosConfig::adaptive(ms * 1e-3);
-    }
-    if let Some(mbs) = args.get("ckpt-cap-mbs") {
-        let mbs: f64 =
-            mbs.parse().map_err(|e| anyhow!("--ckpt-cap-mbs: {e}"))?;
-        if mbs <= 0.0 {
-            return Err(anyhow!("--ckpt-cap-mbs must be positive"));
-        }
-        tb.qos = tb.qos.clone().with_rate_cap(
-            dlio::storage::IoClass::Checkpoint,
-            mbs * 1e6,
-            2 << 20, // 2 MiB burst
-        );
-    }
-    if let Some(n) = args.get("preempt-chunks") {
-        tb.qos.preempt_chunks =
-            n.parse().map_err(|e| anyhow!("--preempt-chunks: {e}"))?;
-    }
+    tb.qos = qos_from_args(args)?;
     Ok(tb)
 }
 
@@ -407,7 +438,12 @@ fn cmd_qos_sweep(args: &Args) -> Result<()> {
 
 fn cmd_trace(args: &Args) -> Result<()> {
     let tb = testbed(args)?;
-    let tracer = Arc::new(Dstat::new(args.get_f64("interval-secs", 1.0)?));
+    // Validate here instead of letting Dstat::new's assert panic on a
+    // non-positive interval (regression: `--interval-secs 0`).
+    let tracer = Arc::new(
+        Dstat::try_new(args.get_f64("interval-secs", 1.0)?)
+            .map_err(|e| anyhow!("--interval-secs: {e}"))?,
+    );
     let sim = make_sim(&tb, Some(tracer.clone()))?;
     let rt = Runtime::open_default()?;
     let cfg = train_cfg(args)?;
@@ -424,5 +460,136 @@ fn cmd_trace(args: &Args) -> Result<()> {
                                           &manifest, &study)?;
     eprintln!("# run: {} steps in {:.2}s", r.steps, r.total_secs);
     print!("{}", tracer.to_csv());
+    Ok(())
+}
+
+/// `dlio trace-record <microbench|miniapp>`: run the workload with the
+/// request-level recorder attached and write a JSONL trace — the
+/// reusable-workload half of the trace subsystem (DESIGN.md §11).
+fn cmd_trace_record(args: &Args) -> Result<()> {
+    let workload = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("microbench");
+    let ts = args.get_f64("time-scale", default_time_scale())?;
+    if ts <= 0.0 {
+        return Err(anyhow!("--time-scale must be positive"));
+    }
+    let workdir = args
+        .get("workdir")
+        .map(str::to_string)
+        .unwrap_or_else(default_workdir);
+    let mut cfg = if args.has_flag("smoke") {
+        trace_record::TraceRecordConfig::smoke(workdir.clone(), ts)
+    } else {
+        trace_record::TraceRecordConfig::standard(workdir.clone(), ts)
+    };
+    cfg.workload = workload.to_string();
+    if let Some(device) = args.get("device") {
+        cfg.device = device.to_string();
+    }
+    if let Some(drain) = args.get("drain-device") {
+        cfg.drain_device = drain.to_string();
+    }
+    cfg.files = args.get_usize("files", cfg.files)?;
+    cfg.file_bytes = args.get_usize("file-kb", cfg.file_bytes / 1024)? * 1024;
+    cfg.shards = args.get_usize("shards", cfg.shards)?;
+    cfg.window = args.get_usize("window", cfg.window)?;
+    cfg.batch = args.get_usize("batch", cfg.batch)?;
+    cfg.ckpt_interval = args.get_usize("interval", cfg.ckpt_interval)?;
+    cfg.ckpt_writes = args.get_usize("ckpt-writes", cfg.ckpt_writes)?;
+    cfg.ckpt_bytes =
+        args.get_usize("ckpt-mb", (cfg.ckpt_bytes / 1_000_000) as usize)?
+            as u64
+            * 1_000_000;
+    cfg.seed = args.get_usize("seed", cfg.seed as usize)? as u64;
+    let out = args
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| {
+            Path::new(&workdir).join(format!("trace-{workload}.jsonl"))
+        });
+    let qos = qos_from_args(args)?;
+    let r = trace_record::run(&cfg, qos, &out)?;
+    println!(
+        "trace-record {workload}: {} events -> {} ({} images, {} ckpt \
+         bursts, {} drains, {:.2}s)",
+        r.events,
+        r.path.display(),
+        r.images,
+        r.ckpt_bursts,
+        r.drains,
+        r.elapsed_secs,
+    );
+    Ok(())
+}
+
+/// `dlio trace-replay <file>`: re-issue a recorded request stream
+/// against any storage profile / QoS config and print the
+/// record-vs-replay diff (table, `--json`, or `--csv`).
+fn cmd_trace_replay(args: &Args) -> Result<()> {
+    let file = args.positional.get(1).ok_or_else(|| {
+        anyhow!("usage: dlio trace-replay <file> [--profile P] [--qos M] \
+                 [--speed X] [--open-loop] [--json|--csv]")
+    })?;
+    let trace = Trace::load(Path::new(file))?;
+    let adaptive_target = args.get_f64("adaptive-target-ms", 5.0)? * 1e-3;
+    let qos = match args.get("qos") {
+        // Default: the manifest's recorded scheduler — the FULL config
+        // (weights, caps, preemption, adaptive targets) when the
+        // recorder captured it, so a plain replay rebuilds the
+        // recorded setup exactly (like the device models).  Older
+        // traces fall back to the mode label, unknown labels to
+        // static.
+        None => trace.manifest.qos.clone().unwrap_or_else(|| {
+            QosConfig::parse_mode(&trace.manifest.qos_mode, adaptive_target)
+                .unwrap_or_default()
+        }),
+        // `auto` keys per-device controller targets by device name;
+        // under --profile substitution every traced device runs that
+        // profile's model, so the target must follow the profile, not
+        // the traced names.
+        Some("auto") => match args.get("profile") {
+            Some(p) => QosConfig::adaptive(
+                profiles::adaptive_ingest_target(p).unwrap_or(5.0e-3),
+            ),
+            None => profiles::adaptive_auto(),
+        },
+        Some(mode) => QosConfig::parse_mode(mode, adaptive_target)?,
+    };
+    // `--speed X` implies open-loop (the recorded arrival schedule,
+    // scaled); `--open-loop` alone replays the gaps at 1x.
+    let speed = args.get_f64("speed", 1.0)?;
+    let mode = if args.has_flag("open-loop") || args.get("speed").is_some() {
+        ReplayMode::Open { speed }
+    } else {
+        ReplayMode::Closed
+    };
+    let time_scale = match args.get("time-scale") {
+        None => None,
+        Some(v) => {
+            let ts: f64 = v.parse().map_err(|e| anyhow!("--time-scale: {e}"))?;
+            if ts <= 0.0 {
+                return Err(anyhow!("--time-scale must be positive"));
+            }
+            Some(ts)
+        }
+    };
+    let cfg = ReplayConfig {
+        mode,
+        qos,
+        profile: args.get("profile").map(str::to_string),
+        time_scale,
+    };
+    let outcome = replay(&trace, &cfg)?;
+    let report = dlio::trace::report(&trace, &cfg, &outcome);
+    if args.has_flag("json") {
+        println!("{}", dlio::util::json::to_string(&report.to_json()));
+    } else if args.has_flag("csv") {
+        print!("{}", report.to_csv());
+    } else {
+        print!("{}", report.to_table());
+    }
     Ok(())
 }

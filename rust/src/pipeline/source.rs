@@ -19,7 +19,7 @@ use anyhow::Result;
 
 use super::dataset::Dataset;
 use crate::data::manifest::{Manifest, Sample};
-use crate::storage::{IoClass, PendingRead, StorageSim};
+use crate::storage::{with_origin, IoClass, PendingRead, StorageSim};
 
 /// A dataset yielding the elements of a vector in order.
 pub struct VecSource<T> {
@@ -198,10 +198,12 @@ impl ShardedReader {
                     None => break,
                     Some(PendingItem::Error(e)) => ReadSlot::Failed(e),
                     Some(PendingItem::Sample(sample)) => {
-                        match self
-                            .sim
-                            .read_async_class(&sample.path, IoClass::Ingest)
-                        {
+                        // Tagged so trace events attribute these reads
+                        // to the ingest source.
+                        match with_origin("sharded-reader", || {
+                            self.sim
+                                .read_async_class(&sample.path, IoClass::Ingest)
+                        }) {
                             Ok(pr) => ReadSlot::Submitted(sample, pr),
                             Err(e) => ReadSlot::Failed(e),
                         }

@@ -14,8 +14,9 @@ pub mod sim;
 
 pub use device::{Device, DeviceModel, Dir, IoObserver, NullObserver};
 pub use engine::{
-    AdaptiveQos, ChunkWriter, ClassStats, EngineDeviceStats, IoClass,
-    IoCompletion, IoEngine, IoRequest, IoTicket, QosConfig, RateCap,
+    with_origin, AdaptiveQos, ChunkWriter, ClassStats, EngineDeviceStats,
+    EngineEvent, EngineObserver, EngineOp, IoClass, IoCompletion, IoEngine,
+    IoRequest, IoTicket, QosConfig, RateCap,
 };
 pub use page_cache::PageCache;
 pub use sim::{PendingRead, PendingWrite, SimPath, StorageSim};

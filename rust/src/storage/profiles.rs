@@ -16,6 +16,7 @@
 //! shapes fail the suite.
 
 use super::device::{DeviceModel, Dir};
+use super::engine::QosConfig;
 
 /// Median file size of the ImageNet-subset corpus (§IV-A): 112 KB.
 pub const IMAGENET_MEDIAN_BYTES: u64 = 112 * 1024;
@@ -104,6 +105,42 @@ pub fn blackdog(time_scale: f64) -> Vec<DeviceModel> {
         blackdog_ssd(time_scale),
         blackdog_optane(time_scale),
     ]
+}
+
+/// Per-profile ingest p99 queue-wait target for the adaptive QoS
+/// controller, **modelled** seconds.  One global ms value makes no
+/// sense across device classes: a seek-bound HDD (8 ms per op) can
+/// never hold the sub-ms bar a deep-parallel Optane idles under, so
+/// the controller would pin the HDD's ingest weight at its ceiling
+/// forever (no headroom left to react with) while never engaging on
+/// Optane.  Targets sit a small multiple above each device's per-op
+/// latency floor — reachable when the device is healthy, exceeded as
+/// soon as a checkpoint backlog queues ahead of ingest.
+pub fn adaptive_ingest_target(name: &str) -> Option<f64> {
+    match name {
+        "hdd" => Some(12.0e-3),   // ~1.5x the 8 ms seek floor
+        "ssd" => Some(2.0e-3),    // a few SATA command slots
+        "optane" => Some(0.5e-3), // deep parallelism: waits ~ 0
+        "lustre" => Some(5.0e-3), // ~2 RPC round-trips
+        _ => None,
+    }
+}
+
+/// Adaptive QoS with the per-profile controller targets wired in:
+/// every paper device gets its own ingest p99 bar
+/// ([`adaptive_ingest_target`]) instead of one global ms value — the
+/// CLI's `--adaptive-qos auto`.  Unlisted (custom) devices fall back
+/// to a mid-range 5 ms target.
+pub fn adaptive_auto() -> QosConfig {
+    let mut qos = QosConfig::adaptive(5.0e-3);
+    if let Some(a) = &mut qos.adaptive {
+        for name in ["hdd", "ssd", "optane", "lustre"] {
+            if let Some(t) = adaptive_ingest_target(name) {
+                a.per_device.push((name.to_string(), t));
+            }
+        }
+    }
+    qos
 }
 
 /// Analytic steady-state ingestion throughput (bytes/s) for `k`
@@ -219,6 +256,29 @@ mod tests {
             let bw = analytic_throughput(&m, Dir::Read, 512 * 1024 * 1024, 1);
             assert!(bw > 0.95 * m.read_bw, "{}: {bw}", m.name);
         }
+    }
+
+    #[test]
+    fn adaptive_targets_track_device_latency_ordering() {
+        // Slower per-op devices get laxer bars (the controller must
+        // have reachable targets on every profile).
+        let t = |n: &str| adaptive_ingest_target(n).unwrap();
+        assert!(t("hdd") > t("lustre"));
+        assert!(t("lustre") > t("ssd"));
+        assert!(t("ssd") > t("optane"));
+        assert!(adaptive_ingest_target("floppy").is_none());
+        // Each target clears its device's single-op latency floor.
+        for name in ["hdd", "ssd", "optane", "lustre"] {
+            let m = by_name(name, 1.0).unwrap();
+            assert!(t(name) > m.read_lat, "{name}: unreachable target");
+        }
+        // adaptive_auto wires every preset through target_for.
+        let qos = adaptive_auto();
+        let a = qos.adaptive.as_ref().unwrap();
+        assert_eq!(a.target_for("hdd"), t("hdd"));
+        assert_eq!(a.target_for("optane"), t("optane"));
+        assert_eq!(a.target_for("custom-dev"), a.target_ingest_p99);
+        assert_eq!(qos.mode_name(), "adaptive");
     }
 
     #[test]

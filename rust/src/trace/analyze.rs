@@ -1,0 +1,438 @@
+//! Analysis over request-level trace event streams (DESIGN.md §11):
+//! per-class aggregates, busy/overlap fractions, interval timelines
+//! (the Fig. 8/10 view), and the legacy `Dstat` row shape derived
+//! from events.
+
+use anyhow::{bail, Result};
+
+use crate::metrics::LatencyHistogram;
+use crate::storage::{Dir, IoClass};
+
+use super::dstat::TraceRow;
+use super::event::TraceEvent;
+
+/// Per-class aggregate over an event stream — the row shape the
+/// record-vs-replay diff table compares.
+#[derive(Debug, Clone, Default)]
+pub struct ClassAgg {
+    pub completed: u64,
+    pub errors: u64,
+    pub bytes: u64,
+    pub mean_queue_secs: f64,
+    /// Queue-wait quantiles from the same log2 histogram the engine
+    /// stats use (conservative bucket upper bounds).
+    pub p50_queue_secs: f64,
+    pub p99_queue_secs: f64,
+    /// First submit → last completion, wall seconds (0 when empty).
+    pub makespan_secs: f64,
+    /// Union of the class's service intervals, wall seconds: how long
+    /// the class actually held the device(s).
+    pub busy_secs: f64,
+}
+
+/// Length of the union of (possibly overlapping) intervals.
+fn union_secs(iv: Vec<(f64, f64)>) -> f64 {
+    merged(iv).iter().map(|(a, b)| b - a).sum()
+}
+
+/// Merge to disjoint sorted intervals (for union and intersection
+/// sweeps).
+fn merged(mut iv: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
+    iv.retain(|(a, b)| b > a);
+    iv.sort_by(|x, y| x.0.total_cmp(&y.0));
+    let mut out: Vec<(f64, f64)> = Vec::new();
+    for (a, b) in iv {
+        match out.last_mut() {
+            Some((_, ce)) if a <= *ce => {
+                if b > *ce {
+                    *ce = b;
+                }
+            }
+            _ => out.push((a, b)),
+        }
+    }
+    out
+}
+
+fn service_intervals(events: &[TraceEvent], class: IoClass) -> Vec<(f64, f64)> {
+    events
+        .iter()
+        .filter(|e| e.class == class)
+        .map(|e| (e.service_start_secs(), e.complete_secs()))
+        .collect()
+}
+
+/// Aggregate an event stream per class (indexed by `IoClass::index`).
+pub fn class_aggregates(events: &[TraceEvent]) -> [ClassAgg; IoClass::COUNT] {
+    let mut hists: [LatencyHistogram; IoClass::COUNT] =
+        std::array::from_fn(|_| LatencyHistogram::new());
+    let mut aggs: [ClassAgg; IoClass::COUNT] =
+        std::array::from_fn(|_| ClassAgg::default());
+    let mut first: [f64; IoClass::COUNT] = [f64::INFINITY; IoClass::COUNT];
+    let mut last: [f64; IoClass::COUNT] = [0.0; IoClass::COUNT];
+    let mut queue_sum: [f64; IoClass::COUNT] = [0.0; IoClass::COUNT];
+    for e in events {
+        let c = e.class.index();
+        aggs[c].completed += 1;
+        if !e.ok {
+            aggs[c].errors += 1;
+        }
+        aggs[c].bytes += e.bytes;
+        hists[c].record(e.queue_secs);
+        queue_sum[c] += e.queue_secs;
+        first[c] = first[c].min(e.submit_secs);
+        last[c] = last[c].max(e.complete_secs());
+    }
+    for (c, agg) in aggs.iter_mut().enumerate() {
+        if agg.completed > 0 {
+            agg.mean_queue_secs = queue_sum[c] / agg.completed as f64;
+            agg.p50_queue_secs = hists[c].quantile(0.50);
+            agg.p99_queue_secs = hists[c].p99();
+            agg.makespan_secs = (last[c] - first[c]).max(0.0);
+        }
+        agg.busy_secs = union_secs(service_intervals(
+            events,
+            IoClass::ALL[c],
+        ));
+    }
+    aggs
+}
+
+/// Fraction of the *shorter* class's busy time during which both
+/// classes had a request in service — e.g. how much of a checkpoint
+/// burst's device time overlapped live ingest (the paper's
+/// compute/ingest-overlap question, asked of the I/O classes the
+/// trace can see).  0 when either class never ran.
+pub fn overlap_fraction(
+    events: &[TraceEvent],
+    a: IoClass,
+    b: IoClass,
+) -> f64 {
+    let ia = merged(service_intervals(events, a));
+    let ib = merged(service_intervals(events, b));
+    let la: f64 = ia.iter().map(|(s, e)| e - s).sum();
+    let lb: f64 = ib.iter().map(|(s, e)| e - s).sum();
+    if la <= 0.0 || lb <= 0.0 {
+        return 0.0;
+    }
+    // Two-pointer sweep over the disjoint sorted interval lists.
+    let mut inter = 0.0;
+    let (mut i, mut j) = (0, 0);
+    while i < ia.len() && j < ib.len() {
+        let lo = ia[i].0.max(ib[j].0);
+        let hi = ia[i].1.min(ib[j].1);
+        if hi > lo {
+            inter += hi - lo;
+        }
+        if ia[i].1 <= ib[j].1 {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    inter / la.min(lb)
+}
+
+/// Fraction of the whole trace's makespan during which `class` had a
+/// request in service (1 - this is the slack another activity could
+/// hide in).
+pub fn busy_fraction(events: &[TraceEvent], class: IoClass) -> f64 {
+    let start = events
+        .iter()
+        .map(|e| e.submit_secs)
+        .fold(f64::INFINITY, f64::min);
+    let end = events
+        .iter()
+        .map(|e| e.complete_secs())
+        .fold(0.0f64, f64::max);
+    if !(end > start) {
+        return 0.0;
+    }
+    union_secs(service_intervals(events, class)) / (end - start)
+}
+
+/// The legacy `Dstat` interval view derived from the event stream:
+/// per (device, interval) read/write byte bins with zero-filled gaps —
+/// the exact row shape `Dstat::rows()` produces, which is what makes
+/// the interval tracer a *view* over events rather than a separate
+/// instrument.  Event bytes are binned at completion time (the
+/// recorder sees whole requests, not per-chunk grants), so at
+/// sub-request interval widths the two tracers can place a request's
+/// bytes in adjacent bins; per-device totals always agree.
+pub fn dstat_rows(
+    events: &[TraceEvent],
+    interval_secs: f64,
+) -> Result<Vec<TraceRow>> {
+    if !(interval_secs > 0.0) || !interval_secs.is_finite() {
+        bail!("interval must be a positive number of seconds");
+    }
+    let mut bins: std::collections::HashMap<(String, u64), (u64, u64)> =
+        std::collections::HashMap::new();
+    for e in events {
+        let iv = (e.complete_secs() / interval_secs) as u64;
+        let slot = bins.entry((e.device.clone(), iv)).or_insert((0, 0));
+        match e.op.dir() {
+            Dir::Read => slot.0 += e.bytes,
+            Dir::Write => slot.1 += e.bytes,
+        }
+    }
+    // One renderer for both tracers (`dstat::render_rows`): the parity
+    // guarantee is structural, not two copies kept in sync by a test.
+    Ok(super::dstat::render_rows(&bins))
+}
+
+/// One interval of one (device, class) lane — the Fig. 8/10 per-class
+/// timeline the paper hand-plotted from dstat, now first-class.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimelineRow {
+    pub interval: u64,
+    pub device: String,
+    pub class: IoClass,
+    pub ops: u64,
+    pub read_bytes: u64,
+    pub write_bytes: u64,
+}
+
+/// Per-class interval timeline (sorted by device, class, interval;
+/// only active lanes are emitted, but intervals within a lane are
+/// zero-filled so plots show idle gaps).
+pub fn timeline(
+    events: &[TraceEvent],
+    interval_secs: f64,
+) -> Result<Vec<TimelineRow>> {
+    if !(interval_secs > 0.0) || !interval_secs.is_finite() {
+        bail!("interval must be a positive number of seconds");
+    }
+    type Key = (String, usize);
+    let mut bins: std::collections::BTreeMap<Key, Vec<(u64, u64, u64)>> =
+        std::collections::BTreeMap::new();
+    let max_iv = events
+        .iter()
+        .map(|e| (e.complete_secs() / interval_secs) as u64)
+        .max()
+        .unwrap_or(0);
+    for e in events {
+        let iv = (e.complete_secs() / interval_secs) as usize;
+        let lane = bins
+            .entry((e.device.clone(), e.class.index()))
+            .or_insert_with(|| vec![(0, 0, 0); max_iv as usize + 1]);
+        let slot = &mut lane[iv];
+        slot.0 += 1;
+        match e.op.dir() {
+            Dir::Read => slot.1 += e.bytes,
+            Dir::Write => slot.2 += e.bytes,
+        }
+    }
+    let mut out = Vec::new();
+    for ((device, class_idx), lane) in bins {
+        for (iv, (ops, r, w)) in lane.into_iter().enumerate() {
+            out.push(TimelineRow {
+                interval: iv as u64,
+                device: device.clone(),
+                class: IoClass::ALL[class_idx],
+                ops,
+                read_bytes: r,
+                write_bytes: w,
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Render a timeline as CSV: `sec,device,class,ops,read_mb,write_mb`.
+pub fn timeline_csv(events: &[TraceEvent], interval_secs: f64) -> Result<String> {
+    let mut s = String::from("sec,device,class,ops,read_mb,write_mb\n");
+    for row in timeline(events, interval_secs)? {
+        s.push_str(&format!(
+            "{:.3},{},{},{},{:.3},{:.3}\n",
+            row.interval as f64 * interval_secs,
+            row.device,
+            row.class,
+            row.ops,
+            row.read_bytes as f64 / 1e6,
+            row.write_bytes as f64 / 1e6,
+        ));
+    }
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::EngineOp;
+
+    fn ev(
+        device: &str,
+        class: IoClass,
+        op: EngineOp,
+        bytes: u64,
+        submit: f64,
+        queue: f64,
+        service: f64,
+    ) -> TraceEvent {
+        TraceEvent {
+            seq: 0,
+            device: device.into(),
+            class,
+            op,
+            origin: String::new(),
+            bytes,
+            ok: true,
+            submit_secs: submit,
+            queue_secs: queue,
+            service_secs: service,
+        }
+    }
+
+    #[test]
+    fn aggregates_split_by_class() {
+        let events = vec![
+            ev("d", IoClass::Ingest, EngineOp::Read, 100, 0.0, 0.010, 0.005),
+            ev("d", IoClass::Ingest, EngineOp::Read, 200, 0.01, 0.010, 0.005),
+            ev("d", IoClass::Checkpoint, EngineOp::Write, 5000, 0.0, 0.100,
+               0.050),
+        ];
+        let aggs = class_aggregates(&events);
+        let ing = &aggs[IoClass::Ingest.index()];
+        assert_eq!(ing.completed, 2);
+        assert_eq!(ing.bytes, 300);
+        assert!((ing.mean_queue_secs - 0.010).abs() < 1e-9);
+        // makespan: first submit 0.0 -> last complete 0.025
+        assert!((ing.makespan_secs - 0.025).abs() < 1e-9);
+        let ck = &aggs[IoClass::Checkpoint.index()];
+        assert_eq!(ck.completed, 1);
+        assert_eq!(ck.bytes, 5000);
+        // Conservative log2 bucket upper bound: >= the true wait,
+        // < 2x above it.
+        assert!(ck.p99_queue_secs >= 0.100 && ck.p99_queue_secs < 0.2);
+        assert_eq!(aggs[IoClass::Drain.index()].completed, 0);
+    }
+
+    #[test]
+    fn busy_union_merges_overlapping_service() {
+        // Two overlapping ingest services [0.1,0.3] and [0.2,0.4]:
+        // busy = 0.3, not 0.4.
+        let events = vec![
+            ev("d", IoClass::Ingest, EngineOp::ProbeRead, 1, 0.0, 0.1, 0.2),
+            ev("d", IoClass::Ingest, EngineOp::ProbeRead, 1, 0.0, 0.2, 0.2),
+        ];
+        let aggs = class_aggregates(&events);
+        assert!((aggs[IoClass::Ingest.index()].busy_secs - 0.3).abs() < 1e-9);
+        // Trace spans 0.0 -> 0.4; busy fraction = 0.3/0.4.
+        assert!((busy_fraction(&events, IoClass::Ingest) - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overlap_fraction_measures_co_service() {
+        // Ingest in service [0.0, 0.4]; checkpoint [0.3, 0.5]: overlap
+        // 0.1 over the shorter class's 0.2 busy = 0.5.
+        let events = vec![
+            ev("d", IoClass::Ingest, EngineOp::ProbeRead, 1, 0.0, 0.0, 0.4),
+            ev("d", IoClass::Checkpoint, EngineOp::ProbeWrite, 1, 0.3, 0.0,
+               0.2),
+        ];
+        let f = overlap_fraction(&events, IoClass::Ingest, IoClass::Checkpoint);
+        assert!((f - 0.5).abs() < 1e-9, "overlap {f}");
+        // Symmetric, and zero against an idle class.
+        let g = overlap_fraction(&events, IoClass::Checkpoint, IoClass::Ingest);
+        assert!((g - f).abs() < 1e-9);
+        assert_eq!(overlap_fraction(&events, IoClass::Ingest, IoClass::Drain),
+                   0.0);
+    }
+
+    #[test]
+    fn dstat_rows_bin_by_device_and_direction() {
+        let events = vec![
+            ev("hdd", IoClass::Ingest, EngineOp::Read, 100, 0.0, 0.0, 0.01),
+            ev("hdd", IoClass::Ingest, EngineOp::Read, 50, 0.02, 0.0, 0.01),
+            ev("hdd", IoClass::Checkpoint, EngineOp::Write, 7, 0.0, 0.0, 0.01),
+            ev("ssd", IoClass::Ingest, EngineOp::ProbeRead, 1, 0.0, 0.0, 0.01),
+        ];
+        let rows = dstat_rows(&events, 10.0).unwrap();
+        assert_eq!(rows.len(), 2); // one wide interval, two devices
+        assert_eq!(rows[0].device, "hdd");
+        assert_eq!(rows[0].read_bytes, 150);
+        assert_eq!(rows[0].write_bytes, 7);
+        assert_eq!(rows[1].device, "ssd");
+        assert_eq!(rows[1].read_bytes, 1);
+        assert!(dstat_rows(&events, 0.0).is_err());
+        assert!(dstat_rows(&events, f64::NAN).is_err());
+    }
+
+    #[test]
+    fn dstat_view_over_events_matches_legacy_tracer() {
+        // Satellite parity proof: run mixed traffic through a sim with
+        // BOTH tracers attached — the legacy device-level Dstat and
+        // the request-level event stream — and derive Dstat's rows
+        // from the events.  With an interval wider than the run, the
+        // two binning clocks (per-chunk grants vs whole-request
+        // completions) collapse into the same bins, so the derived
+        // rows must equal the legacy tracer's exactly.
+        use crate::storage::{DeviceModel, EngineObserver, SimPath, StorageSim};
+        use crate::trace::{Dstat, MemorySink};
+        use std::sync::Arc;
+
+        let dir = std::env::temp_dir().join(format!(
+            "dlio-trace-parity-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let model = |name: &str| DeviceModel {
+            name: name.into(),
+            read_bw: 1e9,
+            write_bw: 1e9,
+            read_lat: 0.0,
+            write_lat: 0.0,
+            channels: 4,
+            elevator: vec![(1, 1.0)],
+            time_scale: 1000.0,
+        };
+        let dstat = Arc::new(Dstat::new(1e6)); // one wide bin
+        let sim = StorageSim::new(
+            dir,
+            vec![model("fast"), model("slow")],
+            0, // cold cache: every read is device-charged on both sides
+            Arc::clone(&dstat) as Arc<dyn crate::storage::IoObserver>,
+        )
+        .unwrap();
+        let sink = MemorySink::new();
+        sim.engine()
+            .set_observer(Arc::clone(&sink) as Arc<dyn EngineObserver>);
+
+        // Mixed traffic: writes, cold reads, probes, cross-device copy.
+        let a = SimPath::new("fast", "a.bin");
+        let b = SimPath::new("slow", "a.bin");
+        sim.write(&a, &vec![1u8; 50_000]).unwrap();
+        assert_eq!(sim.read(&a).unwrap().len(), 50_000);
+        sim.probe_read("slow", 12_345).unwrap();
+        sim.probe_write("fast", 6_789).unwrap();
+        sim.copy(&a, &b).unwrap();
+
+        let rows_legacy = dstat.rows();
+        let rows_events = dstat_rows(&sink.events(), 1e6).unwrap();
+        assert_eq!(
+            rows_events, rows_legacy,
+            "event-derived interval view diverged from the legacy tracer"
+        );
+        // And the totals surface agrees per device/direction.
+        assert_eq!(dstat.totals("fast"), (100_000, 56_789));
+        assert_eq!(dstat.totals("slow"), (12_345, 50_000));
+    }
+
+    #[test]
+    fn timeline_zero_fills_idle_intervals_per_lane() {
+        let events = vec![
+            ev("d", IoClass::Ingest, EngineOp::Read, 10, 0.0, 0.0, 0.01),
+            ev("d", IoClass::Ingest, EngineOp::Read, 20, 0.25, 0.0, 0.01),
+        ];
+        let rows = timeline(&events, 0.1).unwrap();
+        // Intervals 0..=2 for the single (d, ingest) lane.
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].ops, 1);
+        assert_eq!(rows[1].ops, 0, "idle interval not zero-filled");
+        assert_eq!(rows[2].read_bytes, 20);
+        let csv = timeline_csv(&events, 0.1).unwrap();
+        assert!(csv.starts_with("sec,device,class,ops,read_mb,write_mb\n"));
+        assert_eq!(csv.lines().count(), 4);
+    }
+}

@@ -21,6 +21,36 @@ struct State {
     bins: HashMap<(String, u64), (u64, u64)>,
 }
 
+/// Render `(device, interval) -> (read, write)` bins as rows sorted
+/// by (device, interval) with zero-filled gaps — shared by the legacy
+/// tracer and the event-stream view (`analyze::dstat_rows`), which is
+/// what keeps their output shapes in lockstep.
+pub(crate) fn render_rows(
+    bins: &HashMap<(String, u64), (u64, u64)>,
+) -> Vec<TraceRow> {
+    let devices: Vec<String> = bins
+        .keys()
+        .map(|(d, _)| d.clone())
+        .collect::<std::collections::BTreeSet<_>>()
+        .into_iter()
+        .collect();
+    let max_iv = bins.keys().map(|(_, i)| *i).max().unwrap_or(0);
+    let mut out = Vec::new();
+    for d in devices {
+        for iv in 0..=max_iv {
+            let (r, w) =
+                bins.get(&(d.clone(), iv)).copied().unwrap_or((0, 0));
+            out.push(TraceRow {
+                device: d.clone(),
+                interval: iv,
+                read_bytes: r,
+                write_bytes: w,
+            });
+        }
+    }
+    out
+}
+
 /// Interval-binned byte counter, dstat-equivalent.
 pub struct Dstat {
     start: Instant,
@@ -30,13 +60,26 @@ pub struct Dstat {
 }
 
 impl Dstat {
-    pub fn new(interval_secs: f64) -> Self {
-        assert!(interval_secs > 0.0);
-        Dstat {
+    /// Fallible constructor: a non-positive or non-finite interval is
+    /// a configuration error the CLI reports instead of panicking
+    /// (regression: `dlio trace --interval-secs 0` used to trip the
+    /// assert below).
+    pub fn try_new(interval_secs: f64) -> anyhow::Result<Self> {
+        if !(interval_secs > 0.0) || !interval_secs.is_finite() {
+            anyhow::bail!(
+                "interval must be a positive number of seconds, \
+                 got {interval_secs}"
+            );
+        }
+        Ok(Dstat {
             start: Instant::now(),
             interval: interval_secs,
             state: Mutex::new(State { bins: HashMap::new() }),
-        }
+        })
+    }
+
+    pub fn new(interval_secs: f64) -> Self {
+        Self::try_new(interval_secs).expect("positive finite interval")
     }
 
     /// dstat's default once-per-second sampling.
@@ -56,33 +99,7 @@ impl Dstat {
     /// Drain the trace as rows sorted by (device, interval), including
     /// zero rows for gaps so plots show idle periods.
     pub fn rows(&self) -> Vec<TraceRow> {
-        let st = self.state.lock().unwrap();
-        let mut devices: Vec<String> = st
-            .bins
-            .keys()
-            .map(|(d, _)| d.clone())
-            .collect::<std::collections::BTreeSet<_>>()
-            .into_iter()
-            .collect();
-        devices.sort();
-        let max_iv = st.bins.keys().map(|(_, i)| *i).max().unwrap_or(0);
-        let mut out = Vec::new();
-        for d in devices {
-            for iv in 0..=max_iv {
-                let (r, w) = st
-                    .bins
-                    .get(&(d.clone(), iv))
-                    .copied()
-                    .unwrap_or((0, 0));
-                out.push(TraceRow {
-                    device: d.clone(),
-                    interval: iv,
-                    read_bytes: r,
-                    write_bytes: w,
-                });
-            }
-        }
-        out
+        render_rows(&self.state.lock().unwrap().bins)
     }
 
     /// Render as dstat-style CSV: `sec,device,read_mb,write_mb`.
@@ -169,5 +186,17 @@ mod tests {
         let d = Dstat::per_second();
         assert_eq!(d.to_csv(), "sec,device,read_mb,write_mb\n");
         assert_eq!(d.rows().len(), 0);
+    }
+
+    #[test]
+    fn non_positive_intervals_error_instead_of_panicking() {
+        // Regression: Dstat::new asserted, so `dlio trace
+        // --interval-secs 0` panicked instead of reporting a CLI
+        // error.
+        assert!(Dstat::try_new(0.0).is_err());
+        assert!(Dstat::try_new(-1.0).is_err());
+        assert!(Dstat::try_new(f64::NAN).is_err());
+        assert!(Dstat::try_new(f64::INFINITY).is_err());
+        assert!(Dstat::try_new(0.5).is_ok());
     }
 }

@@ -1,0 +1,550 @@
+//! Versioned request-level trace schema (DESIGN.md §11).
+//!
+//! A trace file is JSONL: line 1 is the [`TraceManifest`] header
+//! (what was recorded, against which device models and QoS config, at
+//! what time scale), every following line one [`TraceEvent`] — a
+//! completed engine request with its submit/queue/service timing.
+//! Field names are short (`t`/`q`/`s`) because a trace holds one line
+//! per request; classes and ops are written as *names*, not indices,
+//! so a reader from a different build stays compatible.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::storage::{
+    AdaptiveQos, DeviceModel, EngineEvent, EngineOp, IoClass, QosConfig,
+    RateCap,
+};
+use crate::util::json::{obj, to_string, Json};
+
+/// Current trace schema version.  Readers refuse files written by a
+/// *newer* schema; older versions are accepted as long as the fields
+/// parse.
+pub const TRACE_VERSION: u32 = 1;
+
+/// One recorded engine request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Recording order (ties on `submit_secs` replay in seq order).
+    pub seq: u64,
+    pub device: String,
+    pub class: IoClass,
+    pub op: EngineOp,
+    /// Submitter tag (`storage::with_origin`); empty when untagged.
+    pub origin: String,
+    /// Bytes moved.  On failure: a unit request's intended size (so a
+    /// replay offers the same load); 0 for failed streams (see
+    /// `EngineEvent::bytes`).
+    pub bytes: u64,
+    pub ok: bool,
+    /// Submit time, wall seconds on the recording engine's clock.
+    pub submit_secs: f64,
+    /// Submit → service start, wall seconds.
+    pub queue_secs: f64,
+    /// Service start → completion, wall seconds.
+    pub service_secs: f64,
+}
+
+impl TraceEvent {
+    /// Stamp an engine event with its recording sequence number.
+    pub fn from_engine(seq: u64, e: &EngineEvent) -> TraceEvent {
+        TraceEvent {
+            seq,
+            device: e.device.clone(),
+            class: e.class,
+            op: e.op,
+            origin: e.origin.to_string(),
+            bytes: e.bytes,
+            ok: e.ok,
+            submit_secs: e.submit_secs,
+            queue_secs: e.queue_secs,
+            service_secs: e.service_secs,
+        }
+    }
+
+    /// Completion time on the recording clock, wall seconds.
+    pub fn complete_secs(&self) -> f64 {
+        self.submit_secs + self.queue_secs + self.service_secs
+    }
+
+    /// Service start (dispatch) time, wall seconds.
+    pub fn service_start_secs(&self) -> f64 {
+        self.submit_secs + self.queue_secs
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("seq", Json::Num(self.seq as f64)),
+            ("dev", Json::Str(self.device.clone())),
+            ("class", Json::Str(self.class.name().to_string())),
+            ("op", Json::Str(self.op.name().to_string())),
+            ("origin", Json::Str(self.origin.clone())),
+            ("bytes", Json::Num(self.bytes as f64)),
+            ("ok", Json::Bool(self.ok)),
+            ("t", Json::Num(self.submit_secs)),
+            ("q", Json::Num(self.queue_secs)),
+            ("s", Json::Num(self.service_secs)),
+        ])
+    }
+
+    /// One JSONL line (no trailing newline).
+    pub fn to_jsonl(&self) -> String {
+        to_string(&self.to_json())
+    }
+
+    pub fn from_json(v: &Json) -> Result<TraceEvent> {
+        let num = |key: &str| -> Result<f64> {
+            v.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("trace event missing {key:?}"))
+        };
+        let st = |key: &str| -> Result<&str> {
+            v.get(key)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("trace event missing {key:?}"))
+        };
+        let class_name = st("class")?;
+        let op_name = st("op")?;
+        Ok(TraceEvent {
+            seq: num("seq")? as u64,
+            device: st("dev")?.to_string(),
+            class: IoClass::parse(class_name)
+                .ok_or_else(|| anyhow!("unknown class {class_name:?}"))?,
+            op: EngineOp::parse(op_name)
+                .ok_or_else(|| anyhow!("unknown op {op_name:?}"))?,
+            origin: st("origin").unwrap_or("").to_string(),
+            bytes: num("bytes")? as u64,
+            ok: matches!(v.get("ok"), Some(Json::Bool(true))),
+            submit_secs: num("t")?,
+            queue_secs: num("q")?,
+            service_secs: num("s")?,
+        })
+    }
+}
+
+/// Trace file header: everything a replayer needs to rebuild the
+/// recorded storage setup (or knowingly substitute a different one).
+#[derive(Debug, Clone)]
+pub struct TraceManifest {
+    pub version: u32,
+    /// Free-form label of what was recorded (workload + CLI
+    /// invocation), for humans reading the diff table.
+    pub workload: String,
+    /// Scheduler mode label at record time (`QosConfig::mode_name`),
+    /// for humans; the machine-readable config is `qos`.
+    pub qos_mode: String,
+    /// Full scheduler config in force at record time — weights, rate
+    /// caps, preemption, adaptive targets — so a default replay
+    /// rebuilds the recorded scheduler, not just its mode name.
+    /// `None` for traces from recorders that didn't capture it (the
+    /// replayer then falls back to the mode label).
+    pub qos: Option<QosConfig>,
+    /// Simulation speed-up the recorded devices ran at (uniform across
+    /// the paper testbeds; informational for replay comparisons).
+    pub time_scale: f64,
+    /// Full models of every device the engine scheduled, so a default
+    /// replay runs against exactly the recorded storage.
+    pub devices: Vec<DeviceModel>,
+}
+
+fn device_to_json(m: &DeviceModel) -> Json {
+    obj(vec![
+        ("name", Json::Str(m.name.clone())),
+        ("read_bw", Json::Num(m.read_bw)),
+        ("write_bw", Json::Num(m.write_bw)),
+        ("read_lat", Json::Num(m.read_lat)),
+        ("write_lat", Json::Num(m.write_lat)),
+        ("channels", Json::Num(m.channels as f64)),
+        (
+            "elevator",
+            Json::Arr(
+                m.elevator
+                    .iter()
+                    .map(|&(k, g)| {
+                        Json::Arr(vec![Json::Num(k as f64), Json::Num(g)])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("time_scale", Json::Num(m.time_scale)),
+    ])
+}
+
+fn device_from_json(v: &Json) -> Result<DeviceModel> {
+    let num = |key: &str| -> Result<f64> {
+        v.get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("trace device missing {key:?}"))
+    };
+    let mut elevator = Vec::new();
+    for pt in v
+        .get("elevator")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("trace device missing elevator"))?
+    {
+        let pair = pt
+            .as_arr()
+            .filter(|p| p.len() == 2)
+            .ok_or_else(|| anyhow!("elevator point must be [depth, gain]"))?;
+        let k = pair[0]
+            .as_f64()
+            .ok_or_else(|| anyhow!("bad elevator depth"))?;
+        let g = pair[1]
+            .as_f64()
+            .ok_or_else(|| anyhow!("bad elevator gain"))?;
+        elevator.push((k as u32, g));
+    }
+    Ok(DeviceModel {
+        name: v
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("trace device missing name"))?
+            .to_string(),
+        read_bw: num("read_bw")?,
+        write_bw: num("write_bw")?,
+        read_lat: num("read_lat")?,
+        write_lat: num("write_lat")?,
+        channels: num("channels")? as usize,
+        elevator,
+        time_scale: num("time_scale")?,
+    })
+}
+
+fn qos_to_json(q: &QosConfig) -> Json {
+    let caps = Json::Arr(
+        q.rate_caps
+            .iter()
+            .map(|c| match c {
+                None => Json::Null,
+                Some(cap) => obj(vec![
+                    ("bytes_per_sec", Json::Num(cap.bytes_per_sec)),
+                    ("burst_bytes", Json::Num(cap.burst_bytes as f64)),
+                ]),
+            })
+            .collect(),
+    );
+    let adaptive = match &q.adaptive {
+        None => Json::Null,
+        Some(a) => obj(vec![
+            ("target_ingest_p99", Json::Num(a.target_ingest_p99)),
+            (
+                "per_device",
+                Json::Arr(
+                    a.per_device
+                        .iter()
+                        .map(|(d, t)| {
+                            Json::Arr(vec![
+                                Json::Str(d.clone()),
+                                Json::Num(*t),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("max_weight", Json::Num(a.max_weight as f64)),
+            ("increase", Json::Num(a.increase as f64)),
+            ("decay", Json::Num(a.decay)),
+            ("tick", Json::Num(a.tick)),
+        ]),
+    };
+    obj(vec![
+        ("fifo", Json::Bool(q.fifo)),
+        (
+            "weights",
+            Json::Arr(
+                q.weights.iter().map(|&w| Json::Num(w as f64)).collect(),
+            ),
+        ),
+        ("preempt_chunks", Json::Num(q.preempt_chunks as f64)),
+        ("max_yield_wait", Json::Num(q.max_yield_wait)),
+        ("rate_caps", caps),
+        ("adaptive", adaptive),
+    ])
+}
+
+fn qos_from_json(v: &Json) -> Result<QosConfig> {
+    let num = |key: &str| -> Result<f64> {
+        v.get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("trace qos missing {key:?}"))
+    };
+    let weights_arr = v
+        .get("weights")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("trace qos missing weights"))?;
+    if weights_arr.len() != IoClass::COUNT {
+        bail!("trace qos has {} weights, expected {}",
+              weights_arr.len(), IoClass::COUNT);
+    }
+    let mut weights = [0u32; IoClass::COUNT];
+    for (i, w) in weights_arr.iter().enumerate() {
+        weights[i] = w
+            .as_f64()
+            .ok_or_else(|| anyhow!("bad qos weight"))? as u32;
+    }
+    let caps_arr = v
+        .get("rate_caps")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("trace qos missing rate_caps"))?;
+    if caps_arr.len() != IoClass::COUNT {
+        bail!("trace qos has {} rate caps, expected {}",
+              caps_arr.len(), IoClass::COUNT);
+    }
+    let mut rate_caps: [Option<RateCap>; IoClass::COUNT] =
+        [None; IoClass::COUNT];
+    for (i, c) in caps_arr.iter().enumerate() {
+        if matches!(c, Json::Null) {
+            continue;
+        }
+        rate_caps[i] = Some(RateCap {
+            bytes_per_sec: c
+                .get("bytes_per_sec")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("rate cap missing bytes_per_sec"))?,
+            burst_bytes: c
+                .get("burst_bytes")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("rate cap missing burst_bytes"))?
+                as u64,
+        });
+    }
+    let adaptive = match v.get("adaptive") {
+        None | Some(Json::Null) => None,
+        Some(a) => {
+            let anum = |key: &str| -> Result<f64> {
+                a.get(key)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("trace adaptive missing {key:?}"))
+            };
+            let mut per_device = Vec::new();
+            for pd in a
+                .get("per_device")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+            {
+                let pair = pd
+                    .as_arr()
+                    .filter(|p| p.len() == 2)
+                    .ok_or_else(|| {
+                        anyhow!("per_device entry must be [name, target]")
+                    })?;
+                per_device.push((
+                    pair[0]
+                        .as_str()
+                        .ok_or_else(|| anyhow!("bad per_device name"))?
+                        .to_string(),
+                    pair[1]
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("bad per_device target"))?,
+                ));
+            }
+            Some(AdaptiveQos {
+                target_ingest_p99: anum("target_ingest_p99")?,
+                per_device,
+                max_weight: anum("max_weight")? as u32,
+                increase: anum("increase")? as u32,
+                decay: anum("decay")?,
+                tick: anum("tick")?,
+            })
+        }
+    };
+    Ok(QosConfig {
+        fifo: matches!(v.get("fifo"), Some(Json::Bool(true))),
+        weights,
+        preempt_chunks: num("preempt_chunks")? as usize,
+        max_yield_wait: num("max_yield_wait")?,
+        rate_caps,
+        adaptive,
+    })
+}
+
+impl TraceManifest {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("dlio_trace", Json::Num(self.version as f64)),
+            ("workload", Json::Str(self.workload.clone())),
+            ("qos_mode", Json::Str(self.qos_mode.clone())),
+            ("time_scale", Json::Num(self.time_scale)),
+            (
+                "devices",
+                Json::Arr(self.devices.iter().map(device_to_json).collect()),
+            ),
+        ];
+        if let Some(q) = &self.qos {
+            fields.push(("qos", qos_to_json(q)));
+        }
+        obj(fields)
+    }
+
+    /// One JSONL line (no trailing newline).
+    pub fn to_jsonl(&self) -> String {
+        to_string(&self.to_json())
+    }
+
+    pub fn from_json(v: &Json) -> Result<TraceManifest> {
+        let version = v
+            .get("dlio_trace")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| {
+                anyhow!("not a dlio trace (header missing \"dlio_trace\")")
+            })? as u32;
+        if version > TRACE_VERSION {
+            bail!(
+                "trace schema v{version} is newer than this build's \
+                 v{TRACE_VERSION}"
+            );
+        }
+        let mut devices = Vec::new();
+        for d in v
+            .get("devices")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("trace header missing devices"))?
+        {
+            devices.push(device_from_json(d)?);
+        }
+        let qos = match v.get("qos") {
+            None | Some(Json::Null) => None,
+            Some(q) => Some(qos_from_json(q)?),
+        };
+        Ok(TraceManifest {
+            version,
+            workload: v
+                .get("workload")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            qos_mode: v
+                .get("qos_mode")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            qos,
+            time_scale: v
+                .get("time_scale")
+                .and_then(Json::as_f64)
+                .unwrap_or(1.0),
+            devices,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn event() -> TraceEvent {
+        TraceEvent {
+            seq: 42,
+            device: "ssd".into(),
+            class: IoClass::Checkpoint,
+            op: EngineOp::StreamWrite,
+            origin: "saver".into(),
+            bytes: 123_456,
+            ok: true,
+            submit_secs: 1.5,
+            queue_secs: 0.25,
+            service_secs: 0.125,
+        }
+    }
+
+    #[test]
+    fn event_roundtrips_through_jsonl() {
+        let e = event();
+        let back =
+            TraceEvent::from_json(&Json::parse(&e.to_jsonl()).unwrap())
+                .unwrap();
+        assert_eq!(back, e);
+        assert_eq!(back.complete_secs(), 1.875);
+        assert_eq!(back.service_start_secs(), 1.75);
+    }
+
+    #[test]
+    fn failed_event_roundtrips() {
+        let mut e = event();
+        e.ok = false;
+        e.bytes = 0;
+        let back =
+            TraceEvent::from_json(&Json::parse(&e.to_jsonl()).unwrap())
+                .unwrap();
+        assert_eq!(back, e);
+    }
+
+    #[test]
+    fn event_rejects_unknown_class_and_missing_fields() {
+        let mut v = event().to_json();
+        if let Json::Obj(m) = &mut v {
+            m.insert("class".into(), Json::Str("warp".into()));
+        }
+        assert!(TraceEvent::from_json(&v).is_err());
+        assert!(TraceEvent::from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn manifest_roundtrips_with_device_models_and_qos() {
+        // A fully-tuned scheduler: caps + adaptive per-device targets
+        // + preemption must all survive the round trip, or a default
+        // replay cannot rebuild the recorded setup.
+        let mut qos = QosConfig::adaptive(0.004)
+            .with_rate_cap(IoClass::Checkpoint, 20e6, 1 << 20)
+            .with_rate_cap(IoClass::Drain, 10e6, 1 << 19);
+        qos.preempt_chunks = 7;
+        if let Some(a) = &mut qos.adaptive {
+            a.per_device.push(("hdd".into(), 0.012));
+        }
+        let m = TraceManifest {
+            version: TRACE_VERSION,
+            workload: "microbench files=32".into(),
+            qos_mode: qos.mode_name().into(),
+            qos: Some(qos.clone()),
+            time_scale: 8.0,
+            devices: vec![crate::storage::profiles::blackdog_hdd(8.0)],
+        };
+        let back =
+            TraceManifest::from_json(&Json::parse(&m.to_jsonl()).unwrap())
+                .unwrap();
+        assert_eq!(back.version, TRACE_VERSION);
+        assert_eq!(back.qos_mode, "adaptive");
+        assert_eq!(back.devices.len(), 1);
+        let d = &back.devices[0];
+        let orig = &m.devices[0];
+        assert_eq!(d.name, orig.name);
+        assert_eq!(d.read_bw, orig.read_bw);
+        assert_eq!(d.elevator, orig.elevator);
+        assert_eq!(d.channels, orig.channels);
+        let q = back.qos.expect("qos survives the round trip");
+        assert_eq!(q.fifo, qos.fifo);
+        assert_eq!(q.weights, qos.weights);
+        assert_eq!(q.preempt_chunks, 7);
+        assert_eq!(q.max_yield_wait, qos.max_yield_wait);
+        assert_eq!(q.rate_caps, qos.rate_caps);
+        assert_eq!(q.adaptive, qos.adaptive);
+    }
+
+    #[test]
+    fn manifest_without_qos_loads_as_none() {
+        let m = TraceManifest {
+            version: TRACE_VERSION,
+            workload: "w".into(),
+            qos_mode: "fifo".into(),
+            qos: None,
+            time_scale: 1.0,
+            devices: vec![crate::storage::profiles::blackdog_ssd(1.0)],
+        };
+        let back =
+            TraceManifest::from_json(&Json::parse(&m.to_jsonl()).unwrap())
+                .unwrap();
+        assert!(back.qos.is_none());
+        assert_eq!(back.qos_mode, "fifo");
+    }
+
+    #[test]
+    fn manifest_rejects_newer_schema_and_non_traces() {
+        let newer = format!("{{\"dlio_trace\": {}}}", TRACE_VERSION + 1);
+        assert!(
+            TraceManifest::from_json(&Json::parse(&newer).unwrap()).is_err()
+        );
+        assert!(
+            TraceManifest::from_json(&Json::parse("{\"a\":1}").unwrap())
+                .is_err()
+        );
+    }
+}

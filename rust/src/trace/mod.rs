@@ -1,11 +1,40 @@
-//! dstat-style I/O activity tracing (§IV-B, Figs. 8 & 10).
+//! Request-level trace capture, replay, and analysis (DESIGN.md §11),
+//! plus the legacy dstat-style interval tracer (§IV-B, Figs. 8 & 10).
 //!
-//! The paper samples disk activity once per second with *dstat* and
-//! plots MB read/written per interval.  [`Dstat`] implements the
-//! [`IoObserver`] hook of the device simulator: every byte grant is
-//! binned into a fixed-width interval per (device, direction), and the
-//! series can be rendered as the paper's CSV.
+//! The paper characterizes TensorFlow I/O with system-level tracing
+//! (dstat's per-second byte bins); tf-Darshan (PAPERS.md) shows the
+//! payoff of *per-request* instrumentation.  This module provides
+//! both layers:
+//!
+//! * [`TraceRecorder`] — hooks the `IoEngine`'s request-level event
+//!   stream ([`storage::EngineObserver`]) and writes a versioned JSONL
+//!   trace (header [`TraceManifest`], one [`TraceEvent`] per request)
+//!   with bounded memory via a background writer thread.
+//! * [`replay`] — re-issues a recorded stream through a fresh engine
+//!   against any storage profile / QoS config, open-loop (recorded
+//!   inter-arrival gaps, `--speed`-scaled) or closed-loop
+//!   (dependency-preserving, as fast as possible), and diffs the runs
+//!   ([`ReplayReport`]).
+//! * [`analyze`] — per-class aggregates, busy/overlap fractions, and
+//!   interval timelines over event streams.  The legacy [`Dstat`] row
+//!   shape is derivable from events ([`analyze::dstat_rows`]), making
+//!   the interval tracer a *view* over the event stream; [`Dstat`]
+//!   itself remains as the lightweight device-level observer for runs
+//!   that don't need request granularity.
+//!
+//! [`storage::EngineObserver`]: crate::storage::EngineObserver
+//! [`replay`]: replay::replay
 
+pub mod analyze;
 pub mod dstat;
+pub mod event;
+pub mod recorder;
+pub mod replay;
 
 pub use dstat::{Dstat, TraceRow};
+pub use event::{TraceEvent, TraceManifest, TRACE_VERSION};
+pub use recorder::{MemorySink, TraceRecorder};
+pub use replay::{
+    replay, report, ReplayConfig, ReplayMode, ReplayOutcome, ReplayReport,
+    Trace,
+};

@@ -1,0 +1,338 @@
+//! [`TraceRecorder`]: bounded-memory JSONL capture of the engine's
+//! request-level event stream, plus the in-memory [`MemorySink`] the
+//! replayer measures itself with.
+//!
+//! The recorder implements `EngineObserver`: attach it with
+//! `engine.set_observer(recorder.observer())` and every request
+//! completion is stamped with a sequence number and handed to a
+//! background writer thread through a bounded queue.  A full queue
+//! briefly blocks the completing thread (backpressure) instead of
+//! buffering without bound, so recording memory is O([`QUEUE_CAP`])
+//! regardless of trace length.  `finish()` drains the queue, flushes
+//! the file, and reports how many events were written.
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::storage::{EngineEvent, EngineObserver};
+
+use super::event::{TraceEvent, TraceManifest};
+
+/// Events buffered between the engine and the writer thread.  At ~150
+/// bytes per event this bounds recording memory near 1 MB.
+pub const QUEUE_CAP: usize = 8192;
+
+struct SinkState {
+    queue: VecDeque<TraceEvent>,
+    /// Sequence stamp for the next event (assigned under this lock so
+    /// file order always equals seq order).
+    next_seq: u64,
+    closed: bool,
+}
+
+struct Sink {
+    state: Mutex<SinkState>,
+    /// Completing threads wait here when the queue is full.
+    space: Condvar,
+    /// The writer thread waits here for events.
+    filled: Condvar,
+}
+
+impl EngineObserver for Sink {
+    fn record(&self, e: EngineEvent) {
+        let mut st = self.state.lock().unwrap();
+        while st.queue.len() >= QUEUE_CAP && !st.closed {
+            st = self.space.wait(st).unwrap();
+        }
+        if st.closed {
+            // finish() already ran (observer left attached): drop.
+            return;
+        }
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        st.queue.push_back(TraceEvent::from_engine(seq, &e));
+        drop(st);
+        self.filled.notify_one();
+    }
+}
+
+/// Records the engine's event stream to a JSONL trace file (header
+/// manifest first, then one event per line).
+pub struct TraceRecorder {
+    sink: Arc<Sink>,
+    writer: Option<JoinHandle<Result<u64>>>,
+    path: PathBuf,
+}
+
+impl TraceRecorder {
+    /// Create the trace file, write its header, and start the
+    /// background writer.
+    pub fn create(
+        path: impl Into<PathBuf>,
+        manifest: &TraceManifest,
+    ) -> Result<TraceRecorder> {
+        let path = path.into();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("mkdir {}", parent.display()))?;
+            }
+        }
+        let mut file = BufWriter::new(
+            File::create(&path)
+                .with_context(|| format!("create {}", path.display()))?,
+        );
+        file.write_all(manifest.to_jsonl().as_bytes())?;
+        file.write_all(b"\n")?;
+        let sink = Arc::new(Sink {
+            state: Mutex::new(SinkState {
+                queue: VecDeque::new(),
+                next_seq: 0,
+                closed: false,
+            }),
+            space: Condvar::new(),
+            filled: Condvar::new(),
+        });
+        let writer = {
+            let sink = Arc::clone(&sink);
+            std::thread::Builder::new()
+                .name("dlio-trace-writer".into())
+                .spawn(move || writer_loop(sink, file))
+                .expect("spawn trace writer")
+        };
+        Ok(TraceRecorder { sink, writer: Some(writer), path })
+    }
+
+    /// The observer half to attach via `IoEngine::set_observer`.
+    pub fn observer(&self) -> Arc<dyn EngineObserver> {
+        Arc::clone(&self.sink) as Arc<dyn EngineObserver>
+    }
+
+    /// Trace file path.
+    pub fn path(&self) -> &PathBuf {
+        &self.path
+    }
+
+    /// Drain the queue, flush, and close; returns events written.
+    /// Detach the observer (`IoEngine::clear_observer`) before calling
+    /// — post-finish events are silently dropped.
+    pub fn finish(mut self) -> Result<u64> {
+        self.finish_inner()
+    }
+
+    fn finish_inner(&mut self) -> Result<u64> {
+        let Some(handle) = self.writer.take() else {
+            return Ok(0);
+        };
+        {
+            let mut st = self.sink.state.lock().unwrap();
+            st.closed = true;
+        }
+        self.sink.filled.notify_all();
+        self.sink.space.notify_all();
+        handle
+            .join()
+            .map_err(|_| anyhow!("trace writer thread panicked"))?
+    }
+}
+
+impl Drop for TraceRecorder {
+    fn drop(&mut self) {
+        // Best-effort flush when the caller forgot finish() (an
+        // error-path `?`): the trace stays readable.
+        let _ = self.finish_inner();
+    }
+}
+
+fn writer_loop(sink: Arc<Sink>, file: BufWriter<File>) -> Result<u64> {
+    let result = write_events(&sink, file);
+    if result.is_err() {
+        // Poison the sink: with the writer gone, a full queue would
+        // block engine completion threads in record() forever.  Mark
+        // closed (record() then drops events), discard the backlog,
+        // and wake every blocked producer; finish() surfaces the
+        // error.
+        let mut st = sink.state.lock().unwrap();
+        st.closed = true;
+        st.queue.clear();
+        drop(st);
+        sink.space.notify_all();
+    }
+    result
+}
+
+fn write_events(sink: &Arc<Sink>, mut file: BufWriter<File>) -> Result<u64> {
+    let mut written = 0u64;
+    loop {
+        let batch: Vec<TraceEvent> = {
+            let mut st = sink.state.lock().unwrap();
+            loop {
+                if !st.queue.is_empty() {
+                    break st.queue.drain(..).collect();
+                }
+                if st.closed {
+                    file.flush().context("flushing trace file")?;
+                    return Ok(written);
+                }
+                st = sink.filled.wait(st).unwrap();
+            }
+        };
+        // Queue space freed: unblock any completing thread first, then
+        // do the (slow) serialization outside the lock.
+        sink.space.notify_all();
+        for ev in &batch {
+            file.write_all(ev.to_jsonl().as_bytes())
+                .context("writing trace event")?;
+            file.write_all(b"\n")?;
+            written += 1;
+        }
+    }
+}
+
+/// In-memory event sink: collects the stream instead of writing it.
+/// The replayer attaches one to measure its own run with exactly the
+/// machinery that produced the recording (symmetric diffs); tests use
+/// it to assert on event streams.
+pub struct MemorySink {
+    events: Mutex<Vec<TraceEvent>>,
+}
+
+impl MemorySink {
+    #[allow(clippy::new_ret_no_self)]
+    pub fn new() -> Arc<MemorySink> {
+        Arc::new(MemorySink { events: Mutex::new(Vec::new()) })
+    }
+
+    /// Snapshot of everything recorded so far, in seq order.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.events.lock().unwrap().clone()
+    }
+}
+
+impl EngineObserver for MemorySink {
+    fn record(&self, e: EngineEvent) {
+        let mut evs = self.events.lock().unwrap();
+        let seq = evs.len() as u64;
+        evs.push(TraceEvent::from_engine(seq, &e));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::{EngineOp, IoClass};
+    use crate::util::json::Json;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("dlio-trace-rec-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn engine_event(i: u64) -> EngineEvent {
+        EngineEvent {
+            device: "d".into(),
+            class: IoClass::Ingest,
+            op: EngineOp::ProbeRead,
+            origin: "test",
+            bytes: 1000 + i,
+            ok: true,
+            submit_secs: i as f64 * 0.001,
+            queue_secs: 0.0005,
+            service_secs: 0.0005,
+        }
+    }
+
+    fn manifest() -> TraceManifest {
+        TraceManifest {
+            version: super::super::event::TRACE_VERSION,
+            workload: "unit".into(),
+            qos_mode: "static".into(),
+            qos: None,
+            time_scale: 1.0,
+            devices: vec![crate::storage::profiles::blackdog_ssd(1.0)],
+        }
+    }
+
+    #[test]
+    fn records_header_then_events_in_seq_order() {
+        let path = scratch("order").join("t.jsonl");
+        let rec = TraceRecorder::create(&path, &manifest()).unwrap();
+        let obs = rec.observer();
+        for i in 0..100 {
+            obs.record(engine_event(i));
+        }
+        assert_eq!(rec.finish().unwrap(), 100);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines = text.lines();
+        let head = TraceManifest::from_json(
+            &Json::parse(lines.next().unwrap()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(head.workload, "unit");
+        let events: Vec<TraceEvent> = lines
+            .map(|l| TraceEvent::from_json(&Json::parse(l).unwrap()).unwrap())
+            .collect();
+        assert_eq!(events.len(), 100);
+        for (i, e) in events.iter().enumerate() {
+            assert_eq!(e.seq, i as u64, "file order must equal seq order");
+            assert_eq!(e.bytes, 1000 + i as u64);
+        }
+    }
+
+    #[test]
+    fn bounded_queue_backpressures_instead_of_growing() {
+        // Feed far more events than QUEUE_CAP from many threads; the
+        // writer drains them all (backpressure, not drops).
+        let path = scratch("pressure").join("t.jsonl");
+        let rec = TraceRecorder::create(&path, &manifest()).unwrap();
+        let total = QUEUE_CAP * 2 + 123;
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let obs = rec.observer();
+                let n = total / 4 + usize::from(t < total % 4);
+                std::thread::spawn(move || {
+                    for i in 0..n {
+                        obs.record(engine_event(i as u64));
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(rec.finish().unwrap(), total as u64);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), total + 1); // + header
+    }
+
+    #[test]
+    fn drop_without_finish_still_flushes() {
+        let path = scratch("dropflush").join("t.jsonl");
+        {
+            let rec = TraceRecorder::create(&path, &manifest()).unwrap();
+            rec.observer().record(engine_event(0));
+            // dropped without finish()
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+    }
+
+    #[test]
+    fn memory_sink_collects_in_seq_order() {
+        let sink = MemorySink::new();
+        for i in 0..10 {
+            EngineObserver::record(&*sink, engine_event(i));
+        }
+        let evs = sink.events();
+        assert_eq!(evs.len(), 10);
+        assert!(evs.iter().enumerate().all(|(i, e)| e.seq == i as u64));
+    }
+}
