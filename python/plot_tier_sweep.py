@@ -1,0 +1,115 @@
+#!/usr/bin/env python3
+"""Plot the `dlio tier-sweep --format json` matrix (DESIGN.md §12).
+
+Reads the sweep's JSON rows (one object per (hierarchy, policy,
+workload) cell, each carrying a `tier_rows` array) and renders the
+per-tier hit/migration columns: for every cell, one bar group per
+tier with hits, migrations-in, and evictions side by side — where the
+placement policy put the data, visually.
+
+Stub-safe: when matplotlib is unavailable (offline CI), prints an
+aligned ASCII summary of the same numbers instead of an image and
+exits 0 — the JSON schema is exercised either way.
+
+Usage:
+    dlio tier-sweep --format json > tiers.json
+    python3 python/plot_tier_sweep.py tiers.json --out tiers.png \
+        [--workload hot]
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path, workload):
+    with open(path) as f:
+        rows = json.load(f)
+    if not isinstance(rows, list) or not rows:
+        raise SystemExit(f"{path}: expected a non-empty JSON array of cells")
+    for key in ("hierarchy", "policy", "workload", "tier_rows"):
+        if key not in rows[0]:
+            raise SystemExit(f"{path}: cell missing {key!r} (schema drift?)")
+    if workload:
+        rows = [r for r in rows if r["workload"] == workload]
+        if not rows:
+            raise SystemExit(f"{path}: no cells for workload {workload!r}")
+    return rows
+
+
+def cell_label(row):
+    return f"{row['hierarchy']}/{row['policy']}/{row['workload']}"
+
+
+def ascii_summary(rows):
+    print("# tier-sweep: per-tier hit/migration columns (matplotlib "
+          "unavailable: ASCII fallback)")
+    width = max(len(cell_label(r)) for r in rows) + 2
+    for row in rows:
+        label = cell_label(row).ljust(width)
+        cols = "  ".join(
+            f"t{t['tier']}({t['device']}):hits={t['hits']}"
+            f",mig={t['migrations_in']},ev={t['evictions']}"
+            for t in row["tier_rows"]
+        )
+        print(f"{label}hit_frac={row['t0_hit_frac']:.2f}  {cols}")
+
+
+def plot(rows, out):
+    import matplotlib
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    fig, ax = plt.subplots(figsize=(max(6, 1.4 * len(rows)), 4))
+    series = [
+        ("hits", lambda t: t["hits"]),
+        ("migrations in", lambda t: t["migrations_in"]),
+        ("evictions", lambda t: t["evictions"]),
+    ]
+    xticks, xlabels = [], []
+    x = 0.0
+    for row in rows:
+        tiers = row["tier_rows"]
+        group_mid = x + (len(tiers) - 1) / 2.0
+        for t in tiers:
+            for si, (_name, pick) in enumerate(series):
+                ax.bar(x + si * 0.25 - 0.25, pick(t), width=0.25,
+                       color=f"C{si}")
+            ax.annotate(f"t{t['tier']}", (x, 0), xytext=(0, -12),
+                        textcoords="offset points", ha="center",
+                        fontsize=7)
+            x += 1.0
+        xticks.append(group_mid)
+        xlabels.append(cell_label(row))
+        x += 0.8  # gap between cells
+    for si, (name, _pick) in enumerate(series):
+        ax.bar(0, 0, color=f"C{si}", label=name)
+    ax.set_xticks(xticks)
+    ax.set_xticklabels(xlabels, rotation=20, ha="right", fontsize=7)
+    ax.set_ylabel("requests")
+    ax.set_title("dlio tier-sweep: per-tier placement")
+    ax.legend(fontsize=8)
+    ax.grid(True, axis="y", alpha=0.3)
+    fig.tight_layout()
+    fig.savefig(out, dpi=120)
+    print(f"wrote {out}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("sweep_json",
+                    help="output of dlio tier-sweep --format json")
+    ap.add_argument("--out", default="tier-sweep.png", help="PNG path")
+    ap.add_argument("--workload", default="",
+                    help="filter to one workload (hot|ckpt)")
+    args = ap.parse_args()
+    rows = load_rows(args.sweep_json, args.workload)
+    try:
+        plot(rows, args.out)
+    except ImportError:
+        ascii_summary(rows)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -147,7 +147,7 @@ fn main() -> anyhow::Result<()> {
                 dir, vec![mk("slow", slow_bw), mk("fast", 600e6)])?);
             let mut bb = BurstBuffer::new(
                 Arc::clone(&sim), profile.clone(), "fast", "slow",
-                "ck/m", 5);
+                "ck/m", 5)?;
             bb.saver_mut().sync_on_save = false;
             let t0 = std::time::Instant::now();
             bb.save(&state, 1)?;

@@ -10,57 +10,39 @@
 //! archiving it is possible to cleanup the buffer"), and the HDD copy
 //! needs no immediate sync.
 //!
-//! Implementation: a [`Saver`] targeting the fast device + one drainer
-//! thread consuming a queue of drain jobs (copy triple to the slow
-//! device via the engine's chunked pipelined copy, then optionally
-//! delete the staged files).  Drains complete strictly oldest-first,
-//! and the saver's retention cleanup is guarded so it can never delete
-//! a staged checkpoint that is still queued for (or in) drain.
+//! Since the N-tier refactor (DESIGN.md §12) this is a *thin wrapper*
+//! over a 2-tier [`StorageHierarchy`]: the saver routes through the
+//! hierarchy (tier 0 = `fast`), each saved triple is enqueued as one
+//! labelled migration group to tier 1 (`slow`), and the hierarchy's
+//! single FIFO migrator preserves the original guarantees by
+//! construction — drains complete strictly oldest-first, the
+//! retention guard vetoes any staged checkpoint whose drain group is
+//! still pending, and `--drain-cap-mbs` still applies because every
+//! drain is an engine `Drain`-class copy.
 
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::model::ModelState;
 use crate::runtime::meta::ProfileMeta;
-use crate::storage::StorageSim;
+use crate::storage::{policy, HierarchySpec, StorageHierarchy, StorageSim};
 
 use super::saver::{CheckpointHandle, Saver};
 
-struct DrainQueue {
-    jobs: Mutex<VecDeque<CheckpointHandle>>,
-    available: Condvar,
-    idle: Condvar,
-    shutdown: Mutex<bool>,
-}
-
-impl DrainQueue {
-    /// Is `handle` still queued for (or currently in) drain?  Jobs are
-    /// popped only after their copy finishes, so a `true` here means
-    /// the staged files must not be deleted yet.
-    fn contains(&self, handle: &CheckpointHandle) -> bool {
-        self.jobs.lock().unwrap().iter().any(|j| j == handle)
-    }
-}
-
-/// Burst-buffer checkpointer: synchronous save to `fast`, asynchronous
-/// drain to `slow`.
+/// Burst-buffer checkpointer: synchronous save to `fast` (tier 0),
+/// asynchronous drain to `slow` (tier 1).
 pub struct BurstBuffer {
     saver: Saver,
+    hier: Arc<StorageHierarchy>,
     slow_device: String,
-    queue: Arc<DrainQueue>,
-    drainer: Option<JoinHandle<()>>,
-    drained: Arc<AtomicU64>,
-    drain_errors: Arc<AtomicU64>,
     cleanup_staged: Arc<AtomicBool>,
-    /// Steps in the order their drains completed (oldest-first proof).
-    drained_steps: Arc<Mutex<Vec<u64>>>,
 }
 
 impl BurstBuffer {
+    /// Errors when `fast_device`/`slow_device` don't exist in the sim
+    /// (the hierarchy validates its tiers at construction).
     pub fn new(
         sim: Arc<StorageSim>,
         profile: ProfileMeta,
@@ -68,7 +50,12 @@ impl BurstBuffer {
         slow_device: &str,
         prefix: &str,
         max_to_keep: usize,
-    ) -> BurstBuffer {
+    ) -> Result<BurstBuffer> {
+        let hier = Arc::new(StorageHierarchy::new(
+            Arc::clone(&sim),
+            HierarchySpec::two_tier_bb(fast_device, slow_device),
+            Box::new(policy::Noop),
+        )?);
         let mut saver = Saver::new(
             Arc::clone(&sim),
             profile,
@@ -76,95 +63,72 @@ impl BurstBuffer {
             prefix,
             max_to_keep,
         );
-        let queue = Arc::new(DrainQueue {
-            jobs: Mutex::new(VecDeque::new()),
-            available: Condvar::new(),
-            idle: Condvar::new(),
-            shutdown: Mutex::new(false),
-        });
+        saver.set_route(Arc::clone(&hier));
         // Retention cleanup must never race the drainer: staged files
-        // still queued for drain are vetoed until their copy lands.
+        // whose drain group is still queued (or in flight) are vetoed
+        // until their copies land — groups pop only after completion.
         {
-            let q = Arc::clone(&queue);
-            saver.set_retention_guard(Arc::new(move |h| !q.contains(h)));
+            let h = Arc::clone(&hier);
+            saver.set_retention_guard(Arc::new(move |handle| {
+                !h.group_pending(handle.step)
+            }));
         }
-        let drained = Arc::new(AtomicU64::new(0));
-        let drain_errors = Arc::new(AtomicU64::new(0));
-        let cleanup_staged = Arc::new(AtomicBool::new(false));
-        let drained_steps = Arc::new(Mutex::new(Vec::new()));
-
-        let drainer = {
-            let q = Arc::clone(&queue);
-            let sim = Arc::clone(&sim);
-            let slow = slow_device.to_string();
-            let drained = Arc::clone(&drained);
-            let errors = Arc::clone(&drain_errors);
-            let cleanup = Arc::clone(&cleanup_staged);
-            let steps = Arc::clone(&drained_steps);
-            std::thread::Builder::new()
-                .name("dlio-bb-drain".into())
-                .spawn(move || drain_loop(q, sim, slow, drained, errors,
-                                          cleanup, steps))
-                .expect("spawn burst-buffer drainer")
-        };
-
-        BurstBuffer {
+        Ok(BurstBuffer {
             saver,
+            hier,
             slow_device: slow_device.to_string(),
-            queue,
-            drainer: Some(drainer),
-            drained,
-            drain_errors,
-            cleanup_staged,
-            drained_steps,
-        }
+            cleanup_staged: Arc::new(AtomicBool::new(false)),
+        })
     }
 
-    /// Save to the fast device (synchronous, synced) and enqueue the
-    /// asynchronous drain to the slow device.  Returns as soon as the
-    /// fast copy is durable — this is the time training is paused.
+    /// Save to the fast tier (synchronous, synced) and enqueue the
+    /// asynchronous drain of the triple to the slow tier.  Returns as
+    /// soon as the fast copy is durable — this is the time training
+    /// is paused.
     pub fn save(&mut self, state: &ModelState, step: u64)
         -> Result<CheckpointHandle>
     {
         let handle = self.saver.save(state, step)?;
-        {
-            let mut jobs = self.queue.jobs.lock().unwrap();
-            jobs.push_back(handle.clone());
-        }
-        self.queue.available.notify_one();
+        let keys: Vec<String> =
+            handle.files().iter().map(|f| f.rel.clone()).collect();
+        self.hier.enqueue_group(
+            step,
+            keys,
+            0,
+            1,
+            "bb-drain",
+            Some(Arc::clone(&self.cleanup_staged)),
+        )?;
         Ok(handle)
     }
 
-    /// Delete staged fast-device files once drained — the paper's
+    /// Delete staged fast-tier files once drained — the paper's
     /// "cleanup the buffer for other data" (§V-C).  Off by default so
     /// restores can come from the fast copy.
     pub fn set_cleanup_staged(&self, on: bool) {
         self.cleanup_staged.store(on, Ordering::SeqCst);
     }
 
-    /// Number of checkpoints fully drained to the slow device.
+    /// Number of checkpoints fully drained to the slow tier.
     pub fn drained_count(&self) -> u64 {
-        self.drained.load(Ordering::SeqCst)
+        self.hier.completed_count()
     }
 
-    /// Steps in drain-completion order (the queue is FIFO, so this is
-    /// save order — oldest first).
+    /// Steps in drain-completion order (the migrator is FIFO, so this
+    /// is save order — oldest first).
     pub fn drained_steps(&self) -> Vec<u64> {
-        self.drained_steps.lock().unwrap().clone()
+        self.hier.completed_labels()
     }
 
     pub fn drain_error_count(&self) -> u64 {
-        self.drain_errors.load(Ordering::SeqCst)
+        self.hier.migration_errors()
     }
 
     /// Block until every enqueued drain has completed (end-of-run
     /// barrier; the paper notes HDD flushing "continues after the
     /// application ends" — experiments call this to account for it).
     pub fn wait_drained(&self) {
-        let mut jobs = self.queue.jobs.lock().unwrap();
-        while !jobs.is_empty() {
-            jobs = self.queue.idle.wait(jobs).unwrap();
-        }
+        self.hier.wait_idle();
     }
 
     /// Access to the inner saver (retention list etc.).
@@ -179,69 +143,11 @@ impl BurstBuffer {
     pub fn slow_device(&self) -> &str {
         &self.slow_device
     }
-}
 
-fn drain_loop(
-    q: Arc<DrainQueue>,
-    sim: Arc<StorageSim>,
-    slow: String,
-    drained: Arc<AtomicU64>,
-    errors: Arc<AtomicU64>,
-    cleanup: Arc<AtomicBool>,
-    drained_steps: Arc<Mutex<Vec<u64>>>,
-) {
-    loop {
-        let job = {
-            let mut jobs = q.jobs.lock().unwrap();
-            loop {
-                if let Some(j) = jobs.front().cloned() {
-                    break j;
-                }
-                if *q.shutdown.lock().unwrap() {
-                    return;
-                }
-                jobs = q.available.wait(jobs).unwrap();
-            }
-        };
-        // Copy the triple to the slow device — engine-level chunked
-        // copies, so the fast-device read overlaps the slow-device
-        // write and drain memory stays bounded by the stream window.
-        // No syncfs: "it is not necessary to enforce immediate
-        // synchronization ... when moved to HDD" (§V-C).
-        let mut ok = true;
-        for f in job.files() {
-            let dst = crate::storage::SimPath::new(slow.clone(), f.rel.clone());
-            // Origin-tagged: trace events attribute drain copies to
-            // the burst buffer.
-            if let Err(e) = crate::storage::with_origin("bb-drain", || {
-                sim.copy_class(&f, &dst, crate::storage::IoClass::Drain)
-            }) {
-                eprintln!("[burst-buffer] drain {f}: {e:#}");
-                errors.fetch_add(1, Ordering::SeqCst);
-                ok = false;
-                break;
-            }
-        }
-        if ok {
-            drained.fetch_add(1, Ordering::SeqCst);
-            drained_steps.lock().unwrap().push(job.step);
-            if cleanup.load(Ordering::SeqCst) {
-                for f in job.files() {
-                    if sim.exists(&f) {
-                        let _ = sim.remove(&f);
-                    }
-                }
-            }
-        }
-        // Pop the job (lifting the retention-guard veto) and wake any
-        // wait_drained() callers.
-        let mut jobs = q.jobs.lock().unwrap();
-        jobs.pop_front();
-        let empty = jobs.is_empty();
-        drop(jobs);
-        if empty {
-            q.idle.notify_all();
-        }
+    /// The 2-tier hierarchy backing this buffer (per-tier stats,
+    /// tier-sweep cells).
+    pub fn hierarchy(&self) -> &Arc<StorageHierarchy> {
+        &self.hier
     }
 }
 
@@ -249,13 +155,9 @@ impl Drop for BurstBuffer {
     fn drop(&mut self) {
         self.wait_drained();
         // Every veto has lifted: apply any retention deletes that were
-        // deferred while their checkpoints drained.
+        // deferred while their checkpoints drained.  (The hierarchy's
+        // migrator joins when the last Arc drops with this struct.)
         let _ = self.saver.sweep_retention();
-        *self.queue.shutdown.lock().unwrap() = true;
-        self.queue.available.notify_all();
-        if let Some(d) = self.drainer.take() {
-            let _ = d.join();
-        }
     }
 }
 
@@ -323,7 +225,8 @@ mod tests {
                 "slow",
                 "ck/m",
                 2, // far fewer than the drain backlog
-            );
+            )
+            .unwrap();
             bb.saver_mut().sync_on_save = false;
             for &s in &steps {
                 bb.save(&state, s).unwrap();
@@ -374,7 +277,8 @@ mod tests {
             "slow",
             "ck/m",
             5,
-        );
+        )
+        .unwrap();
         bb.saver_mut().sync_on_save = false;
         bb.set_cleanup_staged(true);
         let h = bb.save(&state, 10).unwrap();
@@ -388,5 +292,46 @@ mod tests {
             step: 10,
         };
         assert!(Saver::restore(&sim, &profile, &slow).is_ok());
+    }
+
+    #[test]
+    fn two_tier_hierarchy_reproduces_bb_drain_counts_and_residency() {
+        // The refactor's acceptance test: the wrapper's hierarchy
+        // reports exactly the drain counts/order the BurstBuffer API
+        // reports, and per-tier stats see the staged triple land on
+        // tier 0 and migrate into tier 1.
+        let sim = sim("parity", 0.002);
+        let profile = profile();
+        let state = ModelState::init(&profile, 3);
+        let mut bb = BurstBuffer::new(
+            Arc::clone(&sim),
+            profile.clone(),
+            "fast",
+            "slow",
+            "ck/m",
+            5,
+        )
+        .unwrap();
+        bb.saver_mut().sync_on_save = false;
+        let steps: Vec<u64> = vec![5, 10, 15];
+        for &s in &steps {
+            bb.save(&state, s).unwrap();
+        }
+        bb.wait_drained();
+        assert_eq!(bb.drained_steps(), steps);
+        let hier = bb.hierarchy();
+        assert_eq!(hier.completed_labels(), steps, "hierarchy = BB ledger");
+        // 3 triples x 3 files migrated into tier 1, none evicted from
+        // tier 0 (cleanup off).
+        let stats = hier.stats();
+        assert_eq!(stats[1].migrations_in, 9);
+        assert_eq!(stats[0].evictions, 0);
+        // Residency: every file on both tiers.
+        for &s in &steps {
+            for suffix in ["meta", "index", "data"] {
+                let key = format!("ck/m-{s}.{suffix}");
+                assert_eq!(hier.tiers_of(&key), vec![0, 1], "{key}");
+            }
+        }
     }
 }

@@ -32,7 +32,9 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::model::ModelState;
 use crate::runtime::meta::ProfileMeta;
-use crate::storage::{with_origin, IoClass, SimPath, StorageSim};
+use crate::storage::{
+    with_origin, with_tier, IoClass, SimPath, StorageHierarchy, StorageSim,
+};
 use crate::util::json::{obj, to_string, Json};
 
 /// Decides whether a retention victim may be deleted yet (the burst
@@ -71,8 +73,25 @@ pub struct Saver {
     max_to_keep: usize,
     saved: Vec<CheckpointHandle>,
     retention_guard: Option<RetentionGuard>,
+    /// When set, saves route through the storage hierarchy: the
+    /// placement policy picks the tier each triple lands on, writes
+    /// are tier-tagged (trace events + per-tier stats), residency is
+    /// registered (triggering write-through drains), and retention
+    /// removes only this tier's copies — drained archive copies
+    /// survive.
+    route: Option<Arc<StorageHierarchy>>,
     /// Skip the post-save syncfs (used by tests; experiments keep it).
     pub sync_on_save: bool,
+}
+
+/// Run `f` under the saver's origin tag, adding the hierarchy tier
+/// tag when the saver is routed (one generic helper because the two
+/// write paths return different types).
+fn tagged<T>(tier: Option<usize>, f: impl FnOnce() -> T) -> T {
+    match tier {
+        Some(t) => with_origin("saver", || with_tier(t as u32, f)),
+        None => with_origin("saver", f),
+    }
 }
 
 /// The `.data` layout shared by the index writer and the restore-side
@@ -166,8 +185,18 @@ impl Saver {
             max_to_keep: max_to_keep.max(1),
             saved: Vec::new(),
             retention_guard: None,
+            route: None,
             sync_on_save: true,
         }
+    }
+
+    /// Route saves through `hier` (see the `route` field docs).  The
+    /// saver's default device becomes the hierarchy's current write
+    /// placement.
+    pub fn set_route(&mut self, hier: Arc<StorageHierarchy>) {
+        let (_tier, dev) = hier.write_placement();
+        self.device = dev;
+        self.route = Some(hier);
     }
 
     /// Install a retention veto: `cleanup` skips (and retries on the
@@ -228,18 +257,28 @@ impl Saver {
         -> Result<CheckpointHandle>
     {
         state.validate(&self.profile)?;
+        // Routed savers ask the placement policy where this triple
+        // lands (and tier-tag the writes); unrouted savers keep their
+        // fixed device.
+        let (tier, device) = match &self.route {
+            Some(hier) => {
+                let (t, dev) = hier.write_placement();
+                (Some(t), dev)
+            }
+            None => (None, self.device.clone()),
+        };
         let handle = CheckpointHandle {
-            device: self.device.clone(),
+            device,
             prefix: self.prefix.clone(),
             step,
         };
         // One doorbell for meta+index so the device sees the burst,
         // then the data payload streams behind them in bounded chunks.
         // Submissions are origin-tagged so trace events attribute the
-        // triple to the saver.
+        // triple to the saver (and tier-tagged when routed).
         let meta_path = handle.file("meta");
         let index_path = handle.file("index");
-        let small = with_origin("saver", || {
+        let small = tagged(tier, || {
             self.sim.write_batch_async_class(
                 vec![
                     (&meta_path, self.meta_json().into_bytes()),
@@ -248,9 +287,9 @@ impl Saver {
                 IoClass::Checkpoint,
             )
         })?;
-        let (mut data_writer, data) = with_origin("saver", || {
-            self.sim
-                .write_stream_class(&handle.file("data"), IoClass::Checkpoint)
+        let data_path = handle.file("data");
+        let (mut data_writer, data) = tagged(tier, || {
+            self.sim.write_stream_class(&data_path, IoClass::Checkpoint)
         })?;
         state.stream_bytes(|bytes| data_writer.push(bytes))?;
         data_writer.finish()?;
@@ -261,7 +300,14 @@ impl Saver {
         if self.sync_on_save {
             // §III-C: "we perform disk synchronization ... immediately
             // after Saver returns".
-            self.sim.syncfs(&self.device)?;
+            self.sim.syncfs(&handle.device)?;
+        }
+        // Register residency (fires write-through drains + capacity
+        // pressure on the landing tier).
+        if let (Some(hier), Some(t)) = (&self.route, tier) {
+            let keys: Vec<String> =
+                handle.files().iter().map(|f| f.rel.clone()).collect();
+            hier.note_written(&keys, t)?;
         }
         self.saved.push(handle.clone());
         self.cleanup()?;
@@ -270,6 +316,9 @@ impl Saver {
 
     /// Retention: keep only the newest `max_to_keep` checkpoints.
     /// Victims vetoed by the retention guard stay until a later pass.
+    /// Routed savers remove only the landing tier's copies — archive
+    /// copies a hierarchy drained to slower tiers survive retention
+    /// (exactly the burst buffer's staged-vs-archived split).
     fn cleanup(&mut self) -> Result<()> {
         while self.saved.len() > self.max_to_keep {
             if let Some(guard) = &self.retention_guard {
@@ -279,8 +328,19 @@ impl Saver {
             }
             let victim = self.saved.remove(0);
             for f in victim.files() {
-                if self.sim.exists(&f) {
-                    self.sim.remove(&f)?;
+                let routed_tier = self
+                    .route
+                    .as_ref()
+                    .and_then(|h| h.tier_of_device(&f.device));
+                match (&self.route, routed_tier) {
+                    (Some(hier), Some(t)) => {
+                        hier.remove_from_tier(&f.rel, t)?;
+                    }
+                    _ => {
+                        if self.sim.exists(&f) {
+                            self.sim.remove(&f)?;
+                        }
+                    }
                 }
             }
         }

@@ -130,7 +130,7 @@ pub fn run_with_checkpoints(
                 slow,
                 "ckpt/model",
                 cfg.max_to_keep,
-            ))
+            )?)
         }
     };
 

@@ -6,6 +6,7 @@ pub mod fixtures;
 pub mod microbench;
 pub mod miniapp;
 pub mod qos_sweep;
+pub mod tier_sweep;
 pub mod trace_record;
 pub mod workload;
 
@@ -13,4 +14,5 @@ pub use fixtures::{ensure_corpus, make_sim};
 pub use microbench::MicrobenchResult;
 pub use miniapp::MiniAppResult;
 pub use qos_sweep::{QosSweepCell, QosSweepConfig};
+pub use tier_sweep::{TierSweepCell, TierSweepConfig};
 pub use trace_record::{TraceRecordConfig, TraceRecordResult};

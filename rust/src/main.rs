@@ -14,10 +14,15 @@
 //!                  [--interval 5] [--iterations 20]
 //! dlio qos-sweep   [--smoke] [--modes fifo,static,adaptive]
 //!                  [--intervals 0,2,8] [--shards 1,2,4] [--format csv|json]
+//! dlio tier-sweep  [--smoke] [--hierarchies blackdog-bb,..]
+//!                  [--policies noop,lru,freq] [--workloads hot,ckpt]
+//!                  [--tier0-cap-kb N] [--format csv|json]
 //! dlio trace       [--device D] [--prefetch 0|1] ... (dstat CSV to stdout)
 //! dlio trace-record [microbench|miniapp] [--smoke] [--out FILE]
 //! dlio trace-replay <file> [--profile P] [--qos fifo|static|adaptive]
-//!                  [--speed X] [--open-loop] [--json|--csv]
+//!                  [--sweep fifo,static,..] [--speed X] [--open-loop]
+//!                  [--json|--csv]
+//! dlio trace-compact <file> [--epochs N] [--out FILE]
 //! ```
 //!
 //! Every run needs `make artifacts` first (or `DLIO_ARTIFACTS` pointing
@@ -34,7 +39,8 @@ use dlio::config::{
     CkptStudyConfig, MicrobenchConfig, MiniAppConfig, Testbed,
 };
 use dlio::coordinator::{
-    ensure_corpus, make_sim, microbench, miniapp, qos_sweep, trace_record,
+    ensure_corpus, make_sim, microbench, miniapp, qos_sweep, tier_sweep,
+    trace_record,
 };
 use dlio::data::CorpusSpec;
 use dlio::metrics::Table;
@@ -64,9 +70,11 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "train" => cmd_train(args),
         "ckpt-study" => cmd_ckpt_study(args),
         "qos-sweep" => cmd_qos_sweep(args),
+        "tier-sweep" => cmd_tier_sweep(args),
         "trace" => cmd_trace(args),
         "trace-record" => cmd_trace_record(args),
         "trace-replay" => cmd_trace_replay(args),
+        "trace-compact" => cmd_trace_compact(args),
         "help" | "--help" => {
             print!("{}", HELP);
             Ok(())
@@ -85,12 +93,19 @@ dlio — Characterizing Deep-Learning I/O Workloads (PDSW-DISCS'18) repro
   dlio ckpt-study  Fig 9     checkpoint targets incl. burst buffer
   dlio qos-sweep   Figs 4/8  (mode x ckpt interval x shards) matrix ->
                              per-class queue/latency rows, CSV or JSON
+  dlio tier-sweep  Figs 9/10 (hierarchy x policy x workload) matrix ->
+                             per-tier hit/migration rows, CSV or JSON
+                             ([--smoke] [--hierarchies A,B] [--policies
+                              noop,lru,freq] [--workloads hot,ckpt])
   dlio trace       Figs 8/10 dstat-style I/O trace (CSV on stdout)
   dlio trace-record [microbench|miniapp]  record a request-level JSONL
                              trace ([--smoke] [--out FILE])
   dlio trace-replay <file>   re-run a trace against any profile/QoS
                              ([--profile P] [--qos fifo|static|adaptive]
-                              [--speed X] [--open-loop] [--json|--csv])
+                              [--sweep M1,M2,..] [--speed X] [--open-loop]
+                              [--json|--csv])
+  dlio trace-compact <file>  fold repeated per-epoch event runs into a
+                             representative trace ([--epochs N] [--out F])
 
 Common options: --time-scale F (default $DLIO_TIME_SCALE or 8),
 --device hdd|ssd|optane|lustre, --threads N, --batch N.
@@ -211,6 +226,22 @@ fn print_engine_stats(sim: &dlio::storage::StorageSim) {
             format!("{:.1}", s.bytes_read as f64 / 1e6),
             format!("{:.1}", s.bytes_written as f64 / 1e6),
         ]);
+        // Hierarchy runs: one row per tier the device served (tagged
+        // via storage::with_tier) — the per-tier attribution surface.
+        for tr in &s.tiers {
+            t.row(&[
+                s.device.clone(),
+                format!("tier{}", tr.tier),
+                tr.completed.to_string(),
+                tr.errors.to_string(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                format!("{:.1}", tr.bytes_read as f64 / 1e6),
+                format!("{:.1}", tr.bytes_written as f64 / 1e6),
+            ]);
+        }
     }
     print!("{}", t.render());
     // The AIMD controller's story, when it ran: where the ingest
@@ -436,6 +467,63 @@ fn cmd_qos_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `dlio tier-sweep`: run the (hierarchy preset × placement policy ×
+/// workload) matrix and emit one CSV/JSON row of per-tier
+/// hit/migration numbers per cell — the storage-hierarchy placement
+/// study (DESIGN.md §12), machine-readable.
+fn cmd_tier_sweep(args: &Args) -> Result<()> {
+    let ts = args.get_f64("time-scale", default_time_scale())?;
+    if ts <= 0.0 {
+        return Err(anyhow!("--time-scale must be positive"));
+    }
+    let workdir = args
+        .get("workdir")
+        .map(str::to_string)
+        .unwrap_or_else(default_workdir);
+    let mut cfg = if args.has_flag("smoke") {
+        tier_sweep::TierSweepConfig::smoke(workdir, ts)
+    } else {
+        tier_sweep::TierSweepConfig::standard(workdir, ts)
+    };
+    if let Some(h) = args.get_list("hierarchies") {
+        cfg.hierarchies = h;
+    }
+    if let Some(p) = args.get_list("policies") {
+        cfg.policies = p;
+    }
+    if let Some(w) = args.get_list("workloads") {
+        cfg.workloads = w;
+    }
+    cfg.files = args.get_usize("files", cfg.files)?;
+    cfg.file_bytes = args.get_usize("file-kb", cfg.file_bytes / 1024)? * 1024;
+    cfg.reads = args.get_usize("reads", cfg.reads)?;
+    cfg.warmup_reads = args.get_usize("warmup-reads", cfg.warmup_reads)?;
+    cfg.hot_files = args.get_usize("hot-files", cfg.hot_files)?;
+    cfg.hot_frac = args.get_f64("hot-frac", cfg.hot_frac)?;
+    if !(0.0..=1.0).contains(&cfg.hot_frac) {
+        return Err(anyhow!("--hot-frac must be in [0, 1]"));
+    }
+    cfg.shards = args.get_usize("shards", cfg.shards)?;
+    cfg.window = args.get_usize("window", cfg.window)?;
+    cfg.tier0_cap =
+        args.get_usize("tier0-cap-kb", (cfg.tier0_cap / 1024) as usize)?
+            as u64
+            * 1024;
+    cfg.ckpt_saves = args.get_usize("ckpt-saves", cfg.ckpt_saves)?;
+    // Validate the output format *before* running the matrix.
+    let format = args.get_or("format", "csv");
+    if format != "csv" && format != "json" {
+        return Err(anyhow!("unknown --format {format:?} (csv|json)"));
+    }
+    let cells = tier_sweep::run(&cfg)?;
+    match format.as_str() {
+        "csv" => print!("{}", tier_sweep::to_csv(&cells)),
+        "json" => println!("{}", tier_sweep::to_json(&cells)),
+        _ => unreachable!("validated above"),
+    }
+    Ok(())
+}
+
 fn cmd_trace(args: &Args) -> Result<()> {
     let tb = testbed(args)?;
     // Validate here instead of letting Dstat::new's assert panic on a
@@ -582,6 +670,25 @@ fn cmd_trace_replay(args: &Args) -> Result<()> {
         profile: args.get("profile").map(str::to_string),
         time_scale,
     };
+    // `--sweep m1,m2,..`: replay-driven what-if matrix — ONE recorded
+    // trace across the qos-sweep scheduler modes, one diff row per
+    // cell (ROADMAP follow-up).
+    if let Some(modes) = args.get_list("sweep") {
+        let reports =
+            dlio::trace::sweep(&trace, &cfg, &modes, adaptive_target)?;
+        if args.has_flag("json") {
+            println!(
+                "{}",
+                dlio::util::json::to_string(&dlio::trace::sweep_to_json(
+                    &reports
+                ))
+            );
+        } else {
+            // The cell matrix is inherently tabular: CSV either way.
+            print!("{}", dlio::trace::sweep_to_csv(&reports));
+        }
+        return Ok(());
+    }
     let outcome = replay(&trace, &cfg)?;
     let report = dlio::trace::report(&trace, &cfg, &outcome);
     if args.has_flag("json") {
@@ -590,6 +697,44 @@ fn cmd_trace_replay(args: &Args) -> Result<()> {
         print!("{}", report.to_csv());
     } else {
         print!("{}", report.to_table());
+    }
+    Ok(())
+}
+
+/// `dlio trace-compact <file>`: fold repeated per-epoch event runs
+/// into a compact representative trace (with an event-count /
+/// byte-total equivalence check), for cheap multi-epoch replays.
+fn cmd_trace_compact(args: &Args) -> Result<()> {
+    let file = args.positional.get(1).ok_or_else(|| {
+        anyhow!("usage: dlio trace-compact <file> [--epochs N] [--out FILE]")
+    })?;
+    let trace = Trace::load(Path::new(file))?;
+    let epochs = args
+        .get("epochs")
+        .map(|v| v.parse::<usize>())
+        .transpose()
+        .map_err(|e| anyhow!("--epochs: {e}"))?;
+    let (compacted, rep) = dlio::trace::compact(&trace, epochs)?;
+    let out = args
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(format!("{file}.compact")));
+    dlio::trace::write_trace(&out, &compacted)?;
+    println!(
+        "trace-compact: {} epochs folded ({} -> {} events, {:.2} -> {:.2} \
+         MB) -> {}",
+        rep.epochs,
+        rep.events_in,
+        rep.events_out,
+        rep.bytes_in as f64 / 1e6,
+        rep.bytes_out as f64 / 1e6,
+        out.display(),
+    );
+    if rep.epochs == 1 {
+        eprintln!(
+            "trace-compact: no repeated epoch structure found; output \
+             equals input"
+        );
     }
     Ok(())
 }

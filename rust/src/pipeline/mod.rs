@@ -14,6 +14,6 @@ pub mod source;
 pub use dataset::{collect, BoxedDataset, Dataset, DatasetExt};
 pub use elements::{ImageBatch, ProcessedImage};
 pub use source::{
-    from_manifest, from_vec, read_ahead, sharded_reader, LoadedSample,
-    ShardedReader,
+    from_manifest, from_vec, read_ahead, sharded_reader,
+    sharded_reader_hier, LoadedSample, ShardedReader,
 };

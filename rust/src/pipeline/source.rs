@@ -19,7 +19,9 @@ use anyhow::Result;
 
 use super::dataset::Dataset;
 use crate::data::manifest::{Manifest, Sample};
-use crate::storage::{with_origin, IoClass, PendingRead, StorageSim};
+use crate::storage::{
+    with_origin, IoClass, PendingRead, StorageHierarchy, StorageSim,
+};
 
 /// A dataset yielding the elements of a vector in order.
 pub struct VecSource<T> {
@@ -80,6 +82,31 @@ struct Shard {
     inflight: VecDeque<ReadSlot>,
 }
 
+/// Where a reader's submissions go: straight at the sim (a sample's
+/// `path.device` is authoritative) or through a storage hierarchy
+/// (the sample's `path.rel` is the key; whichever tier holds it
+/// serves, and the placement policy sees every access — hot files
+/// migrate toward tier 0 under a promotion policy).
+enum ReadRoute {
+    Sim(Arc<StorageSim>),
+    Hier(Arc<StorageHierarchy>),
+}
+
+impl ReadRoute {
+    fn submit(&self, sample: &Sample) -> Result<PendingRead> {
+        // Tagged so trace events attribute these reads to the ingest
+        // source.
+        with_origin("sharded-reader", || match self {
+            ReadRoute::Sim(sim) => {
+                sim.read_async_class(&sample.path, IoClass::Ingest)
+            }
+            ReadRoute::Hier(h) => {
+                h.read_async_class(&sample.path.rel, IoClass::Ingest)
+            }
+        })
+    }
+}
+
 /// Engine-backed sharded reader: the file list is stride-partitioned
 /// across `shards` independent readers, each holding up to `window`
 /// whole-file reads in flight ([`IoClass::Ingest`]).  Total engine
@@ -92,7 +119,7 @@ struct Shard {
 /// preserved.  A shard whose backlog empties steals the back half of
 /// the fullest backlog, keeping every window busy to the end.
 pub struct ShardedReader {
-    sim: Arc<StorageSim>,
+    route: ReadRoute,
     shards: Vec<Shard>,
     window: usize,
     cursor: usize,
@@ -108,7 +135,25 @@ pub fn sharded_reader(
 ) -> ShardedReader {
     ShardedReader::new(
         samples.into_iter().map(PendingItem::Sample).collect(),
-        sim,
+        ReadRoute::Sim(sim),
+        shards,
+        window,
+    )
+}
+
+/// Build a [`ShardedReader`] whose reads route through a storage
+/// hierarchy (tier-sweep cells, hot-set promotion studies).  Sample
+/// paths are interpreted by their `rel` key; the hierarchy decides
+/// which tier serves.
+pub fn sharded_reader_hier(
+    samples: Vec<Sample>,
+    hier: Arc<StorageHierarchy>,
+    shards: usize,
+    window: usize,
+) -> ShardedReader {
+    ShardedReader::new(
+        samples.into_iter().map(PendingItem::Sample).collect(),
+        ReadRoute::Hier(hier),
         shards,
         window,
     )
@@ -135,13 +180,13 @@ pub fn read_ahead<D: Dataset<Item = Sample>>(
             Err(e) => PendingItem::Error(e),
         });
     }
-    ShardedReader::new(items, sim, 1, depth)
+    ShardedReader::new(items, ReadRoute::Sim(sim), 1, depth)
 }
 
 impl ShardedReader {
     fn new(
         items: Vec<PendingItem>,
-        sim: Arc<StorageSim>,
+        route: ReadRoute,
         shards: usize,
         window: usize,
     ) -> ShardedReader {
@@ -160,7 +205,7 @@ impl ShardedReader {
         // consumer that brackets the reader with a timer (the
         // microbench) measures the first window too.
         ShardedReader {
-            sim,
+            route,
             shards: parts,
             window: window.max(1),
             cursor: 0,
@@ -198,12 +243,7 @@ impl ShardedReader {
                     None => break,
                     Some(PendingItem::Error(e)) => ReadSlot::Failed(e),
                     Some(PendingItem::Sample(sample)) => {
-                        // Tagged so trace events attribute these reads
-                        // to the ingest source.
-                        match with_origin("sharded-reader", || {
-                            self.sim
-                                .read_async_class(&sample.path, IoClass::Ingest)
-                        }) {
+                        match self.route.submit(&sample) {
                             Ok(pr) => ReadSlot::Submitted(sample, pr),
                             Err(e) => ReadSlot::Failed(e),
                         }
@@ -433,6 +473,70 @@ mod tests {
             assert_eq!(labels.len(), 12, "stolen items dropped or doubled");
             labels.sort_unstable();
             assert_eq!(labels, (0..12).collect::<Vec<u32>>());
+        }
+
+        #[test]
+        fn hierarchy_routed_reader_yields_all_samples_with_tier_hits() {
+            use crate::storage::{
+                policy, HierarchySpec, StorageHierarchy, TierSpec,
+            };
+            let dir = std::env::temp_dir().join(format!(
+                "dlio-shardedreader-hier-{}",
+                std::process::id()
+            ));
+            let _ = std::fs::remove_dir_all(&dir);
+            let mk = |name: &str| DeviceModel {
+                name: name.into(),
+                read_bw: 1e9,
+                write_bw: 1e9,
+                read_lat: 0.0,
+                write_lat: 0.0,
+                channels: 8,
+                elevator: vec![(1, 1.0)],
+                time_scale: 1000.0,
+            };
+            let s = Arc::new(
+                StorageSim::cold(dir, vec![mk("fast"), mk("slow")]).unwrap(),
+            );
+            let samples: Vec<Sample> = (0..20)
+                .map(|i| {
+                    let p = SimPath::new("slow", format!("c/f{i}.bin"));
+                    s.write(&p, &vec![i as u8; 256]).unwrap();
+                    Sample { path: p, label: i as u32 }
+                })
+                .collect();
+            s.drop_caches();
+            let hier = Arc::new(
+                StorageHierarchy::new(
+                    Arc::clone(&s),
+                    HierarchySpec::new(
+                        "h",
+                        vec![
+                            TierSpec::device("fast", 0),
+                            TierSpec::device("slow", 0),
+                        ],
+                    ),
+                    Box::new(policy::Noop),
+                )
+                .unwrap(),
+            );
+            let ds = super::super::sharded_reader_hier(
+                samples,
+                Arc::clone(&hier),
+                2,
+                3,
+            );
+            let out = crate::pipeline::collect(ds).unwrap();
+            assert_eq!(out.len(), 20);
+            for ls in &out {
+                assert_eq!(ls.bytes, vec![ls.sample.label as u8; 256]);
+            }
+            // Every read was served by the slow tier (auto-registered
+            // residency), none by the empty fast tier.
+            let stats = hier.stats();
+            assert_eq!(stats[0].hits, 0);
+            assert_eq!(stats[1].hits, 20);
+            assert_eq!(hier.total_reads(), 20);
         }
 
         #[test]

@@ -501,6 +501,12 @@ pub struct EngineEvent {
     /// request (`"sharded-reader"`, `"saver"`, `"bb-drain"`, ...).
     /// Empty when the submitter didn't tag.
     pub origin: &'static str,
+    /// Storage-hierarchy tier the submitter accounted this request to
+    /// (see [`with_tier`]); `None` when the request didn't flow
+    /// through a [`StorageHierarchy`](super::hierarchy::StorageHierarchy).
+    /// For migration copies both halves carry the *destination* tier
+    /// (the tier being drained/promoted into).
+    pub tier: Option<u32>,
     /// Bytes transferred.  On failure: for unit requests, the bytes
     /// the request intended to move (its DRR cost), so a replay
     /// offers the same load; failed streams report 0 (the transferred
@@ -535,6 +541,9 @@ thread_local! {
     /// Origin tag for engine submissions made on this thread.
     static ORIGIN: std::cell::Cell<&'static str> =
         const { std::cell::Cell::new("") };
+    /// Hierarchy tier tag for engine submissions made on this thread
+    /// (`-1` = untiered).
+    static TIER: std::cell::Cell<i64> = const { std::cell::Cell::new(-1) };
 }
 
 /// Tag every engine submission made inside `f` (on the calling thread)
@@ -551,6 +560,26 @@ pub fn with_origin<T>(origin: &'static str, f: impl FnOnce() -> T) -> T {
 
 fn current_origin() -> &'static str {
     ORIGIN.with(|o| o.get())
+}
+
+/// Tag every engine submission made inside `f` (on the calling
+/// thread) with a storage-hierarchy tier id, so trace events and the
+/// per-tier stats rows can attribute requests to the tier the
+/// hierarchy accounted them to.  Nested scopes restore the outer tag.
+pub fn with_tier<T>(tier: u32, f: impl FnOnce() -> T) -> T {
+    TIER.with(|t| {
+        let prev = t.replace(tier as i64);
+        let out = f();
+        t.set(prev);
+        out
+    })
+}
+
+fn current_tier() -> Option<u32> {
+    TIER.with(|t| {
+        let v = t.get();
+        if v < 0 { None } else { Some(v as u32) }
+    })
 }
 
 /// The engine-wide observer slot: attached/cleared at runtime, read
@@ -861,6 +890,18 @@ impl ClassStats {
     }
 }
 
+/// Per-tier request aggregates for one device: which hierarchy tier
+/// the completed requests were accounted to (see [`with_tier`]).
+/// Devices serving untiered traffic have no rows here.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TierIoStats {
+    pub tier: u32,
+    pub completed: u64,
+    pub errors: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+}
+
 /// Per-request aggregates for one device (snapshot via
 /// [`IoEngine::stats`]), with a per-[`IoClass`] breakdown.
 #[derive(Debug, Clone, Default)]
@@ -882,6 +923,9 @@ pub struct EngineDeviceStats {
     pub max_queue_depth: u32,
     /// Per-class breakdown, indexed by [`IoClass::index`].
     pub classes: [ClassStats; IoClass::COUNT],
+    /// Per-hierarchy-tier breakdown (sorted by tier id); empty when
+    /// no request on this device carried a tier tag.
+    pub tiers: Vec<TierIoStats>,
     /// Effective Ingest DRR weight in force when the snapshot was
     /// taken (the static weight unless [`QosConfig::adaptive`] is on).
     pub ingest_weight: u32,
@@ -920,6 +964,12 @@ impl EngineDeviceStats {
     pub fn class(&self, class: IoClass) -> &ClassStats {
         &self.classes[class.index()]
     }
+
+    /// Stats row for one hierarchy tier (`None` when the device never
+    /// served requests tagged with that tier).
+    pub fn tier(&self, tier: u32) -> Option<&TierIoStats> {
+        self.tiers.iter().find(|t| t.tier == tier)
+    }
 }
 
 /// Submit-side accounting (aggregate + class), shared by every submit
@@ -939,6 +989,7 @@ fn record_submit(stats: &mut EngineDeviceStats, class: IoClass, enq_depth: u32) 
 fn record_done(
     stats: &mut EngineDeviceStats,
     class: IoClass,
+    tier: Option<u32>,
     queue_secs: f64,
     service_secs: f64,
     ok: Option<(u64, Dir)>,
@@ -947,6 +998,23 @@ fn record_done(
     stats.completed += 1;
     stats.queue_secs += queue_secs;
     stats.service_secs += service_secs;
+    // Tier row (find-or-insert, kept sorted by tier id): the
+    // per-tier surface `--engine-stats` prints for hierarchy runs.
+    let ts = tier.map(|id| {
+        match stats.tiers.binary_search_by_key(&id, |t| t.tier) {
+            Ok(at) => at,
+            Err(at) => {
+                stats.tiers.insert(
+                    at,
+                    TierIoStats { tier: id, ..TierIoStats::default() },
+                );
+                at
+            }
+        }
+    });
+    if let Some(at) = ts {
+        stats.tiers[at].completed += 1;
+    }
     let cs = &mut stats.classes[class.index()];
     cs.completed += 1;
     cs.queue_secs += queue_secs;
@@ -956,15 +1024,24 @@ fn record_done(
         Some((bytes, Dir::Read)) => {
             stats.bytes_read += bytes;
             cs.bytes_read += bytes;
+            if let Some(at) = ts {
+                stats.tiers[at].bytes_read += bytes;
+            }
         }
         Some((bytes, Dir::Write)) => {
             stats.bytes_written += bytes;
             cs.bytes_written += bytes;
+            if let Some(at) = ts {
+                stats.tiers[at].bytes_written += bytes;
+            }
         }
         None => {
             if count_error {
                 stats.errors += 1;
                 cs.errors += 1;
+                if let Some(at) = ts {
+                    stats.tiers[at].errors += 1;
+                }
             }
         }
     }
@@ -988,6 +1065,9 @@ struct Job {
     submitted: Instant,
     /// Submitter tag for trace events (see [`with_origin`]).
     origin: &'static str,
+    /// Hierarchy tier tag for trace events and per-tier stats rows
+    /// (see [`with_tier`]).
+    tier: Option<u32>,
     /// Queue depth when this request joined the device queue (0 for
     /// streams, which enter per chunk): the elevator gain floor for
     /// co-queued bursts.
@@ -1094,6 +1174,7 @@ impl DeviceQueue {
         class: IoClass,
         op: EngineOp,
         origin: &'static str,
+        tier: Option<u32>,
         bytes: u64,
         ok: bool,
         submitted: Instant,
@@ -1107,6 +1188,7 @@ impl DeviceQueue {
                 class,
                 op,
                 origin,
+                tier,
                 bytes,
                 ok,
                 submit_secs: submitted
@@ -1569,6 +1651,7 @@ impl IoEngine {
         enq_depth: u32,
         class: IoClass,
         origin: &'static str,
+        tier: Option<u32>,
         ticket: Arc<TicketShared>,
     ) {
         let q = Arc::clone(q);
@@ -1605,6 +1688,7 @@ impl IoEngine {
                         Ok(total) => record_done(
                             &mut stats,
                             class,
+                            tier,
                             queue_secs,
                             service_secs,
                             Some((*total, Dir::Write)),
@@ -1616,6 +1700,7 @@ impl IoEngine {
                         Err(f) => record_done(
                             &mut stats,
                             class,
+                            tier,
                             queue_secs,
                             service_secs,
                             None,
@@ -1628,8 +1713,8 @@ impl IoEngine {
                     Ok(total) => (*total, true),
                     Err(_) => (0, false),
                 };
-                q.emit(class, EngineOp::StreamWrite, origin, ev_bytes, ev_ok,
-                       submitted, queue_secs, service_secs);
+                q.emit(class, EngineOp::StreamWrite, origin, tier, ev_bytes,
+                       ev_ok, submitted, queue_secs, service_secs);
                 complete(
                     &ticket,
                     result
@@ -1747,6 +1832,7 @@ impl IoEngine {
             ticket: Arc::clone(&shared),
             submitted: Instant::now(),
             origin: current_origin(),
+            tier: current_tier(),
             enq_depth,
         });
         Ok(ticket)
@@ -1871,6 +1957,7 @@ impl IoEngine {
                         ticket: Arc::clone(&shared),
                         submitted: Instant::now(),
                         origin: current_origin(),
+                        tier: current_tier(),
                         enq_depth,
                     });
                     tickets.push(ticket);
@@ -1915,7 +2002,7 @@ impl IoEngine {
         let enq_depth = q.device.queue_enter();
         record_submit(&mut q.stats.lock().unwrap(), class, enq_depth);
         self.spawn_stream_writer(q, path, Arc::clone(&rx), enq_depth, class,
-                                 current_origin(), shared);
+                                 current_origin(), current_tier(), shared);
         let writer = ChunkWriter {
             queue: rx,
             chunk_size: self.chunk_size,
@@ -1958,7 +2045,8 @@ impl IoEngine {
         let enq_depth = q.device.queue_enter();
         record_submit(&mut q.stats.lock().unwrap(), class, enq_depth);
         self.spawn_stream_writer(q, dst_path, Arc::clone(&rx), enq_depth,
-                                 class, current_origin(), shared);
+                                 class, current_origin(), current_tier(),
+                                 shared);
         let chunk_size = self.chunk_size;
         let handle = std::thread::Builder::new()
             .name("dlio-io-warmread".into())
@@ -1989,10 +2077,13 @@ impl IoEngine {
         self.register_stream(&rx);
         let (ticket, shared) = new_ticket();
         let origin = current_origin();
+        // Both halves of a migration copy carry the destination tier:
+        // "drain into tier N" is the attribution a hierarchy wants.
+        let tier = current_tier();
         let dst_enq = dst_q.device.queue_enter();
         record_submit(&mut dst_q.stats.lock().unwrap(), class, dst_enq);
         self.spawn_stream_writer(dst_q, dst_path, Arc::clone(&rx), dst_enq,
-                                 class, origin, shared);
+                                 class, origin, tier, shared);
         let src_enq = src_q.device.queue_enter();
         // The read half is a request against the source device:
         // account its submission now (completion lands in
@@ -2006,7 +2097,7 @@ impl IoEngine {
             .name("dlio-io-copy".into())
             .spawn(move || {
                 copy_reader(src_q, src_path, rx, chunk_size, src_enq, class,
-                            origin, submitted)
+                            origin, tier, submitted)
             })
             .expect("spawn copy reader");
         self.track_thread(handle);
@@ -2158,6 +2249,7 @@ fn worker_loop(q: Arc<DeviceQueue>, chunk_size: usize) {
                 Ok((bytes, dir, _)) => record_done(
                     &mut stats,
                     job.class,
+                    job.tier,
                     queue_secs,
                     service_secs,
                     Some((*bytes, *dir)),
@@ -2166,6 +2258,7 @@ fn worker_loop(q: Arc<DeviceQueue>, chunk_size: usize) {
                 Err(_) => record_done(
                     &mut stats,
                     job.class,
+                    job.tier,
                     queue_secs,
                     service_secs,
                     None,
@@ -2180,7 +2273,7 @@ fn worker_loop(q: Arc<DeviceQueue>, chunk_size: usize) {
             Ok((bytes, _, _)) => (*bytes, true),
             Err(_) => (job.cost, false),
         };
-        q.emit(job.class, op_kind, job.origin, ev_bytes, ev_ok,
+        q.emit(job.class, op_kind, job.origin, job.tier, ev_bytes, ev_ok,
                job.submitted, queue_secs, service_secs);
         complete(
             &job.ticket,
@@ -2411,6 +2504,7 @@ fn copy_reader(
     src_enq: u32,
     class: IoClass,
     origin: &'static str,
+    tier: Option<u32>,
     submitted: Instant,
 ) {
     let dev = &q.device;
@@ -2498,12 +2592,13 @@ fn copy_reader(
             record_done(
                 &mut q.stats.lock().unwrap(),
                 class,
+                tier,
                 queue_secs,
                 service_secs,
                 Some((bytes, Dir::Read)),
                 false,
             );
-            q.emit(class, EngineOp::CopyRead, origin, bytes, true,
+            q.emit(class, EngineOp::CopyRead, origin, tier, bytes, true,
                    submitted, queue_secs, service_secs);
             tx.close();
         }
@@ -2511,12 +2606,13 @@ fn copy_reader(
             record_done(
                 &mut q.stats.lock().unwrap(),
                 class,
+                tier,
                 queue_secs,
                 service_secs,
                 None,
                 true,
             );
-            q.emit(class, EngineOp::CopyRead, origin, 0, false,
+            q.emit(class, EngineOp::CopyRead, origin, tier, 0, false,
                    submitted, queue_secs, service_secs);
             tx.push_fail(e, true);
             tx.close();
@@ -3521,6 +3617,86 @@ mod tests {
             assert_eq!(current_origin(), "outer");
         });
         assert_eq!(current_origin(), "");
+    }
+
+    #[test]
+    fn with_tier_scopes_nest_and_restore() {
+        assert_eq!(current_tier(), None);
+        with_tier(0, || {
+            assert_eq!(current_tier(), Some(0));
+            with_tier(3, || assert_eq!(current_tier(), Some(3)));
+            assert_eq!(current_tier(), Some(0));
+        });
+        assert_eq!(current_tier(), None);
+    }
+
+    // -- tentpole: hierarchy tier tags on events + stats rows --------
+
+    #[test]
+    fn tier_tag_lands_on_events_and_per_tier_stats_rows() {
+        let (eng, _) = engine_with(vec![model("d", 4, 1000.0)], 8 * 1024);
+        let sink = Arc::new(Sink(Mutex::new(Vec::new())));
+        eng.set_observer(Arc::clone(&sink) as Arc<dyn EngineObserver>);
+        let dir = scratch("tiertag");
+        let path = dir.join("x.bin");
+        // Tier 0 write, tier 1 copy (both halves carry the
+        // destination tier), one untiered probe.
+        with_tier(0, || {
+            eng.submit(IoRequest::WriteFile {
+                device: "d".into(),
+                path: path.clone(),
+                data: vec![7u8; 5_000],
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        });
+        with_tier(1, || {
+            eng.submit_class(
+                IoRequest::Copy {
+                    src_device: "d".into(),
+                    src_path: path.clone(),
+                    dst_device: "d".into(),
+                    dst_path: dir.join("y.bin"),
+                },
+                IoClass::Drain,
+            )
+            .unwrap()
+            .wait()
+            .unwrap();
+        });
+        eng.submit(IoRequest::ProbeRead { device: "d".into(), bytes: 256 })
+            .unwrap()
+            .wait()
+            .unwrap();
+        eng.clear_observer();
+        let evs = sink.0.lock().unwrap();
+        let w = evs.iter().find(|e| e.op == EngineOp::Write).unwrap();
+        assert_eq!(w.tier, Some(0), "write lost its tier tag");
+        let cr = evs.iter().find(|e| e.op == EngineOp::CopyRead).unwrap();
+        assert_eq!(cr.tier, Some(1), "copy read half: destination tier");
+        let sw = evs.iter().find(|e| e.op == EngineOp::StreamWrite).unwrap();
+        assert_eq!(sw.tier, Some(1), "copy write half: destination tier");
+        let p = evs.iter().find(|e| e.op == EngineOp::ProbeRead).unwrap();
+        assert_eq!(p.tier, None, "untiered submit must stay untiered");
+        // Stats: one row per tier, sorted, with byte attribution.
+        let stats = eng.stats();
+        let s = stats.iter().find(|s| s.device == "d").unwrap();
+        let tiers: Vec<u32> = s.tiers.iter().map(|t| t.tier).collect();
+        assert_eq!(tiers, vec![0, 1]);
+        let t0 = s.tier(0).unwrap();
+        assert_eq!(t0.completed, 1);
+        assert_eq!(t0.bytes_written, 5_000);
+        let t1 = s.tier(1).unwrap();
+        assert_eq!(t1.completed, 2, "both copy halves account to tier 1");
+        assert_eq!(t1.bytes_read, 5_000);
+        assert_eq!(t1.bytes_written, 5_000);
+        assert!(s.tier(2).is_none());
+        // reset_stats clears the tier rows with everything else.
+        eng.reset_stats();
+        let stats = eng.stats();
+        let s = stats.iter().find(|s| s.device == "d").unwrap();
+        assert!(s.tiers.is_empty());
     }
 
     // -- satellite: per-device adaptive controller targets -----------

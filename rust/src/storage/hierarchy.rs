@@ -1,0 +1,1650 @@
+//! [`StorageHierarchy`]: N ordered storage tiers under one placement
+//! abstraction (DESIGN.md §12).
+//!
+//! The paper's two memory-hierarchy artifacts — the burst buffer's
+//! fast→slow checkpoint drain (§III-C) and the page cache the
+//! protocol works to defeat (§IV) — are the two ends of the same
+//! structure: an ordered list of tiers, each with a capacity and a
+//! speed, with *something* deciding where data lands and what moves
+//! between them.  This module is that structure, generalized:
+//!
+//! * a tier is a [`TierSpec`] — either a RAM tier ([`RamTier`]: hits
+//!   serve with **no device charge**, the page-cache generalization)
+//!   or an engine device with an optional byte capacity;
+//! * a [`PlacementPolicy`](super::policy::PlacementPolicy) decides
+//!   where reads hit (promotions), where writes land, and what
+//!   migrates; the hierarchy owns the mechanics — residency, LRU
+//!   recency, capacity pressure, and a single background migrator
+//!   executing every move as an engine [`IoClass::Drain`] copy
+//!   (tagged with [`with_tier`] so trace events and per-tier stats
+//!   rows attribute it);
+//! * migrations are grouped and complete strictly FIFO — the
+//!   burst-buffer drain ordering, preserved by construction, which is
+//!   what lets [`BurstBuffer`](crate::checkpoint::BurstBuffer) be a
+//!   thin wrapper over a 2-tier hierarchy.
+//!
+//! Capacity pressure on a bounded device tier demotes LRU-coldest
+//! files to the next device tier down (a multi-stage drain); pressure
+//! on the bottom tier is advisory (data is never silently dropped).
+//! RAM tiers evict internally (LRU over whole files), exactly the old
+//! `PageCache` behaviour — which is now literally this module's
+//! [`RamTier`] with a compatibility wrapper.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::engine::{with_origin, with_tier, IoClass};
+use super::policy::{PlacementPolicy, TierView};
+use super::sim::{PendingRead, SimPath, StorageSim};
+
+// ---------------------------------------------------------------------------
+// RAM tier (the page cache, as one tier of the same abstraction)
+// ---------------------------------------------------------------------------
+
+struct RamState {
+    /// key -> (bytes, lru tick)
+    entries: HashMap<String, (u64, u64)>,
+    total: u64,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+}
+
+/// LRU whole-file memory tier with a byte capacity: a hit serves the
+/// read with no device charge; a miss inserts the file and evicts
+/// LRU-first until it fits.  `capacity == 0` disables the tier (every
+/// access misses).  This is the page-cache model the paper defeats
+/// with `fadvise`/`drop_caches` — `PageCache` is a thin wrapper over
+/// one of these, and every `TierKind::Ram` tier of a hierarchy is one.
+pub struct RamTier {
+    capacity: u64,
+    state: Mutex<RamState>,
+}
+
+impl RamTier {
+    pub fn new(capacity: u64) -> RamTier {
+        RamTier {
+            capacity,
+            state: Mutex::new(RamState {
+                entries: HashMap::new(),
+                total: 0,
+                tick: 0,
+                hits: 0,
+                misses: 0,
+            }),
+        }
+    }
+
+    /// Record an access; returns `true` on hit (no device charge).
+    /// A size mismatch (the file was overwritten behind the tier's
+    /// back) drops the stale entry and re-learns the new size, so
+    /// accounting can never carry a phantom size.
+    pub fn access(&self, key: &str, bytes: u64) -> bool {
+        if self.capacity == 0 {
+            let mut st = self.state.lock().unwrap();
+            st.misses += 1;
+            return false;
+        }
+        let mut st = self.state.lock().unwrap();
+        st.tick += 1;
+        let tick = st.tick;
+        let cached_size = st.entries.get(key).map(|&(b, _)| b);
+        match cached_size {
+            Some(b) if b == bytes => {
+                st.entries.get_mut(key).expect("entry present").1 = tick;
+                st.hits += 1;
+                return true;
+            }
+            Some(b) => {
+                st.entries.remove(key);
+                st.total -= b;
+            }
+            None => {}
+        }
+        st.misses += 1;
+        // Insert (files larger than the tier are not cached).
+        if bytes <= self.capacity {
+            st.total += bytes;
+            st.entries.insert(key.to_string(), (bytes, tick));
+            while st.total > self.capacity {
+                let victim = st
+                    .entries
+                    .iter()
+                    .min_by_key(|(_, (_, t))| *t)
+                    .map(|(k, (b, _))| (k.clone(), *b))
+                    .expect("non-empty tier over capacity");
+                st.entries.remove(&victim.0);
+                st.total -= victim.1;
+            }
+        }
+        false
+    }
+
+    /// Is `key` resident (without touching recency or counters)?
+    pub fn contains(&self, key: &str) -> bool {
+        self.state.lock().unwrap().entries.contains_key(key)
+    }
+
+    /// Invalidate one key (fadvise DONTNEED).
+    pub fn invalidate(&self, key: &str) {
+        let mut st = self.state.lock().unwrap();
+        if let Some((b, _)) = st.entries.remove(key) {
+            st.total -= b;
+        }
+    }
+
+    /// Drop everything (`echo 1 > /proc/sys/vm/drop_caches`).
+    pub fn drop_all(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.entries.clear();
+        st.total = 0;
+    }
+
+    /// (hits, misses) counters.
+    pub fn stats(&self) -> (u64, u64) {
+        let st = self.state.lock().unwrap();
+        (st.hits, st.misses)
+    }
+
+    /// Bytes currently resident.
+    pub fn resident_bytes(&self) -> u64 {
+        self.state.lock().unwrap().total
+    }
+
+    /// Files currently resident.
+    pub fn resident_keys(&self) -> usize {
+        self.state.lock().unwrap().entries.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Specs
+// ---------------------------------------------------------------------------
+
+/// What backs one tier.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TierKind {
+    /// Memory: hits are free, never a durable home.
+    Ram,
+    /// An engine device (must exist in the sim).
+    Device(String),
+}
+
+/// One tier of a hierarchy, fastest first.
+#[derive(Debug, Clone)]
+pub struct TierSpec {
+    /// Display name (tier stats, sweep rows).
+    pub name: String,
+    pub kind: TierKind,
+    /// Byte capacity; 0 = unbounded.  Bounded device tiers demote
+    /// LRU-coldest files to the next device tier down; a bounded
+    /// *bottom* tier is advisory (nothing below to demote to).
+    pub capacity: u64,
+    /// Writes landing here are asynchronously drained (copied, source
+    /// retained) to the next device tier down — the burst-buffer
+    /// write-through pattern.
+    pub write_through: bool,
+}
+
+impl TierSpec {
+    /// A RAM tier of `capacity` bytes.
+    pub fn ram(capacity: u64) -> TierSpec {
+        TierSpec {
+            name: "ram".into(),
+            kind: TierKind::Ram,
+            capacity,
+            write_through: false,
+        }
+    }
+
+    /// A device tier (capacity 0 = unbounded).
+    pub fn device(name: &str, capacity: u64) -> TierSpec {
+        TierSpec {
+            name: name.into(),
+            kind: TierKind::Device(name.into()),
+            capacity,
+            write_through: false,
+        }
+    }
+
+    /// An unbounded write-through staging device (burst-buffer fast
+    /// tier).
+    pub fn write_stage(name: &str) -> TierSpec {
+        TierSpec { write_through: true, ..TierSpec::device(name, 0) }
+    }
+
+    fn device_name(&self) -> Option<&str> {
+        match &self.kind {
+            TierKind::Ram => None,
+            TierKind::Device(d) => Some(d),
+        }
+    }
+}
+
+/// An ordered (fast → slow) tier list.
+#[derive(Debug, Clone)]
+pub struct HierarchySpec {
+    pub name: String,
+    pub tiers: Vec<TierSpec>,
+}
+
+impl HierarchySpec {
+    pub fn new(name: &str, tiers: Vec<TierSpec>) -> HierarchySpec {
+        HierarchySpec { name: name.into(), tiers }
+    }
+
+    /// The burst buffer's shape: `fast` staging over a `slow` archive.
+    /// Drain groups are enqueued explicitly by the wrapper (not
+    /// write-through), preserving the saver's triple granularity.
+    pub fn two_tier_bb(fast: &str, slow: &str) -> HierarchySpec {
+        HierarchySpec::new(
+            &format!("bb:{fast}:{slow}"),
+            vec![TierSpec::device(fast, 0), TierSpec::device(slow, 0)],
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Runtime state
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Default)]
+struct KeyState {
+    bytes: u64,
+    /// Bitmask of device tiers holding a copy (RAM membership lives
+    /// in the RamTier itself).
+    copies: u32,
+    /// Overwrite generation: bumped whenever new content is
+    /// registered for the key.  A migration whose copy was in flight
+    /// across a generation change copied stale bytes — it must not
+    /// register its destination (or evict its source).
+    gen: u64,
+}
+
+#[derive(Default)]
+struct TierRt {
+    /// Bytes resident on this device tier.
+    used: u64,
+    /// key -> lru tick (device tiers only).
+    recency: HashMap<String, u64>,
+    /// Keys with an in-flight demotion away from this tier (excluded
+    /// from further victim picks; their bytes discount `used` for the
+    /// pressure loop so it terminates).
+    evicting: HashSet<String>,
+    evicting_bytes: u64,
+    /// Reads served by this tier.
+    hits: u64,
+    /// Migration copies that landed here (drains + promotions +
+    /// demotions in).
+    migrations_in: u64,
+    /// Copies dropped from this tier (demotions away + cleanup).
+    evictions: u64,
+}
+
+struct HierState {
+    policy: Box<dyn PlacementPolicy>,
+    keys: HashMap<String, KeyState>,
+    tiers: Vec<TierRt>,
+    tick: u64,
+    total_reads: u64,
+}
+
+/// One migration step, as executed by the migrator thread.
+#[derive(Debug, Clone)]
+struct MigJob {
+    key: String,
+    bytes: u64,
+    from: usize,
+    to: usize,
+    evict_src: bool,
+}
+
+#[derive(Clone)]
+struct MigGroup {
+    label: u64,
+    /// Record `label` in the completed-labels ledger (burst-buffer
+    /// drain steps record; internal pressure/policy groups don't).
+    record: bool,
+    jobs: Vec<MigJob>,
+    origin: &'static str,
+    /// Dynamic "drop the source copies once drained" switch, read at
+    /// execution time (the burst buffer's `set_cleanup_staged`).
+    cleanup: Option<Arc<AtomicBool>>,
+}
+
+#[derive(Default)]
+struct Completed {
+    labels: Vec<u64>,
+    errors: u64,
+}
+
+struct MigQueue {
+    jobs: Mutex<VecDeque<MigGroup>>,
+    available: Condvar,
+    idle: Condvar,
+    shutdown: Mutex<bool>,
+    completed: Mutex<Completed>,
+}
+
+struct HierInner {
+    sim: Arc<StorageSim>,
+    spec: HierarchySpec,
+    /// One RamTier per `TierKind::Ram` entry (same index as spec).
+    rams: Vec<Option<RamTier>>,
+    state: Mutex<HierState>,
+    queue: MigQueue,
+}
+
+/// Per-tier stats snapshot ([`StorageHierarchy::stats`]).
+#[derive(Debug, Clone)]
+pub struct TierStatsSnap {
+    pub tier: usize,
+    pub name: String,
+    /// Backing device (`None` for RAM tiers).
+    pub device: Option<String>,
+    /// Reads served by this tier.
+    pub hits: u64,
+    pub resident_bytes: u64,
+    pub resident_keys: usize,
+    pub migrations_in: u64,
+    pub evictions: u64,
+}
+
+/// The N-tier hierarchy facade.  All methods are `&self`; share via
+/// `Arc`.  Dropping the last handle shuts down and joins the
+/// migrator (pending migrations complete first).
+pub struct StorageHierarchy {
+    inner: Arc<HierInner>,
+    migrator: Option<JoinHandle<()>>,
+}
+
+impl StorageHierarchy {
+    /// Validate `spec` against `sim` and start the migrator.
+    pub fn new(
+        sim: Arc<StorageSim>,
+        spec: HierarchySpec,
+        policy: Box<dyn PlacementPolicy>,
+    ) -> Result<StorageHierarchy> {
+        if spec.tiers.is_empty() || spec.tiers.len() > 32 {
+            return Err(anyhow!(
+                "hierarchy {:?} needs 1..=32 tiers, has {}",
+                spec.name,
+                spec.tiers.len()
+            ));
+        }
+        let mut rams = Vec::with_capacity(spec.tiers.len());
+        let mut devices = 0usize;
+        for t in &spec.tiers {
+            match &t.kind {
+                TierKind::Ram => rams.push(Some(RamTier::new(t.capacity))),
+                TierKind::Device(d) => {
+                    sim.device(d).with_context(|| {
+                        format!("hierarchy {:?} tier {:?}", spec.name, t.name)
+                    })?;
+                    devices += 1;
+                    rams.push(None);
+                }
+            }
+        }
+        if devices == 0 {
+            return Err(anyhow!(
+                "hierarchy {:?} has no device tier (RAM tiers cannot be a \
+                 durable home)",
+                spec.name
+            ));
+        }
+        let tiers = spec.tiers.iter().map(|_| TierRt::default()).collect();
+        let inner = Arc::new(HierInner {
+            sim,
+            spec,
+            rams,
+            state: Mutex::new(HierState {
+                policy,
+                keys: HashMap::new(),
+                tiers,
+                tick: 0,
+                total_reads: 0,
+            }),
+            queue: MigQueue {
+                jobs: Mutex::new(VecDeque::new()),
+                available: Condvar::new(),
+                idle: Condvar::new(),
+                shutdown: Mutex::new(false),
+                completed: Mutex::new(Completed::default()),
+            },
+        });
+        let migrator = {
+            let inner = Arc::clone(&inner);
+            std::thread::Builder::new()
+                .name("dlio-hier-migrate".into())
+                .spawn(move || migrate_loop(inner))
+                .expect("spawn hierarchy migrator")
+        };
+        Ok(StorageHierarchy { inner, migrator: Some(migrator) })
+    }
+
+    pub fn spec(&self) -> &HierarchySpec {
+        &self.inner.spec
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.inner.state.lock().unwrap().policy.name()
+    }
+
+    pub fn sim(&self) -> &Arc<StorageSim> {
+        &self.inner.sim
+    }
+
+    /// Tier index of a device name, if it backs one.
+    pub fn tier_of_device(&self, device: &str) -> Option<usize> {
+        self.inner
+            .spec
+            .tiers
+            .iter()
+            .position(|t| t.device_name() == Some(device))
+    }
+
+    /// Backing device of tier `tier` (error for RAM tiers).
+    pub fn device_of(&self, tier: usize) -> Result<String> {
+        self.inner.device_of(tier)
+    }
+
+    /// Where the policy lands fresh writes right now:
+    /// `(tier, device)`.
+    pub fn write_placement(&self) -> (usize, String) {
+        let mut st = self.inner.state.lock().unwrap();
+        let views = self.inner.views(&st);
+        // Out-of-range / RAM placements from a policy fall back to the
+        // first device tier: writes need a durable home.
+        let tier = st.policy.place_write("", 0, &views);
+        let tier = if self
+            .inner
+            .spec
+            .tiers
+            .get(tier)
+            .and_then(|t| t.device_name())
+            .is_none()
+        {
+            super::policy::first_device_tier(&views)
+        } else {
+            tier
+        };
+        let dev = self.inner.spec.tiers[tier]
+            .device_name()
+            .expect("validated device tier")
+            .to_string();
+        (tier, dev)
+    }
+
+    /// Seed residency for a file that already exists on `tier`'s
+    /// backing device (corpus fixtures).
+    pub fn register(&self, key: &str, bytes: u64, tier: usize) -> Result<()> {
+        let _ = self.inner.device_of(tier)?;
+        let mut st = self.inner.state.lock().unwrap();
+        self.inner.attach_copy(&mut st, key, bytes, tier);
+        Ok(())
+    }
+
+    /// Read `key` through the hierarchy under [`IoClass::Ingest`].
+    pub fn read_async(&self, key: &str) -> Result<PendingRead> {
+        self.read_async_class(key, IoClass::Ingest)
+    }
+
+    /// Read `key` wherever it is resident: the fastest tier holding a
+    /// copy serves.  RAM hits return [`PendingRead::Ready`] with no
+    /// device charge; device reads are engine submissions tagged with
+    /// the serving tier.  Unknown keys are auto-registered by probing
+    /// the tiers' backing stores (fastest first).  The policy sees
+    /// every access and its promotion decisions are executed
+    /// asynchronously.
+    pub fn read_async_class(
+        &self,
+        key: &str,
+        class: IoClass,
+    ) -> Result<PendingRead> {
+        enum Serve {
+            Ram { backing: SimPath },
+            Device { tier: usize, path: SimPath },
+        }
+        let (serve, jobs) = {
+            let mut st = self.inner.state.lock().unwrap();
+            let ks = match st.keys.get(key) {
+                Some(ks) => ks.clone(),
+                None => self.inner.auto_register(&mut st, key)?,
+            };
+            st.total_reads += 1;
+            st.tick += 1;
+            let tick = st.tick;
+            // Fastest tier holding a copy serves; RAM tiers above it
+            // fill on their miss (PageCache read-through semantics).
+            let mut serving: Option<(usize, bool)> = None;
+            for (i, spec) in self.inner.spec.tiers.iter().enumerate() {
+                match &spec.kind {
+                    TierKind::Ram => {
+                        let ram =
+                            self.inner.rams[i].as_ref().expect("ram slot");
+                        if !ram.access(key, ks.bytes) {
+                            continue;
+                        }
+                        // PR-2 dirty-key guard, at this layer too: a
+                        // RAM hit whose backing file has an engine
+                        // overwrite in flight must not serve (torn
+                        // read); fall through to the device read,
+                        // which races like any engine read.
+                        let clean = match self.inner.fastest_device_copy(&ks)
+                        {
+                            None => false,
+                            Some(home) => {
+                                let p = SimPath::new(
+                                    self.inner.device_of(home)?,
+                                    key.to_string(),
+                                );
+                                !self.inner.sim.overwrite_in_flight(&p)
+                            }
+                        };
+                        if clean {
+                            serving = Some((i, true));
+                            break;
+                        }
+                        ram.invalidate(key);
+                    }
+                    TierKind::Device(_) => {
+                        if ks.copies & (1 << i) != 0 {
+                            serving = Some((i, false));
+                            break;
+                        }
+                    }
+                }
+            }
+            let Some((tier, is_ram)) = serving else {
+                return Err(anyhow!(
+                    "hierarchy {:?}: {key:?} has no resident copy",
+                    self.inner.spec.name
+                ));
+            };
+            st.tiers[tier].hits += 1;
+            let serve = if is_ram {
+                // Data comes from the durable home's backing file,
+                // with no device charge.
+                let home = self.inner.fastest_device_copy(&ks).ok_or_else(
+                    || {
+                        anyhow!(
+                            "hierarchy {:?}: {key:?} resident only in RAM",
+                            self.inner.spec.name
+                        )
+                    },
+                )?;
+                Serve::Ram {
+                    backing: SimPath::new(
+                        self.inner.device_of(home)?,
+                        key.to_string(),
+                    ),
+                }
+            } else {
+                st.tiers[tier].recency.insert(key.to_string(), tick);
+                Serve::Device {
+                    tier,
+                    path: SimPath::new(
+                        self.inner.device_of(tier)?,
+                        key.to_string(),
+                    ),
+                }
+            };
+            // Policy reaction (promotions), translated to work.
+            let views = self.inner.views(&st);
+            let migs = st.policy.on_read(key, ks.bytes, tier, &views);
+            let jobs = self.inner.plan_migrations(&mut st, migs);
+            (serve, jobs)
+        };
+        // I/O strictly outside the lock.
+        if !jobs.is_empty() {
+            self.inner.enqueue(MigGroup {
+                label: 0,
+                record: false,
+                jobs,
+                origin: "hier-promote",
+                cleanup: None,
+            });
+        }
+        match serve {
+            Serve::Ram { backing } => {
+                let path = self.inner.sim.backing_path(&backing);
+                let data = std::fs::read(&path)
+                    .with_context(|| format!("ram-tier read {backing}"))?;
+                Ok(PendingRead::Ready(data))
+            }
+            Serve::Device { tier, path } => with_tier(tier as u32, || {
+                self.inner.sim.read_async_class(&path, class)
+            }),
+        }
+    }
+
+    /// Blocking read (tests / simple drivers).
+    pub fn read(&self, key: &str) -> Result<Vec<u8>> {
+        self.read_async(key)?.wait()
+    }
+
+    /// Write `key` through the hierarchy: the policy places it on a
+    /// device tier, the write pays that tier's device, residency and
+    /// write-through drains follow.  Returns the tier written.
+    pub fn write_class(
+        &self,
+        key: &str,
+        data: &[u8],
+        class: IoClass,
+    ) -> Result<usize> {
+        let (tier, dev) = self.write_placement();
+        let p = SimPath::new(dev, key.to_string());
+        with_tier(tier as u32, || self.inner.sim.write_class(&p, data, class))?;
+        self.note_written_sized(key, data.len() as u64, tier);
+        Ok(tier)
+    }
+
+    /// Blocking checkpoint-class write.
+    pub fn write(&self, key: &str, data: &[u8]) -> Result<usize> {
+        self.write_class(key, data, IoClass::Checkpoint)
+    }
+
+    /// Register writes that already happened on `tier`'s device
+    /// (routed writers like the saver submit through the sim
+    /// themselves, overlapped; sizes are statted from the backing
+    /// store).  Triggers write-through drains and capacity pressure.
+    pub fn note_written(&self, keys: &[String], tier: usize) -> Result<()> {
+        let dev = self.inner.device_of(tier)?;
+        for key in keys {
+            let bytes = self
+                .inner
+                .sim
+                .file_size(&SimPath::new(dev.clone(), key.clone()))?;
+            self.note_written_sized(key, bytes, tier);
+        }
+        Ok(())
+    }
+
+    fn note_written_sized(&self, key: &str, bytes: u64, tier: usize) {
+        let jobs = {
+            let mut st = self.inner.state.lock().unwrap();
+            // Stale copies elsewhere are dropped (an overwrite has one
+            // authoritative home again); RAM entries invalidate.
+            let stale: Vec<usize> = match st.keys.get(key) {
+                None => Vec::new(),
+                Some(ks) => (0..self.inner.spec.tiers.len())
+                    .filter(|&t| t != tier && ks.copies & (1 << t) != 0)
+                    .collect(),
+            };
+            for t in stale {
+                self.inner.drop_copy(&mut st, key, t, true);
+            }
+            for ram in self.inner.rams.iter().flatten() {
+                ram.invalidate(key);
+            }
+            self.inner.attach_copy(&mut st, key, bytes, tier);
+            // New content registered: invalidate any migration whose
+            // copy is still in flight (it carries the old bytes).
+            if let Some(ks) = st.keys.get_mut(key) {
+                ks.gen += 1;
+            }
+            let views = self.inner.views(&st);
+            let mut migs = st.policy.on_write(key, bytes, tier, &views);
+            // Write-through staging: drain a copy to the next device
+            // tier down (source retained; capacity pressure or a
+            // cleanup flag reclaims it).
+            if self.inner.spec.tiers[tier].write_through {
+                if let Some(below) = self.inner.next_device_below(tier) {
+                    migs.push(super::policy::Migration {
+                        key: key.to_string(),
+                        from: tier,
+                        to: below,
+                        evict_src: false,
+                    });
+                }
+            }
+            let mut jobs = self.inner.plan_migrations(&mut st, migs);
+            jobs.extend(self.inner.collect_pressure(&mut st, tier));
+            jobs
+        };
+        if !jobs.is_empty() {
+            self.inner.enqueue(MigGroup {
+                label: 0,
+                record: false,
+                jobs,
+                origin: "hier-drain",
+                cleanup: None,
+            });
+        }
+    }
+
+    /// Enqueue an explicit migration group: copy `keys` from tier
+    /// `from` to tier `to`, strictly after every previously enqueued
+    /// group (FIFO — the burst buffer's oldest-first drain order).
+    /// `label` is recorded in [`completed_labels`] on success; the
+    /// optional `cleanup` flag is read at execution time and drops
+    /// the source copies once the group has drained.
+    ///
+    /// [`completed_labels`]: StorageHierarchy::completed_labels
+    pub fn enqueue_group(
+        &self,
+        label: u64,
+        keys: Vec<String>,
+        from: usize,
+        to: usize,
+        origin: &'static str,
+        cleanup: Option<Arc<AtomicBool>>,
+    ) -> Result<()> {
+        let _ = self.inner.device_of(from)?;
+        let _ = self.inner.device_of(to)?;
+        let st = self.inner.state.lock().unwrap();
+        let jobs: Vec<MigJob> = keys
+            .into_iter()
+            .map(|key| {
+                let bytes =
+                    st.keys.get(&key).map(|ks| ks.bytes).unwrap_or(0);
+                MigJob { key, bytes, from, to, evict_src: false }
+            })
+            .collect();
+        drop(st);
+        self.inner.enqueue(MigGroup {
+            label,
+            record: true,
+            jobs,
+            origin,
+            cleanup,
+        });
+        Ok(())
+    }
+
+    /// Is a group with `label` still queued or in flight?  Groups are
+    /// popped only after their copies finish, so `true` means the
+    /// source files must not be deleted yet (the retention-guard
+    /// contract).
+    pub fn group_pending(&self, label: u64) -> bool {
+        self.inner
+            .queue
+            .jobs
+            .lock()
+            .unwrap()
+            .iter()
+            .any(|g| g.record && g.label == label)
+    }
+
+    /// Block until every queued migration has completed.
+    pub fn wait_idle(&self) {
+        let mut jobs = self.inner.queue.jobs.lock().unwrap();
+        while !jobs.is_empty() {
+            jobs = self.inner.queue.idle.wait(jobs).unwrap();
+        }
+    }
+
+    /// Labels of recorded groups in completion order (FIFO ⇒ enqueue
+    /// order — the burst buffer's oldest-first proof).
+    pub fn completed_labels(&self) -> Vec<u64> {
+        self.inner.queue.completed.lock().unwrap().labels.clone()
+    }
+
+    /// Recorded groups fully migrated.
+    pub fn completed_count(&self) -> u64 {
+        self.inner.queue.completed.lock().unwrap().labels.len() as u64
+    }
+
+    /// Migration copy errors so far.
+    pub fn migration_errors(&self) -> u64 {
+        self.inner.queue.completed.lock().unwrap().errors
+    }
+
+    /// Drop `key`'s copy on `tier` (backing file included); other
+    /// tiers' copies survive — the burst buffer's staged-file
+    /// retention cleanup.
+    pub fn remove_from_tier(&self, key: &str, tier: usize) -> Result<()> {
+        let dev = self.inner.device_of(tier)?;
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            self.inner.drop_copy(&mut st, key, tier, true);
+            for ram in self.inner.rams.iter().flatten() {
+                ram.invalidate(key);
+            }
+        }
+        // Belt and braces: a file written around the hierarchy (no
+        // residency record) still gets its backing removed.
+        let p = SimPath::new(dev, key.to_string());
+        if self.inner.sim.exists(&p) {
+            let _ = self.inner.sim.remove(&p);
+        }
+        Ok(())
+    }
+
+    /// Forget `key` everywhere (all backing copies removed).
+    pub fn remove(&self, key: &str) -> Result<()> {
+        let mut st = self.inner.state.lock().unwrap();
+        for t in 0..self.inner.spec.tiers.len() {
+            self.inner.drop_copy(&mut st, key, t, true);
+        }
+        for ram in self.inner.rams.iter().flatten() {
+            ram.invalidate(key);
+        }
+        Ok(())
+    }
+
+    /// Does any tier hold `key`?
+    pub fn resident(&self, key: &str) -> bool {
+        self.inner.state.lock().unwrap().keys.contains_key(key)
+    }
+
+    /// Device tiers currently holding `key` (fastest first).
+    pub fn tiers_of(&self, key: &str) -> Vec<usize> {
+        let st = self.inner.state.lock().unwrap();
+        match st.keys.get(key) {
+            None => Vec::new(),
+            Some(ks) => (0..self.inner.spec.tiers.len())
+                .filter(|&t| ks.copies & (1 << t) != 0)
+                .collect(),
+        }
+    }
+
+    /// Total reads served (hit-fraction denominators).
+    pub fn total_reads(&self) -> u64 {
+        self.inner.state.lock().unwrap().total_reads
+    }
+
+    /// Per-tier stats snapshot, fastest first.
+    pub fn stats(&self) -> Vec<TierStatsSnap> {
+        let st = self.inner.state.lock().unwrap();
+        self.inner
+            .spec
+            .tiers
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                let rt = &st.tiers[i];
+                let (hits, resident_bytes, resident_keys) =
+                    match &self.inner.rams[i] {
+                        Some(ram) => {
+                            let (ram_hits, _misses) = ram.stats();
+                            (
+                                ram_hits,
+                                ram.resident_bytes(),
+                                ram.resident_keys(),
+                            )
+                        }
+                        None => (rt.hits, rt.used, rt.recency.len()),
+                    };
+                TierStatsSnap {
+                    tier: i,
+                    name: spec.name.clone(),
+                    device: spec.device_name().map(str::to_string),
+                    hits,
+                    resident_bytes,
+                    resident_keys,
+                    migrations_in: rt.migrations_in,
+                    evictions: rt.evictions,
+                }
+            })
+            .collect()
+    }
+}
+
+impl Drop for StorageHierarchy {
+    fn drop(&mut self) {
+        self.wait_idle();
+        *self.inner.queue.shutdown.lock().unwrap() = true;
+        self.inner.queue.available.notify_all();
+        if let Some(m) = self.migrator.take() {
+            let _ = m.join();
+        }
+    }
+}
+
+impl HierInner {
+    fn device_of(&self, tier: usize) -> Result<String> {
+        self.spec
+            .tiers
+            .get(tier)
+            .and_then(|t| t.device_name())
+            .map(str::to_string)
+            .ok_or_else(|| {
+                anyhow!(
+                    "hierarchy {:?}: tier {tier} is not a device tier",
+                    self.spec.name
+                )
+            })
+    }
+
+    fn next_device_below(&self, tier: usize) -> Option<usize> {
+        ((tier + 1)..self.spec.tiers.len())
+            .find(|&i| self.spec.tiers[i].device_name().is_some())
+    }
+
+    fn fastest_device_copy(&self, ks: &KeyState) -> Option<usize> {
+        (0..self.spec.tiers.len())
+            .find(|&i| ks.copies & (1 << i) != 0)
+    }
+
+    fn views(&self, st: &HierState) -> Vec<TierView> {
+        self.spec
+            .tiers
+            .iter()
+            .enumerate()
+            .map(|(i, t)| TierView {
+                name: t.name.clone(),
+                is_ram: t.device_name().is_none(),
+                capacity: t.capacity,
+                used: match &self.rams[i] {
+                    Some(ram) => ram.resident_bytes(),
+                    None => st.tiers[i].used,
+                },
+            })
+            .collect()
+    }
+
+    /// Probe the tiers' backing stores for an unregistered key
+    /// (fastest first), registering every copy found.
+    fn auto_register(
+        &self,
+        st: &mut HierState,
+        key: &str,
+    ) -> Result<KeyState> {
+        let mut found = None;
+        for (i, spec) in self.spec.tiers.iter().enumerate() {
+            let Some(dev) = spec.device_name() else { continue };
+            let p = SimPath::new(dev, key.to_string());
+            if self.sim.exists(&p) {
+                let bytes = self.sim.file_size(&p)?;
+                self.attach_copy(st, key, bytes, i);
+                found = Some(());
+            }
+        }
+        if found.is_none() {
+            return Err(anyhow!(
+                "hierarchy {:?}: {key:?} not found on any tier",
+                self.spec.name
+            ));
+        }
+        Ok(st.keys.get(key).expect("just registered").clone())
+    }
+
+    /// Record a copy of `key` on device tier `tier` (idempotent;
+    /// reconciles sizes on overwrite).
+    fn attach_copy(
+        &self,
+        st: &mut HierState,
+        key: &str,
+        bytes: u64,
+        tier: usize,
+    ) {
+        st.tick += 1;
+        let tick = st.tick;
+        let ks = st.keys.entry(key.to_string()).or_default();
+        let had = ks.copies & (1 << tier) != 0;
+        let old = ks.bytes;
+        ks.bytes = bytes;
+        ks.copies |= 1 << tier;
+        let rt = &mut st.tiers[tier];
+        if had {
+            rt.used = rt.used.saturating_sub(old) + bytes;
+        } else {
+            rt.used += bytes;
+        }
+        rt.recency.insert(key.to_string(), tick);
+    }
+
+    /// Drop `key`'s copy on `tier`; `remove_backing` deletes the
+    /// file.  No-op if no copy there.
+    fn drop_copy(
+        &self,
+        st: &mut HierState,
+        key: &str,
+        tier: usize,
+        remove_backing: bool,
+    ) {
+        let Some(ks) = st.keys.get_mut(key) else { return };
+        if ks.copies & (1 << tier) == 0 {
+            return;
+        }
+        ks.copies &= !(1 << tier);
+        let bytes = ks.bytes;
+        let gone = ks.copies == 0;
+        if gone {
+            st.keys.remove(key);
+        }
+        let rt = &mut st.tiers[tier];
+        rt.used = rt.used.saturating_sub(bytes);
+        rt.recency.remove(key);
+        if rt.evicting.remove(key) {
+            rt.evicting_bytes = rt.evicting_bytes.saturating_sub(bytes);
+        }
+        rt.evictions += 1;
+        st.policy.on_remove(key, tier);
+        if remove_backing {
+            if let Some(dev) = self.spec.tiers[tier].device_name() {
+                let p = SimPath::new(dev, key.to_string());
+                if self.sim.exists(&p) {
+                    let _ = self.sim.remove(&p);
+                }
+            }
+        }
+    }
+
+    /// Translate policy migrations into executable jobs: moves into
+    /// RAM tiers happen inline (free), device→device moves become
+    /// migrator jobs (skipping ones whose destination already holds a
+    /// copy).
+    fn plan_migrations(
+        &self,
+        st: &mut HierState,
+        migs: Vec<super::policy::Migration>,
+    ) -> Vec<MigJob> {
+        let mut jobs = Vec::new();
+        for m in migs {
+            let Some(ks) = st.keys.get(&m.key) else { continue };
+            if m.from >= self.spec.tiers.len()
+                || m.to >= self.spec.tiers.len()
+                || m.from == m.to
+            {
+                continue;
+            }
+            let bytes = ks.bytes;
+            if let Some(ram) = &self.rams[m.to] {
+                // RAM fill: free, inline — but only when not already
+                // resident (the read-through fill usually just
+                // happened; a second access() would count a spurious
+                // hit and corrupt the hit-fraction metric).
+                if !ram.contains(&m.key) {
+                    ram.access(&m.key, bytes);
+                }
+                continue;
+            }
+            if ks.copies & (1 << m.from) == 0 {
+                continue; // source copy vanished
+            }
+            if ks.copies & (1 << m.to) != 0 && !m.evict_src {
+                continue; // already there
+            }
+            // A promotion target may itself be RAM-less but the
+            // destination could be over capacity afterwards; the
+            // migrator re-runs pressure after each landing.
+            jobs.push(MigJob {
+                key: m.key,
+                bytes,
+                from: m.from,
+                to: m.to,
+                evict_src: m.evict_src,
+            });
+        }
+        jobs
+    }
+
+    /// Demote LRU-coldest keys off an over-capacity device tier to
+    /// the next device tier down (marking them evicting so the loop
+    /// terminates and victims aren't re-picked).
+    fn collect_pressure(
+        &self,
+        st: &mut HierState,
+        tier: usize,
+    ) -> Vec<MigJob> {
+        let spec = &self.spec.tiers[tier];
+        if spec.capacity == 0 || spec.device_name().is_none() {
+            return Vec::new();
+        }
+        let Some(below) = self.next_device_below(tier) else {
+            // Bottom device tier: capacity is advisory (nothing to
+            // demote to; data is never dropped).
+            return Vec::new();
+        };
+        let mut jobs = Vec::new();
+        loop {
+            let rt = &st.tiers[tier];
+            if rt.used.saturating_sub(rt.evicting_bytes) <= spec.capacity {
+                break;
+            }
+            let victim = rt
+                .recency
+                .iter()
+                .filter(|(k, _)| !rt.evicting.contains(*k))
+                .min_by(|a, b| a.1.cmp(b.1).then(a.0.cmp(b.0)))
+                .map(|(k, _)| k.clone());
+            let Some(key) = victim else { break };
+            let bytes = st.keys.get(&key).map(|k| k.bytes).unwrap_or(0);
+            let rt = &mut st.tiers[tier];
+            rt.evicting.insert(key.clone());
+            rt.evicting_bytes += bytes;
+            jobs.push(MigJob {
+                key,
+                bytes,
+                from: tier,
+                to: below,
+                evict_src: true,
+            });
+        }
+        jobs
+    }
+
+    fn enqueue(&self, group: MigGroup) {
+        self.queue.jobs.lock().unwrap().push_back(group);
+        self.queue.available.notify_one();
+    }
+
+    /// Execute one migration job (called by the migrator thread, no
+    /// locks held on entry).  Source eviction here is per-job
+    /// (`evict_src`, pressure demotions); the group-level `cleanup`
+    /// flag is applied by the migrator only after the WHOLE group
+    /// succeeded — a mid-group copy failure must leave every staged
+    /// source restorable (the burst buffer's original contract).
+    fn execute_migration(
+        &self,
+        job: &MigJob,
+        origin: &'static str,
+    ) -> Result<()> {
+        let evict = job.evict_src;
+        // Snapshot validity without holding the lock across the copy.
+        // The generation pins the content the copy will read: if an
+        // overwrite lands mid-copy, the copied bytes are stale and
+        // must not be registered.
+        let (need_copy, gen0) = {
+            let mut st = self.state.lock().unwrap();
+            match st.keys.get(&job.key) {
+                None => {
+                    self.clear_evicting(&mut st, job);
+                    return Ok(());
+                }
+                Some(ks) if ks.copies & (1 << job.from) == 0 => {
+                    self.clear_evicting(&mut st, job);
+                    return Ok(());
+                }
+                Some(ks) => (ks.copies & (1 << job.to) == 0, ks.gen),
+            }
+        };
+        if need_copy {
+            let src =
+                SimPath::new(self.device_of(job.from)?, job.key.clone());
+            let dst = SimPath::new(self.device_of(job.to)?, job.key.clone());
+            // Engine-level chunked pipelined copy under the Drain
+            // class, tier-tagged to the destination: trace events and
+            // per-tier stats rows attribute the movement.
+            let res = with_origin(origin, || {
+                with_tier(job.to as u32, || {
+                    self.sim.copy_class(&src, &dst, IoClass::Drain)
+                })
+            });
+            if let Err(e) = res {
+                let mut st = self.state.lock().unwrap();
+                self.clear_evicting(&mut st, job);
+                return Err(e);
+            }
+        }
+        let cascade = {
+            let mut st = self.state.lock().unwrap();
+            // Still the same content (and source) the copy started
+            // from?  An overwrite mid-copy bumps the generation.
+            let valid = st.keys.get(&job.key).map_or(false, |ks| {
+                ks.gen == gen0 && ks.copies & (1 << job.from) != 0
+            });
+            if need_copy {
+                if valid {
+                    let bytes =
+                        st.keys.get(&job.key).map(|k| k.bytes).unwrap_or(0);
+                    self.attach_copy(&mut st, &job.key, bytes, job.to);
+                    st.tiers[job.to].migrations_in += 1;
+                } else {
+                    // Stale copy: drop the unregistered destination
+                    // file instead of registering old bytes as a
+                    // valid (and fastest) copy — unless the overwrite
+                    // itself already landed new content there.
+                    let dst_registered =
+                        st.keys.get(&job.key).map_or(false, |ks| {
+                            ks.copies & (1 << job.to) != 0
+                        });
+                    if !dst_registered {
+                        if let Ok(dev) = self.device_of(job.to) {
+                            let p =
+                                SimPath::new(dev, job.key.clone());
+                            if self.sim.exists(&p) {
+                                let _ = self.sim.remove(&p);
+                            }
+                        }
+                    }
+                }
+            }
+            self.clear_evicting(&mut st, job);
+            if evict && valid {
+                self.drop_copy(&mut st, &job.key, job.from, true);
+            }
+            self.collect_pressure(&mut st, job.to)
+        };
+        if !cascade.is_empty() {
+            self.enqueue(MigGroup {
+                label: 0,
+                record: false,
+                jobs: cascade,
+                origin: "hier-migrate",
+                cleanup: None,
+            });
+        }
+        Ok(())
+    }
+
+    fn clear_evicting(&self, st: &mut HierState, job: &MigJob) {
+        if !job.evict_src {
+            return;
+        }
+        let rt = &mut st.tiers[job.from];
+        if rt.evicting.remove(&job.key) {
+            rt.evicting_bytes =
+                rt.evicting_bytes.saturating_sub(job.bytes);
+        }
+    }
+
+    /// Group-atomic cleanup: drop every job's source copy (backing
+    /// files included).  Called only once the whole group's copies
+    /// have landed.  A job whose destination copy is not registered
+    /// (its key was overwritten mid-copy and the migration
+    /// invalidated itself) keeps its source — never reclaim the only
+    /// remaining copy.
+    fn evict_group_sources(&self, group: &MigGroup) {
+        let mut st = self.state.lock().unwrap();
+        for job in &group.jobs {
+            let has_dst = st.keys.get(&job.key).map_or(false, |ks| {
+                ks.copies & (1 << job.to) != 0
+            });
+            if has_dst {
+                self.drop_copy(&mut st, &job.key, job.from, true);
+            }
+        }
+    }
+}
+
+fn migrate_loop(inner: Arc<HierInner>) {
+    loop {
+        let group = {
+            let mut jobs = inner.queue.jobs.lock().unwrap();
+            loop {
+                if let Some(g) = jobs.front() {
+                    break g.clone();
+                }
+                if *inner.queue.shutdown.lock().unwrap() {
+                    return;
+                }
+                jobs = inner.queue.available.wait(jobs).unwrap();
+            }
+        };
+        let mut ok = true;
+        for job in &group.jobs {
+            if let Err(e) = inner.execute_migration(job, group.origin) {
+                eprintln!(
+                    "[hierarchy {}] migrate {:?} tier {} -> {}: {e:#}",
+                    inner.spec.name, job.key, job.from, job.to
+                );
+                inner.queue.completed.lock().unwrap().errors += 1;
+                ok = false;
+                break;
+            }
+        }
+        if ok {
+            // Staged sources are reclaimed only after the WHOLE group
+            // drained: a mid-group failure leaves every staged file
+            // restorable from the source tier (the pre-refactor
+            // drain_loop's `if ok { cleanup }` contract).  The flag is
+            // sampled AFTER the copies land, also matching the old
+            // loop: set_cleanup_staged(true) during an in-flight
+            // drain applies to that drain.
+            let cleanup = group
+                .cleanup
+                .as_ref()
+                .map_or(false, |f| f.load(Ordering::SeqCst));
+            if cleanup {
+                inner.evict_group_sources(&group);
+            }
+            if group.record {
+                inner
+                    .queue
+                    .completed
+                    .lock()
+                    .unwrap()
+                    .labels
+                    .push(group.label);
+            }
+        }
+        // Pop the group (lifting any retention-guard veto) and wake
+        // wait_idle() callers.
+        let mut jobs = inner.queue.jobs.lock().unwrap();
+        jobs.pop_front();
+        let empty = jobs.is_empty();
+        drop(jobs);
+        if empty {
+            inner.queue.idle.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::device::{DeviceModel, Dir, IoObserver};
+    use crate::storage::policy;
+    use std::sync::atomic::AtomicU64;
+
+    fn model(name: &str, read_lat: f64) -> DeviceModel {
+        DeviceModel {
+            name: name.into(),
+            read_bw: 1e9,
+            write_bw: 1e9,
+            read_lat,
+            write_lat: 0.0,
+            channels: 4,
+            elevator: vec![(1, 1.0)],
+            time_scale: 1000.0,
+        }
+    }
+
+    struct Reads(AtomicU64);
+    impl IoObserver for Reads {
+        fn record(&self, _device: &str, dir: Dir, bytes: u64) {
+            if dir == Dir::Read {
+                self.0.fetch_add(bytes, Ordering::SeqCst);
+            }
+        }
+    }
+
+    fn sim_with(
+        tag: &str,
+        models: Vec<DeviceModel>,
+    ) -> (Arc<StorageSim>, Arc<Reads>) {
+        let dir = std::env::temp_dir()
+            .join(format!("dlio-hier-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let obs = Arc::new(Reads(AtomicU64::new(0)));
+        let sim = Arc::new(
+            StorageSim::new(dir, models, 0, obs.clone()).unwrap(),
+        );
+        (sim, obs)
+    }
+
+    fn two_tier(
+        tag: &str,
+        cap0: u64,
+        policy: Box<dyn PlacementPolicy>,
+    ) -> (StorageHierarchy, Arc<StorageSim>, Arc<Reads>) {
+        let (sim, obs) =
+            sim_with(tag, vec![model("fast", 0.0), model("slow", 0.0)]);
+        let spec = HierarchySpec::new(
+            "t",
+            vec![
+                TierSpec::device("fast", cap0),
+                TierSpec::device("slow", 0),
+            ],
+        );
+        let h =
+            StorageHierarchy::new(Arc::clone(&sim), spec, policy).unwrap();
+        (h, sim, obs)
+    }
+
+    #[test]
+    fn rejects_unknown_devices_and_ram_only_specs() {
+        let (sim, _) = sim_with("valid", vec![model("fast", 0.0)]);
+        let bad = HierarchySpec::new(
+            "bad",
+            vec![TierSpec::device("tape", 0)],
+        );
+        assert!(StorageHierarchy::new(
+            Arc::clone(&sim),
+            bad,
+            Box::new(policy::Noop)
+        )
+        .is_err());
+        let ram_only =
+            HierarchySpec::new("ram", vec![TierSpec::ram(1 << 20)]);
+        assert!(StorageHierarchy::new(
+            Arc::clone(&sim),
+            ram_only,
+            Box::new(policy::Noop)
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn reads_route_to_the_fastest_resident_copy() {
+        let (h, sim, _) = two_tier("route", 0, Box::new(policy::Noop));
+        // k1 on slow only; k2 on both.
+        sim.write(&SimPath::new("slow", "k1"), &[1u8; 100]).unwrap();
+        sim.write(&SimPath::new("fast", "k2"), &[2u8; 100]).unwrap();
+        sim.write(&SimPath::new("slow", "k2"), &[2u8; 100]).unwrap();
+        sim.drop_caches();
+        // Auto-registration probes the backing stores.
+        assert_eq!(h.read("k1").unwrap(), vec![1u8; 100]);
+        assert_eq!(h.read("k2").unwrap(), vec![2u8; 100]);
+        assert_eq!(h.tiers_of("k1"), vec![1]);
+        assert_eq!(h.tiers_of("k2"), vec![0, 1]);
+        let stats = h.stats();
+        assert_eq!(stats[0].hits, 1, "k2 must be served by the fast tier");
+        assert_eq!(stats[1].hits, 1, "k1 must be served by the slow tier");
+        assert!(h.read("missing").is_err());
+    }
+
+    #[test]
+    fn ram_tier_hit_serves_with_no_device_charge() {
+        let (sim, obs) = sim_with("ramhit", vec![model("hdd", 0.0)]);
+        let spec = HierarchySpec::new(
+            "r",
+            vec![TierSpec::ram(1 << 20), TierSpec::device("hdd", 0)],
+        );
+        let h = StorageHierarchy::new(
+            Arc::clone(&sim),
+            spec,
+            Box::new(policy::Noop),
+        )
+        .unwrap();
+        sim.write(&SimPath::new("hdd", "k"), &[7u8; 2048]).unwrap();
+        sim.drop_caches();
+        // Cold: device read + RAM fill.
+        assert_eq!(h.read("k").unwrap(), vec![7u8; 2048]);
+        let cold = obs.0.load(Ordering::SeqCst);
+        assert!(cold >= 2048, "cold read must charge the device");
+        // Warm: served from the RAM tier, device untouched.
+        let pr = h.read_async("k").unwrap();
+        assert!(matches!(pr, PendingRead::Ready(_)), "expected a RAM hit");
+        assert_eq!(pr.wait().unwrap(), vec![7u8; 2048]);
+        assert_eq!(obs.0.load(Ordering::SeqCst), cold, "RAM hit charged");
+        let stats = h.stats();
+        assert_eq!(stats[0].hits, 1);
+        assert_eq!(stats[1].hits, 1);
+    }
+
+    #[test]
+    fn ram_hit_bypassed_while_overwrite_in_flight() {
+        // PR-2 dirty-key guard parity at the hierarchy layer: a RAM
+        // hit must not serve a key whose backing file has an engine
+        // overwrite in flight — the read falls through to the device.
+        let (sim, _) = sim_with("ramtorn", vec![model("hdd", 0.0)]);
+        let spec = HierarchySpec::new(
+            "r",
+            vec![TierSpec::ram(1 << 20), TierSpec::device("hdd", 0)],
+        );
+        let h = StorageHierarchy::new(
+            Arc::clone(&sim),
+            spec,
+            Box::new(policy::Noop),
+        )
+        .unwrap();
+        sim.write(&SimPath::new("hdd", "k"), &[7u8; 4096]).unwrap();
+        let _ = h.read("k").unwrap(); // cold: fills the RAM tier
+        assert!(matches!(h.read_async("k").unwrap(), PendingRead::Ready(_)));
+        // Streaming overwrite in flight: the key is dirty from here.
+        let (mut w, pending) =
+            sim.write_stream(&SimPath::new("hdd", "k")).unwrap();
+        w.push(&[8u8; 10]).unwrap();
+        let pr = h.read_async("k").unwrap();
+        assert!(
+            matches!(pr, PendingRead::InFlight(_)),
+            "RAM tier served a file with an overwrite in flight"
+        );
+        w.finish().unwrap();
+        sim.finish_write(pending).unwrap();
+        let _ = pr.wait(); // whatever it raced to see; must not hang
+        assert_eq!(h.read("k").unwrap(), vec![8u8; 10]);
+    }
+
+    #[test]
+    fn writes_land_per_policy_and_write_through_drains_down() {
+        let (sim, _) = sim_with(
+            "wthrough",
+            vec![model("fast", 0.0), model("slow", 0.0)],
+        );
+        let spec = HierarchySpec::new(
+            "bb",
+            vec![TierSpec::write_stage("fast"), TierSpec::device("slow", 0)],
+        );
+        let h = StorageHierarchy::new(
+            Arc::clone(&sim),
+            spec,
+            Box::new(policy::Noop),
+        )
+        .unwrap();
+        assert_eq!(h.write("ck/a", &[3u8; 4096]).unwrap(), 0);
+        h.wait_idle();
+        // Staged copy retained, drained copy landed below.
+        assert_eq!(h.tiers_of("ck/a"), vec![0, 1]);
+        assert!(sim.exists(&SimPath::new("fast", "ck/a")));
+        assert_eq!(
+            sim.read(&SimPath::new("slow", "ck/a")).unwrap(),
+            vec![3u8; 4096]
+        );
+        assert_eq!(h.stats()[1].migrations_in, 1);
+    }
+
+    #[test]
+    fn lru_capacity_pressure_demotes_coldest_first() {
+        // Tier 0 fits two 100-byte files; writing three demotes the
+        // least recently used (a, refreshed b stays).
+        let (h, sim, _) = two_tier("lru", 250, Box::new(policy::Noop));
+        h.write("a", &[1u8; 100]).unwrap();
+        h.write("b", &[2u8; 100]).unwrap();
+        h.wait_idle();
+        // Touch a so b becomes the LRU victim.
+        let _ = h.read("a").unwrap();
+        h.write("c", &[3u8; 100]).unwrap();
+        h.wait_idle();
+        assert_eq!(h.tiers_of("b"), vec![1], "b (coldest) demoted");
+        assert_eq!(h.tiers_of("a"), vec![0], "a (touched) survives");
+        assert_eq!(h.tiers_of("c"), vec![0]);
+        assert!(!sim.exists(&SimPath::new("fast", "b")), "demotion moves");
+        assert_eq!(sim.read(&SimPath::new("slow", "b")).unwrap(), vec![2u8; 100]);
+        let s = h.stats();
+        assert_eq!(s[0].evictions, 1);
+        assert_eq!(s[1].migrations_in, 1);
+        // And the demoted key still reads (from the slow tier).
+        assert_eq!(h.read("b").unwrap(), vec![2u8; 100]);
+    }
+
+    #[test]
+    fn frequency_policy_promotes_hot_keys_into_tier0() {
+        let (h, sim, _) = two_tier(
+            "freq",
+            0,
+            Box::new(policy::Frequency::new(3, 0)),
+        );
+        for i in 0..4u8 {
+            sim.write(&SimPath::new("slow", format!("f{i}")), &[i; 64])
+                .unwrap();
+        }
+        sim.drop_caches();
+        // Two reads: below threshold, stays slow.
+        let _ = h.read("f0").unwrap();
+        let _ = h.read("f0").unwrap();
+        h.wait_idle();
+        assert_eq!(h.tiers_of("f0"), vec![1]);
+        // Third read crosses the threshold: promoted (copy, source
+        // kept — tier 1 is the durable home).
+        let _ = h.read("f0").unwrap();
+        h.wait_idle();
+        assert_eq!(h.tiers_of("f0"), vec![0, 1]);
+        assert!(sim.exists(&SimPath::new("fast", "f0")));
+        // Subsequent reads hit tier 0.
+        let before = h.stats()[0].hits;
+        let _ = h.read("f0").unwrap();
+        assert_eq!(h.stats()[0].hits, before + 1);
+        // Cold keys never promote.
+        let _ = h.read("f1").unwrap();
+        h.wait_idle();
+        assert_eq!(h.tiers_of("f1"), vec![1]);
+    }
+
+    #[test]
+    fn grouped_migrations_complete_fifo_with_labels() {
+        // The burst-buffer ordering contract at the hierarchy level:
+        // N groups enqueued back-to-back complete strictly in order,
+        // even when each copy is slow enough to backlog the queue.
+        let (sim, _) = sim_with(
+            "fifo",
+            vec![model("fast", 0.0), {
+                let mut m = model("slow", 0.0);
+                m.write_lat = 0.005;
+                m.time_scale = 1.0;
+                m
+            }],
+        );
+        let spec = HierarchySpec::two_tier_bb("fast", "slow");
+        let h = StorageHierarchy::new(
+            Arc::clone(&sim),
+            spec,
+            Box::new(policy::Noop),
+        )
+        .unwrap();
+        let labels: Vec<u64> = (1..=5).map(|i| i * 10).collect();
+        for &l in &labels {
+            let key = format!("ck/m-{l}.data");
+            h.write(&key, &vec![l as u8; 512]).unwrap();
+            h.enqueue_group(l, vec![key], 0, 1, "bb-drain", None)
+                .unwrap();
+        }
+        assert!(h.group_pending(10) || h.completed_count() > 0);
+        h.wait_idle();
+        assert_eq!(h.migration_errors(), 0);
+        assert_eq!(h.completed_labels(), labels, "drains not oldest-first");
+        assert!(!h.group_pending(10));
+        for &l in &labels {
+            assert!(sim.exists(&SimPath::new(
+                "slow",
+                format!("ck/m-{l}.data")
+            )));
+        }
+    }
+
+    #[test]
+    fn cleanup_flag_drops_staged_copies_after_drain() {
+        let (h, sim, _) = two_tier("cleanup", 0, Box::new(policy::Noop));
+        let flag = Arc::new(AtomicBool::new(true));
+        h.write("ck/x", &[9u8; 256]).unwrap();
+        h.enqueue_group(
+            1,
+            vec!["ck/x".into()],
+            0,
+            1,
+            "bb-drain",
+            Some(flag),
+        )
+        .unwrap();
+        h.wait_idle();
+        assert_eq!(h.tiers_of("ck/x"), vec![1], "staged copy reclaimed");
+        assert!(!sim.exists(&SimPath::new("fast", "ck/x")));
+        assert_eq!(h.read("ck/x").unwrap(), vec![9u8; 256]);
+    }
+
+    #[test]
+    fn remove_from_tier_keeps_other_copies() {
+        let (h, sim, _) = two_tier("rmtier", 0, Box::new(policy::Noop));
+        h.write("k", &[5u8; 128]).unwrap();
+        h.enqueue_group(1, vec!["k".into()], 0, 1, "bb-drain", None)
+            .unwrap();
+        h.wait_idle();
+        assert_eq!(h.tiers_of("k"), vec![0, 1]);
+        h.remove_from_tier("k", 0).unwrap();
+        assert_eq!(h.tiers_of("k"), vec![1]);
+        assert!(!sim.exists(&SimPath::new("fast", "k")));
+        assert!(sim.exists(&SimPath::new("slow", "k")));
+        h.remove("k").unwrap();
+        assert!(!h.resident("k"));
+        assert!(!sim.exists(&SimPath::new("slow", "k")));
+    }
+}

@@ -7,16 +7,24 @@
 
 pub mod device;
 pub mod engine;
+pub mod hierarchy;
 pub mod ior;
 pub mod page_cache;
+pub mod policy;
 pub mod profiles;
 pub mod sim;
 
 pub use device::{Device, DeviceModel, Dir, IoObserver, NullObserver};
 pub use engine::{
-    with_origin, AdaptiveQos, ChunkWriter, ClassStats, EngineDeviceStats,
-    EngineEvent, EngineObserver, EngineOp, IoClass, IoCompletion, IoEngine,
-    IoRequest, IoTicket, QosConfig, RateCap,
+    with_origin, with_tier, AdaptiveQos, ChunkWriter, ClassStats,
+    EngineDeviceStats, EngineEvent, EngineObserver, EngineOp, IoClass,
+    IoCompletion, IoEngine, IoRequest, IoTicket, QosConfig, RateCap,
+    TierIoStats,
+};
+pub use hierarchy::{
+    HierarchySpec, RamTier, StorageHierarchy, TierKind, TierSpec,
+    TierStatsSnap,
 };
 pub use page_cache::PageCache;
+pub use policy::{Migration, PlacementPolicy, TierView};
 pub use sim::{PendingRead, PendingWrite, SimPath, StorageSim};

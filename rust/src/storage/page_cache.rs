@@ -1,4 +1,5 @@
-//! Simulated OS page cache.
+//! Simulated OS page cache — now a compatibility wrapper over the
+//! storage hierarchy's RAM tier.
 //!
 //! The paper goes out of its way to defeat the page cache
 //! (`posix_fadvise(POSIX_FADV_DONTNEED)`, `drop_caches`, one-epoch
@@ -8,111 +9,50 @@
 //! inserts the file.  Eviction is LRU over whole files with a byte
 //! capacity, which is the granularity that matters for the workloads
 //! here (whole-file `tf.read()`s).
+//!
+//! Since the N-tier refactor (DESIGN.md §12) this exact model *is*
+//! [`RamTier`](super::hierarchy::RamTier) — tier 0 of a
+//! [`StorageHierarchy`](super::hierarchy::StorageHierarchy).  The
+//! `PageCache` type remains as the sim-level facade (stable API for
+//! `StorageSim` and its dirty-key plumbing) and delegates everything.
 
-use std::collections::HashMap;
-use std::sync::Mutex;
+use super::hierarchy::RamTier;
 
-struct CacheState {
-    /// path -> (bytes, lru tick)
-    entries: HashMap<String, (u64, u64)>,
-    total: u64,
-    tick: u64,
-    hits: u64,
-    misses: u64,
-}
-
-/// LRU whole-file page cache with a byte capacity.
+/// LRU whole-file page cache with a byte capacity: the hierarchy's
+/// RAM tier, wearing its original name.
 pub struct PageCache {
-    capacity: u64,
-    state: Mutex<CacheState>,
+    tier: RamTier,
 }
 
 impl PageCache {
     /// `capacity` = 0 disables caching (every access is a miss).
     pub fn new(capacity: u64) -> Self {
-        PageCache {
-            capacity,
-            state: Mutex::new(CacheState {
-                entries: HashMap::new(),
-                total: 0,
-                tick: 0,
-                hits: 0,
-                misses: 0,
-            }),
-        }
+        PageCache { tier: RamTier::new(capacity) }
     }
 
     /// Record an access; returns `true` on hit (no device charge).
     pub fn access(&self, path: &str, bytes: u64) -> bool {
-        if self.capacity == 0 {
-            let mut st = self.state.lock().unwrap();
-            st.misses += 1;
-            return false;
-        }
-        let mut st = self.state.lock().unwrap();
-        st.tick += 1;
-        let tick = st.tick;
-        let cached_size = st.entries.get(path).map(|&(b, _)| b);
-        match cached_size {
-            Some(b) if b == bytes => {
-                st.entries.get_mut(path).expect("entry present").1 = tick;
-                st.hits += 1;
-                return true;
-            }
-            Some(b) => {
-                // Size changed under us (the file was overwritten via
-                // a path that bypassed invalidation): the cached entry
-                // is stale — drop it and treat this access as a miss,
-                // so accounting can never carry a phantom size.
-                st.entries.remove(path);
-                st.total -= b;
-            }
-            None => {}
-        }
-        st.misses += 1;
-        // Insert (files larger than the cache are not cached).
-        if bytes <= self.capacity {
-            st.total += bytes;
-            st.entries.insert(path.to_string(), (bytes, tick));
-            while st.total > self.capacity {
-                // Evict LRU.
-                let victim = st
-                    .entries
-                    .iter()
-                    .min_by_key(|(_, (_, t))| *t)
-                    .map(|(k, (b, _))| (k.clone(), *b))
-                    .expect("non-empty cache over capacity");
-                st.entries.remove(&victim.0);
-                st.total -= victim.1;
-            }
-        }
-        false
+        self.tier.access(path, bytes)
     }
 
     /// Invalidate one file (fadvise DONTNEED).
     pub fn invalidate(&self, path: &str) {
-        let mut st = self.state.lock().unwrap();
-        if let Some((b, _)) = st.entries.remove(path) {
-            st.total -= b;
-        }
+        self.tier.invalidate(path)
     }
 
     /// Drop everything (`echo 1 > /proc/sys/vm/drop_caches`).
     pub fn drop_all(&self) {
-        let mut st = self.state.lock().unwrap();
-        st.entries.clear();
-        st.total = 0;
+        self.tier.drop_all()
     }
 
     /// (hits, misses) counters.
     pub fn stats(&self) -> (u64, u64) {
-        let st = self.state.lock().unwrap();
-        (st.hits, st.misses)
+        self.tier.stats()
     }
 
     /// Bytes currently cached.
     pub fn resident_bytes(&self) -> u64 {
-        self.state.lock().unwrap().total
+        self.tier.resident_bytes()
     }
 }
 

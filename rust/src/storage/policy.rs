@@ -1,0 +1,411 @@
+//! Pluggable placement policies for the N-tier
+//! [`StorageHierarchy`](super::hierarchy::StorageHierarchy)
+//! (DESIGN.md §12).
+//!
+//! A policy decides *where reads hit* (by proposing promotions after
+//! each access), *where writes land* ([`place_write`]), and *what
+//! migrates between tiers* — the hierarchy executes the decisions as
+//! engine `Drain`-class copies and owns the mechanics (residency,
+//! capacity pressure, LRU eviction order).  Modelled on the
+//! placement-policy-vivarium split: the stack moves blocks, the policy
+//! only ever returns migration messages.
+//!
+//! Three built-ins, selectable by name ([`by_name`]):
+//!
+//! * [`Noop`] — data stays where it lands; the baseline every
+//!   placement study compares against.
+//! * [`Lru`] — classic cache-on-read: every access from a slower tier
+//!   promotes the file into the fastest *device* tier (RAM tiers
+//!   fill read-through on their own), cold files fall out under the
+//!   hierarchy's LRU capacity pressure.
+//! * [`Frequency`] — hot-set promotion: a file is promoted only once
+//!   it has been read `promote_after` times (with periodic decay), so
+//!   one-shot scans cannot flush the hot set — the vivarium
+//!   `FrequencyPolicy`, reduced to its threshold form.
+//!
+//! [`place_write`]: PlacementPolicy::place_write
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+/// What a policy sees of one tier when deciding (a snapshot taken
+/// under the hierarchy lock — cheap, there are only a handful of
+/// tiers).
+#[derive(Debug, Clone)]
+pub struct TierView {
+    pub name: String,
+    /// Memory tier (hits are free; never a durable home).
+    pub is_ram: bool,
+    /// Byte capacity; 0 = unbounded.
+    pub capacity: u64,
+    /// Bytes currently resident.
+    pub used: u64,
+}
+
+/// A policy's migration decision: copy `key` from tier `from` to tier
+/// `to` (executed asynchronously as an engine `Drain`-class copy;
+/// insertions into RAM tiers are free).  `evict_src` drops the source
+/// copy once the destination copy has landed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Migration {
+    pub key: String,
+    pub from: usize,
+    pub to: usize,
+    pub evict_src: bool,
+}
+
+/// Index of the first (fastest) non-RAM tier — the default write
+/// target: writes need a durable home, which a RAM tier can't be.
+pub fn first_device_tier(tiers: &[TierView]) -> usize {
+    tiers
+        .iter()
+        .position(|t| !t.is_ram)
+        .expect("hierarchy has at least one device tier")
+}
+
+/// Placement decisions over an ordered (fast → slow) tier list.
+pub trait PlacementPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// A read of `key` (`bytes` long) was served by tier `served`;
+    /// return any promotions/demotions it should trigger.
+    fn on_read(
+        &mut self,
+        key: &str,
+        bytes: u64,
+        served: usize,
+        tiers: &[TierView],
+    ) -> Vec<Migration>;
+
+    /// A write of `key` landed on tier `tier`.
+    fn on_write(
+        &mut self,
+        _key: &str,
+        _bytes: u64,
+        _tier: usize,
+        _tiers: &[TierView],
+    ) -> Vec<Migration> {
+        Vec::new()
+    }
+
+    /// Tier a fresh write lands on (must be a non-RAM tier).
+    fn place_write(
+        &mut self,
+        _key: &str,
+        _bytes: u64,
+        tiers: &[TierView],
+    ) -> usize {
+        first_device_tier(tiers)
+    }
+
+    /// `key` left `tier` (evicted, demoted, or deleted): drop any
+    /// per-key bookkeeping so a re-ingested key starts cold.
+    fn on_remove(&mut self, _key: &str, _tier: usize) {}
+}
+
+/// Leave everything where it lands: no promotions, no demotions.
+#[derive(Debug, Default)]
+pub struct Noop;
+
+impl PlacementPolicy for Noop {
+    fn name(&self) -> &'static str {
+        "noop"
+    }
+
+    fn on_read(
+        &mut self,
+        _key: &str,
+        _bytes: u64,
+        _served: usize,
+        _tiers: &[TierView],
+    ) -> Vec<Migration> {
+        Vec::new()
+    }
+}
+
+/// Cache-on-read: every access served below the fastest *device*
+/// tier promotes the file into it (keeping the durable source copy);
+/// recency-based eviction is the hierarchy's LRU pressure on that
+/// tier's capacity.  RAM tiers above it fill read-through anyway, so
+/// promotions target the first device tier — on a RAM-topped
+/// hierarchy (`blackdog-tiered`) that is the bounded SSD cache, not
+/// the page cache.
+#[derive(Debug, Default)]
+pub struct Lru;
+
+impl PlacementPolicy for Lru {
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+
+    fn on_read(
+        &mut self,
+        key: &str,
+        _bytes: u64,
+        served: usize,
+        tiers: &[TierView],
+    ) -> Vec<Migration> {
+        let to = first_device_tier(tiers);
+        if served <= to {
+            return Vec::new();
+        }
+        vec![Migration {
+            key: key.to_string(),
+            from: served,
+            to,
+            evict_src: false,
+        }]
+    }
+}
+
+/// Hot-set promotion: count reads per key and promote into the
+/// fastest device tier (see [`Lru`] on why not a RAM tier) only past
+/// `promote_after` accesses, halving every count each `decay_every`
+/// reads so yesterday's hot set ages out.  One-shot scans never
+/// cross the threshold, so they cannot flush the cache — the
+/// property [`Lru`] lacks.
+#[derive(Debug)]
+pub struct Frequency {
+    promote_after: u32,
+    /// Reads between decay sweeps; 0 disables decay.
+    decay_every: u64,
+    counts: HashMap<String, u32>,
+    reads: u64,
+}
+
+impl Frequency {
+    pub fn new(promote_after: u32, decay_every: u64) -> Frequency {
+        Frequency {
+            promote_after: promote_after.max(1),
+            decay_every,
+            counts: HashMap::new(),
+            reads: 0,
+        }
+    }
+
+    /// Accesses recorded for `key` so far (tests / introspection).
+    pub fn count(&self, key: &str) -> u32 {
+        self.counts.get(key).copied().unwrap_or(0)
+    }
+}
+
+impl Default for Frequency {
+    /// Promote on the 3rd access, decay every 1024 reads — hot enough
+    /// to catch a training loop's repeated samples, cold enough to
+    /// ignore a single epoch-start scan.
+    fn default() -> Frequency {
+        Frequency::new(3, 1024)
+    }
+}
+
+impl PlacementPolicy for Frequency {
+    fn name(&self) -> &'static str {
+        "freq"
+    }
+
+    fn on_read(
+        &mut self,
+        key: &str,
+        _bytes: u64,
+        served: usize,
+        tiers: &[TierView],
+    ) -> Vec<Migration> {
+        self.reads += 1;
+        if self.decay_every > 0 && self.reads % self.decay_every == 0 {
+            for c in self.counts.values_mut() {
+                *c /= 2;
+            }
+            self.counts.retain(|_, c| *c > 0);
+        }
+        let count = {
+            let c = self.counts.entry(key.to_string()).or_insert(0);
+            *c = c.saturating_add(1);
+            *c
+        };
+        let to = first_device_tier(tiers);
+        if served <= to || count < self.promote_after {
+            return Vec::new();
+        }
+        vec![Migration {
+            key: key.to_string(),
+            from: served,
+            to,
+            evict_src: false,
+        }]
+    }
+
+    fn on_remove(&mut self, key: &str, _tier: usize) {
+        // Evicted from a tier: reset the count so the key must
+        // re-earn promotion (otherwise every post-eviction read
+        // immediately re-promotes and the cache thrashes).
+        self.counts.remove(key);
+    }
+}
+
+/// Valid policy names, in the order `by_name` accepts them (the list
+/// unknown-name errors print).
+pub const POLICY_NAMES: [&str; 3] = ["noop", "lru", "freq"];
+
+/// Resolve a policy by name (default parameters); unknown names list
+/// the valid set — the same contract as `profiles::by_name` errors.
+pub fn by_name(name: &str) -> Result<Box<dyn PlacementPolicy>> {
+    match name {
+        "noop" => Ok(Box::new(Noop)),
+        "lru" => Ok(Box::new(Lru)),
+        "freq" | "frequency" => Ok(Box::<Frequency>::default()),
+        other => Err(anyhow!(
+            "unknown placement policy {other:?} (valid: {})",
+            POLICY_NAMES.join(", ")
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiers() -> Vec<TierView> {
+        vec![
+            TierView {
+                name: "optane".into(),
+                is_ram: false,
+                capacity: 1 << 20,
+                used: 0,
+            },
+            TierView {
+                name: "hdd".into(),
+                is_ram: false,
+                capacity: 0,
+                used: 0,
+            },
+        ]
+    }
+
+    #[test]
+    fn noop_never_migrates() {
+        let mut p = Noop;
+        for i in 0..10 {
+            assert!(p.on_read(&format!("k{i}"), 100, 1, &tiers()).is_empty());
+        }
+        assert_eq!(p.place_write("k", 100, &tiers()), 0);
+    }
+
+    #[test]
+    fn lru_promotes_every_slow_read_but_not_tier0_hits() {
+        let mut p = Lru;
+        let m = p.on_read("k", 100, 1, &tiers());
+        assert_eq!(
+            m,
+            vec![Migration {
+                key: "k".into(),
+                from: 1,
+                to: 0,
+                evict_src: false
+            }]
+        );
+        assert!(p.on_read("k", 100, 0, &tiers()).is_empty());
+    }
+
+    #[test]
+    fn frequency_promotes_exactly_at_threshold() {
+        let mut p = Frequency::new(3, 0);
+        assert!(p.on_read("hot", 100, 1, &tiers()).is_empty(), "1st read");
+        assert!(p.on_read("hot", 100, 1, &tiers()).is_empty(), "2nd read");
+        let m = p.on_read("hot", 100, 1, &tiers());
+        assert_eq!(m.len(), 1, "3rd read crosses the threshold");
+        assert_eq!(m[0].to, 0);
+        // Cold keys interleaved never cross.
+        for i in 0..10 {
+            assert!(p.on_read(&format!("cold{i}"), 100, 1, &tiers()).is_empty());
+        }
+        // Already-fast keys count but don't re-migrate from tier 0.
+        assert!(p.on_read("hot", 100, 0, &tiers()).is_empty());
+    }
+
+    #[test]
+    fn frequency_decay_halves_counts() {
+        // decay_every = 4: after 4 reads every count halves, so a key
+        // warmed to 2 drops back to 1 and needs 2 more reads.
+        let mut p = Frequency::new(3, 4);
+        assert!(p.on_read("k", 1, 1, &tiers()).is_empty()); // count 1
+        assert!(p.on_read("k", 1, 1, &tiers()).is_empty()); // count 2
+        assert!(p.on_read("x", 1, 1, &tiers()).is_empty());
+        assert!(p.on_read("y", 1, 1, &tiers()).is_empty()); // decay: k -> 1
+        assert_eq!(p.count("k"), 1);
+        assert!(p.on_read("k", 1, 1, &tiers()).is_empty()); // count 2
+        assert_eq!(p.on_read("k", 1, 1, &tiers()).len(), 1); // count 3
+    }
+
+    #[test]
+    fn frequency_eviction_resets_the_count() {
+        let mut p = Frequency::new(2, 0);
+        assert!(p.on_read("k", 1, 1, &tiers()).is_empty());
+        assert_eq!(p.on_read("k", 1, 1, &tiers()).len(), 1);
+        p.on_remove("k", 0);
+        assert!(
+            p.on_read("k", 1, 1, &tiers()).is_empty(),
+            "evicted key must re-earn promotion"
+        );
+    }
+
+    #[test]
+    fn by_name_resolves_and_rejects_with_the_valid_list() {
+        for n in POLICY_NAMES {
+            assert_eq!(by_name(n).unwrap().name(), n);
+        }
+        let err = by_name("banana").unwrap_err().to_string();
+        assert!(err.contains("noop") && err.contains("freq"), "{err}");
+    }
+
+    #[test]
+    fn promotions_target_the_first_device_tier_not_ram() {
+        // [ram, device, device]: promotions land in the device cache
+        // (index 1) — the RAM tier fills read-through on its own, so
+        // targeting it would make the policy axis a no-op on
+        // RAM-topped hierarchies.
+        let mut t = tiers();
+        t.insert(
+            0,
+            TierView {
+                name: "ram".into(),
+                is_ram: true,
+                capacity: 1 << 20,
+                used: 0,
+            },
+        );
+        let mut lru = Lru;
+        assert_eq!(
+            lru.on_read("k", 100, 2, &t),
+            vec![Migration {
+                key: "k".into(),
+                from: 2,
+                to: 1,
+                evict_src: false
+            }]
+        );
+        assert!(
+            lru.on_read("k", 100, 1, &t).is_empty(),
+            "already in the device cache"
+        );
+        let mut f = Frequency::new(1, 0);
+        assert_eq!(f.on_read("k", 100, 2, &t)[0].to, 1);
+    }
+
+    #[test]
+    fn first_device_tier_skips_ram() {
+        let mut t = tiers();
+        t.insert(
+            0,
+            TierView {
+                name: "ram".into(),
+                is_ram: true,
+                capacity: 1 << 20,
+                used: 0,
+            },
+        );
+        assert_eq!(first_device_tier(&t), 1);
+        let mut p = Noop;
+        assert_eq!(p.place_write("k", 1, &t), 1);
+    }
+}

@@ -17,6 +17,7 @@
 
 use super::device::{DeviceModel, Dir};
 use super::engine::QosConfig;
+use super::hierarchy::{HierarchySpec, TierSpec};
 
 /// Median file size of the ImageNet-subset corpus (§IV-A): 112 KB.
 pub const IMAGENET_MEDIAN_BYTES: u64 = 112 * 1024;
@@ -87,6 +88,10 @@ pub fn tegner_lustre(time_scale: f64) -> DeviceModel {
     }
 }
 
+/// The paper's device preset names, in `by_name` order — what
+/// unknown-profile CLI errors list.
+pub const DEVICE_NAMES: [&str; 4] = ["hdd", "ssd", "optane", "lustre"];
+
 /// All four devices of the paper, by name.
 pub fn by_name(name: &str, time_scale: f64) -> Option<DeviceModel> {
     match name {
@@ -94,6 +99,54 @@ pub fn by_name(name: &str, time_scale: f64) -> Option<DeviceModel> {
         "ssd" => Some(blackdog_ssd(time_scale)),
         "optane" => Some(blackdog_optane(time_scale)),
         "lustre" => Some(tegner_lustre(time_scale)),
+        _ => None,
+    }
+}
+
+/// Named storage-hierarchy presets over the paper's devices
+/// (DESIGN.md §12).  Tier-0 capacities are modelled bytes; sweep
+/// drivers override them to shape cache-pressure studies.
+pub const HIERARCHY_NAMES: [&str; 4] = [
+    "blackdog-bb",
+    "blackdog-direct-hdd",
+    "blackdog-tiered",
+    "tegner-lustre+optane",
+];
+
+/// Resolve a hierarchy preset by name.  Device names refer to the
+/// paper profiles ([`by_name`]); the testbed sim must contain them.
+pub fn hierarchy_by_name(name: &str) -> Option<HierarchySpec> {
+    match name {
+        // §III-C's burst buffer: Optane staging drained to HDD.
+        "blackdog-bb" => Some(HierarchySpec::new(
+            name,
+            vec![TierSpec::write_stage("optane"), TierSpec::device("hdd", 0)],
+        )),
+        // Direct-to-slow baseline (the gray bar of Fig. 9).
+        "blackdog-direct-hdd" => Some(HierarchySpec::new(
+            name,
+            vec![TierSpec::device("hdd", 0)],
+        )),
+        // 3-tier Blackdog stack: page-cache RAM over a bounded SSD
+        // cache over the HDD corpus home.
+        "blackdog-tiered" => Some(HierarchySpec::new(
+            name,
+            vec![
+                TierSpec::ram(256 << 20),
+                TierSpec::device("ssd", 1 << 30),
+                TierSpec::device("hdd", 0),
+            ],
+        )),
+        // Tegner with a node-local Optane cache in front of Lustre —
+        // the tier combination the paper benchmarks separately,
+        // composed.
+        "tegner-lustre+optane" => Some(HierarchySpec::new(
+            name,
+            vec![
+                TierSpec::device("optane", 512 << 20),
+                TierSpec::device("lustre", 0),
+            ],
+        )),
         _ => None,
     }
 }
@@ -134,7 +187,7 @@ pub fn adaptive_ingest_target(name: &str) -> Option<f64> {
 pub fn adaptive_auto() -> QosConfig {
     let mut qos = QosConfig::adaptive(5.0e-3);
     if let Some(a) = &mut qos.adaptive {
-        for name in ["hdd", "ssd", "optane", "lustre"] {
+        for name in DEVICE_NAMES {
             if let Some(t) = adaptive_ingest_target(name) {
                 a.per_device.push((name.to_string(), t));
             }
@@ -283,9 +336,36 @@ mod tests {
 
     #[test]
     fn by_name_roundtrip() {
-        for n in ["hdd", "ssd", "optane", "lustre"] {
+        for n in DEVICE_NAMES {
             assert_eq!(by_name(n, 1.0).unwrap().name, n);
         }
         assert!(by_name("floppy", 1.0).is_none());
+    }
+
+    #[test]
+    fn hierarchy_presets_resolve_with_known_devices() {
+        use crate::storage::hierarchy::TierKind;
+        for n in HIERARCHY_NAMES {
+            let spec = hierarchy_by_name(n)
+                .unwrap_or_else(|| panic!("preset {n} missing"));
+            assert_eq!(spec.name, n);
+            assert!(!spec.tiers.is_empty());
+            let mut devices = 0;
+            for t in &spec.tiers {
+                if let TierKind::Device(d) = &t.kind {
+                    assert!(
+                        by_name(d, 1.0).is_some(),
+                        "{n}: unknown device {d}"
+                    );
+                    devices += 1;
+                }
+            }
+            assert!(devices >= 1, "{n}: no device tier");
+        }
+        assert!(hierarchy_by_name("blackdog-floppy").is_none());
+        // The burst-buffer preset drains fast -> slow.
+        let bb = hierarchy_by_name("blackdog-bb").unwrap();
+        assert!(bb.tiers[0].write_through);
+        assert_eq!(bb.tiers.len(), 2);
     }
 }

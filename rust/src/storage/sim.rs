@@ -261,6 +261,14 @@ impl StorageSim {
         self.dirty.lock().unwrap().contains_key(key)
     }
 
+    /// Is an engine overwrite currently in flight for this path?  The
+    /// dirty-key guard, exposed so cache-like layers stacked above the
+    /// sim (the hierarchy's RAM tiers) can apply the same
+    /// mid-overwrite bypass instead of serving a torn backing file.
+    pub fn overwrite_in_flight(&self, p: &SimPath) -> bool {
+        self.is_dirty(&p.to_string())
+    }
+
     /// The request-level I/O engine scheduling this sim's devices.
     pub fn engine(&self) -> &IoEngine {
         &self.engine

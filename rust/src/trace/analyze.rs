@@ -276,6 +276,7 @@ mod tests {
             class,
             op,
             origin: String::new(),
+            tier: None,
             bytes,
             ok: true,
             submit_secs: submit,

@@ -1,0 +1,314 @@
+//! Trace compaction for multi-epoch recordings (`dlio trace-compact`).
+//!
+//! A multi-epoch training run records the same request pattern once
+//! per epoch: N identical runs of (device, class, op, bytes) in
+//! submit order, differing only in timing jitter.  Replaying all N
+//! epochs buys nothing over replaying one — the pattern, not the
+//! repetition, carries the workload.  `compact` detects the largest
+//! epoch count `k` such that the event stream splits into `k`
+//! signature-identical runs, keeps the first run (its recorded
+//! timings), and stamps the manifest with the compaction factor.
+//!
+//! The equivalence check is structural, not statistical: compaction
+//! succeeds only if every epoch's *exact* (device, class, op, bytes,
+//! ok, origin, tier) sequence matches, so by construction
+//! `events_in == k * events_out` and `bytes_in == k * bytes_out` —
+//! both reported (and re-asserted) in [`CompactReport`].
+
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::event::TraceEvent;
+use super::replay::Trace;
+
+/// What a compaction did.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CompactReport {
+    /// Epochs detected (1 = no repetition found; output == input).
+    pub epochs: usize,
+    pub events_in: usize,
+    pub events_out: usize,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+/// The per-event identity compaction compares (timing excluded).
+fn signature(e: &TraceEvent) -> (&str, &str, &str, u64, bool, &str, i64) {
+    (
+        e.device.as_str(),
+        e.class.name(),
+        e.op.name(),
+        e.bytes,
+        e.ok,
+        e.origin.as_str(),
+        e.tier.map_or(-1, |t| t as i64),
+    )
+}
+
+fn chunks_match(events: &[TraceEvent], k: usize) -> bool {
+    let n = events.len();
+    if k < 2 || n == 0 || n % k != 0 {
+        return false;
+    }
+    let len = n / k;
+    let first = &events[..len];
+    (1..k).all(|c| {
+        let chunk = &events[c * len..(c + 1) * len];
+        chunk
+            .iter()
+            .zip(first)
+            .all(|(a, b)| signature(a) == signature(b))
+    })
+}
+
+/// Compact `trace` (events must be in submit order, as `Trace::load`
+/// returns them).  `epochs`: `Some(k)` validates and uses exactly
+/// `k`; `None` auto-detects the largest matching `k` (1 when the
+/// stream doesn't repeat — the trace passes through unchanged).
+pub fn compact(
+    trace: &Trace,
+    epochs: Option<usize>,
+) -> Result<(Trace, CompactReport)> {
+    let n = trace.events.len();
+    let k = match epochs {
+        Some(k) => {
+            if k == 0 {
+                bail!("--epochs must be positive");
+            }
+            if k > 1 {
+                if n % k != 0 {
+                    bail!(
+                        "{n} events do not split into {k} equal epochs"
+                    );
+                }
+                if !chunks_match(&trace.events, k) {
+                    bail!(
+                        "the {k} epochs are not request-identical \
+                         (compaction would drop information)"
+                    );
+                }
+            }
+            k
+        }
+        None => {
+            // Largest k whose chunks all match: more epochs folded =
+            // smaller representative trace.  A candidate epoch must
+            // contain at least two distinct signatures — a uniform
+            // stream (every request identical) matches EVERY divisor
+            // and has no epoch structure, so auto-folding it would
+            // silently collapse the offered load to a near-empty
+            // trace.  Explicit `--epochs` can still force it.
+            let mut best = 1;
+            for k in (2..=n).rev() {
+                if n % k == 0 && chunks_match(&trace.events, k) {
+                    let first = &trace.events[..n / k];
+                    let s0 = signature(&first[0]);
+                    if first.iter().any(|e| signature(e) != s0) {
+                        best = k;
+                        break;
+                    }
+                }
+            }
+            best
+        }
+    };
+    let bytes_in: u64 = trace.events.iter().map(|e| e.bytes).sum();
+    let kept = if k > 1 { n / k } else { n };
+    let mut events: Vec<TraceEvent> = trace.events[..kept].to_vec();
+    for (i, e) in events.iter_mut().enumerate() {
+        e.seq = i as u64;
+    }
+    let bytes_out: u64 = events.iter().map(|e| e.bytes).sum();
+    // The structural guarantee, re-asserted.
+    if bytes_in != bytes_out * k as u64 || n != kept * k {
+        return Err(anyhow!(
+            "compaction equivalence check failed: {n} events / {bytes_in} \
+             bytes != {k} x ({kept} events / {bytes_out} bytes)"
+        ));
+    }
+    let mut manifest = trace.manifest.clone();
+    if k > 1 {
+        manifest.workload =
+            format!("{} [compacted {k}x]", manifest.workload);
+    }
+    Ok((
+        Trace { manifest, events },
+        CompactReport {
+            epochs: k,
+            events_in: n,
+            events_out: kept,
+            bytes_in,
+            bytes_out,
+        },
+    ))
+}
+
+/// Write a trace as JSONL (header + one event per line) — the same
+/// format `TraceRecorder` produces, without the live-capture
+/// machinery.
+pub fn write_trace(path: &Path, trace: &Trace) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("mkdir {}", parent.display()))?;
+        }
+    }
+    let mut file = std::io::BufWriter::new(
+        std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?,
+    );
+    file.write_all(trace.manifest.to_jsonl().as_bytes())?;
+    file.write_all(b"\n")?;
+    for e in &trace.events {
+        file.write_all(e.to_jsonl().as_bytes())?;
+        file.write_all(b"\n")?;
+    }
+    file.flush().context("flushing compacted trace")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::{EngineOp, IoClass};
+    use crate::trace::event::{TraceManifest, TRACE_VERSION};
+
+    fn ev(seq: u64, op: EngineOp, bytes: u64, t: f64) -> TraceEvent {
+        TraceEvent {
+            seq,
+            device: "d".into(),
+            class: IoClass::Ingest,
+            op,
+            origin: "test".into(),
+            tier: None,
+            bytes,
+            ok: true,
+            submit_secs: t,
+            queue_secs: 0.001,
+            service_secs: 0.002,
+        }
+    }
+
+    fn trace_of(events: Vec<TraceEvent>) -> Trace {
+        Trace {
+            manifest: TraceManifest {
+                version: TRACE_VERSION,
+                workload: "unit".into(),
+                qos_mode: "static".into(),
+                qos: None,
+                time_scale: 1.0,
+                devices: vec![crate::storage::profiles::blackdog_ssd(1.0)],
+            },
+            events,
+        }
+    }
+
+    /// One epoch: read 100, read 200, write 5000 — with per-epoch
+    /// timing jitter so only the signature is stable.
+    fn epochs(k: usize) -> Vec<TraceEvent> {
+        let mut out = Vec::new();
+        for e in 0..k {
+            let base = e as f64 * 1.0 + e as f64 * 0.013; // jitter
+            out.push(ev(out.len() as u64, EngineOp::Read, 100, base));
+            out.push(ev(out.len() as u64, EngineOp::Read, 200, base + 0.1));
+            out.push(ev(
+                out.len() as u64,
+                EngineOp::ProbeWrite,
+                5000,
+                base + 0.2,
+            ));
+        }
+        out
+    }
+
+    #[test]
+    fn detects_and_folds_repeated_epochs() {
+        let t = trace_of(epochs(3));
+        let (c, rep) = compact(&t, None).unwrap();
+        assert_eq!(rep.epochs, 3);
+        assert_eq!(rep.events_in, 9);
+        assert_eq!(rep.events_out, 3);
+        assert_eq!(rep.bytes_in, 3 * 5300);
+        assert_eq!(rep.bytes_out, 5300);
+        assert_eq!(c.events.len(), 3);
+        // Representative epoch keeps the FIRST epoch's timings and
+        // re-seqs from 0.
+        assert_eq!(c.events[0].submit_secs, 0.0);
+        for (i, e) in c.events.iter().enumerate() {
+            assert_eq!(e.seq, i as u64);
+        }
+        assert!(c.manifest.workload.contains("compacted 3x"));
+    }
+
+    #[test]
+    fn non_repeating_stream_passes_through() {
+        let mut evs = epochs(1);
+        evs.push(ev(3, EngineOp::Read, 999, 0.9)); // breaks any split
+        let t = trace_of(evs);
+        let (c, rep) = compact(&t, None).unwrap();
+        assert_eq!(rep.epochs, 1);
+        assert_eq!(rep.events_in, rep.events_out);
+        assert_eq!(c.events.len(), 4);
+        assert_eq!(c.manifest.workload, "unit");
+    }
+
+    #[test]
+    fn uniform_stream_is_not_auto_folded() {
+        // Every event identical: all divisors "match", but there is
+        // no epoch structure — auto-detection must refuse (folding
+        // would collapse the offered load), while an explicit
+        // --epochs still forces it.
+        let uni = |n: usize| -> Vec<TraceEvent> {
+            (0..n)
+                .map(|i| {
+                    ev(i as u64, EngineOp::ProbeRead, 1000, i as f64 * 0.1)
+                })
+                .collect()
+        };
+        let (c, rep) = compact(&trace_of(uni(12)), None).unwrap();
+        assert_eq!(rep.epochs, 1, "uniform stream auto-folded");
+        assert_eq!(c.events.len(), 12);
+        let (c, rep) = compact(&trace_of(uni(12)), Some(4)).unwrap();
+        assert_eq!(rep.epochs, 4);
+        assert_eq!(c.events.len(), 3);
+    }
+
+    #[test]
+    fn explicit_epochs_validate_or_fail() {
+        let t = trace_of(epochs(4));
+        let (_, rep) = compact(&t, Some(2)).unwrap();
+        assert_eq!(rep.epochs, 2, "explicit k wins over auto-detect");
+        assert!(compact(&t, Some(5)).is_err(), "12 events !% 5");
+        assert!(compact(&t, Some(0)).is_err());
+        // Mismatched chunks with a plausible divisor: rejected.
+        let mut evs = epochs(2);
+        evs[3] = ev(3, EngineOp::Read, 12345, 1.0); // corrupt epoch 2
+        assert!(compact(&trace_of(evs), Some(2)).is_err());
+    }
+
+    #[test]
+    fn compacted_trace_roundtrips_through_disk_and_replays() {
+        let dir = std::env::temp_dir().join(format!(
+            "dlio-trace-compact-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let t = trace_of(epochs(3));
+        let (c, rep) = compact(&t, None).unwrap();
+        let path = dir.join("compact.jsonl");
+        write_trace(&path, &c).unwrap();
+        let back = Trace::load(&path).unwrap();
+        assert_eq!(back.events.len(), rep.events_out);
+        assert!(back.manifest.workload.contains("compacted"));
+        // And it replays like any other trace.
+        let outcome = crate::trace::replay::replay(
+            &back,
+            &crate::trace::ReplayConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(outcome.errors, 0);
+        assert_eq!(outcome.replayed.len(), rep.events_out);
+    }
+}

@@ -19,7 +19,12 @@ use crate::util::json::{obj, to_string, Json};
 /// Current trace schema version.  Readers refuse files written by a
 /// *newer* schema; older versions are accepted as long as the fields
 /// parse.
-pub const TRACE_VERSION: u32 = 1;
+///
+/// v2: events may carry a `tier` field — the storage-hierarchy tier
+/// the request was accounted to ([`crate::storage::with_tier`]).  v1
+/// traces (no tier fields) load with `tier: None` and replay
+/// unchanged.
+pub const TRACE_VERSION: u32 = 2;
 
 /// One recorded engine request.
 #[derive(Debug, Clone, PartialEq)]
@@ -31,6 +36,10 @@ pub struct TraceEvent {
     pub op: EngineOp,
     /// Submitter tag (`storage::with_origin`); empty when untagged.
     pub origin: String,
+    /// Storage-hierarchy tier the request was accounted to
+    /// (`storage::with_tier`); `None` for untiered requests and for
+    /// every event of a v1 trace.
+    pub tier: Option<u32>,
     /// Bytes moved.  On failure: a unit request's intended size (so a
     /// replay offers the same load); 0 for failed streams (see
     /// `EngineEvent::bytes`).
@@ -53,6 +62,7 @@ impl TraceEvent {
             class: e.class,
             op: e.op,
             origin: e.origin.to_string(),
+            tier: e.tier,
             bytes: e.bytes,
             ok: e.ok,
             submit_secs: e.submit_secs,
@@ -72,7 +82,7 @@ impl TraceEvent {
     }
 
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut fields = vec![
             ("seq", Json::Num(self.seq as f64)),
             ("dev", Json::Str(self.device.clone())),
             ("class", Json::Str(self.class.name().to_string())),
@@ -83,7 +93,14 @@ impl TraceEvent {
             ("t", Json::Num(self.submit_secs)),
             ("q", Json::Num(self.queue_secs)),
             ("s", Json::Num(self.service_secs)),
-        ])
+        ];
+        // Untiered events omit the field entirely — a v2 trace with no
+        // hierarchy traffic is byte-identical to its v1 form except
+        // for the header version.
+        if let Some(tier) = self.tier {
+            fields.push(("tier", Json::Num(tier as f64)));
+        }
+        obj(fields)
     }
 
     /// One JSONL line (no trailing newline).
@@ -112,6 +129,9 @@ impl TraceEvent {
             op: EngineOp::parse(op_name)
                 .ok_or_else(|| anyhow!("unknown op {op_name:?}"))?,
             origin: st("origin").unwrap_or("").to_string(),
+            // Optional since v2; absent in v1 traces and for untiered
+            // requests.
+            tier: v.get("tier").and_then(Json::as_f64).map(|t| t as u32),
             bytes: num("bytes")? as u64,
             ok: matches!(v.get("ok"), Some(Json::Bool(true))),
             submit_secs: num("t")?,
@@ -438,6 +458,7 @@ mod tests {
             class: IoClass::Checkpoint,
             op: EngineOp::StreamWrite,
             origin: "saver".into(),
+            tier: None,
             bytes: 123_456,
             ok: true,
             submit_secs: 1.5,
@@ -455,6 +476,30 @@ mod tests {
         assert_eq!(back, e);
         assert_eq!(back.complete_secs(), 1.875);
         assert_eq!(back.service_start_secs(), 1.75);
+    }
+
+    #[test]
+    fn tiered_event_roundtrips_and_untiered_omits_the_field() {
+        let mut e = event();
+        e.tier = Some(1);
+        let line = e.to_jsonl();
+        assert!(line.contains("\"tier\""));
+        let back = TraceEvent::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, e);
+        // Untiered: no "tier" key at all (v1-shaped event body).
+        let e = event();
+        assert!(!e.to_jsonl().contains("\"tier\""));
+    }
+
+    #[test]
+    fn v1_event_without_tier_loads_as_none() {
+        // A line as a v1 recorder wrote it: no tier field anywhere.
+        let line = "{\"seq\": 3, \"dev\": \"hdd\", \"class\": \"ingest\", \
+                    \"op\": \"read\", \"origin\": \"\", \"bytes\": 512, \
+                    \"ok\": true, \"t\": 0.5, \"q\": 0.1, \"s\": 0.01}";
+        let e = TraceEvent::from_json(&Json::parse(line).unwrap()).unwrap();
+        assert_eq!(e.tier, None);
+        assert_eq!(e.bytes, 512);
     }
 
     #[test]

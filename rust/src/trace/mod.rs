@@ -26,15 +26,17 @@
 //! [`replay`]: replay::replay
 
 pub mod analyze;
+pub mod compact;
 pub mod dstat;
 pub mod event;
 pub mod recorder;
 pub mod replay;
 
+pub use compact::{compact, write_trace, CompactReport};
 pub use dstat::{Dstat, TraceRow};
 pub use event::{TraceEvent, TraceManifest, TRACE_VERSION};
 pub use recorder::{MemorySink, TraceRecorder};
 pub use replay::{
-    replay, report, ReplayConfig, ReplayMode, ReplayOutcome, ReplayReport,
-    Trace,
+    replay, report, sweep, sweep_to_csv, sweep_to_json, ReplayConfig,
+    ReplayMode, ReplayOutcome, ReplayReport, Trace,
 };

@@ -242,6 +242,7 @@ mod tests {
             class: IoClass::Ingest,
             op: EngineOp::ProbeRead,
             origin: "test",
+            tier: None,
             bytes: 1000 + i,
             ok: true,
             submit_secs: i as f64 * 0.001,

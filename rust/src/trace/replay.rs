@@ -195,7 +195,14 @@ fn submit_probe(engine: &IoEngine, ev: &TraceEvent) -> Result<IoTicket> {
             bytes: ev.bytes,
         },
     };
-    crate::storage::with_origin("replay", || engine.submit_class(req, ev.class))
+    // Re-tag the recorded tier so replayed events keep their
+    // hierarchy attribution (and per-tier stats rows survive replay).
+    crate::storage::with_origin("replay", || match ev.tier {
+        Some(t) => crate::storage::with_tier(t, || {
+            engine.submit_class(req, ev.class)
+        }),
+        None => engine.submit_class(req, ev.class),
+    })
 }
 
 /// Build the replay devices per `cfg` (recorded models, or a profile
@@ -213,8 +220,14 @@ fn replay_devices(
             None => m.clone(),
             Some(p) => {
                 let ts = cfg.time_scale.unwrap_or(m.time_scale);
-                let mut pm = profiles::by_name(p, ts)
-                    .ok_or_else(|| anyhow!("unknown profile {p:?}"))?;
+                // A typo'd profile name must say what IS valid, not
+                // just fail (the by_name presets are the contract).
+                let mut pm = profiles::by_name(p, ts).ok_or_else(|| {
+                    anyhow!(
+                        "unknown profile {p:?} (valid: {})",
+                        profiles::DEVICE_NAMES.join(", ")
+                    )
+                })?;
                 pm.name = m.name.clone();
                 pm
             }
@@ -488,6 +501,71 @@ impl ReplayReport {
     }
 }
 
+/// Replay-driven what-if sweep: run ONE recorded trace across a QoS
+/// scheduler-mode matrix (the `qos-sweep` mode axis) and return one
+/// diff report per cell — `dlio trace-replay --sweep fifo,static,...`.
+/// Every cell replays the same request stream under `base` (mode,
+/// profile, time scale), varying only the scheduler.
+pub fn sweep(
+    trace: &Trace,
+    base: &ReplayConfig,
+    modes: &[String],
+    adaptive_target: f64,
+) -> Result<Vec<ReplayReport>> {
+    if modes.is_empty() {
+        bail!("--sweep needs at least one scheduler mode");
+    }
+    // Validate the whole matrix before replaying the first cell.
+    let mut cfgs = Vec::with_capacity(modes.len());
+    for mode in modes {
+        let mut cfg = base.clone();
+        cfg.qos = QosConfig::parse_mode(mode, adaptive_target)?;
+        cfgs.push(cfg);
+    }
+    let mut out = Vec::with_capacity(cfgs.len());
+    for cfg in &cfgs {
+        let outcome = replay(trace, cfg)?;
+        out.push(report(trace, cfg, &outcome));
+    }
+    Ok(out)
+}
+
+/// One CSV row per sweep cell (header + flattened ingest/checkpoint
+/// diff columns — the row shape mirrors `qos-sweep`).
+pub fn sweep_to_csv(reports: &[ReplayReport]) -> String {
+    let mut out = String::from(
+        "qos,profile,mode,wall_secs,errors,\
+         ingest_rec_p99_ms,ingest_rep_p99_ms,ingest_mb,\
+         ckpt_rec_p99_ms,ckpt_rep_p99_ms,ckpt_mb\n",
+    );
+    for r in reports {
+        let ing_r = &r.recorded[IoClass::Ingest.index()];
+        let ing_p = &r.replayed[IoClass::Ingest.index()];
+        let ck_r = &r.recorded[IoClass::Checkpoint.index()];
+        let ck_p = &r.replayed[IoClass::Checkpoint.index()];
+        out.push_str(&format!(
+            "{},{},{},{:.4},{},{:.4},{:.4},{:.2},{:.4},{:.4},{:.2}\n",
+            r.qos_mode,
+            r.profile,
+            r.mode,
+            r.wall_secs,
+            r.errors,
+            ing_r.p99_queue_secs * 1e3,
+            ing_p.p99_queue_secs * 1e3,
+            ing_p.bytes as f64 / 1e6,
+            ck_r.p99_queue_secs * 1e3,
+            ck_p.p99_queue_secs * 1e3,
+            ck_p.bytes as f64 / 1e6,
+        ));
+    }
+    out
+}
+
+/// JSON array of the sweep's full diff reports (one per cell).
+pub fn sweep_to_json(reports: &[ReplayReport]) -> Json {
+    Json::Arr(reports.iter().map(|r| r.to_json()).collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -666,6 +744,7 @@ mod tests {
             class: IoClass::Ingest,
             op: crate::storage::EngineOp::ProbeRead,
             origin: String::new(),
+            tier: None,
             bytes: 1024,
             ok: true,
             submit_secs: t,
@@ -722,14 +801,21 @@ mod tests {
             24 * 32 * 1024,
             "byte totals survive profile substitution"
         );
-        assert!(replay(
+        // Regression: the unknown-profile error must list the valid
+        // preset names, not just fail bare.
+        let err = replay(
             &trace,
             &ReplayConfig {
                 profile: Some("floppy".into()),
                 ..ReplayConfig::default()
-            }
+            },
         )
-        .is_err());
+        .unwrap_err()
+        .to_string();
+        assert!(
+            err.contains("hdd") && err.contains("lustre"),
+            "unknown-profile error does not list presets: {err}"
+        );
     }
 
     #[test]
@@ -770,6 +856,55 @@ mod tests {
         for l in &lines {
             assert_eq!(l.split(',').count(), ncols, "ragged csv: {l}");
         }
+    }
+
+    #[test]
+    fn sweep_runs_one_cell_per_mode_with_exact_bytes() {
+        // Satellite: one recorded trace across the qos-sweep scheduler
+        // matrix — every cell replays the same stream, byte-exact.
+        let trace = record_microbench("sweep");
+        let rec = trace.recorded_aggregates();
+        let modes: Vec<String> =
+            vec!["fifo".into(), "static".into(), "adaptive".into()];
+        let reports =
+            sweep(&trace, &ReplayConfig::default(), &modes, 0.005).unwrap();
+        assert_eq!(reports.len(), 3);
+        for (r, mode) in reports.iter().zip(&modes) {
+            assert_eq!(&r.qos_mode, mode);
+            assert_eq!(r.errors, 0);
+            for c in [IoClass::Ingest, IoClass::Checkpoint] {
+                assert_eq!(
+                    r.replayed[c.index()].bytes,
+                    rec[c.index()].bytes,
+                    "{mode}/{c}: sweep cell diverged from the recording"
+                );
+            }
+        }
+        // One CSV row per cell, constant arity.
+        let csv = sweep_to_csv(&reports);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 4, "header + one row per cell");
+        let ncols = lines[0].split(',').count();
+        for l in &lines {
+            assert_eq!(l.split(',').count(), ncols, "ragged csv: {l}");
+        }
+        // JSON parses back as an array of cells.
+        let v = Json::parse(&crate::util::json::to_string(&sweep_to_json(
+            &reports,
+        )))
+        .unwrap();
+        match v {
+            Json::Arr(cells) => assert_eq!(cells.len(), 3),
+            other => panic!("expected array, got {other:?}"),
+        }
+        // An unknown mode fails the whole sweep before any cell runs.
+        assert!(sweep(
+            &trace,
+            &ReplayConfig::default(),
+            &["banana".into()],
+            0.005
+        )
+        .is_err());
     }
 
     #[test]

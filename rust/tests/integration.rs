@@ -260,7 +260,8 @@ fn burst_buffer_drains_to_slow_device_and_restores_from_both() {
     let profile = small_profile();
     let state = ModelState::init(&profile, 5);
     let mut bb = BurstBuffer::new(
-        Arc::clone(&sim), profile.clone(), "optane", "hdd", "ck/m", 5);
+        Arc::clone(&sim), profile.clone(), "optane", "hdd", "ck/m", 5)
+        .unwrap();
     let h1 = bb.save(&state, 20).unwrap();
     let h2 = bb.save(&state, 40).unwrap();
     assert_eq!(h1.device, "optane");
@@ -322,7 +323,8 @@ fn burst_buffer_save_latency_beats_direct_hdd() {
     let t_slow = t0.elapsed().as_secs_f64();
 
     let mut bb = BurstBuffer::new(
-        Arc::clone(&sim), profile.clone(), "fast", "slow", "b/m", 5);
+        Arc::clone(&sim), profile.clone(), "fast", "slow", "b/m", 5)
+        .unwrap();
     bb.saver_mut().sync_on_save = false;
     let t0 = std::time::Instant::now();
     bb.save(&state, 1).unwrap();
@@ -351,7 +353,8 @@ fn dstat_trace_captures_checkpoint_writes_per_device() {
     let profile = small_profile();
     let state = ModelState::init(&profile, 1);
     let mut bb = BurstBuffer::new(
-        Arc::clone(&sim), profile.clone(), "optane", "hdd", "ck/m", 5);
+        Arc::clone(&sim), profile.clone(), "optane", "hdd", "ck/m", 5)
+        .unwrap();
     bb.save(&state, 1).unwrap();
     bb.wait_drained();
     drop(bb);
