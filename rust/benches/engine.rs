@@ -40,6 +40,15 @@
 //!    `blackdog-bb` (Optane staging, background drain to HDD) is
 //!    >= 2x better than `blackdog-direct-hdd` (Fig. 9's 2.6x, as a
 //!    pair of sweep rows).
+//! 11. **Wall vs virtual clock parity + speedup** — one pinned
+//!    qos-sweep cell (sharded ingest + checkpoint bursts under DRR)
+//!    run under both clocks: per-class byte totals and completion
+//!    counts identical, ingest p99 queue wait within one log2
+//!    histogram bucket, and the virtual run >= 50x faster in wall
+//!    seconds.
+//! 12. **Virtual-clock scale** — a million engine requests through
+//!    the DRR scheduler in discrete-event time finish in under a
+//!    minute of wall time.
 //!
 //! No PJRT artifacts needed.
 
@@ -48,7 +57,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use dlio::checkpoint::Saver;
-use dlio::coordinator::tier_sweep;
+use dlio::coordinator::{qos_sweep, tier_sweep};
 use dlio::data::manifest::Sample;
 use dlio::metrics::{median, Table};
 use dlio::model::ModelState;
@@ -56,8 +65,8 @@ use dlio::pipeline::{sharded_reader, Dataset};
 use dlio::runtime::meta::{ParamSpec, ProfileMeta};
 use dlio::storage::engine::{DEFAULT_CHUNK, STREAM_WINDOW};
 use dlio::storage::{
-    profiles, Device, DeviceModel, IoClass, IoEngine, IoRequest, NullObserver,
-    QosConfig, SimPath, StorageSim,
+    profiles, Clock, ClockSpec, Device, DeviceModel, IoClass, IoEngine,
+    IoRequest, NullObserver, QosConfig, SimPath, StorageSim,
 };
 use dlio::trace::{
     analyze, replay, ReplayConfig, Trace, TraceManifest, TraceRecorder,
@@ -807,6 +816,153 @@ fn main() -> anyhow::Result<()> {
     assert!(
         win >= 2.0,
         "burst-buffer drain cell win {win:.2}x below the 2x target"
+    );
+
+    // ---- 11. wall vs virtual clock: parity + >= 50x speedup ----
+    // One pinned qos-sweep cell — sharded ingest with periodic
+    // checkpoint bursts under static DRR on the slow HDD profile —
+    // run under both clocks.  The workload structure (which requests,
+    // how many bytes, in what submission order) is clock-independent,
+    // so per-class byte totals and completion counts must match
+    // EXACTLY; queue-wait tails come from the same modelled
+    // contention, so the ingest p99 must land within one log2
+    // histogram bucket (2x).  The virtual run never sleeps, so it
+    // must beat the paced run by >= 50x in wall seconds.
+    let parity_cfg = |clock: ClockSpec, tag: &str| {
+        let mut cfg = qos_sweep::QosSweepConfig::standard(
+            workdir(&format!("clockparity-{tag}"))
+                .to_string_lossy()
+                .into_owned(),
+            0.25, // quarter speed: the wall run sleeps real seconds
+        );
+        cfg.modes = vec!["static".into()];
+        cfg.intervals = vec![2];
+        cfg.shards = vec![2];
+        cfg.files = 128;
+        cfg.clock = clock;
+        cfg
+    };
+    let run_one = |clock: ClockSpec, tag: &str|
+        -> anyhow::Result<(qos_sweep::QosSweepCell, f64)>
+    {
+        let t0 = Instant::now();
+        let mut cells = qos_sweep::run(&parity_cfg(clock, tag))?;
+        let wall = t0.elapsed().as_secs_f64();
+        Ok((cells.remove(0), wall))
+    };
+    let (wall_cell, wall_secs) = run_one(ClockSpec::Wall, "wall")?;
+    // Best-of-two for the virtual run: only its *wall* duration is
+    // noise-sensitive (the cell itself is deterministic).
+    let (virt_cell, virt_a) = run_one(ClockSpec::Virtual, "virt-a")?;
+    let (_, virt_b) = run_one(ClockSpec::Virtual, "virt-b")?;
+    let virt_secs = virt_a.min(virt_b);
+    let clock_speedup = wall_secs / virt_secs;
+
+    let mut t = Table::new(&[
+        "clock", "run wall s", "images", "ingest MB", "ckpt MB",
+        "ingest p99 ms",
+    ]);
+    for (name, c, w) in [
+        ("wall", &wall_cell, wall_secs),
+        ("virtual", &virt_cell, virt_secs),
+    ] {
+        t.row(&[
+            name.into(),
+            format!("{w:.3}"),
+            c.images.to_string(),
+            format!("{:.2}", c.ingest.mbytes),
+            format!("{:.2}", c.checkpoint.mbytes),
+            format!("{:.2}", c.ingest.p99_queue_ms),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("target: byte/count parity exact, p99 within one log2 \
+              bucket, virtual >= 50x faster ({clock_speedup:.0}x)");
+    assert_eq!(virt_cell.images, wall_cell.images, "image counts diverged");
+    assert_eq!(
+        virt_cell.ingest.completed, wall_cell.ingest.completed,
+        "ingest completion counts diverged across clocks"
+    );
+    assert_eq!(
+        virt_cell.checkpoint.completed, wall_cell.checkpoint.completed,
+        "checkpoint completion counts diverged across clocks"
+    );
+    assert_eq!(
+        virt_cell.ingest.mbytes, wall_cell.ingest.mbytes,
+        "ingest byte totals diverged across clocks"
+    );
+    assert_eq!(
+        virt_cell.checkpoint.mbytes, wall_cell.checkpoint.mbytes,
+        "checkpoint byte totals diverged across clocks"
+    );
+    let (p_lo, p_hi) = (
+        virt_cell.ingest.p99_queue_ms.min(wall_cell.ingest.p99_queue_ms),
+        virt_cell.ingest.p99_queue_ms.max(wall_cell.ingest.p99_queue_ms),
+    );
+    // Adjacent log2 buckets are 2x apart; the floor forgives
+    // sub-quarter-millisecond tails where one host stall spans
+    // several near-empty buckets.
+    assert!(
+        p_hi <= (2.05 * p_lo).max(0.25),
+        "ingest p99 diverged past one log2 bucket: wall {:.3} ms vs \
+         virtual {:.3} ms",
+        wall_cell.ingest.p99_queue_ms,
+        virt_cell.ingest.p99_queue_ms
+    );
+    assert!(
+        clock_speedup >= 50.0,
+        "virtual clock speedup {clock_speedup:.1}x below the 50x gate \
+         (wall {wall_secs:.3} s vs virtual {virt_secs:.3} s)"
+    );
+
+    // ---- 12. virtual-clock scale: a million requests, one minute ----
+    // 1M probe reads through the DRR scheduler on the SSD profile in
+    // discrete-event time.  A sliding in-flight window keeps memory
+    // bounded; the wall-time gate is what makes million-request
+    // workloads admissible in CI at all (in wall mode this workload
+    // is ~100 modelled seconds of sleeping).
+    let sim = Arc::new(StorageSim::cold_with_qos_clock(
+        workdir("million"),
+        vec![profiles::blackdog_ssd(1.0)],
+        QosConfig::default(),
+        Clock::virt(),
+    )?);
+    let eng = sim.engine();
+    let clock = sim.clock().clone();
+    let _reg = clock.enter();
+    const MILLION: u64 = 1_000_000;
+    let t0_wall = Instant::now();
+    let t0_virt = clock.now();
+    let mut inflight = std::collections::VecDeque::with_capacity(4096);
+    for _ in 0..MILLION {
+        inflight.push_back(eng.submit(IoRequest::ProbeRead {
+            device: "ssd".into(),
+            bytes: 4096,
+        })?);
+        if inflight.len() >= 4096 {
+            inflight.pop_front().expect("non-empty window").wait()?;
+        }
+    }
+    for tk in inflight {
+        tk.wait()?;
+    }
+    let wall = t0_wall.elapsed().as_secs_f64();
+    let virt = clock.now() - t0_virt;
+    let stats = eng.stats();
+    let s = stats.iter().find(|s| s.device == "ssd").expect("ssd stats");
+    assert_eq!(s.completed, MILLION, "requests lost at scale");
+
+    let mut t = Table::new(&["quantity", "value"]);
+    t.row(&["requests".into(), MILLION.to_string()]);
+    t.row(&["modelled (virtual) s".into(), format!("{virt:.1}")]);
+    t.row(&["wall s".into(), format!("{wall:.1}")]);
+    t.row(&["requests / wall s".into(),
+            format!("{:.0}", MILLION as f64 / wall)]);
+    print!("{}", t.render());
+    println!("target: 1M requests complete in < 60 s of wall time");
+    assert!(
+        wall < 60.0,
+        "million-request cell took {wall:.1} s wall (gate: 60 s)"
     );
 
     println!("\nengine acceptance: PASS");

@@ -14,7 +14,6 @@
 //! Output is one CSV/JSON row per cell.
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
@@ -22,7 +21,8 @@ use crate::config::Testbed;
 use crate::data::manifest::Sample;
 use crate::pipeline::{sharded_reader, Dataset};
 use crate::storage::{
-    ClassStats, IoClass, IoRequest, IoTicket, QosConfig, SimPath, StorageSim,
+    ClassStats, ClockSpec, IoClass, IoRequest, IoTicket, QosConfig, SimPath,
+    StorageSim,
 };
 use crate::util::json::{obj, to_string, Json};
 
@@ -58,6 +58,10 @@ pub struct QosSweepConfig {
     pub time_scale: f64,
     /// Working directory root (each cell gets a subdirectory).
     pub workdir: String,
+    /// Time source per cell.  Virtual (the default) runs each cell in
+    /// discrete-event time: identical modelled durations, no sleeping,
+    /// so the full matrix finishes orders of magnitude faster.
+    pub clock: ClockSpec,
 }
 
 impl QosSweepConfig {
@@ -77,6 +81,7 @@ impl QosSweepConfig {
             adaptive_target: 0.005,
             time_scale,
             workdir,
+            clock: ClockSpec::Virtual,
         }
     }
 
@@ -97,6 +102,7 @@ impl QosSweepConfig {
             adaptive_target: 0.005,
             time_scale,
             workdir,
+            clock: ClockSpec::Virtual,
         }
     }
 
@@ -282,10 +288,12 @@ fn run_cell(
     let dir = std::path::Path::new(&cfg.workdir)
         .join(format!("qos-sweep-{mode}-i{interval}-s{shards}"));
     let _ = std::fs::remove_dir_all(&dir);
-    let sim = Arc::new(StorageSim::cold_with_qos(
+    let clock = cfg.clock.build();
+    let sim = Arc::new(StorageSim::cold_with_qos_clock(
         dir,
         vec![device_model(cfg)?],
         qos,
+        clock.clone(),
     )?);
 
     // Fixture: the ingest corpus, written through the sim (so backing
@@ -300,6 +308,11 @@ fn run_cell(
     sim.drop_caches();
     sim.engine().reset_stats();
 
+    // Register the cell driver: virtual time advances only while this
+    // thread blocks on tickets, so submissions are instantaneous in
+    // modelled time and the cell is deterministic.
+    let _reg = clock.enter();
+
     // Measured phase: sharded ingest with a checkpoint burst every
     // `interval` batches (the paper's §V contention pattern).
     let mut ds =
@@ -311,7 +324,7 @@ fn run_cell(
     // spin submitting checkpoint bursts forever: clamp like the
     // reader clamps shards/window.
     let batch = cfg.batch.max(1);
-    let t0 = Instant::now();
+    let t0 = clock.now();
     'outer: loop {
         for _ in 0..batch {
             match ds.next() {
@@ -340,7 +353,7 @@ fn run_cell(
     // deflate images_per_sec for exactly the modes that protected
     // ingest (inverting the comparison this tool emits).  The drain
     // still completes below so the checkpoint class rows are final.
-    let elapsed = t0.elapsed().as_secs_f64();
+    let elapsed = clock.now() - t0;
     for t in ckpt_tickets {
         t.wait()?;
     }
@@ -390,6 +403,7 @@ mod tests {
             adaptive_target: 0.005,
             time_scale: 1000.0,
             workdir: dir.to_string_lossy().into_owned(),
+            clock: ClockSpec::Virtual,
         }
     }
 

@@ -23,19 +23,17 @@
 //! cell runs, listing the valid presets.
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::config::Testbed;
 use crate::data::manifest::Sample;
-use crate::metrics::Timer;
 use crate::model::ModelState;
 use crate::pipeline::{sharded_reader_hier, Dataset};
 use crate::runtime::meta::{ParamSpec, ProfileMeta};
 use crate::storage::{
-    policy, profiles, HierarchySpec, IoClass, SimPath, StorageHierarchy,
-    StorageSim, TierKind,
+    policy, profiles, ClockSpec, HierarchySpec, IoClass, SimPath,
+    StorageHierarchy, StorageSim, TierKind,
 };
 use crate::util::json::{obj, to_string, Json};
 
@@ -79,6 +77,8 @@ pub struct TierSweepConfig {
     pub time_scale: f64,
     /// Working directory root (each cell gets a subdirectory).
     pub workdir: String,
+    /// Time source per cell (virtual = discrete-event, the default).
+    pub clock: ClockSpec,
 }
 
 impl TierSweepConfig {
@@ -106,6 +106,7 @@ impl TierSweepConfig {
             ckpt_params: 64 * 1024,
             time_scale,
             workdir,
+            clock: ClockSpec::Virtual,
         }
     }
 
@@ -132,6 +133,7 @@ impl TierSweepConfig {
             ckpt_params: 16 * 1024,
             time_scale,
             workdir,
+            clock: ClockSpec::Virtual,
         }
     }
 }
@@ -343,10 +345,11 @@ fn run_cell(
         .join(format!("tier-sweep-{hierarchy}-{pol}-{workload}"));
     let _ = std::fs::remove_dir_all(&dir);
     let tb = Testbed::paper(cfg.time_scale);
-    let sim = Arc::new(StorageSim::cold_with_qos(
+    let sim = Arc::new(StorageSim::cold_with_qos_clock(
         dir,
         tb.devices,
         crate::storage::QosConfig::default(),
+        cfg.clock.build(),
     )?);
     let tiers = spec.tiers.len();
     let bottom = bottom_device_tier(&spec);
@@ -432,6 +435,10 @@ fn run_hot(
     cell: &mut TierSweepCell,
 ) -> Result<()> {
     let bottom_dev = hier.device_of(bottom)?;
+    // Register the driver with the sim's clock for the whole cell:
+    // virtual time advances only while we block on tickets.
+    let clock = sim.clock().clone();
+    let _reg = clock.enter();
     let files = cfg.files.max(2);
     let hot_n = cfg.hot_files.clamp(1, files - 1);
     // Fixture: corpus homed on the bottom tier.
@@ -488,7 +495,7 @@ fn run_hot(
     }
     sim.engine().reset_stats();
 
-    let t0 = Instant::now();
+    let t0 = clock.now();
     let mut ds = sharded_reader_hier(
         measured,
         Arc::clone(hier),
@@ -501,7 +508,7 @@ fn run_hot(
         n += 1;
     }
     cell.ops = n;
-    cell.elapsed_secs = t0.elapsed().as_secs_f64();
+    cell.elapsed_secs = clock.now() - t0;
     Ok(())
 }
 
@@ -536,14 +543,17 @@ fn run_ckpt(
     saver.set_route(Arc::clone(hier));
     saver.sync_on_save = false;
     sim.engine().reset_stats();
+    // Save pauses are clock durations (wall or virtual alike).
+    let clock = sim.clock().clone();
+    let _reg = clock.enter();
     let mut durations = Vec::with_capacity(cfg.ckpt_saves);
-    let total = Timer::start();
+    let total0 = clock.now();
     for s in 0..cfg.ckpt_saves.max(1) as u64 {
-        let t = Timer::start();
+        let t0 = clock.now();
         saver.save(&state, (s + 1) * 10)?;
-        durations.push(t.secs());
+        durations.push(clock.now() - t0);
     }
-    cell.save_total_secs = total.secs();
+    cell.save_total_secs = clock.now() - total0;
     cell.elapsed_secs = cell.save_total_secs;
     cell.ops = durations.len() as u64;
     cell.save_p50_secs = crate::metrics::median(&mut durations);
@@ -582,6 +592,7 @@ mod tests {
             // the access stream — the property the freq test gates.
             time_scale: 8.0,
             workdir: dir.to_string_lossy().into_owned(),
+            clock: ClockSpec::Virtual,
         }
     }
 

@@ -14,14 +14,16 @@
 //!                  [--interval 5] [--iterations 20]
 //! dlio qos-sweep   [--smoke] [--modes fifo,static,adaptive]
 //!                  [--intervals 0,2,8] [--shards 1,2,4] [--format csv|json]
+//!                  [--clock wall|virtual]
 //! dlio tier-sweep  [--smoke] [--hierarchies blackdog-bb,..]
 //!                  [--policies noop,lru,freq] [--workloads hot,ckpt]
 //!                  [--tier0-cap-kb N] [--format csv|json]
+//!                  [--clock wall|virtual]
 //! dlio trace       [--device D] [--prefetch 0|1] ... (dstat CSV to stdout)
 //! dlio trace-record [microbench|miniapp] [--smoke] [--out FILE]
 //! dlio trace-replay <file> [--profile P] [--qos fifo|static|adaptive]
 //!                  [--sweep fifo,static,..] [--speed X] [--open-loop]
-//!                  [--json|--csv]
+//!                  [--clock wall|virtual] [--json|--csv]
 //! dlio trace-compact <file> [--epochs N] [--out FILE]
 //! ```
 //!
@@ -46,7 +48,7 @@ use dlio::data::CorpusSpec;
 use dlio::metrics::Table;
 use dlio::runtime::Runtime;
 use dlio::storage::ior;
-use dlio::storage::{profiles, IoClass, QosConfig};
+use dlio::storage::{profiles, ClockSpec, IoClass, QosConfig};
 use dlio::trace::{replay, Dstat, ReplayConfig, ReplayMode, Trace};
 
 fn main() {
@@ -83,6 +85,14 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
     }
 }
 
+/// `--clock wall|virtual`, falling back to the command's default.
+fn clock_arg(args: &Args, default: ClockSpec) -> Result<ClockSpec> {
+    match args.get("clock") {
+        None => Ok(default),
+        Some(s) => ClockSpec::parse(s),
+    }
+}
+
 const HELP: &str = "\
 dlio — Characterizing Deep-Learning I/O Workloads (PDSW-DISCS'18) repro
 
@@ -114,6 +124,10 @@ Engine QoS: --fifo (single-queue baseline), --adaptive-qos MS|auto
 wait; `auto` = per-profile targets), --ckpt-cap-mbs N / --drain-cap-mbs
 N (hard token-bucket caps on the Checkpoint / Drain classes),
 --preempt-chunks N, --engine-stats (per-device, per-class table).
+Time source: --clock wall|virtual — virtual runs the engine in
+discrete-event time (no real sleeps; sweeps finish orders of magnitude
+faster with identical byte totals).  Default: virtual for qos-sweep /
+tier-sweep / trace-replay --sweep, wall for plain trace-replay.
 Artifacts: run `make artifacts` first or set DLIO_ARTIFACTS.
 ";
 
@@ -452,6 +466,7 @@ fn cmd_qos_sweep(args: &Args) -> Result<()> {
         "adaptive-target-ms",
         cfg.adaptive_target * 1e3,
     )? * 1e-3;
+    cfg.clock = clock_arg(args, cfg.clock)?;
     // Validate the output format *before* running the matrix: a typo
     // must fail instantly, not after minutes of sweep cells.
     let format = args.get_or("format", "csv");
@@ -510,6 +525,7 @@ fn cmd_tier_sweep(args: &Args) -> Result<()> {
             as u64
             * 1024;
     cfg.ckpt_saves = args.get_usize("ckpt-saves", cfg.ckpt_saves)?;
+    cfg.clock = clock_arg(args, cfg.clock)?;
     // Validate the output format *before* running the matrix.
     let format = args.get_or("format", "csv");
     if format != "csv" && format != "json" {
@@ -664,11 +680,24 @@ fn cmd_trace_replay(args: &Args) -> Result<()> {
             Some(ts)
         }
     };
+    // Plain replays default to wall time (a live re-run you can watch
+    // with `dlio trace`); `--sweep` matrices default to virtual —
+    // every cell is pure simulation, so discrete-event time gives the
+    // same rows orders of magnitude faster.
+    let clock = clock_arg(
+        args,
+        if args.get_list("sweep").is_some() {
+            ClockSpec::Virtual
+        } else {
+            ClockSpec::Wall
+        },
+    )?;
     let cfg = ReplayConfig {
         mode,
         qos,
         profile: args.get("profile").map(str::to_string),
         time_scale,
+        clock,
     };
     // `--sweep m1,m2,..`: replay-driven what-if matrix — ONE recorded
     // trace across the qos-sweep scheduler modes, one diff row per

@@ -1,0 +1,879 @@
+//! The engine's time seam (DESIGN.md §10): one `Clock` trait, two
+//! implementations.
+//!
+//! * [`WallClock`] — today's paced-sleep behaviour: modelled service
+//!   time is spent as real `thread::sleep` (with a sub-millisecond
+//!   spin so multi-GB/s devices aren't halved by timer slack).  Kept
+//!   for pacing-sensitive tests and trace recording, where wall-time
+//!   interleavings are the point.
+//! * [`VirtualClock`] — a discrete-event scheduler.  Threads never
+//!   sleep: a "sleep" pushes a timer onto a global event heap and
+//!   parks the thread; when **every registered thread is parked**, the
+//!   earliest timer fires, virtual-now jumps straight to its deadline,
+//!   and the owning thread wakes.  Token-bucket refills, latency
+//!   phases, DRR throttle waits and migrator wakeups all become heap
+//!   events, so a sweep cell that models minutes of device time runs
+//!   in milliseconds of wall time while producing the *same* byte and
+//!   class totals.
+//!
+//! ## Registration
+//!
+//! Virtual time may only advance when no registered thread can still
+//! make progress at the current instant.  Every thread that
+//! participates in the simulation — engine workers, stream writers,
+//! copy readers, the hierarchy migrator, and driver threads that want
+//! deterministic timestamps — registers via [`Clock::enter`].  A
+//! registered thread must block **only** through the clock
+//! ([`Clock::sleep`], [`SimCondvar`]); blocking on a foreign primitive
+//! (e.g. `JoinHandle::join`) while registered would stall virtual time
+//! forever, so joiners first drop out with [`Clock::suspend`].
+//! Unregistered threads may use the same primitives freely; the clock
+//! simply does not wait for them before advancing.
+//!
+//! ## What "virtual now" means
+//!
+//! [`Clock::now`] is seconds since an arbitrary epoch: process start
+//! for [`WallClock`], zero for [`VirtualClock`].  All engine
+//! timestamps (`EngineEvent::submit_secs`, queue/service durations,
+//! histogram samples, trace records) are differences of `now()`
+//! readings, so they carry identical meaning in both modes — in
+//! virtual mode they are *exactly* the modelled durations, free of
+//! host-scheduler noise.
+
+use std::cell::RefCell;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Process-wide wall epoch: all `WallClock` instances agree on `now`.
+fn wall_epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+// ---------------------------------------------------------------------------
+// Parker
+// ---------------------------------------------------------------------------
+
+/// Per-thread park/unpark cell.  One per OS thread (thread-local);
+/// clock implementations block threads by parking them here and wake
+/// them by setting the flag.
+pub struct Parker {
+    lock: Mutex<bool>, // notified flag
+    cv: Condvar,
+    /// Whether this parker is currently counted in a `VirtualClock`'s
+    /// `parked` tally.  Mutated only under that clock's state lock, so
+    /// the waker (who decrements the tally when it sets the flag) and
+    /// the wakee can never double-count.
+    counted: AtomicBool,
+}
+
+impl Parker {
+    fn new() -> Parker {
+        Parker {
+            lock: Mutex::new(false),
+            cv: Condvar::new(),
+            counted: AtomicBool::new(false),
+        }
+    }
+
+    /// The calling thread's parker.
+    pub(crate) fn current() -> Arc<Parker> {
+        thread_local! {
+            static PARKER: Arc<Parker> = Arc::new(Parker::new());
+        }
+        PARKER.with(Arc::clone)
+    }
+
+    /// Clear any stale notification before arming a new wait.
+    fn prepare(&self) {
+        *self.lock.lock().unwrap() = false;
+    }
+
+    /// Block until notified (consumes the notification).
+    fn block(&self) {
+        let mut g = self.lock.lock().unwrap();
+        while !*g {
+            g = self.cv.wait(g).unwrap();
+        }
+        *g = false;
+    }
+
+    /// Block until notified or `deadline` (wall time).  Returns `true`
+    /// if the wait timed out.
+    fn block_until(&self, deadline: Option<Instant>) -> bool {
+        let mut g = self.lock.lock().unwrap();
+        loop {
+            if *g {
+                *g = false;
+                return false;
+            }
+            match deadline {
+                None => g = self.cv.wait(g).unwrap(),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return true;
+                    }
+                    g = self.cv.wait_timeout(g, d - now).unwrap().0;
+                }
+            }
+        }
+    }
+
+    fn set_notified(&self) {
+        *self.lock.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The trait
+// ---------------------------------------------------------------------------
+
+/// The engine's time source.  Object-safe core; ergonomic helpers live
+/// on the [`Clock`] handle and [`SimCondvar`].
+pub trait TimeSource: Send + Sync {
+    /// Seconds since this clock's epoch.
+    fn now(&self) -> f64;
+    /// Spend `dur` of modelled time (really, for wall; as a heap event
+    /// for virtual).
+    fn sleep(&self, dur: Duration);
+    /// Whether this is a discrete-event clock.
+    fn is_virtual(&self) -> bool;
+    /// Count the calling thread as a simulation participant.
+    fn register(&self);
+    /// Undo one [`register`](Self::register).
+    fn deregister(&self);
+    /// Whether the calling thread is currently registered here.
+    fn is_registered(&self) -> bool;
+    /// Park the calling thread until [`unpark`](Self::unpark)ed or the
+    /// (clock-time) `deadline` passes.  Returns `true` on timeout.
+    fn park(&self, parker: &Arc<Parker>, deadline: Option<f64>) -> bool;
+    /// Wake a parked thread.
+    fn unpark(&self, parker: &Arc<Parker>);
+}
+
+// ---------------------------------------------------------------------------
+// WallClock
+// ---------------------------------------------------------------------------
+
+/// Real time: sleeps sleep, waits wait.  Registration is a no-op —
+/// the host scheduler decides who runs.
+pub struct WallClock;
+
+impl TimeSource for WallClock {
+    fn now(&self) -> f64 {
+        wall_epoch().elapsed().as_secs_f64()
+    }
+
+    fn sleep(&self, dur: Duration) {
+        let secs = dur.as_secs_f64();
+        if secs <= 0.0 {
+            return;
+        }
+        if secs >= 0.001 {
+            std::thread::sleep(dur);
+        } else {
+            // thread::sleep overshoots sub-ms requests by ~0.1 ms
+            // (timer slack), which would halve multi-GB/s devices;
+            // spin-wait instead.
+            let until = Instant::now() + dur;
+            while Instant::now() < until {
+                std::hint::spin_loop();
+            }
+        }
+    }
+
+    fn is_virtual(&self) -> bool {
+        false
+    }
+
+    fn register(&self) {}
+    fn deregister(&self) {}
+    fn is_registered(&self) -> bool {
+        false
+    }
+
+    fn park(&self, parker: &Arc<Parker>, deadline: Option<f64>) -> bool {
+        let wall = deadline.map(|d| {
+            Instant::now() + Duration::from_secs_f64((d - self.now()).max(0.0))
+        });
+        parker.block_until(wall)
+    }
+
+    fn unpark(&self, parker: &Arc<Parker>) {
+        parker.set_notified();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// VirtualClock
+// ---------------------------------------------------------------------------
+
+/// A pending timer on the event heap.  Min-ordered by
+/// `(deadline, seq)`; `seq` breaks ties FIFO so same-instant events
+/// fire in arming order (determinism).
+struct VTimer {
+    deadline: f64,
+    seq: u64,
+    parker: Arc<Parker>,
+    cancelled: Arc<AtomicBool>,
+}
+
+impl PartialEq for VTimer {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for VTimer {}
+impl PartialOrd for VTimer {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for VTimer {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.deadline
+            .total_cmp(&other.deadline)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+struct VState {
+    now: f64,
+    /// Threads participating in the simulation.
+    registered: usize,
+    /// Registered threads currently parked in the clock.
+    parked: usize,
+    seq: u64,
+    timers: BinaryHeap<Reverse<VTimer>>,
+}
+
+/// Discrete-event time.  See the module docs for the advancement rule;
+/// the implementation invariant is that `parked` counts exactly the
+/// registered threads whose parker has `counted == true`, and both are
+/// only mutated under the state lock (the *waker* clears the count
+/// when it delivers a wakeup, so a woken-but-not-yet-running thread is
+/// already "runnable" for advancement purposes).
+pub struct VirtualClock {
+    uid: u64,
+    state: Mutex<VState>,
+}
+
+thread_local! {
+    /// (clock uid, registration depth) for the clocks this thread has
+    /// entered.  Tiny: a thread rarely touches more than one clock.
+    static REGISTRY: RefCell<Vec<(u64, u32)>> = const { RefCell::new(Vec::new()) };
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        static NEXT_UID: AtomicU64 = AtomicU64::new(1);
+        VirtualClock {
+            uid: NEXT_UID.fetch_add(1, Ordering::Relaxed),
+            state: Mutex::new(VState {
+                now: 0.0,
+                registered: 0,
+                parked: 0,
+                seq: 0,
+                timers: BinaryHeap::new(),
+            }),
+        }
+    }
+
+    fn registered_here(&self) -> bool {
+        REGISTRY.with(|r| {
+            r.borrow().iter().any(|&(uid, d)| uid == self.uid && d > 0)
+        })
+    }
+
+    /// If every registered thread is parked (or nothing is registered),
+    /// jump `now` to the earliest live timer and fire every timer due
+    /// at that instant.  Fires at most one deadline batch: the woken
+    /// thread(s) get to run — and possibly schedule new events — before
+    /// time moves again.
+    fn advance_locked(&self, st: &mut VState) {
+        if st.registered > 0 && st.parked < st.registered {
+            return;
+        }
+        // Shed cancelled heads, then read the next live deadline.
+        let deadline = loop {
+            match st.timers.peek() {
+                None => return,
+                Some(Reverse(t)) if t.cancelled.load(Ordering::Relaxed) => {
+                    st.timers.pop();
+                }
+                Some(Reverse(t)) => break t.deadline,
+            }
+        };
+        if deadline > st.now {
+            st.now = deadline;
+        }
+        while let Some(Reverse(head)) = st.timers.peek() {
+            if head.cancelled.load(Ordering::Relaxed) {
+                st.timers.pop();
+                continue;
+            }
+            if head.deadline > st.now {
+                break;
+            }
+            let t = st.timers.pop().unwrap().0;
+            if t.parker.counted.swap(false, Ordering::AcqRel) {
+                st.parked -= 1;
+            }
+            t.parker.set_notified();
+        }
+    }
+
+    fn arm_locked(
+        &self,
+        st: &mut VState,
+        deadline: f64,
+        parker: &Arc<Parker>,
+    ) -> Arc<AtomicBool> {
+        let cancelled = Arc::new(AtomicBool::new(false));
+        st.seq += 1;
+        st.timers.push(Reverse(VTimer {
+            deadline,
+            seq: st.seq,
+            parker: Arc::clone(parker),
+            cancelled: Arc::clone(&cancelled),
+        }));
+        cancelled
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        VirtualClock::new()
+    }
+}
+
+impl TimeSource for VirtualClock {
+    fn now(&self) -> f64 {
+        self.state.lock().unwrap().now
+    }
+
+    fn sleep(&self, dur: Duration) {
+        let secs = dur.as_secs_f64();
+        if secs <= 0.0 {
+            return;
+        }
+        let parker = Parker::current();
+        let registered = self.registered_here();
+        let deadline;
+        let cancelled;
+        {
+            let mut st = self.state.lock().unwrap();
+            deadline = st.now + secs;
+            cancelled = self.arm_locked(&mut st, deadline, &parker);
+            parker.prepare();
+            if registered && !parker.counted.swap(true, Ordering::AcqRel) {
+                st.parked += 1;
+            }
+            self.advance_locked(&mut st);
+        }
+        loop {
+            parker.block();
+            let mut st = self.state.lock().unwrap();
+            if st.now >= deadline - 1e-9 {
+                if parker.counted.swap(false, Ordering::AcqRel) {
+                    st.parked -= 1;
+                }
+                cancelled.store(true, Ordering::Relaxed);
+                return;
+            }
+            // Spurious wake (a stale unpark from an earlier wait):
+            // re-park until the timer actually fires.
+            parker.prepare();
+            if registered && !parker.counted.swap(true, Ordering::AcqRel) {
+                st.parked += 1;
+            }
+            self.advance_locked(&mut st);
+        }
+    }
+
+    fn is_virtual(&self) -> bool {
+        true
+    }
+
+    fn register(&self) {
+        let first_entry = REGISTRY.with(|r| {
+            let mut reg = r.borrow_mut();
+            if let Some(e) = reg.iter_mut().find(|e| e.0 == self.uid) {
+                e.1 += 1;
+                e.1 == 1
+            } else {
+                reg.push((self.uid, 1));
+                true
+            }
+        });
+        if first_entry {
+            self.state.lock().unwrap().registered += 1;
+        }
+    }
+
+    fn deregister(&self) {
+        let last_exit = REGISTRY.with(|r| {
+            let mut reg = r.borrow_mut();
+            let e = reg
+                .iter_mut()
+                .find(|e| e.0 == self.uid)
+                .expect("deregister without register");
+            assert!(e.1 > 0, "deregister without register");
+            e.1 -= 1;
+            e.1 == 0
+        });
+        if last_exit {
+            let mut st = self.state.lock().unwrap();
+            st.registered -= 1;
+            // One fewer thread to wait for: time may now advance.
+            self.advance_locked(&mut st);
+        }
+    }
+
+    fn is_registered(&self) -> bool {
+        self.registered_here()
+    }
+
+    fn park(&self, parker: &Arc<Parker>, deadline: Option<f64>) -> bool {
+        // NB: no `prepare()` here — callers (SimCondvar) arm the
+        // parker *before* enlisting, so a notify that lands between
+        // enlist and park is not lost.
+        let registered = self.registered_here();
+        let cancelled;
+        {
+            let mut st = self.state.lock().unwrap();
+            if let Some(dl) = deadline {
+                if st.now >= dl {
+                    return true;
+                }
+            }
+            cancelled = deadline.map(|dl| self.arm_locked(&mut st, dl, parker));
+            if registered && !parker.counted.swap(true, Ordering::AcqRel) {
+                st.parked += 1;
+            }
+            self.advance_locked(&mut st);
+        }
+        parker.block();
+        let mut st = self.state.lock().unwrap();
+        if parker.counted.swap(false, Ordering::AcqRel) {
+            st.parked -= 1;
+        }
+        if let Some(c) = &cancelled {
+            c.store(true, Ordering::Relaxed);
+        }
+        deadline.is_some_and(|dl| st.now >= dl - 1e-9)
+    }
+
+    fn unpark(&self, parker: &Arc<Parker>) {
+        let mut st = self.state.lock().unwrap();
+        if parker.counted.swap(false, Ordering::AcqRel) {
+            st.parked -= 1;
+        }
+        drop(st);
+        parker.set_notified();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Clock handle + guards
+// ---------------------------------------------------------------------------
+
+/// Cheap-to-clone handle to a [`TimeSource`]; every component of one
+/// simulation (devices, engine, hierarchy, drivers) shares one.
+#[derive(Clone)]
+pub struct Clock(Arc<dyn TimeSource>);
+
+impl Clock {
+    /// Real time (shared process-wide epoch).
+    pub fn wall() -> Clock {
+        static SHARED: OnceLock<Arc<WallClock>> = OnceLock::new();
+        Clock(SHARED.get_or_init(|| Arc::new(WallClock)).clone())
+    }
+
+    /// A fresh discrete-event clock starting at `now == 0`.
+    pub fn virt() -> Clock {
+        Clock(Arc::new(VirtualClock::new()))
+    }
+
+    pub fn now(&self) -> f64 {
+        self.0.now()
+    }
+
+    pub fn sleep(&self, dur: Duration) {
+        self.0.sleep(dur)
+    }
+
+    pub fn sleep_secs(&self, secs: f64) {
+        if secs > 0.0 {
+            // Floor at one nanosecond: Duration rounds sub-ns requests
+            // to zero, and a zero-length virtual sleep would never
+            // advance the clock (pacing loops retrying a residual
+            // sub-ns wait would livelock).
+            self.0.sleep(Duration::from_secs_f64(secs.max(1e-9)));
+        }
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        self.0.is_virtual()
+    }
+
+    /// Two handles to the same underlying source?
+    pub fn same(&self, other: &Clock) -> bool {
+        Arc::ptr_eq(&self.0, &other.0)
+    }
+
+    /// Register the calling thread as a simulation participant until
+    /// the guard drops.  See the module docs for the contract.
+    pub fn enter(&self) -> ClockGuard {
+        self.0.register();
+        ClockGuard { clock: self.clone(), _not_send: PhantomData }
+    }
+
+    /// Temporarily drop the calling thread's registration (if any) —
+    /// for blocking on foreign primitives like `JoinHandle::join`
+    /// without stalling virtual time.  Re-registers on drop.
+    pub fn suspend(&self) -> SuspendGuard {
+        let was_registered = self.0.is_registered();
+        if was_registered {
+            self.0.deregister();
+        }
+        SuspendGuard {
+            clock: self.clone(),
+            re_register: was_registered,
+            _not_send: PhantomData,
+        }
+    }
+
+    fn park(&self, parker: &Arc<Parker>, deadline: Option<f64>) -> bool {
+        self.0.park(parker, deadline)
+    }
+
+    fn unpark(&self, parker: &Arc<Parker>) {
+        self.0.unpark(parker)
+    }
+}
+
+impl std::fmt::Debug for Clock {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Clock({})",
+            if self.is_virtual() { "virtual" } else { "wall" }
+        )
+    }
+}
+
+/// Registration guard from [`Clock::enter`].
+pub struct ClockGuard {
+    clock: Clock,
+    _not_send: PhantomData<*const ()>,
+}
+
+impl Drop for ClockGuard {
+    fn drop(&mut self) {
+        self.clock.0.deregister();
+    }
+}
+
+/// Guard from [`Clock::suspend`].
+pub struct SuspendGuard {
+    clock: Clock,
+    re_register: bool,
+    _not_send: PhantomData<*const ()>,
+}
+
+impl Drop for SuspendGuard {
+    fn drop(&mut self) {
+        if self.re_register {
+            self.clock.0.register();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SimCondvar
+// ---------------------------------------------------------------------------
+
+/// A condition variable that blocks through the [`Clock`], so waits
+/// are real under [`WallClock`] and heap events under
+/// [`VirtualClock`].  Same contract as `std::sync::Condvar`: callers
+/// loop on a predicate protected by the external mutex, and notifiers
+/// mutate the predicate under that mutex before notifying.  Spurious
+/// wakeups are possible.
+pub struct SimCondvar {
+    waiters: Mutex<VecDeque<Arc<Parker>>>,
+}
+
+impl SimCondvar {
+    pub fn new() -> SimCondvar {
+        SimCondvar { waiters: Mutex::new(VecDeque::new()) }
+    }
+
+    /// Atomically release `guard` and wait for a notification.
+    pub fn wait<'a, T>(
+        &self,
+        clock: &Clock,
+        mutex: &'a Mutex<T>,
+        guard: MutexGuard<'a, T>,
+    ) -> MutexGuard<'a, T> {
+        let parker = Parker::current();
+        parker.prepare();
+        self.waiters.lock().unwrap().push_back(Arc::clone(&parker));
+        drop(guard);
+        clock.park(&parker, None);
+        self.unlist(&parker);
+        mutex.lock().unwrap()
+    }
+
+    /// Like [`wait`](Self::wait) with a timeout; returns the reacquired
+    /// guard and whether the wait timed out.
+    pub fn wait_timeout<'a, T>(
+        &self,
+        clock: &Clock,
+        mutex: &'a Mutex<T>,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> (MutexGuard<'a, T>, bool) {
+        let parker = Parker::current();
+        parker.prepare();
+        self.waiters.lock().unwrap().push_back(Arc::clone(&parker));
+        let deadline = clock.now() + dur.as_secs_f64().max(0.0);
+        drop(guard);
+        let timed_out = clock.park(&parker, Some(deadline));
+        let was_listed = self.unlist(&parker);
+        if timed_out && !was_listed {
+            // A notifier popped us concurrently with our timeout: that
+            // notification would otherwise evaporate.  Forward it.
+            self.notify_one(clock);
+        }
+        (mutex.lock().unwrap(), timed_out)
+    }
+
+    fn unlist(&self, parker: &Arc<Parker>) -> bool {
+        let mut w = self.waiters.lock().unwrap();
+        if let Some(pos) = w.iter().position(|p| Arc::ptr_eq(p, parker)) {
+            w.remove(pos);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn notify_one(&self, clock: &Clock) {
+        let head = self.waiters.lock().unwrap().pop_front();
+        if let Some(p) = head {
+            clock.unpark(&p);
+        }
+    }
+
+    pub fn notify_all(&self, clock: &Clock) {
+        let all: Vec<_> =
+            self.waiters.lock().unwrap().drain(..).collect();
+        for p in all {
+            clock.unpark(&p);
+        }
+    }
+}
+
+impl Default for SimCondvar {
+    fn default() -> Self {
+        SimCondvar::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ClockSpec (CLI surface)
+// ---------------------------------------------------------------------------
+
+/// Which clock a driver should build — the `--clock wall|virtual`
+/// flag, kept as a plain enum so configs stay `Clone + Debug`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClockSpec {
+    Wall,
+    Virtual,
+}
+
+impl ClockSpec {
+    pub fn parse(s: &str) -> anyhow::Result<ClockSpec> {
+        match s {
+            "wall" => Ok(ClockSpec::Wall),
+            "virtual" => Ok(ClockSpec::Virtual),
+            other => anyhow::bail!(
+                "unknown clock '{other}' (expected wall|virtual)"
+            ),
+        }
+    }
+
+    pub fn build(self) -> Clock {
+        match self {
+            ClockSpec::Wall => Clock::wall(),
+            ClockSpec::Virtual => Clock::virt(),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ClockSpec::Wall => "wall",
+            ClockSpec::Virtual => "virtual",
+        }
+    }
+}
+
+impl std::fmt::Display for ClockSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_sleep_is_exact_and_free() {
+        let clock = Clock::virt();
+        let wall0 = Instant::now();
+        let t0 = clock.now();
+        clock.sleep(Duration::from_secs_f64(123.456));
+        let dt = clock.now() - t0;
+        assert!((dt - 123.456).abs() < 1e-9, "virtual sleep drifted: {dt}");
+        assert!(
+            wall0.elapsed().as_secs_f64() < 1.0,
+            "virtual sleep consumed wall time"
+        );
+    }
+
+    #[test]
+    fn registered_sleepers_overlap() {
+        // Two registered threads sleeping 1 s each: virtual time ends
+        // at 1 s (parallel), not 2 s (serial).  Register-then-barrier:
+        // a registered thread stuck at the barrier blocks advancement,
+        // so neither timer can fire before both are armed (without it,
+        // an early sleeper's timer fires while the late thread is
+        // still spawning and the sleeps serialize).
+        let clock = Clock::virt();
+        let barrier = Arc::new(std::sync::Barrier::new(2));
+        let hs: Vec<_> = (0..2)
+            .map(|_| {
+                let c = clock.clone();
+                let b = Arc::clone(&barrier);
+                std::thread::spawn(move || {
+                    let _g = c.enter();
+                    b.wait();
+                    c.sleep(Duration::from_secs(1));
+                    c.now()
+                })
+            })
+            .collect();
+        for h in hs {
+            let end = h.join().unwrap();
+            assert!((end - 1.0).abs() < 1e-9, "woke at {end}");
+        }
+        assert!((clock.now() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sequential_deadlines_fire_in_order() {
+        // Distinct deadlines across threads fire earliest-first.
+        // Register-then-barrier so all three timers are armed before
+        // the first can fire (see registered_sleepers_overlap).
+        let clock = Clock::virt();
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let barrier = Arc::new(std::sync::Barrier::new(3));
+        let hs: Vec<_> = [0.3, 0.1, 0.2]
+            .iter()
+            .map(|&d| {
+                let c = clock.clone();
+                let order = Arc::clone(&order);
+                let b = Arc::clone(&barrier);
+                std::thread::spawn(move || {
+                    let _g = c.enter();
+                    b.wait();
+                    c.sleep(Duration::from_secs_f64(d));
+                    order.lock().unwrap().push(d);
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(*order.lock().unwrap(), vec![0.1, 0.2, 0.3]);
+    }
+
+    #[test]
+    fn simcondvar_delivers_across_clock() {
+        for clock in [Clock::wall(), Clock::virt()] {
+            let slot: Arc<(Mutex<Option<u32>>, SimCondvar)> =
+                Arc::new((Mutex::new(None), SimCondvar::new()));
+            let producer = {
+                let slot = Arc::clone(&slot);
+                let c = clock.clone();
+                std::thread::spawn(move || {
+                    let _g = c.enter();
+                    c.sleep(Duration::from_millis(5));
+                    *slot.0.lock().unwrap() = Some(7);
+                    slot.1.notify_one(&c);
+                })
+            };
+            let mut g = slot.0.lock().unwrap();
+            while g.is_none() {
+                g = slot.1.wait(&clock, &slot.0, g);
+            }
+            assert_eq!(*g, Some(7));
+            drop(g);
+            producer.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn wait_timeout_expires_at_virtual_deadline() {
+        let clock = Clock::virt();
+        let _g = clock.enter();
+        let m = Mutex::new(());
+        let cv = SimCondvar::new();
+        let t0 = clock.now();
+        let (guard, timed_out) = cv.wait_timeout(
+            &clock,
+            &m,
+            m.lock().unwrap(),
+            Duration::from_secs_f64(2.5),
+        );
+        drop(guard);
+        assert!(timed_out);
+        assert!((clock.now() - t0 - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn suspend_lets_time_advance_past_joiner() {
+        // A registered thread that joins another must suspend, or the
+        // sleeper could never fire.  With suspend(), this completes.
+        let clock = Clock::virt();
+        let _g = clock.enter();
+        let sleeper = {
+            let c = clock.clone();
+            std::thread::spawn(move || {
+                let _g = c.enter();
+                c.sleep(Duration::from_secs(5));
+            })
+        };
+        {
+            let _s = clock.suspend();
+            sleeper.join().unwrap();
+        }
+        assert!((clock.now() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clock_spec_parses() {
+        assert_eq!(ClockSpec::parse("wall").unwrap(), ClockSpec::Wall);
+        assert_eq!(ClockSpec::parse("virtual").unwrap(), ClockSpec::Virtual);
+        assert!(ClockSpec::parse("nope").is_err());
+        assert_eq!(ClockSpec::Virtual.as_str(), "virtual");
+    }
+}

@@ -24,8 +24,10 @@
 //! modelled device.  All byte grants flow through an observer hook,
 //! which is how the dstat-style tracer (Figs. 8/10) sees traffic.
 
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::clock::{Clock, SimCondvar};
 
 /// Transfer direction, for accounting and tracing.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -107,41 +109,45 @@ impl DeviceModel {
 
 /// Demand-refilled token bucket enforcing an aggregate byte rate.
 ///
-/// No background thread: `take()` refills from elapsed wall time, then
-/// either consumes or sleeps until enough tokens accrue.  Multiple
-/// waiters are served in mutex order, which approximates the fair
-/// sharing of a device's bandwidth between concurrent streams.
+/// No background thread: `take()` refills from elapsed *clock* time
+/// (wall or virtual), then either consumes or sleeps on the clock
+/// until enough tokens accrue.  Multiple waiters are served in mutex
+/// order, which approximates the fair sharing of a device's bandwidth
+/// between concurrent streams.
 pub struct TokenBucket {
     state: Mutex<BucketState>,
     rate: f64, // tokens (bytes) per second
     burst: f64,
+    clock: Clock,
 }
 
 struct BucketState {
     tokens: f64,
-    last: Instant,
+    /// Clock reading of the last refill, seconds.
+    last: f64,
 }
 
 impl TokenBucket {
-    pub fn new(rate: f64) -> Self {
+    pub fn new(rate: f64, clock: Clock) -> Self {
         // Allow ~2 ms of burst (clamped to [64 KB, 1 MB]): enough to
         // smooth scheduler jitter, far too little for idle pauses to
         // bank meaningful credit — a multi-MB probe must not ride
         // through on burst tokens even on multi-GB/s scaled devices.
         let burst = (rate * 0.002).clamp(64.0 * 1024.0, 1024.0 * 1024.0);
-        Self::with_burst(rate, burst)
+        Self::with_burst(rate, burst, clock)
     }
 
     /// A bucket with an explicit burst capacity in bytes (the QoS
     /// per-class rate caps configure their own burst instead of the
     /// device default above).
-    pub fn with_burst(rate: f64, burst: f64) -> Self {
+    pub fn with_burst(rate: f64, burst: f64, clock: Clock) -> Self {
         assert!(rate > 0.0, "rate must be positive");
         let burst = burst.max(1.0);
         TokenBucket {
-            state: Mutex::new(BucketState { tokens: burst, last: Instant::now() }),
+            state: Mutex::new(BucketState { tokens: burst, last: clock.now() }),
             rate,
             burst,
+            clock,
         }
     }
 
@@ -150,8 +156,8 @@ impl TokenBucket {
     }
 
     fn refill(&self, st: &mut BucketState) {
-        let now = Instant::now();
-        let dt = now.duration_since(st.last).as_secs_f64();
+        let now = self.clock.now();
+        let dt = (now - st.last).max(0.0);
         st.last = now;
         st.tokens = (st.tokens + dt * self.rate).min(self.burst);
     }
@@ -232,10 +238,7 @@ impl TokenBucket {
             let wait;
             {
                 let mut st = self.state.lock().unwrap();
-                let now = Instant::now();
-                let dt = now.duration_since(st.last).as_secs_f64();
-                st.tokens = (st.tokens + dt * self.rate).min(self.burst);
-                st.last = now;
+                self.refill(&mut st);
                 if st.tokens >= need {
                     st.tokens -= need;
                     return;
@@ -245,21 +248,17 @@ impl TokenBucket {
                 st.tokens = 0.0;
                 wait = need / self.rate;
             }
-            // Cap individual sleeps so concurrent takers interleave.
-            let wait = wait.min(0.05);
-            if wait >= 0.001 {
-                std::thread::sleep(Duration::from_secs_f64(wait));
-            } else if wait > 0.0 {
-                // thread::sleep overshoots sub-ms requests by ~0.1 ms
-                // (timer slack), which would halve multi-GB/s devices;
-                // spin-wait instead.
-                let until = Instant::now()
-                    + Duration::from_secs_f64(wait);
-                while Instant::now() < until {
-                    std::hint::spin_loop();
-                }
-            }
+            // In wall mode, cap individual sleeps so concurrent takers
+            // interleave; a virtual sleep is exact and free, so one
+            // event covers the whole wait.
+            let wait = if self.clock.is_virtual() { wait } else { wait.min(0.05) };
+            self.clock.sleep_secs(wait);
         }
+    }
+
+    /// The clock this bucket refills against.
+    pub fn clock(&self) -> &Clock {
+        &self.clock
     }
 }
 
@@ -269,7 +268,7 @@ impl TokenBucket {
 
 struct ChannelGate {
     lock: Mutex<GateState>,
-    cv: Condvar,
+    cv: SimCondvar,
 }
 
 struct GateState {
@@ -292,6 +291,7 @@ pub struct Device {
     write_bucket: TokenBucket,
     gate: ChannelGate,
     observer: Arc<dyn IoObserver>,
+    clock: Clock,
 }
 
 /// Transfers are paced in chunks so no stream monopolizes the bucket
@@ -300,26 +300,43 @@ const CHUNK: u64 = 256 * 1024;
 
 impl Device {
     pub fn new(model: DeviceModel, observer: Arc<dyn IoObserver>) -> Self {
+        Self::with_clock(model, observer, Clock::wall())
+    }
+
+    /// A device whose pacing, latency phases and bucket refills all run
+    /// against `clock`.  Every component of one simulation must share
+    /// the same clock.
+    pub fn with_clock(
+        model: DeviceModel,
+        observer: Arc<dyn IoObserver>,
+        clock: Clock,
+    ) -> Self {
         let ts = model.time_scale;
         assert!(ts > 0.0, "time_scale must be positive");
         Device {
-            read_bucket: TokenBucket::new(model.read_bw * ts),
-            write_bucket: TokenBucket::new(model.write_bw * ts),
+            read_bucket: TokenBucket::new(model.read_bw * ts, clock.clone()),
+            write_bucket: TokenBucket::new(model.write_bw * ts, clock.clone()),
             gate: ChannelGate {
                 lock: Mutex::new(GateState {
                     in_service: 0,
                     depth: 0,
                     peak_depth: 0,
                 }),
-                cv: Condvar::new(),
+                cv: SimCondvar::new(),
             },
             observer,
             model,
+            clock,
         }
     }
 
     pub fn name(&self) -> &str {
         &self.model.name
+    }
+
+    /// The clock this device paces against.
+    pub fn clock(&self) -> &Clock {
+        &self.clock
     }
 
     /// Join the device queue: the request becomes visible to the
@@ -350,7 +367,7 @@ impl Device {
         let mut g = self.gate.lock.lock().unwrap();
         g.depth -= 1;
         drop(g);
-        self.gate.cv.notify_one();
+        self.gate.cv.notify_one(&self.clock);
     }
 
     /// Claim a service channel (blocks while all `channels` are busy).
@@ -360,7 +377,7 @@ impl Device {
     pub fn service_begin(&self, enqueue_depth: u32) -> u32 {
         let mut g = self.gate.lock.lock().unwrap();
         while g.in_service >= self.model.channels.max(1) {
-            g = self.gate.cv.wait(g).unwrap();
+            g = self.gate.cv.wait(&self.clock, &self.gate.lock, g);
         }
         g.in_service += 1;
         g.depth.max(enqueue_depth)
@@ -373,7 +390,7 @@ impl Device {
             g.in_service -= 1;
             g.depth -= 1;
         }
-        self.gate.cv.notify_one();
+        self.gate.cv.notify_one(&self.clock);
     }
 
     /// Sleep the latency phase (seek / command / RPC) for one request
@@ -384,9 +401,7 @@ impl Device {
             Dir::Write => self.model.write_lat,
         } / self.model.elevator_gain(depth)
             / self.model.time_scale;
-        if lat > 0.0 {
-            std::thread::sleep(Duration::from_secs_f64(lat));
-        }
+        self.clock.sleep_secs(lat);
     }
 
     /// Pace `bytes` through the direction's bandwidth bucket, crediting
@@ -426,6 +441,12 @@ impl Device {
         bytes: u64,
         io: impl FnOnce() -> T,
     ) -> T {
+        // Count the caller as a simulation participant for the span
+        // of the transfer: concurrent virtual-mode transfers then
+        // overlap their sleeps (the thread-scaling results) instead of
+        // serializing against the event heap.
+        let _reg = self.clock.enter();
+
         // --- enter queue + claim a channel ---
         let enq = self.queue_enter();
         let depth = self.service_begin(enq);
@@ -433,10 +454,12 @@ impl Device {
         // --- latency phase (seek / command / RPC) ---
         self.latency_phase(dir, depth);
 
-        // --- real backing I/O (timed: it counts toward service) ---
-        let io_t0 = Instant::now();
+        // --- real backing I/O (timed: it counts toward service; in
+        //     virtual mode the clock cannot advance while we run, so
+        //     the credit is zero and service time is purely modelled)
+        let io_t0 = self.clock.now();
         let out = io();
-        let io_elapsed = io_t0.elapsed().as_secs_f64();
+        let io_elapsed = self.clock.now() - io_t0;
 
         // --- transfer phase: paced against the aggregate cap, with
         //     the real I/O time credited so total service time is
@@ -481,6 +504,7 @@ impl Device {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Instant;
 
     fn model(name: &str) -> DeviceModel {
         DeviceModel {
@@ -518,7 +542,7 @@ mod tests {
     #[test]
     fn bucket_enforces_rate() {
         // 10 MB at 100 MB/s must take ~0.1 s (minus burst credit).
-        let b = TokenBucket::new(100e6);
+        let b = TokenBucket::new(100e6, Clock::wall());
         let t0 = Instant::now();
         let mut left = 10_000_000u64;
         while left > 0 {
@@ -536,7 +560,7 @@ mod tests {
         // 1 MB/s, 10 KB burst: a 100 KB charge rides through on the
         // burst but leaves the bucket deep in debt, and the debt pays
         // off at the configured rate.
-        let b = TokenBucket::with_burst(1e6, 10.0 * 1024.0);
+        let b = TokenBucket::with_burst(1e6, 10.0 * 1024.0, Clock::wall());
         assert!(b.balance() > 0.0);
         assert_eq!(b.until_positive(), Duration::ZERO);
         b.charge(100 * 1024);
@@ -663,6 +687,51 @@ mod tests {
         d.queue_enter();
         assert_eq!(d.peak_queue_depth(), 3);
         d.queue_leave();
+    }
+
+    #[test]
+    fn bucket_is_exact_under_virtual_clock() {
+        // 10 MB at 100 MB/s from a full burst: exactly
+        // (bytes - burst) / rate of virtual time, zero wall sleeps.
+        let clock = Clock::virt();
+        let b = TokenBucket::new(100e6, clock.clone());
+        let burst = (100e6f64 * 0.002).clamp(64.0 * 1024.0, 1024.0 * 1024.0);
+        let t0 = clock.now();
+        let mut left = 10_000_000u64;
+        while left > 0 {
+            let take = left.min(CHUNK);
+            b.take(take);
+            left -= take;
+        }
+        let dt = clock.now() - t0;
+        let expect = (10_000_000.0 - burst) / 100e6;
+        // Sub-µs slack only: per-chunk sleeps quantize to nanoseconds.
+        assert!(
+            (dt - expect).abs() < 1e-6,
+            "virtual pacing {dt} != expected {expect}"
+        );
+    }
+
+    #[test]
+    fn virtual_transfer_matches_service_time() {
+        // Single registered transfer on a virtual clock: elapsed equals
+        // the analytic service_time minus the burst credit, exactly.
+        let clock = Clock::virt();
+        let mut m = model("v");
+        m.read_lat = 0.004;
+        let d = Device::with_clock(m.clone(), Arc::new(NullObserver), clock.clone());
+        let bytes = 8_000_000u64;
+        let burst = (m.read_bw * 0.002).clamp(64.0 * 1024.0, 1024.0 * 1024.0);
+        let t0 = clock.now();
+        d.transfer(Dir::Read, bytes, || ());
+        let dt = clock.now() - t0;
+        let expect =
+            m.service_time(Dir::Read, bytes, 1) - burst / (m.read_bw * m.time_scale);
+        // Sub-µs slack only: per-chunk sleeps quantize to nanoseconds.
+        assert!(
+            (dt - expect).abs() < 1e-6,
+            "virtual transfer {dt} != expected {expect}"
+        );
     }
 
     #[test]

@@ -41,14 +41,15 @@ use std::collections::{HashMap, VecDeque};
 use std::io::{Read as _, Write as _};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::metrics::LatencyHistogram;
 
+use super::clock::{Clock, SimCondvar};
 use super::device::{Device, Dir, TokenBucket};
 
 // ---------------------------------------------------------------------------
@@ -373,7 +374,8 @@ struct TicketState {
 
 struct TicketShared {
     state: Mutex<TicketState>,
-    done: Condvar,
+    done: SimCondvar,
+    clock: Clock,
 }
 
 /// Completion handle for a submitted request.  `wait` consumes the
@@ -390,7 +392,11 @@ impl IoTicket {
             if let Some(r) = st.result.take() {
                 return r;
             }
-            st = self.inner.done.wait(st).unwrap();
+            st = self.inner.done.wait(
+                &self.inner.clock,
+                &self.inner.state,
+                st,
+            );
         }
     }
 
@@ -400,10 +406,11 @@ impl IoTicket {
     }
 }
 
-fn new_ticket() -> (IoTicket, Arc<TicketShared>) {
+fn new_ticket(clock: &Clock) -> (IoTicket, Arc<TicketShared>) {
     let shared = Arc::new(TicketShared {
         state: Mutex::new(TicketState { result: None }),
-        done: Condvar::new(),
+        done: SimCondvar::new(),
+        clock: clock.clone(),
     });
     (IoTicket { inner: Arc::clone(&shared) }, shared)
 }
@@ -412,7 +419,7 @@ fn complete(ticket: &Arc<TicketShared>, result: Result<IoCompletion>) {
     let mut st = ticket.state.lock().unwrap();
     st.result = Some(result);
     drop(st);
-    ticket.done.notify_all();
+    ticket.done.notify_all(&ticket.clock);
 }
 
 // ---------------------------------------------------------------------------
@@ -514,16 +521,18 @@ pub struct EngineEvent {
     /// either way.
     pub bytes: u64,
     pub ok: bool,
-    /// Submit time, wall seconds since the engine started.
+    /// Submit time, engine-clock seconds since the engine started
+    /// (wall seconds under `WallClock`, virtual seconds under
+    /// `VirtualClock` — same meaning, same schema).
     pub submit_secs: f64,
-    /// Submit → service start (dispatch), wall seconds.
+    /// Submit → service start (dispatch), engine-clock seconds.
     pub queue_secs: f64,
-    /// Service start → completion, wall seconds.
+    /// Service start → completion, engine-clock seconds.
     pub service_secs: f64,
 }
 
 impl EngineEvent {
-    /// Completion time on the engine's clock, wall seconds.
+    /// Completion time on the engine's clock, seconds.
     pub fn complete_secs(&self) -> f64 {
         self.submit_secs + self.queue_secs + self.service_secs
     }
@@ -655,15 +664,16 @@ struct ChunkQueueState {
 struct ChunkQueue {
     state: Mutex<ChunkQueueState>,
     /// Producer waits here for space.
-    space: Condvar,
+    space: SimCondvar,
     /// Consumer waits here for chunks.
-    filled: Condvar,
+    filled: SimCondvar,
     capacity: usize,
     gauge: Arc<BufferGauge>,
+    clock: Clock,
 }
 
 impl ChunkQueue {
-    fn new(capacity: usize, gauge: Arc<BufferGauge>) -> ChunkQueue {
+    fn new(capacity: usize, gauge: Arc<BufferGauge>, clock: Clock) -> ChunkQueue {
         ChunkQueue {
             state: Mutex::new(ChunkQueueState {
                 chunks: VecDeque::new(),
@@ -671,10 +681,11 @@ impl ChunkQueue {
                 aborted: false,
                 discarded: false,
             }),
-            space: Condvar::new(),
-            filled: Condvar::new(),
+            space: SimCondvar::new(),
+            filled: SimCondvar::new(),
             capacity: capacity.max(1),
             gauge,
+            clock,
         }
     }
 
@@ -687,7 +698,7 @@ impl ChunkQueue {
         };
         let mut st = self.state.lock().unwrap();
         while st.chunks.len() >= self.capacity && !st.aborted {
-            st = self.space.wait(st).unwrap();
+            st = self.space.wait(&self.clock, &self.state, st);
         }
         if st.aborted {
             return false;
@@ -697,7 +708,7 @@ impl ChunkQueue {
         self.gauge.add(bytes);
         st.chunks.push_back(chunk);
         drop(st);
-        self.filled.notify_one();
+        self.filled.notify_one(&self.clock);
         true
     }
 
@@ -716,7 +727,7 @@ impl ChunkQueue {
         let mut st = self.state.lock().unwrap();
         st.closed = true;
         drop(st);
-        self.filled.notify_all();
+        self.filled.notify_all(&self.clock);
     }
 
     /// Dequeue the next chunk; `None` = producer closed and queue
@@ -728,7 +739,7 @@ impl ChunkQueue {
         loop {
             if let Some(c) = st.chunks.pop_front() {
                 drop(st);
-                self.space.notify_one();
+                self.space.notify_one(&self.clock);
                 return match c {
                     StreamChunk::Data(bytes) => {
                         self.gauge.sub(bytes.len() as u64);
@@ -750,7 +761,7 @@ impl ChunkQueue {
                     false,
                 )));
             }
-            st = self.filled.wait(st).unwrap();
+            st = self.filled.wait(&self.clock, &self.state, st);
         }
     }
 
@@ -772,8 +783,8 @@ impl ChunkQueue {
         if freed > 0 {
             self.gauge.sub(freed);
         }
-        self.space.notify_all();
-        self.filled.notify_all();
+        self.space.notify_all(&self.clock);
+        self.filled.notify_all(&self.clock);
     }
 }
 
@@ -1062,7 +1073,8 @@ struct Job {
     /// Arrival order across all classes (the FIFO-baseline sort key).
     seq: u64,
     ticket: Arc<TicketShared>,
-    submitted: Instant,
+    /// Engine-clock submit time, seconds since the engine started.
+    submitted: f64,
     /// Submitter tag for trace events (see [`with_origin`]).
     origin: &'static str,
     /// Hierarchy tier tag for trace events and per-tier stats rows
@@ -1117,7 +1129,8 @@ struct AdaptiveState {
     weight: f64,
     /// Ingest queue latencies observed since the last tick.
     window: LatencyHistogram,
-    last_tick: Instant,
+    /// Engine-clock time of the last controller tick, seconds.
+    last_tick: f64,
     trajectory: Vec<(f64, u32)>,
 }
 
@@ -1135,9 +1148,14 @@ struct DeviceQueue {
     device: Arc<Device>,
     state: Mutex<QueueState>,
     /// Workers wait here for jobs.
-    available: Condvar,
+    available: SimCondvar,
     /// Yielded streams wait here for higher-priority queues to drain.
-    drained: Condvar,
+    drained: SimCondvar,
+    /// Rate-capped streams wait here while their bucket is in debt
+    /// (woken by shutdown; buckets otherwise turn positive on a clock
+    /// deadline).  Separate from `available` so a bucket wakeup can
+    /// never be stolen by an idle worker (or vice versa).
+    throttled: SimCondvar,
     stats: Mutex<EngineDeviceStats>,
     qos: QosConfig,
     /// Per-round DRR byte grants (`weights[c] * chunk_size`).
@@ -1156,9 +1174,13 @@ struct DeviceQueue {
     /// Cached effective Ingest weight so the scheduler reads it
     /// without touching the controller mutex.
     eff_ingest_weight: AtomicU32,
-    /// Engine construction time (shared across the engine's devices so
-    /// event timestamps are one clock): the trajectory's time axis.
-    started: Instant,
+    /// Engine construction time on the engine clock (shared across
+    /// the engine's devices so event timestamps are one clock): the
+    /// trajectory's time axis.
+    started: f64,
+    /// The engine's time source (wall or virtual), shared with every
+    /// device.
+    clock: Clock,
     /// Request-level event observer (trace recorder), engine-wide.
     observer: ObserverSlot,
 }
@@ -1177,7 +1199,7 @@ impl DeviceQueue {
         tier: Option<u32>,
         bytes: u64,
         ok: bool,
-        submitted: Instant,
+        submitted: f64,
         queue_secs: f64,
         service_secs: f64,
     ) {
@@ -1191,9 +1213,7 @@ impl DeviceQueue {
                 tier,
                 bytes,
                 ok,
-                submit_secs: submitted
-                    .saturating_duration_since(self.started)
-                    .as_secs_f64(),
+                submit_secs: (submitted - self.started).max(0.0),
                 queue_secs,
                 service_secs,
             });
@@ -1213,7 +1233,7 @@ impl DeviceQueue {
                 st.class_peak[c] = depth;
             }
         }
-        self.available.notify_one();
+        self.available.notify_one(&self.clock);
     }
 
     /// A stream joined `class` (called at submit time; balanced by
@@ -1284,9 +1304,13 @@ impl DeviceQueue {
                 .filter_map(|(_, b)| b.as_ref().map(|b| b.until_positive()))
                 .min()
                 .unwrap_or(Duration::from_millis(5));
-            return Sched::Throttled(
-                wait.clamp(Duration::from_micros(100), Duration::from_millis(50)),
-            );
+            // No 50 ms cap: the wait is an exact clock deadline (one
+            // free event in virtual mode), and pushes/shutdown notify
+            // `available` so a sleeping worker never oversleeps work.
+            return Sched::Throttled(wait.clamp(
+                Duration::from_micros(100),
+                Duration::from_secs(3600),
+            ));
         }
         if self.qos.fifo {
             let mut best: Option<(usize, u64)> = None;
@@ -1356,9 +1380,11 @@ impl DeviceQueue {
             return;
         };
         loop {
-            if self.state.lock().unwrap().shutdown {
+            let st = self.state.lock().unwrap();
+            if st.shutdown {
                 // Drain unpaced, but keep the books: a post-shutdown
                 // chunk still charges its debt.
+                drop(st);
                 bucket.charge(bytes);
                 return;
             }
@@ -1368,7 +1394,18 @@ impl DeviceQueue {
             match bucket.try_charge(bytes) {
                 None => return,
                 Some(wait) => {
-                    std::thread::sleep(wait.min(Duration::from_millis(50)));
+                    // Event wait for the full debt window instead of a
+                    // 50 ms sleep-poll: shutdown notifies `throttled`,
+                    // so drain latency is no longer quantized — and
+                    // the wait is one free clock event in virtual
+                    // mode.
+                    let (guard, _) = self.throttled.wait_timeout(
+                        &self.clock,
+                        &self.state,
+                        st,
+                        wait,
+                    );
+                    drop(guard);
                 }
             }
         }
@@ -1391,8 +1428,8 @@ impl DeviceQueue {
             st.window.record(queue_secs);
         }
         let ts = self.device.model.time_scale.max(1e-9);
-        let now = Instant::now();
-        if now.duration_since(st.last_tick).as_secs_f64() * ts < cfg.tick {
+        let now = self.clock.now();
+        if (now - st.last_tick) * ts < cfg.tick {
             return;
         }
         st.last_tick = now;
@@ -1411,10 +1448,8 @@ impl DeviceQueue {
         if (next - st.weight).abs() >= 0.5
             && st.trajectory.len() < MAX_WEIGHT_TRAJECTORY
         {
-            st.trajectory.push((
-                now.duration_since(self.started).as_secs_f64(),
-                next.round() as u32,
-            ));
+            st.trajectory
+                .push(((now - self.started).max(0.0), next.round() as u32));
         }
         st.weight = next;
         self.eff_ingest_weight
@@ -1443,21 +1478,23 @@ impl DeviceQueue {
         if wall_bound <= 0.0 || !wall_bound.is_finite() {
             return;
         }
-        let deadline =
-            Instant::now() + Duration::from_secs_f64(wall_bound.min(3600.0));
+        let deadline = self.clock.now() + wall_bound.min(3600.0);
         let mut st = self.state.lock().unwrap();
         while !st.shutdown
             && st.classes[..hi].iter().any(|q| !q.is_empty())
         {
-            // checked_duration_since instead of `deadline - now`: an
-            // already-expired deadline ends the yield instead of
-            // panicking (regression: zero/expired max_yield_wait).
-            let remaining =
-                match deadline.checked_duration_since(Instant::now()) {
-                    Some(d) if !d.is_zero() => d,
-                    _ => break,
-                };
-            let (guard, _) = self.drained.wait_timeout(st, remaining).unwrap();
+            // An already-expired deadline ends the yield (regression:
+            // zero/expired max_yield_wait must not wait at all).
+            let remaining = deadline - self.clock.now();
+            if remaining <= 0.0 {
+                break;
+            }
+            let (guard, _) = self.drained.wait_timeout(
+                &self.clock,
+                &self.state,
+                st,
+                Duration::from_secs_f64(remaining),
+            );
             st = guard;
         }
     }
@@ -1473,6 +1510,9 @@ pub struct IoEngine {
     workers: Vec<JoinHandle<()>>,
     chunk_size: usize,
     qos: QosConfig,
+    /// The engine's time source, taken from its devices (all devices
+    /// of one engine must share a clock).
+    clock: Clock,
     gauge: Arc<BufferGauge>,
     /// Request-level event observer slot, shared with every device
     /// queue ([`set_observer`](Self::set_observer)).
@@ -1515,8 +1555,19 @@ impl IoEngine {
             qos.weights[i].max(1) as u64 * chunk_size as u64
         });
         let observer: ObserverSlot = Arc::new(RwLock::new(None));
-        // One clock for every device's event timestamps.
-        let epoch = Instant::now();
+        // The engine runs on its devices' time source (wall or
+        // virtual); all devices of one engine share a clock.
+        let clock = devices
+            .values()
+            .next()
+            .map(|d| d.clock().clone())
+            .unwrap_or_else(Clock::wall);
+        debug_assert!(
+            devices.values().all(|d| d.clock().same(&clock)),
+            "all devices of one engine must share a clock"
+        );
+        // One epoch for every device's event timestamps.
+        let epoch = clock.now();
         let mut queues = HashMap::new();
         let mut workers = Vec::new();
         for (name, device) in devices {
@@ -1530,6 +1581,7 @@ impl IoEngine {
                         TokenBucket::with_burst(
                             cap.bytes_per_sec.max(1.0) * ts,
                             cap.burst_bytes.max(1) as f64,
+                            clock.clone(),
                         )
                     })
                 });
@@ -1539,7 +1591,7 @@ impl IoEngine {
                 Mutex::new(AdaptiveState {
                     weight: base_weight as f64,
                     window: LatencyHistogram::new(),
-                    last_tick: Instant::now(),
+                    last_tick: epoch,
                     trajectory: Vec::new(),
                 })
             });
@@ -1561,8 +1613,9 @@ impl IoEngine {
                     class_peak: [0; IoClass::COUNT],
                     shutdown: false,
                 }),
-                available: Condvar::new(),
-                drained: Condvar::new(),
+                available: SimCondvar::new(),
+                drained: SimCondvar::new(),
+                throttled: SimCondvar::new(),
                 stats: Mutex::new(EngineDeviceStats {
                     device: name.clone(),
                     ..EngineDeviceStats::default()
@@ -1575,6 +1628,7 @@ impl IoEngine {
                 adaptive_target,
                 eff_ingest_weight: AtomicU32::new(base_weight),
                 started: epoch,
+                clock: clock.clone(),
                 observer: Arc::clone(&observer),
             });
             let n_workers = device
@@ -1598,6 +1652,7 @@ impl IoEngine {
             workers,
             chunk_size,
             qos,
+            clock,
             gauge,
             observer,
             streams: Mutex::new(Vec::new()),
@@ -1608,6 +1663,11 @@ impl IoEngine {
     /// Scheduler configuration in force.
     pub fn qos(&self) -> &QosConfig {
         &self.qos
+    }
+
+    /// The engine's time source.
+    pub fn clock(&self) -> &Clock {
+        &self.clock
     }
 
     /// Attach a request-level event observer (the trace recorder's
@@ -1655,12 +1715,15 @@ impl IoEngine {
         ticket: Arc<TicketShared>,
     ) {
         let q = Arc::clone(q);
-        let submitted = Instant::now();
+        let submitted = q.clock.now();
         q.stream_begin(class);
         let handle = std::thread::Builder::new()
             .name(format!("dlio-io-stream-{}", q.device.name()))
             .spawn(move || {
-                let mut first_service: Option<Instant> = None;
+                // Stream writers live on the engine clock: registered
+                // so virtual time can't advance past a runnable one.
+                let _reg = q.clock.enter();
+                let mut first_service: Option<f64> = None;
                 let result = write_stream_paced(&q, &path, &rx, enq_depth,
                                                 class, &mut first_service);
                 if result.is_err() {
@@ -1671,15 +1734,10 @@ impl IoEngine {
                 // device (channel contention + preemption yields show
                 // up here, where tf-Darshan-style analysis expects
                 // them); everything after is service.
-                let t_end = Instant::now();
+                let t_end = q.clock.now();
                 let (queue_secs, service_secs) = match first_service {
-                    Some(ts) => (
-                        ts.duration_since(submitted).as_secs_f64(),
-                        t_end.duration_since(ts).as_secs_f64(),
-                    ),
-                    None => {
-                        (t_end.duration_since(submitted).as_secs_f64(), 0.0)
-                    }
+                    Some(ts) => (ts - submitted, t_end - ts),
+                    None => (t_end - submitted, 0.0),
                 };
                 q.stream_end(class);
                 {
@@ -1821,7 +1879,7 @@ impl IoEngine {
         cost: u64,
     ) -> Result<IoTicket> {
         let q = self.queue(device)?;
-        let (ticket, shared) = new_ticket();
+        let (ticket, shared) = new_ticket(&self.clock);
         let enq_depth = q.device.queue_enter();
         record_submit(&mut q.stats.lock().unwrap(), class, enq_depth);
         q.push(Job {
@@ -1830,7 +1888,7 @@ impl IoEngine {
             cost,
             seq: 0, // assigned by push
             ticket: Arc::clone(&shared),
-            submitted: Instant::now(),
+            submitted: self.clock.now(),
             origin: current_origin(),
             tier: current_tier(),
             enq_depth,
@@ -1942,7 +2000,7 @@ impl IoEngine {
                 (Some((device, op, req_class)), None) => {
                     let q = self.queue(&device).expect("validated above");
                     let enq_depth = burst_depth[&device];
-                    let (ticket, shared) = new_ticket();
+                    let (ticket, shared) = new_ticket(&self.clock);
                     let cost = Self::job_cost(&op, self.chunk_size);
                     record_submit(
                         &mut q.stats.lock().unwrap(),
@@ -1955,7 +2013,7 @@ impl IoEngine {
                         cost,
                         seq: 0, // assigned by push
                         ticket: Arc::clone(&shared),
-                        submitted: Instant::now(),
+                        submitted: self.clock.now(),
                         origin: current_origin(),
                         tier: current_tier(),
                         enq_depth,
@@ -1993,9 +2051,13 @@ impl IoEngine {
             std::fs::create_dir_all(parent)
                 .with_context(|| format!("mkdir {}", parent.display()))?;
         }
-        let rx = Arc::new(ChunkQueue::new(STREAM_WINDOW, Arc::clone(&self.gauge)));
+        let rx = Arc::new(ChunkQueue::new(
+            STREAM_WINDOW,
+            Arc::clone(&self.gauge),
+            self.clock.clone(),
+        ));
         self.register_stream(&rx);
-        let (ticket, shared) = new_ticket();
+        let (ticket, shared) = new_ticket(&self.clock);
         // The stream joins the device queue now (its first chunk
         // consumes the membership), so it counts toward any burst
         // submitted alongside it.
@@ -2039,18 +2101,26 @@ impl IoEngine {
             std::fs::create_dir_all(parent)
                 .with_context(|| format!("mkdir {}", parent.display()))?;
         }
-        let rx = Arc::new(ChunkQueue::new(STREAM_WINDOW, Arc::clone(&self.gauge)));
+        let rx = Arc::new(ChunkQueue::new(
+            STREAM_WINDOW,
+            Arc::clone(&self.gauge),
+            self.clock.clone(),
+        ));
         self.register_stream(&rx);
-        let (ticket, shared) = new_ticket();
+        let (ticket, shared) = new_ticket(&self.clock);
         let enq_depth = q.device.queue_enter();
         record_submit(&mut q.stats.lock().unwrap(), class, enq_depth);
         self.spawn_stream_writer(q, dst_path, Arc::clone(&rx), enq_depth,
                                  class, current_origin(), current_tier(),
                                  shared);
         let chunk_size = self.chunk_size;
+        let clock = self.clock.clone();
         let handle = std::thread::Builder::new()
             .name("dlio-io-warmread".into())
-            .spawn(move || unpaced_file_reader(src_path, rx, chunk_size))
+            .spawn(move || {
+                let _reg = clock.enter();
+                unpaced_file_reader(src_path, rx, chunk_size)
+            })
             .expect("spawn warm copy reader");
         self.track_thread(handle);
         Ok(ticket)
@@ -2073,9 +2143,13 @@ impl IoEngine {
             std::fs::create_dir_all(parent)
                 .with_context(|| format!("mkdir {}", parent.display()))?;
         }
-        let rx = Arc::new(ChunkQueue::new(STREAM_WINDOW, Arc::clone(&self.gauge)));
+        let rx = Arc::new(ChunkQueue::new(
+            STREAM_WINDOW,
+            Arc::clone(&self.gauge),
+            self.clock.clone(),
+        ));
         self.register_stream(&rx);
-        let (ticket, shared) = new_ticket();
+        let (ticket, shared) = new_ticket(&self.clock);
         let origin = current_origin();
         // Both halves of a migration copy carry the destination tier:
         // "drain into tier N" is the attribution a hierarchy wants.
@@ -2091,11 +2165,12 @@ impl IoEngine {
         // copy.
         record_submit(&mut src_q.stats.lock().unwrap(), class, src_enq);
         src_q.stream_begin(class);
-        let submitted = Instant::now();
+        let submitted = self.clock.now();
         let chunk_size = self.chunk_size;
         let handle = std::thread::Builder::new()
             .name("dlio-io-copy".into())
             .spawn(move || {
+                let _reg = src_q.clock.enter();
                 copy_reader(src_q, src_path, rx, chunk_size, src_enq, class,
                             origin, tier, submitted)
             })
@@ -2193,10 +2268,16 @@ impl Drop for IoEngine {
             let mut st = q.state.lock().unwrap();
             st.shutdown = true;
             drop(st);
-            q.available.notify_all();
-            // Wake any stream parked at a preemption point.
-            q.drained.notify_all();
+            q.available.notify_all(&self.clock);
+            // Wake any stream parked at a preemption point or
+            // throttled against a rate cap.
+            q.drained.notify_all(&self.clock);
+            q.throttled.notify_all(&self.clock);
         }
+        // Joining is a foreign blocking primitive: drop any clock
+        // registration first so virtual time keeps advancing while the
+        // workers drain their backlog.
+        let _suspended = self.clock.suspend();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -2211,6 +2292,10 @@ impl Drop for IoEngine {
 // ---------------------------------------------------------------------------
 
 fn worker_loop(q: Arc<DeviceQueue>, chunk_size: usize) {
+    // Workers live on the engine clock for their whole lifetime, so
+    // virtual time only advances when every worker is parked or
+    // sleeping through the clock.
+    let _reg = q.clock.enter();
     loop {
         let job = {
             let mut st = q.state.lock().unwrap();
@@ -2222,27 +2307,28 @@ fn worker_loop(q: Arc<DeviceQueue>, chunk_size: usize) {
                         // sleep until the earliest bucket refills (a
                         // shutdown notify re-polls immediately, and
                         // sched_pop ignores caps once shut down).
-                        let (guard, _) =
-                            q.available.wait_timeout(st, wait).unwrap();
+                        let (guard, _) = q.available.wait_timeout(
+                            &q.clock, &q.state, st, wait,
+                        );
                         st = guard;
                     }
                     Sched::Idle => {
                         if st.shutdown {
                             return;
                         }
-                        st = q.available.wait(st).unwrap();
+                        st = q.available.wait(&q.clock, &q.state, st);
                     }
                 }
             }
         };
         // A queue may just have emptied: wake streams parked at a
         // preemption point so they re-check their yield predicate.
-        q.drained.notify_all();
+        q.drained.notify_all(&q.clock);
         let op_kind = job.op.engine_op();
-        let queue_secs = job.submitted.elapsed().as_secs_f64();
-        let t0 = Instant::now();
+        let queue_secs = (q.clock.now() - job.submitted).max(0.0);
+        let t0 = q.clock.now();
         let outcome = run_job(&q.device, job.op, job.enq_depth, chunk_size);
-        let service_secs = t0.elapsed().as_secs_f64();
+        let service_secs = (q.clock.now() - t0).max(0.0);
         {
             let mut stats = q.stats.lock().unwrap();
             match &outcome {
@@ -2340,14 +2426,14 @@ fn read_paced(dev: &Arc<Device>, path: &Path, chunk_size: usize) -> Result<Vec<u
     let mut out = Vec::with_capacity(size);
     let mut buf = vec![0u8; chunk_size];
     loop {
-        let t0 = Instant::now();
+        let t0 = dev.clock().now();
         let n = file
             .read(&mut buf)
             .with_context(|| format!("read {}", path.display()))?;
         if n == 0 {
             break;
         }
-        dev.pace(Dir::Read, n as u64, t0.elapsed().as_secs_f64());
+        dev.pace(Dir::Read, n as u64, dev.clock().now() - t0);
         out.extend_from_slice(&buf[..n]);
     }
     Ok(out)
@@ -2366,10 +2452,10 @@ fn write_paced(
     let mut file = std::fs::File::create(path)
         .with_context(|| format!("create {}", path.display()))?;
     for chunk in data.chunks(chunk_size.max(1)) {
-        let t0 = Instant::now();
+        let t0 = dev.clock().now();
         file.write_all(chunk)
             .with_context(|| format!("write {}", path.display()))?;
-        dev.pace(Dir::Write, chunk.len() as u64, t0.elapsed().as_secs_f64());
+        dev.pace(Dir::Write, chunk.len() as u64, dev.clock().now() - t0);
     }
     // A zero-byte payload still creates the file (no pacing charge).
     Ok(())
@@ -2391,7 +2477,7 @@ fn write_stream_paced(
     rx: &Arc<ChunkQueue>,
     enq_depth: u32,
     class: IoClass,
-    first_service: &mut Option<Instant>,
+    first_service: &mut Option<f64>,
 ) -> Result<u64, StreamFailure> {
     let mut first = true;
     let result = write_stream_chunks(q, path, rx, enq_depth, &mut first,
@@ -2411,7 +2497,7 @@ fn write_stream_chunks(
     enq_depth: u32,
     first: &mut bool,
     class: IoClass,
-    first_service: &mut Option<Instant>,
+    first_service: &mut Option<f64>,
 ) -> Result<u64, StreamFailure> {
     let dev = &q.device;
     let preempt = q.qos.preempt_chunks;
@@ -2444,16 +2530,16 @@ fn write_stream_chunks(
         if *first {
             // The stream's queue phase ends here: the first chunk
             // holds the device.
-            *first_service = Some(Instant::now());
+            *first_service = Some(q.clock.now());
             dev.latency_phase(Dir::Write, depth);
             *first = false;
         }
-        let t0 = Instant::now();
+        let t0 = q.clock.now();
         let io = file
             .write_all(&chunk)
             .with_context(|| format!("write {}", path.display()));
         if io.is_ok() {
-            dev.pace(Dir::Write, chunk.len() as u64, t0.elapsed().as_secs_f64());
+            dev.pace(Dir::Write, chunk.len() as u64, q.clock.now() - t0);
         }
         dev.service_end();
         io.map_err(|e| StreamFailure::new(e, false))?;
@@ -2505,12 +2591,12 @@ fn copy_reader(
     class: IoClass,
     origin: &'static str,
     tier: Option<u32>,
-    submitted: Instant,
+    submitted: f64,
 ) {
     let dev = &q.device;
     let preempt = q.qos.preempt_chunks;
     let mut first = true;
-    let mut first_service: Option<Instant> = None;
+    let mut first_service: Option<f64> = None;
     let result = (|| -> Result<u64> {
         let mut file = std::fs::File::open(&path)
             .with_context(|| format!("read {}", path.display()))?;
@@ -2533,18 +2619,18 @@ fn copy_reader(
                 dev.service_begin(enq)
             };
             if first {
-                first_service = Some(Instant::now());
+                first_service = Some(q.clock.now());
                 dev.latency_phase(Dir::Read, depth);
                 first = false;
             }
-            let t0 = Instant::now();
+            let t0 = q.clock.now();
             let io = file
                 .read(&mut buf)
                 .with_context(|| format!("read {}", path.display()));
             let n = match io {
                 Ok(n) => {
                     if n > 0 {
-                        dev.pace(Dir::Read, n as u64, t0.elapsed().as_secs_f64());
+                        dev.pace(Dir::Read, n as u64, q.clock.now() - t0);
                     }
                     dev.service_end();
                     n
@@ -2572,13 +2658,10 @@ fn copy_reader(
     }
     // Queue = submit -> first chunk holding the device; the rest is
     // service (mirrors the stream writer's accounting).
-    let t_end = Instant::now();
+    let t_end = q.clock.now();
     let (queue_secs, service_secs) = match first_service {
-        Some(ts) => (
-            ts.duration_since(submitted).as_secs_f64(),
-            t_end.duration_since(ts).as_secs_f64(),
-        ),
-        None => (t_end.duration_since(submitted).as_secs_f64(), 0.0),
+        Some(ts) => (ts - submitted, t_end - ts),
+        None => (t_end - submitted, 0.0),
     };
     q.stream_end(class);
     q.adaptive_observe(class, queue_secs);
@@ -2624,6 +2707,7 @@ fn copy_reader(
 mod tests {
     use super::*;
     use crate::storage::device::{DeviceModel, NullObserver};
+    use std::time::Instant;
 
     fn model(name: &str, channels: usize, time_scale: f64) -> DeviceModel {
         DeviceModel {

@@ -32,11 +32,12 @@
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Context, Result};
 
+use super::clock::{Clock, SimCondvar};
 use super::engine::{with_origin, with_tier, IoClass};
 use super::policy::{PlacementPolicy, TierView};
 use super::sim::{PendingRead, SimPath, StorageSim};
@@ -324,8 +325,8 @@ struct Completed {
 
 struct MigQueue {
     jobs: Mutex<VecDeque<MigGroup>>,
-    available: Condvar,
-    idle: Condvar,
+    available: SimCondvar,
+    idle: SimCondvar,
     shutdown: Mutex<bool>,
     completed: Mutex<Completed>,
 }
@@ -337,6 +338,9 @@ struct HierInner {
     rams: Vec<Option<RamTier>>,
     state: Mutex<HierState>,
     queue: MigQueue,
+    /// The sim's time source; the migrator registers against it so
+    /// virtual time cannot advance past an in-flight migration.
+    clock: Clock,
 }
 
 /// Per-tier stats snapshot ([`StorageHierarchy::stats`]).
@@ -398,6 +402,7 @@ impl StorageHierarchy {
             ));
         }
         let tiers = spec.tiers.iter().map(|_| TierRt::default()).collect();
+        let clock = sim.clock().clone();
         let inner = Arc::new(HierInner {
             sim,
             spec,
@@ -411,11 +416,12 @@ impl StorageHierarchy {
             }),
             queue: MigQueue {
                 jobs: Mutex::new(VecDeque::new()),
-                available: Condvar::new(),
-                idle: Condvar::new(),
+                available: SimCondvar::new(),
+                idle: SimCondvar::new(),
                 shutdown: Mutex::new(false),
                 completed: Mutex::new(Completed::default()),
             },
+            clock,
         });
         let migrator = {
             let inner = Arc::clone(&inner);
@@ -775,7 +781,11 @@ impl StorageHierarchy {
     pub fn wait_idle(&self) {
         let mut jobs = self.inner.queue.jobs.lock().unwrap();
         while !jobs.is_empty() {
-            jobs = self.inner.queue.idle.wait(jobs).unwrap();
+            jobs = self.inner.queue.idle.wait(
+                &self.inner.clock,
+                &self.inner.queue.jobs,
+                jobs,
+            );
         }
     }
 
@@ -890,7 +900,10 @@ impl Drop for StorageHierarchy {
     fn drop(&mut self) {
         self.wait_idle();
         *self.inner.queue.shutdown.lock().unwrap() = true;
-        self.inner.queue.available.notify_all();
+        self.inner.queue.available.notify_all(&self.inner.clock);
+        // If this thread is clock-registered, stand aside so a virtual
+        // clock can keep advancing while the migrator drains out.
+        let _suspended = self.inner.clock.suspend();
         if let Some(m) = self.migrator.take() {
             let _ = m.join();
         }
@@ -1123,7 +1136,7 @@ impl HierInner {
 
     fn enqueue(&self, group: MigGroup) {
         self.queue.jobs.lock().unwrap().push_back(group);
-        self.queue.available.notify_one();
+        self.queue.available.notify_one(&self.clock);
     }
 
     /// Execute one migration job (called by the migrator thread, no
@@ -1256,6 +1269,7 @@ impl HierInner {
 }
 
 fn migrate_loop(inner: Arc<HierInner>) {
+    let _reg = inner.clock.enter();
     loop {
         let group = {
             let mut jobs = inner.queue.jobs.lock().unwrap();
@@ -1266,7 +1280,11 @@ fn migrate_loop(inner: Arc<HierInner>) {
                 if *inner.queue.shutdown.lock().unwrap() {
                     return;
                 }
-                jobs = inner.queue.available.wait(jobs).unwrap();
+                jobs = inner.queue.available.wait(
+                    &inner.clock,
+                    &inner.queue.jobs,
+                    jobs,
+                );
             }
         };
         let mut ok = true;
@@ -1313,7 +1331,7 @@ fn migrate_loop(inner: Arc<HierInner>) {
         let empty = jobs.is_empty();
         drop(jobs);
         if empty {
-            inner.queue.idle.notify_all();
+            inner.queue.idle.notify_all(&inner.clock);
         }
     }
 }

@@ -43,19 +43,22 @@ pub fn run_device(sim: &StorageSim, device: &str, cfg: &IorConfig)
     // Pacing-only probes: IOR measures the device's bandwidth
     // envelope; routing the probe through backing storage would cap
     // fast simulated devices at the *host's* disk speed instead of
-    // the modelled one (see StorageSim::probe_read).
+    // the modelled one (see StorageSim::probe_read).  Durations come
+    // from the sim's clock, so the protocol works unchanged in
+    // discrete-event time.
+    let clock = sim.clock().clone();
     let mut write_bw = Vec::new();
     let mut read_bw = Vec::new();
     for rep in 0..cfg.reps {
         sim.drop_caches(); // paper: caches dropped before the tests
-        let t0 = std::time::Instant::now();
+        let t0 = clock.now();
         sim.probe_write(device, cfg.file_bytes)?;
-        let w = mb_per_sec(cfg.file_bytes, t0.elapsed().as_secs_f64());
+        let w = mb_per_sec(cfg.file_bytes, clock.now() - t0);
 
         sim.drop_caches();
-        let t0 = std::time::Instant::now();
+        let t0 = clock.now();
         sim.probe_read(device, cfg.file_bytes)?;
-        let r = mb_per_sec(cfg.file_bytes, t0.elapsed().as_secs_f64());
+        let r = mb_per_sec(cfg.file_bytes, clock.now() - t0);
 
         if rep > 0 {
             // "The execution run is for warm up and the result is
@@ -82,12 +85,17 @@ pub fn run_all(sim: &StorageSim, cfg: &IorConfig) -> Result<Vec<IorRow>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::storage::clock::Clock;
     use crate::storage::device::DeviceModel;
+    use crate::storage::engine::QosConfig;
 
     #[test]
     fn measured_bandwidth_tracks_model() {
         // A 200 MB/s read / 100 MB/s write device, accelerated 4x,
-        // probed with 64 MB: measured must land within ~30 % of model.
+        // probed with 64 MB on a virtual clock: the measured bandwidth
+        // is the model's, exactly — each probe costs the bucket debt
+        // (bytes minus the burst credit) at the effective rate, and
+        // discrete-event time cannot be inflated by a loaded host.
         let dir = std::env::temp_dir()
             .join(format!("dlio-ior-test-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
@@ -101,18 +109,31 @@ mod tests {
             elevator: vec![(1, 1.0)],
             time_scale: 4.0,
         };
-        let sim = StorageSim::cold(dir, vec![model]).unwrap();
-        let cfg = IorConfig { file_bytes: 64_000_000, reps: 3 };
-        let row = run_device(&sim, "dev", &cfg).unwrap();
-        // At 4x time-scale the effective rates are 800/400 MB/s.
-        // Pacing-only probes land within ~5 % in isolation; allow 30 %
-        // because unit tests run concurrently and inflate sleeps.
-        let read_model = 200.0 * 4.0;
-        let write_model = 100.0 * 4.0;
-        assert!((row.max_read_mbs / read_model - 1.0).abs() < 0.30,
-                "read {} vs {}", row.max_read_mbs, read_model);
-        assert!((row.max_write_mbs / write_model - 1.0).abs() < 0.30,
-                "write {} vs {}", row.max_write_mbs, write_model);
+        let clock = Clock::virt();
+        let sim = StorageSim::cold_with_qos_clock(
+            dir,
+            vec![model],
+            QosConfig::default(),
+            clock,
+        )
+        .unwrap();
+        let bytes = 64_000_000u64;
+        let row = run_device(&sim, "dev",
+                             &IorConfig { file_bytes: bytes, reps: 3 })
+            .unwrap();
+        // Effective rates at 4x time-scale, and the buckets' burst
+        // credit: 2 ms of line rate clamped to [64 KiB, 1 MiB].
+        let rate_r = 200e6 * 4.0;
+        let rate_w = 100e6 * 4.0;
+        let burst_r = (rate_r * 0.002).clamp(65536.0, 1_048_576.0);
+        let burst_w = (rate_w * 0.002).clamp(65536.0, 1_048_576.0);
+        let expect_r = mb_per_sec(bytes, (bytes as f64 - burst_r) / rate_r);
+        let expect_w = mb_per_sec(bytes, (bytes as f64 - burst_w) / rate_w);
+        // Sub-µs slack only: per-chunk sleeps quantize to nanoseconds.
+        assert!((row.max_read_mbs / expect_r - 1.0).abs() < 1e-4,
+                "read {} vs {}", row.max_read_mbs, expect_r);
+        assert!((row.max_write_mbs / expect_w - 1.0).abs() < 1e-4,
+                "write {} vs {}", row.max_write_mbs, expect_w);
     }
 
     #[test]

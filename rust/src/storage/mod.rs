@@ -5,6 +5,7 @@
 //! files, reproducing the only surface the experiments observe: service
 //! time of reads/writes vs request size and concurrency.
 
+pub mod clock;
 pub mod device;
 pub mod engine;
 pub mod hierarchy;
@@ -14,6 +15,7 @@ pub mod policy;
 pub mod profiles;
 pub mod sim;
 
+pub use clock::{Clock, ClockSpec, SimCondvar, TimeSource};
 pub use device::{Device, DeviceModel, Dir, IoObserver, NullObserver};
 pub use engine::{
     with_origin, with_tier, AdaptiveQos, ChunkWriter, ClassStats,

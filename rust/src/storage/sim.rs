@@ -21,6 +21,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
+use super::clock::Clock;
 use super::device::{Device, DeviceModel, IoObserver, NullObserver};
 use super::engine::{
     ChunkWriter, IoClass, IoEngine, IoRequest, IoTicket, QosConfig,
@@ -191,6 +192,22 @@ impl StorageSim {
         observer: Arc<dyn IoObserver>,
         qos: QosConfig,
     ) -> Result<Self> {
+        Self::with_qos_clock(root, models, cache_capacity, observer, qos,
+                             Clock::wall())
+    }
+
+    /// Full constructor: explicit scheduler config *and* time source.
+    /// Every device, the engine, and all pacing run against `clock`;
+    /// pass [`Clock::virt`] to run the whole sim in discrete-event
+    /// time (sweep drivers do this by default).
+    pub fn with_qos_clock(
+        root: impl Into<PathBuf>,
+        models: Vec<DeviceModel>,
+        cache_capacity: u64,
+        observer: Arc<dyn IoObserver>,
+        qos: QosConfig,
+        clock: Clock,
+    ) -> Result<Self> {
         let root = root.into();
         let mut devices = HashMap::new();
         for m in models {
@@ -198,7 +215,11 @@ impl StorageSim {
                 .with_context(|| format!("mkdir device dir {}", m.name))?;
             devices.insert(
                 m.name.clone(),
-                Arc::new(Device::new(m, Arc::clone(&observer))),
+                Arc::new(Device::with_clock(
+                    m,
+                    Arc::clone(&observer),
+                    clock.clone(),
+                )),
             );
         }
         let engine = IoEngine::with_config(
@@ -227,6 +248,18 @@ impl StorageSim {
         qos: QosConfig,
     ) -> Result<Self> {
         Self::with_qos(root, models, 0, Arc::new(NullObserver), qos)
+    }
+
+    /// Convenience: no tracing, no cache, explicit scheduler config
+    /// and time source.
+    pub fn cold_with_qos_clock(
+        root: impl Into<PathBuf>,
+        models: Vec<DeviceModel>,
+        qos: QosConfig,
+        clock: Clock,
+    ) -> Result<Self> {
+        Self::with_qos_clock(root, models, 0, Arc::new(NullObserver), qos,
+                             clock)
     }
 
     pub fn device(&self, name: &str) -> Result<&Arc<Device>> {
@@ -272,6 +305,11 @@ impl StorageSim {
     /// The request-level I/O engine scheduling this sim's devices.
     pub fn engine(&self) -> &IoEngine {
         &self.engine
+    }
+
+    /// The time source every device of this sim paces against.
+    pub fn clock(&self) -> &Clock {
+        self.engine.clock()
     }
 
     /// Read a whole file through the device model (tf.read_file()).
@@ -759,10 +797,10 @@ mod tests {
         let dir = std::env::temp_dir()
             .join(format!("dlio-sim-test-warm-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
-        // Slow device (1 MB/s, unscaled) + big cache: the warm read
-        // must be far faster than the cold one.  Bounds are relative
-        // (warm vs cold) rather than absolute wall-clock, so a loaded
-        // CI host cannot flake the assertion.
+        // Slow device (1 MB/s, unscaled) + big cache, run on a virtual
+        // clock: modelled durations are exact, so the warm read costs
+        // precisely zero device time and the cold read costs precisely
+        // its pacing debt — no wall-clock tolerance needed.
         let model = DeviceModel {
             name: "slow".into(),
             read_bw: 1e6,
@@ -773,23 +811,34 @@ mod tests {
             elevator: vec![(1, 1.0)],
             time_scale: 1.0,
         };
-        let s = StorageSim::new(dir, vec![model], 1 << 30,
-                                Arc::new(crate::storage::device::NullObserver))
-            .unwrap();
+        let clock = Clock::virt();
+        let s = StorageSim::with_qos_clock(
+            dir,
+            vec![model],
+            1 << 30,
+            Arc::new(crate::storage::device::NullObserver),
+            QosConfig::default(),
+            clock.clone(),
+        )
+        .unwrap();
         let p = SimPath::new("slow", "f.bin");
         // write goes through write_bucket (fast) and caches the file
         s.write(&p, &vec![1u8; 200_000]).unwrap();
-        let t0 = std::time::Instant::now();
-        s.read(&p).unwrap(); // cache hit
-        let warm = t0.elapsed().as_secs_f64();
+        let t0 = clock.now();
+        s.read(&p).unwrap(); // cache hit: never touches the device
+        let warm = clock.now() - t0;
+        assert_eq!(warm, 0.0, "warm read consumed device time: {warm}");
         s.drop_caches();
-        let t0 = std::time::Instant::now();
-        s.read(&p).unwrap(); // cold: 200 KB at 1 MB/s ≈ 0.2 s
-        let cold = t0.elapsed().as_secs_f64();
-        // The cold read sleeps through ~0.14 s of modelled pacing
-        // (burst credit shaves ~64 KB) — a deterministic lower bound.
-        assert!(cold > 0.08, "cold read unpaced: {cold}");
-        assert!(warm < cold / 2.0, "warm {warm} !<< cold {cold}");
+        let t0 = clock.now();
+        s.read(&p).unwrap();
+        let cold = clock.now() - t0;
+        // 200 KB at 1 MB/s, minus the bucket's 64 KiB burst credit.
+        let expect = (200_000.0 - 65536.0) / 1e6;
+        // Sub-µs slack only: per-chunk sleeps quantize to nanoseconds.
+        assert!(
+            (cold - expect).abs() < 1e-6,
+            "cold read {cold} != modelled {expect}"
+        );
     }
 
     #[test]

@@ -29,15 +29,14 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 use std::path::Path;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::metrics::Table;
 use crate::storage::engine::DEFAULT_CHUNK;
 use crate::storage::{
-    profiles, Device, Dir, IoClass, IoEngine, IoRequest, IoTicket,
-    NullObserver, QosConfig,
+    profiles, Clock, ClockSpec, Device, Dir, IoClass, IoEngine, IoRequest,
+    IoTicket, NullObserver, QosConfig,
 };
 use crate::util::json::{obj, Json};
 
@@ -130,6 +129,10 @@ pub struct ReplayConfig {
     pub profile: Option<String>,
     /// Override the devices' simulation speed-up (default: recorded).
     pub time_scale: Option<f64>,
+    /// Time source for the replay engine.  `Virtual` runs the whole
+    /// replay in discrete-event time (same modelled durations, no
+    /// sleeping) — the default for `--sweep` matrices.
+    pub clock: ClockSpec,
 }
 
 impl Default for ReplayConfig {
@@ -139,13 +142,15 @@ impl Default for ReplayConfig {
             qos: QosConfig::default(),
             profile: None,
             time_scale: None,
+            clock: ClockSpec::Wall,
         }
     }
 }
 
 /// What a replay run produced.
 pub struct ReplayOutcome {
-    /// Wall seconds from first submission to last completion.
+    /// Clock seconds (wall or virtual, per [`ReplayConfig::clock`])
+    /// from first submission to last completion.
     pub wall_secs: f64,
     /// The replay's own event stream (same schema as the recording).
     pub replayed: Vec<TraceEvent>,
@@ -210,6 +215,7 @@ fn submit_probe(engine: &IoEngine, ev: &TraceEvent) -> Result<IoTicket> {
 fn replay_devices(
     manifest: &TraceManifest,
     cfg: &ReplayConfig,
+    clock: &Clock,
 ) -> Result<HashMap<String, Arc<Device>>> {
     if manifest.devices.is_empty() {
         bail!("trace manifest lists no devices");
@@ -240,7 +246,11 @@ fn replay_devices(
         }
         devices.insert(
             model.name.clone(),
-            Arc::new(Device::new(model, Arc::new(NullObserver))),
+            Arc::new(Device::with_clock(
+                model,
+                Arc::new(NullObserver),
+                clock.clone(),
+            )),
         );
     }
     Ok(devices)
@@ -248,13 +258,18 @@ fn replay_devices(
 
 /// Re-issue `trace` through a fresh engine per `cfg`.
 pub fn replay(trace: &Trace, cfg: &ReplayConfig) -> Result<ReplayOutcome> {
-    let devices = replay_devices(&trace.manifest, cfg)?;
+    let clock = cfg.clock.build();
+    let devices = replay_devices(&trace.manifest, cfg, &clock)?;
     let engine = IoEngine::with_config(&devices, DEFAULT_CHUNK, cfg.qos.clone());
     let sink = MemorySink::new();
     engine
         .set_observer(Arc::clone(&sink) as Arc<dyn crate::storage::EngineObserver>);
     let mut errors = 0u64;
-    let t0 = Instant::now();
+    // Register the driver: virtual time must not advance while this
+    // thread is mid-submission (it advances while we block on tickets
+    // or sleep out open-loop gaps).
+    let _reg = clock.enter();
+    let t0 = clock.now();
     match cfg.mode {
         ReplayMode::Closed => {
             let mut done: BinaryHeap<Reverse<PendingDone>> = BinaryHeap::new();
@@ -299,11 +314,9 @@ pub fn replay(trace: &Trace, cfg: &ReplayConfig) -> Result<ReplayOutcome> {
             let mut tickets = Vec::with_capacity(trace.events.len());
             for ev in &trace.events {
                 let target = (ev.submit_secs - base) / speed;
-                let elapsed = t0.elapsed().as_secs_f64();
+                let elapsed = clock.now() - t0;
                 if target > elapsed {
-                    std::thread::sleep(Duration::from_secs_f64(
-                        (target - elapsed).min(3600.0),
-                    ));
+                    clock.sleep_secs((target - elapsed).min(3600.0));
                 }
                 tickets.push(submit_probe(&engine, ev)?);
             }
@@ -314,7 +327,7 @@ pub fn replay(trace: &Trace, cfg: &ReplayConfig) -> Result<ReplayOutcome> {
             }
         }
     }
-    let wall_secs = t0.elapsed().as_secs_f64();
+    let wall_secs = clock.now() - t0;
     // Every ticket resolved, and events deliver before tickets do, so
     // the sink is complete.
     engine.clear_observer();
@@ -905,6 +918,39 @@ mod tests {
             0.005
         )
         .is_err());
+    }
+
+    #[test]
+    fn virtual_replay_is_byte_exact_and_deterministic() {
+        // The sweep default: closed-loop replay on a virtual clock.
+        // Byte totals match the recording exactly, and two runs of the
+        // same stream land on the same discrete-event makespan — time
+        // is computed, not measured, so nothing on the host can move
+        // it.
+        let trace = record_microbench("virt");
+        let cfg = ReplayConfig {
+            clock: ClockSpec::Virtual,
+            ..ReplayConfig::default()
+        };
+        let a = replay(&trace, &cfg).unwrap();
+        let b = replay(&trace, &cfg).unwrap();
+        assert_eq!(a.errors, 0);
+        let rec = trace.recorded_aggregates();
+        let rep = analyze::class_aggregates(&a.replayed);
+        for c in [IoClass::Ingest, IoClass::Checkpoint] {
+            assert_eq!(
+                rep[c.index()].bytes,
+                rec[c.index()].bytes,
+                "{c}: virtual replay diverged from the recording"
+            );
+        }
+        assert!(a.wall_secs > 0.0, "virtual makespan must be modelled");
+        assert!(
+            (a.wall_secs - b.wall_secs).abs() < 1e-9,
+            "virtual replays not deterministic: {} vs {}",
+            a.wall_secs,
+            b.wall_secs
+        );
     }
 
     #[test]
