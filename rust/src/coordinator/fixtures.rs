@@ -3,11 +3,14 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::config::Testbed;
 use crate::data::{generator, CorpusSpec, Manifest};
-use crate::storage::{IoObserver, NullObserver, StorageSim};
+use crate::storage::{
+    policy, profiles, IoObserver, NullObserver, StorageHierarchy,
+    StorageSim, TierKind,
+};
 
 /// Instantiate the testbed's storage sim (optionally traced).
 pub fn make_sim(testbed: &Testbed, observer: Option<Arc<dyn IoObserver>>)
@@ -61,6 +64,60 @@ pub fn ensure_corpus_on_devices(
         out.push(ensure_corpus(sim, dev, spec)?);
     }
     Ok(out)
+}
+
+/// A parsed `--device` value: a flat device name, or `hier:<preset>`
+/// routing a single-job run through the storage hierarchy (DESIGN.md
+/// §12) instead of straight at one device.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StorageTarget {
+    /// Plain device name ("ssd", "hdd", ...).
+    Flat(String),
+    /// Hierarchy preset name (`profiles::HIERARCHY_NAMES`).
+    Hier(String),
+}
+
+impl StorageTarget {
+    pub fn parse(raw: &str) -> StorageTarget {
+        match raw.strip_prefix("hier:") {
+            Some(p) => StorageTarget::Hier(p.to_string()),
+            None => StorageTarget::Flat(raw.to_string()),
+        }
+    }
+}
+
+/// Build a named hierarchy preset over `sim` (noop placement — the
+/// single-job CLI path characterizes tiering, not promotion) and
+/// return it with its bottom device tier's device name.  The corpus
+/// is homed there, so reads enter at the slow tier exactly like the
+/// tier-sweep cells and residency auto-registers on first access.
+pub fn build_hierarchy(
+    sim: &Arc<StorageSim>,
+    preset: &str,
+) -> Result<(Arc<StorageHierarchy>, String)> {
+    let spec = profiles::hierarchy_by_name(preset).ok_or_else(|| {
+        anyhow!(
+            "unknown hierarchy {preset:?} (valid: {})",
+            profiles::HIERARCHY_NAMES.join(", ")
+        )
+    })?;
+    let bottom = spec
+        .tiers
+        .iter()
+        .rev()
+        .find_map(|t| match &t.kind {
+            TierKind::Device(d) => Some(d.clone()),
+            _ => None,
+        })
+        .ok_or_else(|| {
+            anyhow!("hierarchy {preset:?} has no device tier")
+        })?;
+    let hier = Arc::new(StorageHierarchy::new(
+        Arc::clone(sim),
+        spec,
+        policy::by_name("noop")?,
+    )?);
+    Ok((hier, bottom))
 }
 
 #[cfg(test)]
@@ -132,5 +189,61 @@ mod tests {
         let m2 = ensure_corpus(&sim, "ssd", &spec).unwrap();
         assert_eq!(m1.len(), 5);
         assert_eq!(m2.len(), 8);
+    }
+
+    #[test]
+    fn storage_target_parses_flat_and_hier() {
+        assert_eq!(
+            StorageTarget::parse("ssd"),
+            StorageTarget::Flat("ssd".into())
+        );
+        assert_eq!(
+            StorageTarget::parse("hier:blackdog-bb"),
+            StorageTarget::Hier("blackdog-bb".into())
+        );
+    }
+
+    #[test]
+    fn hier_target_routes_reads_through_the_hierarchy() {
+        // Smoke test for the `hier:<preset>` CLI path: corpus homed
+        // on the preset's bottom device, reads served by the
+        // hierarchy (auto-registered residency).
+        let dir = std::env::temp_dir()
+            .join(format!("dlio-fix-hier-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut tb = Testbed::paper(1000.0);
+        tb.workdir = dir.to_string_lossy().into_owned();
+        let sim = make_sim(&tb, None).unwrap();
+        let err =
+            build_hierarchy(&sim, "floppy").unwrap_err().to_string();
+        assert!(
+            err.contains("blackdog-bb")
+                && err.contains("tegner-lustre+optane"),
+            "hierarchy error does not list valid presets: {err}"
+        );
+        let (hier, bottom) =
+            build_hierarchy(&sim, "blackdog-bb").unwrap();
+        assert_eq!(bottom, "hdd", "bb preset drains to hdd");
+        let spec = CorpusSpec {
+            name: "hier-smoke".into(),
+            num_files: 8,
+            num_classes: 2,
+            src_size: 32,
+            median_bytes: 2048,
+            sigma: 0.2,
+            corrupt_frac: 0.0,
+            seed: 3,
+        };
+        let m = ensure_corpus(&sim, &bottom, &spec).unwrap();
+        sim.drop_caches();
+        let ds = crate::pipeline::sharded_reader_hier(
+            m.samples.clone(),
+            Arc::clone(&hier),
+            2,
+            2,
+        );
+        let out = crate::pipeline::collect(ds).unwrap();
+        assert_eq!(out.len(), 8);
+        assert_eq!(hier.total_reads(), 8);
     }
 }

@@ -1,0 +1,587 @@
+//! `dlio fleet-sweep` — multi-tenant isolation characterization.
+//!
+//! The paper characterizes one training job's I/O interference; the
+//! shared-cluster regime (many concurrent jobs contending for one
+//! storage substrate) is the ROADMAP north-star.  This driver runs N
+//! concurrent synthetic tenant jobs — mixed ingest plus periodic
+//! checkpoint bursts — against one shared engine/device (the
+//! hierarchy's bottleneck tier) under the virtual clock, across a
+//! (tenant count × share scheme × scenario) matrix:
+//!
+//! * schemes: `equal` (every tenant share 1), `weighted` (tenant i
+//!   gets share i+1), `blind` (no tenant config — the flat class-keyed
+//!   scheduler, the fairness baseline)
+//! * scenarios: `uniform` (identical jobs), `noisy` (tenant 0 issues
+//!   `noisy_factor`× the ingest load with an open request window),
+//!   `churn` (odd tenants depart halfway — work conservation), `storm`
+//!   (correlated checkpoint bursts)
+//!
+//! Each cell emits one CSV/JSON row **per tenant** (exact ingest p99
+//! from the event stream, not histogram buckets) plus the cell-level
+//! Jain fairness index over per-tenant ingest p99 and goodput.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Barrier};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::Testbed;
+use crate::storage::engine::DEFAULT_CHUNK;
+use crate::storage::{
+    with_tenant, ClockSpec, Device, IoClass, IoEngine, IoRequest, IoTicket,
+    NullObserver, QosConfig, TenantId, TenantQos,
+};
+use crate::trace::MemorySink;
+use crate::util::json::{obj, to_string, Json};
+
+/// Valid share schemes, in canonical order (error messages quote it).
+pub const SCHEMES: [&str; 3] = ["equal", "weighted", "blind"];
+/// Valid scenarios, in canonical order.
+pub const SCENARIOS: [&str; 4] = ["uniform", "noisy", "churn", "storm"];
+
+/// Sweep matrix + per-job workload shape.
+#[derive(Debug, Clone)]
+pub struct FleetSweepConfig {
+    /// Shared device profile the fleet contends on.
+    pub device: String,
+    /// Fleet sizes (one cell axis).
+    pub tenant_counts: Vec<usize>,
+    /// Share schemes (see [`SCHEMES`]).
+    pub schemes: Vec<String>,
+    /// Contention scenarios (see [`SCENARIOS`]).
+    pub scenarios: Vec<String>,
+    /// Ingest probe reads per tenant job.
+    pub reads_per_job: usize,
+    /// Bytes per ingest read.
+    pub read_bytes: u64,
+    /// Checkpoint burst every N reads (0 = no checkpoints).
+    pub ckpt_every: usize,
+    /// Checkpoint writes per burst.
+    pub ckpt_writes: usize,
+    /// Bytes per checkpoint write.
+    pub ckpt_bytes: u64,
+    /// Load multiplier for the noisy tenant.
+    pub noisy_factor: usize,
+    /// Device simulation speed-up.
+    pub time_scale: f64,
+    /// Time source per cell (virtual: the whole matrix is modelled).
+    pub clock: ClockSpec,
+}
+
+impl FleetSweepConfig {
+    /// Full matrix: 3 schemes × 4 scenarios × fleets of 2 and 4 —
+    /// 24 cells, 72 per-tenant rows.
+    pub fn standard(time_scale: f64) -> FleetSweepConfig {
+        FleetSweepConfig {
+            device: "hdd".into(),
+            tenant_counts: vec![2, 4],
+            schemes: SCHEMES.iter().map(|s| s.to_string()).collect(),
+            scenarios: SCENARIOS.iter().map(|s| s.to_string()).collect(),
+            reads_per_job: 48,
+            read_bytes: 64 * 1024,
+            ckpt_every: 16,
+            ckpt_writes: 2,
+            ckpt_bytes: 1_000_000,
+            noisy_factor: 10,
+            time_scale,
+            clock: ClockSpec::Virtual,
+        }
+    }
+
+    /// Tiny CI matrix: 2 schemes × 2 scenarios × one fleet of 2 —
+    /// 4 cells, 8 rows, seconds of wall time even on a slow host.
+    pub fn smoke(time_scale: f64) -> FleetSweepConfig {
+        FleetSweepConfig {
+            device: "ssd".into(),
+            tenant_counts: vec![2],
+            schemes: vec!["equal".into(), "blind".into()],
+            scenarios: vec!["uniform".into(), "noisy".into()],
+            reads_per_job: 12,
+            read_bytes: 16 * 1024,
+            ckpt_every: 6,
+            ckpt_writes: 1,
+            ckpt_bytes: 200_000,
+            noisy_factor: 4,
+            time_scale,
+            clock: ClockSpec::Virtual,
+        }
+    }
+}
+
+/// One tenant's slice of one sweep cell.
+#[derive(Debug, Clone)]
+pub struct FleetSweepRow {
+    pub scheme: String,
+    pub scenario: String,
+    /// Fleet size of the cell this row belongs to.
+    pub tenants: usize,
+    pub device: String,
+    pub tenant: String,
+    /// Outer-DRR share this tenant ran under (1 under `blind`).
+    pub share: u32,
+    pub ingest_completed: u64,
+    /// Exact per-tenant ingest p99 queue wait (clock ms, computed from
+    /// the sorted event stream — no histogram quantization).
+    pub ingest_p99_ms: f64,
+    /// Per-tenant ingest goodput over the cell makespan, MB/s.
+    pub goodput_mbps: f64,
+    pub ckpt_completed: u64,
+    /// Cell makespan, clock seconds (same value on every row of the
+    /// cell).
+    pub elapsed_secs: f64,
+    /// Jain's fairness index over the cell's per-tenant ingest p99.
+    pub jain_p99: f64,
+    /// Jain's fairness index over the cell's per-tenant goodput.
+    pub jain_goodput: f64,
+}
+
+/// Jain's fairness index `(Σx)² / (n·Σx²)`: 1.0 when all tenants see
+/// identical values, → 1/n as one tenant dominates.  An all-zero (or
+/// empty) vector is perfectly fair by convention.
+pub fn jain(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sq <= 0.0 {
+        return 1.0;
+    }
+    sum * sum / (xs.len() as f64 * sq)
+}
+
+/// Exact quantile of an ascending-sorted sample (nearest-rank).
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).ceil() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// CSV column order — one place, so header and rows cannot drift.
+const CSV_COLUMNS: [&str; 13] = [
+    "scheme",
+    "scenario",
+    "tenants",
+    "device",
+    "tenant",
+    "share",
+    "ingest_completed",
+    "ingest_p99_ms",
+    "goodput_mbps",
+    "ckpt_completed",
+    "elapsed_secs",
+    "jain_p99",
+    "jain_goodput",
+];
+
+impl FleetSweepRow {
+    fn csv_row(&self) -> String {
+        [
+            self.scheme.clone(),
+            self.scenario.clone(),
+            self.tenants.to_string(),
+            self.device.clone(),
+            self.tenant.clone(),
+            self.share.to_string(),
+            self.ingest_completed.to_string(),
+            format!("{:.4}", self.ingest_p99_ms),
+            format!("{:.3}", self.goodput_mbps),
+            self.ckpt_completed.to_string(),
+            format!("{:.4}", self.elapsed_secs),
+            format!("{:.4}", self.jain_p99),
+            format!("{:.4}", self.jain_goodput),
+        ]
+        .join(",")
+    }
+
+    fn json_value(&self) -> Json {
+        obj(vec![
+            ("scheme", Json::Str(self.scheme.clone())),
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("tenants", Json::Num(self.tenants as f64)),
+            ("device", Json::Str(self.device.clone())),
+            ("tenant", Json::Str(self.tenant.clone())),
+            ("share", Json::Num(self.share as f64)),
+            ("ingest_completed", Json::Num(self.ingest_completed as f64)),
+            ("ingest_p99_ms", Json::Num(self.ingest_p99_ms)),
+            ("goodput_mbps", Json::Num(self.goodput_mbps)),
+            ("ckpt_completed", Json::Num(self.ckpt_completed as f64)),
+            ("elapsed_secs", Json::Num(self.elapsed_secs)),
+            ("jain_p99", Json::Num(self.jain_p99)),
+            ("jain_goodput", Json::Num(self.jain_goodput)),
+        ])
+    }
+}
+
+/// Render rows as CSV (header + one line per tenant per cell).
+pub fn to_csv(rows: &[FleetSweepRow]) -> String {
+    let mut out = CSV_COLUMNS.join(",");
+    out.push('\n');
+    for r in rows {
+        out.push_str(&r.csv_row());
+        out.push('\n');
+    }
+    out
+}
+
+/// Render rows as a JSON array (one object per tenant per cell).
+pub fn to_json(rows: &[FleetSweepRow]) -> String {
+    to_string(&Json::Arr(rows.iter().map(|r| r.json_value()).collect()))
+}
+
+/// One tenant job's plan for a cell (scenario already applied).
+#[derive(Debug, Clone)]
+struct JobPlan {
+    reads: usize,
+    /// In-flight ingest window (1 = closed loop; the noisy tenant
+    /// keeps an open window — the oversubscription itself).
+    window: usize,
+    read_bytes: u64,
+    ckpt_every: usize,
+    ckpt_writes: usize,
+    ckpt_bytes: u64,
+}
+
+impl JobPlan {
+    fn new(cfg: &FleetSweepConfig, scenario: &str, idx: usize) -> JobPlan {
+        let mut plan = JobPlan {
+            reads: cfg.reads_per_job.max(1),
+            window: 1,
+            read_bytes: cfg.read_bytes.max(1),
+            ckpt_every: cfg.ckpt_every,
+            ckpt_writes: cfg.ckpt_writes,
+            ckpt_bytes: cfg.ckpt_bytes.max(1),
+        };
+        match scenario {
+            "noisy" if idx == 0 => {
+                plan.reads *= cfg.noisy_factor.max(1);
+                plan.window = 4;
+            }
+            "churn" if idx % 2 == 1 => {
+                // Departing tenants: half the work, then idle.  Work
+                // conservation means the survivors absorb the slack.
+                plan.reads = (plan.reads / 2).max(1);
+            }
+            "storm" => {
+                // Correlated bursts: every tenant's checkpoint arrives
+                // in lockstep, 4× the writes.
+                plan.ckpt_writes *= 4;
+            }
+            _ => {}
+        }
+        plan
+    }
+}
+
+/// Scheduler config for a scheme over `names` (validated upfront).
+fn qos_for_scheme(scheme: &str, names: &[String]) -> Result<QosConfig> {
+    match scheme {
+        // Every tenant (and untagged traffic) at the default share.
+        "equal" => Ok(QosConfig::default().with_tenants(TenantQos::default())),
+        "weighted" => {
+            let mut t = TenantQos::default();
+            for (i, name) in names.iter().enumerate() {
+                t = t.with_share(name, (i + 1) as u32);
+            }
+            Ok(QosConfig::default().with_tenants(t))
+        }
+        // No tenant table: the flat class-keyed scheduler.
+        "blind" => Ok(QosConfig::default()),
+        other => Err(anyhow!(
+            "unknown share scheme {other:?} (valid: {})",
+            SCHEMES.join(", ")
+        )),
+    }
+}
+
+/// Device model for the configured profile name, at the sweep's time
+/// scale.
+fn device_model(cfg: &FleetSweepConfig) -> Result<crate::storage::DeviceModel> {
+    Testbed::paper(cfg.time_scale)
+        .devices
+        .into_iter()
+        .find(|m| m.name == cfg.device)
+        .ok_or_else(|| anyhow!("unknown device {:?}", cfg.device))
+}
+
+/// Run the full matrix; rows come back in (scheme, scenario, fleet
+/// size, tenant index) iteration order — `tenants` rows per cell.
+pub fn run(cfg: &FleetSweepConfig) -> Result<Vec<FleetSweepRow>> {
+    // Validate the whole matrix before running the first cell.
+    for s in &cfg.schemes {
+        qos_for_scheme(s, &[])?;
+    }
+    for s in &cfg.scenarios {
+        if !SCENARIOS.contains(&s.as_str()) {
+            bail!(
+                "unknown scenario {s:?} (valid: {})",
+                SCENARIOS.join(", ")
+            );
+        }
+    }
+    if cfg.tenant_counts.iter().any(|&n| n == 0) {
+        bail!("fleet size must be at least 1");
+    }
+    let mut rows = Vec::new();
+    for scheme in &cfg.schemes {
+        for scenario in &cfg.scenarios {
+            for &n in &cfg.tenant_counts {
+                rows.extend(run_cell(cfg, scheme, scenario, n)?);
+            }
+        }
+    }
+    Ok(rows)
+}
+
+fn run_one_job(
+    engine: &IoEngine,
+    device: &str,
+    plan: &JobPlan,
+) -> Result<()> {
+    let mut inflight: VecDeque<IoTicket> = VecDeque::new();
+    let mut ckpts: Vec<IoTicket> = Vec::new();
+    for i in 0..plan.reads {
+        while inflight.len() >= plan.window.max(1) {
+            inflight
+                .pop_front()
+                .expect("window is nonempty")
+                .wait()
+                .context("fleet ingest read failed")?;
+        }
+        inflight.push_back(engine.submit(IoRequest::ProbeRead {
+            device: device.to_string(),
+            bytes: plan.read_bytes,
+        })?);
+        if plan.ckpt_every > 0 && (i + 1) % plan.ckpt_every == 0 {
+            for _ in 0..plan.ckpt_writes {
+                ckpts.push(engine.submit(IoRequest::ProbeWrite {
+                    device: device.to_string(),
+                    bytes: plan.ckpt_bytes,
+                })?);
+            }
+        }
+    }
+    for t in inflight {
+        t.wait().context("fleet ingest read failed")?;
+    }
+    for t in ckpts {
+        t.wait().context("fleet checkpoint write failed")?;
+    }
+    Ok(())
+}
+
+fn run_cell(
+    cfg: &FleetSweepConfig,
+    scheme: &str,
+    scenario: &str,
+    n: usize,
+) -> Result<Vec<FleetSweepRow>> {
+    let names: Vec<String> = (0..n).map(|i| format!("t{i}")).collect();
+    let qos = qos_for_scheme(scheme, &names)?;
+    let shares: Vec<u32> = names
+        .iter()
+        .map(|name| {
+            qos.tenants.as_ref().map_or(1, |t| t.share_for(name))
+        })
+        .collect();
+    let clock = cfg.clock.build();
+    let model = device_model(cfg)?;
+    let mut devices = HashMap::new();
+    devices.insert(
+        model.name.clone(),
+        Arc::new(Device::with_clock(
+            model,
+            Arc::new(NullObserver),
+            clock.clone(),
+        )),
+    );
+    let engine =
+        Arc::new(IoEngine::with_config(&devices, DEFAULT_CHUNK, qos));
+    let sink = MemorySink::new();
+    engine.set_observer(
+        Arc::clone(&sink) as Arc<dyn crate::storage::EngineObserver>
+    );
+
+    // Register-then-barrier: every job registers with the clock before
+    // any job submits, so virtual time cannot advance while a late
+    // thread is still spawning (the clock-test idiom — without it the
+    // jobs' start order would depend on the host scheduler).
+    let barrier = Arc::new(Barrier::new(n));
+    let t0 = clock.now();
+    let handles: Vec<_> = names
+        .iter()
+        .enumerate()
+        .map(|(i, name)| {
+            let plan = JobPlan::new(cfg, scenario, i);
+            let engine = Arc::clone(&engine);
+            let clock = clock.clone();
+            let barrier = Arc::clone(&barrier);
+            let tenant = TenantId::new(name);
+            let device = cfg.device.clone();
+            std::thread::Builder::new()
+                .name(format!("fleet-{name}"))
+                .spawn(move || -> Result<()> {
+                    let _reg = clock.enter();
+                    barrier.wait();
+                    with_tenant(&tenant, || {
+                        run_one_job(&engine, &device, &plan)
+                    })
+                })
+                .context("spawn fleet job")
+        })
+        .collect::<Result<_>>()?;
+    for h in handles {
+        h.join().map_err(|_| anyhow!("fleet job panicked"))??;
+    }
+    let elapsed = (clock.now() - t0).max(1e-9);
+    engine.clear_observer();
+
+    // Per-tenant slices of the event stream: exact p99 from the sorted
+    // queue waits (histograms would quantize 2× per log2 bucket).
+    let events = sink.events();
+    let mut rows = Vec::with_capacity(n);
+    let mut p99s = Vec::with_capacity(n);
+    let mut goodputs = Vec::with_capacity(n);
+    for (i, name) in names.iter().enumerate() {
+        let mut queues: Vec<f64> = Vec::new();
+        let mut bytes = 0u64;
+        let mut completed = 0u64;
+        let mut ckpt = 0u64;
+        for e in events.iter().filter(|e| &e.tenant == name) {
+            match e.class {
+                IoClass::Ingest => {
+                    completed += 1;
+                    bytes += e.bytes;
+                    queues.push(e.queue_secs);
+                }
+                IoClass::Checkpoint => ckpt += 1,
+                _ => {}
+            }
+        }
+        queues.sort_by(f64::total_cmp);
+        let p99 = percentile(&queues, 0.99);
+        let goodput = bytes as f64 / elapsed / 1e6;
+        p99s.push(p99);
+        goodputs.push(goodput);
+        rows.push(FleetSweepRow {
+            scheme: scheme.to_string(),
+            scenario: scenario.to_string(),
+            tenants: n,
+            device: cfg.device.clone(),
+            tenant: name.clone(),
+            share: shares[i],
+            ingest_completed: completed,
+            ingest_p99_ms: p99 * 1e3,
+            goodput_mbps: goodput,
+            ckpt_completed: ckpt,
+            elapsed_secs: elapsed,
+            jain_p99: 0.0,
+            jain_goodput: 0.0,
+        });
+    }
+    let (jp, jg) = (jain(&p99s), jain(&goodputs));
+    for r in &mut rows {
+        r.jain_p99 = jp;
+        r.jain_goodput = jg;
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> FleetSweepConfig {
+        let mut cfg = FleetSweepConfig::smoke(1000.0);
+        cfg.reads_per_job = 8;
+        cfg.ckpt_every = 4;
+        cfg
+    }
+
+    #[test]
+    fn jain_index_brackets() {
+        assert!((jain(&[]) - 1.0).abs() < 1e-12);
+        assert!((jain(&[0.0, 0.0]) - 1.0).abs() < 1e-12);
+        assert!((jain(&[3.0, 3.0, 3.0]) - 1.0).abs() < 1e-12);
+        // One tenant hogging everything → 1/n.
+        assert!((jain(&[1.0, 0.0, 0.0, 0.0]) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sweep_emits_one_row_per_tenant_per_cell() {
+        let cfg = tiny_cfg();
+        let rows = run(&cfg).unwrap();
+        // 2 schemes × 2 scenarios × fleet of 2 = 4 cells, 8 rows.
+        assert_eq!(rows.len(), 8);
+        for r in &rows {
+            assert!(r.elapsed_secs > 0.0);
+            assert!(r.jain_p99 > 0.0 && r.jain_p99 <= 1.0 + 1e-9);
+            assert!(r.jain_goodput > 0.0 && r.jain_goodput <= 1.0 + 1e-9);
+            let expected = if r.scenario == "noisy" && r.tenant == "t0" {
+                cfg.reads_per_job as u64 * cfg.noisy_factor as u64
+            } else {
+                cfg.reads_per_job as u64
+            };
+            assert_eq!(
+                r.ingest_completed, expected,
+                "{}/{}/{}: every submitted read completes",
+                r.scheme, r.scenario, r.tenant
+            );
+            // reads_per_job 8 / ckpt_every 4 = 2 bursts × 1 write.
+            if !(r.scenario == "noisy" && r.tenant == "t0") {
+                assert_eq!(r.ckpt_completed, 2);
+            }
+        }
+        // Identical jobs under equal shares: goodput is near-even.
+        let uniform = rows
+            .iter()
+            .find(|r| r.scheme == "equal" && r.scenario == "uniform")
+            .unwrap();
+        assert!(
+            uniform.jain_goodput > 0.8,
+            "equal/uniform jain_goodput {}",
+            uniform.jain_goodput
+        );
+        // CSV: header + one line per row, constant column count.
+        let csv = to_csv(&rows);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 9);
+        let ncols = lines[0].split(',').count();
+        assert_eq!(ncols, CSV_COLUMNS.len());
+        for l in &lines {
+            assert_eq!(l.split(',').count(), ncols, "ragged CSV: {l}");
+        }
+        // JSON round-trips through the in-repo parser.
+        let parsed = Json::parse(&to_json(&rows)).unwrap();
+        match parsed {
+            Json::Arr(objs) => {
+                assert_eq!(objs.len(), 8);
+                for o in objs {
+                    assert!(o.get("tenant").and_then(Json::as_str).is_some());
+                    assert!(o.get("jain_goodput").is_some());
+                }
+            }
+            other => panic!("expected a JSON array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_scheme_and_scenario_are_rejected_with_valid_names() {
+        let mut cfg = tiny_cfg();
+        cfg.schemes = vec!["banana".into()];
+        let err = run(&cfg).unwrap_err().to_string();
+        assert!(
+            err.contains("equal") && err.contains("blind"),
+            "scheme error does not list valid names: {err}"
+        );
+        let mut cfg = tiny_cfg();
+        cfg.scenarios = vec!["quiet".into()];
+        let err = run(&cfg).unwrap_err().to_string();
+        assert!(
+            err.contains("uniform") && err.contains("storm"),
+            "scenario error does not list valid names: {err}"
+        );
+    }
+}

@@ -13,10 +13,11 @@ use crate::config::MicrobenchConfig;
 use crate::data::manifest::{Manifest, Sample};
 use crate::metrics::Timer;
 use crate::pipeline::{
-    collect, from_manifest, sharded_reader, Dataset, DatasetExt,
+    collect, from_manifest, sharded_reader, sharded_reader_hier, Dataset,
+    DatasetExt,
 };
 use crate::runtime::Runtime;
-use crate::storage::StorageSim;
+use crate::storage::{StorageHierarchy, StorageSim};
 use crate::util::Rng;
 
 use super::workload::{preprocess_fn, preprocess_loaded_fn, read_only_fn};
@@ -147,6 +148,68 @@ pub fn run(
             bytes += batch.iter().map(|r| r.bytes.len() as u64).sum::<u64>();
         }
         dropped += counter.load(std::sync::atomic::Ordering::Relaxed);
+    }
+
+    Ok(MicrobenchResult {
+        images,
+        bytes,
+        elapsed_secs: timer.secs(),
+        dropped,
+    })
+}
+
+/// Run the micro-benchmark with reads routed through a storage
+/// hierarchy (`--device hier:<preset>`) instead of straight at one
+/// device.  Hierarchy routing only exists on the engine-backed
+/// sharded source, so a readahead of at least 1 is always in force
+/// here (the blocking per-thread read path has no tier seam).
+pub fn run_hier(
+    hier: Arc<StorageHierarchy>,
+    rt: &Runtime,
+    manifest: &Manifest,
+    cfg: &MicrobenchConfig,
+    seed: u64,
+) -> Result<MicrobenchResult> {
+    let total_images = cfg.batch * cfg.iterations;
+    let m = manifest.truncated(total_images.min(manifest.len()));
+    let shuffle_buf = m.len().max(1);
+    let samples: Vec<Sample> =
+        collect(from_manifest(&m).shuffle(shuffle_buf, Rng::new(seed)))?;
+    let shards = cfg.shards.max(1);
+    let readahead = cfg.effective_readahead().max(1);
+    let src = sharded_reader_hier(samples, hier, shards, readahead);
+
+    let mut images = 0u64;
+    let mut bytes = 0u64;
+    let dropped;
+    let timer;
+    if cfg.preprocess {
+        let f =
+            preprocess_loaded_fn(rt, m.src_size as usize, cfg.out_size)?;
+        let ds = src
+            .parallel_map_ahead(cfg.threads, readahead * shards, f)
+            .ignore_errors();
+        let counter = ds.dropped_counter();
+        let mut ds = ds.batch(cfg.batch, false).take(cfg.iterations);
+        timer = Timer::start();
+        while let Some(batch) = ds.next() {
+            let batch = batch?;
+            images += batch.len() as u64;
+            bytes += batch.iter().map(|p| p.bytes_read).sum::<u64>();
+        }
+        dropped = counter.load(std::sync::atomic::Ordering::Relaxed);
+    } else {
+        let ds = src.ignore_errors();
+        let counter = ds.dropped_counter();
+        let mut ds = ds.batch(cfg.batch, false).take(cfg.iterations);
+        timer = Timer::start();
+        while let Some(batch) = ds.next() {
+            let batch = batch?;
+            images += batch.len() as u64;
+            bytes +=
+                batch.iter().map(|ls| ls.bytes.len() as u64).sum::<u64>();
+        }
+        dropped = counter.load(std::sync::atomic::Ordering::Relaxed);
     }
 
     Ok(MicrobenchResult {

@@ -10,18 +10,21 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use crate::checkpoint::{BurstBuffer, Saver};
-use crate::config::{CheckpointTarget, CkptStudyConfig, MiniAppConfig};
+use crate::config::{
+    CheckpointTarget, CkptStudyConfig, MiniAppConfig, DEFAULT_SHARD_WINDOW,
+};
 use crate::data::manifest::Manifest;
 use crate::metrics::Timer;
 use crate::model::Trainer;
 use crate::pipeline::{
-    from_manifest, Dataset, DatasetExt, ImageBatch,
+    collect, from_manifest, sharded_reader_hier, Dataset, DatasetExt,
+    ImageBatch,
 };
 use crate::runtime::Runtime;
-use crate::storage::StorageSim;
+use crate::storage::{StorageHierarchy, StorageSim};
 use crate::util::Rng;
 
-use super::workload::preprocess_fn;
+use super::workload::{preprocess_fn, preprocess_loaded_fn};
 
 /// Outcome of one mini-app run.
 #[derive(Debug, Clone)]
@@ -72,6 +75,90 @@ pub fn input_pipeline(
         })
         .prefetch(cfg.prefetch);
     Ok(ds)
+}
+
+/// Hierarchy-routed variant of [`input_pipeline`]: file reads go
+/// through a storage hierarchy via the engine-backed sharded source
+/// (whichever tier holds a sample serves it, and the placement policy
+/// sees every access), then decode/assemble/prefetch as usual.
+pub fn input_pipeline_hier(
+    hier: Arc<StorageHierarchy>,
+    rt: &Runtime,
+    manifest: &Manifest,
+    cfg: &MiniAppConfig,
+) -> Result<crate::pipeline::prefetch::Prefetch<ImageBatch>> {
+    let prof = rt.meta().profile(&cfg.profile)?;
+    let num_classes = manifest.num_classes;
+    let f = preprocess_loaded_fn(
+        rt,
+        manifest.src_size as usize,
+        prof.input_size,
+    )?;
+    // The shuffle buffer covers the whole list, so materializing the
+    // shuffled order up front is semantics-preserving (the sharded
+    // source needs a concrete sample list).
+    let samples = collect(
+        from_manifest(manifest)
+            .shuffle(manifest.len().max(1), Rng::new(cfg.seed)),
+    )?;
+    let shards = cfg.threads.max(1);
+    let window = DEFAULT_SHARD_WINDOW;
+    let ds = sharded_reader_hier(samples, hier, shards, window)
+        .parallel_map_ahead(cfg.threads, window * shards, f)
+        .ignore_errors()
+        .batch(cfg.batch, true)
+        .parallel_map(1, move |samples| {
+            ImageBatch::assemble(samples, num_classes)
+        })
+        .prefetch(cfg.prefetch);
+    Ok(ds)
+}
+
+/// Run the mini-application with ingest routed through a storage
+/// hierarchy (`dlio train --device hier:<preset>`), no checkpointing.
+pub fn run_hier(
+    hier: Arc<StorageHierarchy>,
+    rt: &Runtime,
+    manifest: &Manifest,
+    cfg: &MiniAppConfig,
+) -> Result<MiniAppResult> {
+    if manifest.len() < cfg.batch {
+        return Err(anyhow!(
+            "corpus of {} images cannot fill a batch of {}",
+            manifest.len(), cfg.batch
+        ));
+    }
+    let mut trainer = Trainer::new(rt, &cfg.profile, cfg.batch, cfg.seed)?;
+    let mut ds = input_pipeline_hier(hier, rt, manifest, cfg)?;
+
+    let mut result = MiniAppResult {
+        steps: 0,
+        images: 0,
+        total_secs: 0.0,
+        ingest_wait_secs: 0.0,
+        compute_secs: 0.0,
+        ckpt_secs: 0.0,
+        ckpt_durations: Vec::new(),
+        losses: Vec::new(),
+    };
+    let total = Timer::start();
+    for _ in 0..cfg.iterations {
+        let wait = Timer::start();
+        let batch = match ds.next() {
+            None => break, // corpus exhausted (one-epoch runs)
+            Some(b) => b?,
+        };
+        result.ingest_wait_secs += wait.secs();
+
+        let compute = Timer::start();
+        let loss = trainer.step(&batch)?;
+        result.compute_secs += compute.secs();
+        result.losses.push(loss);
+        result.steps += 1;
+        result.images += batch.batch as u64;
+    }
+    result.total_secs = total.secs();
+    Ok(result)
 }
 
 /// Run the mini-application without checkpointing.

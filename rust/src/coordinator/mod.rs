@@ -3,6 +3,7 @@
 //! `dlio` binary exposes them as subcommands.
 
 pub mod fixtures;
+pub mod fleet_sweep;
 pub mod microbench;
 pub mod miniapp;
 pub mod qos_sweep;
@@ -10,7 +11,10 @@ pub mod tier_sweep;
 pub mod trace_record;
 pub mod workload;
 
-pub use fixtures::{ensure_corpus, make_sim};
+pub use fixtures::{
+    build_hierarchy, ensure_corpus, make_sim, StorageTarget,
+};
+pub use fleet_sweep::{FleetSweepConfig, FleetSweepRow};
 pub use microbench::MicrobenchResult;
 pub use miniapp::MiniAppResult;
 pub use qos_sweep::{QosSweepCell, QosSweepConfig};

@@ -5,11 +5,11 @@
 //! ```text
 //! dlio ior         [--size-mb 512] [--reps 6] [--time-scale 8]
 //! dlio gen-corpus  [--corpus imagenet|caltech101] [--files N] [--device D]
-//! dlio microbench  [--device D] [--threads N] [--batch 64]
+//! dlio microbench  [--device D|hier:P] [--threads N] [--batch 64]
 //!                  [--iterations N] [--no-preprocess] [--readahead N]
 //!                  [--shards N] [--engine-stats]
-//! dlio train       [--device D] [--threads N] [--batch 64] [--prefetch 1]
-//!                  [--iterations N] [--profile micro|mini]
+//! dlio train       [--device D|hier:P] [--threads N] [--batch 64]
+//!                  [--prefetch 1] [--iterations N] [--profile micro|mini]
 //! dlio ckpt-study  [--target none|hdd|ssd|optane|bb:optane:hdd]
 //!                  [--interval 5] [--iterations 20]
 //! dlio qos-sweep   [--smoke] [--modes fifo,static,adaptive]
@@ -19,6 +19,9 @@
 //!                  [--policies noop,lru,freq] [--workloads hot,ckpt]
 //!                  [--tier0-cap-kb N] [--format csv|json]
 //!                  [--clock wall|virtual]
+//! dlio fleet-sweep [--smoke] [--tenants 2,4] [--schemes equal,..]
+//!                  [--scenarios uniform,noisy,churn,storm]
+//!                  [--format csv|json] [--clock wall|virtual]
 //! dlio trace       [--device D] [--prefetch 0|1] ... (dstat CSV to stdout)
 //! dlio trace-record [microbench|miniapp] [--smoke] [--out FILE]
 //! dlio trace-replay <file> [--profile P] [--qos fifo|static|adaptive]
@@ -41,8 +44,8 @@ use dlio::config::{
     CkptStudyConfig, MicrobenchConfig, MiniAppConfig, Testbed,
 };
 use dlio::coordinator::{
-    ensure_corpus, make_sim, microbench, miniapp, qos_sweep, tier_sweep,
-    trace_record,
+    build_hierarchy, ensure_corpus, fleet_sweep, make_sim, microbench,
+    miniapp, qos_sweep, tier_sweep, trace_record, StorageTarget,
 };
 use dlio::data::CorpusSpec;
 use dlio::metrics::Table;
@@ -73,6 +76,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "ckpt-study" => cmd_ckpt_study(args),
         "qos-sweep" => cmd_qos_sweep(args),
         "tier-sweep" => cmd_tier_sweep(args),
+        "fleet-sweep" => cmd_fleet_sweep(args),
         "trace" => cmd_trace(args),
         "trace-record" => cmd_trace_record(args),
         "trace-replay" => cmd_trace_replay(args),
@@ -107,6 +111,13 @@ dlio — Characterizing Deep-Learning I/O Workloads (PDSW-DISCS'18) repro
                              per-tier hit/migration rows, CSV or JSON
                              ([--smoke] [--hierarchies A,B] [--policies
                               noop,lru,freq] [--workloads hot,ckpt])
+  dlio fleet-sweep           N concurrent tenant jobs on one device:
+                             (tenants x share scheme x scenario) matrix
+                             -> per-tenant rows with Jain fairness over
+                             ingest p99 and goodput ([--smoke]
+                             [--tenants 2,4] [--schemes equal,weighted,
+                              blind] [--scenarios uniform,noisy,churn,
+                              storm] [--format csv|json])
   dlio trace       Figs 8/10 dstat-style I/O trace (CSV on stdout)
   dlio trace-record [microbench|miniapp]  record a request-level JSONL
                              trace ([--smoke] [--out FILE])
@@ -118,7 +129,9 @@ dlio — Characterizing Deep-Learning I/O Workloads (PDSW-DISCS'18) repro
                              representative trace ([--epochs N] [--out F])
 
 Common options: --time-scale F (default $DLIO_TIME_SCALE or 8),
---device hdd|ssd|optane|lustre, --threads N, --batch N.
+--device hdd|ssd|optane|lustre (microbench/train also accept
+hier:<preset> to route through a storage hierarchy), --threads N,
+--batch N.
 Engine QoS: --fifo (single-queue baseline), --adaptive-qos MS|auto
 (AIMD ingest-weight controller targeting MS modelled ms of ingest p99
 wait; `auto` = per-profile targets), --ckpt-cap-mbs N / --drain-cap-mbs
@@ -256,6 +269,30 @@ fn print_engine_stats(sim: &dlio::storage::StorageSim) {
                 format!("{:.1}", tr.bytes_written as f64 / 1e6),
             ]);
         }
+        // Fleet runs: one row per tenant x class (tagged via
+        // storage::with_tenant), with the per-class queue-latency
+        // histograms — the isolation attribution surface.  Untagged
+        // (default-tenant) traffic stays off this ledger.
+        for tn in &s.tenants {
+            for class in dlio::storage::IoClass::ALL {
+                let c = &tn.classes[class.index()];
+                if c.completed == 0 {
+                    continue;
+                }
+                t.row(&[
+                    s.device.clone(),
+                    format!("{}/{}", tn.tenant, class.name()),
+                    c.completed.to_string(),
+                    c.errors.to_string(),
+                    "-".into(),
+                    format!("{:.3}", c.mean_queue_secs() * 1e3),
+                    format!("{:.3}", c.p99_queue_secs() * 1e3),
+                    format!("{:.3}", c.mean_service_secs() * 1e3),
+                    format!("{:.1}", c.bytes_read as f64 / 1e6),
+                    format!("{:.1}", c.bytes_written as f64 / 1e6),
+                ]);
+            }
+        }
     }
     print!("{}", t.render());
     // The AIMD controller's story, when it ran: where the ingest
@@ -327,7 +364,16 @@ fn cmd_microbench(args: &Args) -> Result<()> {
     let tb = testbed(args)?;
     let sim = make_sim(&tb, None)?;
     let rt = Runtime::open_default()?;
-    let device = args.get_or("device", "ssd");
+    let raw = args.get_or("device", "ssd");
+    // `hier:<preset>` routes the run through the storage hierarchy;
+    // the corpus is homed on the preset's bottom device tier.
+    let (hier, device) = match StorageTarget::parse(&raw) {
+        StorageTarget::Flat(d) => (None, d),
+        StorageTarget::Hier(preset) => {
+            let (h, bottom) = build_hierarchy(&sim, &preset)?;
+            (Some(h), bottom)
+        }
+    };
     let mut spec = corpus_spec(args)?;
     if args.get("corpus").is_none() {
         spec = CorpusSpec::imagenet_subset(args.get_usize("files", 2048)?);
@@ -343,13 +389,24 @@ fn cmd_microbench(args: &Args) -> Result<()> {
         readahead: args.get_usize("readahead", 0)?,
         shards: args.get_usize("shards", 1)?,
     };
-    let r = microbench::run(Arc::clone(&sim), &rt, &manifest, &cfg, 7)?;
+    // Hierarchy routing only exists on the engine-backed sharded
+    // source, so it forces a readahead of at least 1.
+    let readahead = match &hier {
+        Some(_) => cfg.effective_readahead().max(1),
+        None => cfg.effective_readahead(),
+    };
+    let r = match &hier {
+        Some(h) => microbench::run_hier(
+            Arc::clone(h), &rt, &manifest, &cfg, 7,
+        )?,
+        None => microbench::run(Arc::clone(&sim), &rt, &manifest, &cfg, 7)?,
+    };
     // Print the readahead actually in force (--shards alone implies
     // the default per-shard window), so logged configs match the run.
     println!(
-        "device={device} threads={} preprocess={} readahead={} shards={} : \
+        "device={raw} threads={} preprocess={} readahead={} shards={} : \
          {:.1} images/s  {:.2} MB/s  ({} images in {:.2}s, {} dropped)",
-        cfg.threads, cfg.preprocess, cfg.effective_readahead(), cfg.shards,
+        cfg.threads, cfg.preprocess, readahead, cfg.shards,
         r.images_per_sec(), r.mb_per_sec(), r.images, r.elapsed_secs,
         r.dropped
     );
@@ -376,12 +433,24 @@ fn cmd_train(args: &Args) -> Result<()> {
     let sim = make_sim(&tb, None)?;
     let rt = Runtime::open_default()?;
     let cfg = train_cfg(args)?;
+    // `hier:<preset>`: ingest routes through the storage hierarchy,
+    // corpus homed on its bottom device tier.
+    let (hier, device) = match StorageTarget::parse(&cfg.device) {
+        StorageTarget::Flat(d) => (None, d),
+        StorageTarget::Hier(preset) => {
+            let (h, bottom) = build_hierarchy(&sim, &preset)?;
+            (Some(h), bottom)
+        }
+    };
     let mut spec = corpus_spec(args)?;
     spec.num_files = spec
         .num_files
         .max(cfg.batch * cfg.iterations.min(1024));
-    let manifest = ensure_corpus(&sim, &cfg.device, &spec)?;
-    let r = miniapp::run(Arc::clone(&sim), &rt, &manifest, &cfg)?;
+    let manifest = ensure_corpus(&sim, &device, &spec)?;
+    let r = match hier {
+        Some(h) => miniapp::run_hier(h, &rt, &manifest, &cfg)?,
+        None => miniapp::run(Arc::clone(&sim), &rt, &manifest, &cfg)?,
+    };
     println!(
         "device={} threads={} prefetch={} batch={} profile={}",
         cfg.device, cfg.threads, cfg.prefetch, cfg.batch, cfg.profile
@@ -535,6 +604,58 @@ fn cmd_tier_sweep(args: &Args) -> Result<()> {
     match format.as_str() {
         "csv" => print!("{}", tier_sweep::to_csv(&cells)),
         "json" => println!("{}", tier_sweep::to_json(&cells)),
+        _ => unreachable!("validated above"),
+    }
+    Ok(())
+}
+
+/// `dlio fleet-sweep`: N concurrent synthetic tenant jobs sharing one
+/// engine under the virtual clock, across the (tenant count × share
+/// scheme × scenario) matrix — one CSV/JSON row per tenant per cell,
+/// with Jain's fairness index over per-tenant ingest p99 and goodput
+/// (DESIGN.md §14).
+fn cmd_fleet_sweep(args: &Args) -> Result<()> {
+    let ts = args.get_f64("time-scale", default_time_scale())?;
+    if ts <= 0.0 {
+        return Err(anyhow!("--time-scale must be positive"));
+    }
+    let mut cfg = if args.has_flag("smoke") {
+        fleet_sweep::FleetSweepConfig::smoke(ts)
+    } else {
+        fleet_sweep::FleetSweepConfig::standard(ts)
+    };
+    if let Some(device) = args.get("device") {
+        cfg.device = device.to_string();
+    }
+    if let Some(s) = args.get_list("schemes") {
+        cfg.schemes = s;
+    }
+    if let Some(s) = args.get_list("scenarios") {
+        cfg.scenarios = s;
+    }
+    cfg.tenant_counts =
+        args.get_usize_list("tenants", &cfg.tenant_counts)?;
+    cfg.reads_per_job = args.get_usize("reads", cfg.reads_per_job)?;
+    cfg.read_bytes =
+        args.get_usize("read-kb", (cfg.read_bytes / 1024) as usize)? as u64
+            * 1024;
+    cfg.ckpt_every = args.get_usize("ckpt-every", cfg.ckpt_every)?;
+    cfg.ckpt_writes = args.get_usize("ckpt-writes", cfg.ckpt_writes)?;
+    cfg.ckpt_bytes =
+        args.get_usize("ckpt-kb", (cfg.ckpt_bytes / 1024) as usize)? as u64
+            * 1024;
+    cfg.noisy_factor =
+        args.get_usize("noisy-factor", cfg.noisy_factor)?;
+    cfg.clock = clock_arg(args, cfg.clock)?;
+    // Validate the output format *before* running the matrix.
+    let format = args.get_or("format", "csv");
+    if format != "csv" && format != "json" {
+        return Err(anyhow!("unknown --format {format:?} (csv|json)"));
+    }
+    let rows = fleet_sweep::run(&cfg)?;
+    match format.as_str() {
+        "csv" => print!("{}", fleet_sweep::to_csv(&rows)),
+        "json" => println!("{}", fleet_sweep::to_json(&rows)),
         _ => unreachable!("validated above"),
     }
     Ok(())

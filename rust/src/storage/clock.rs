@@ -704,9 +704,9 @@ impl ClockSpec {
         match s {
             "wall" => Ok(ClockSpec::Wall),
             "virtual" => Ok(ClockSpec::Virtual),
-            other => anyhow::bail!(
-                "unknown clock '{other}' (expected wall|virtual)"
-            ),
+            // A typo'd clock name must say what IS valid, matching the
+            // --profile / hierarchy / policy error style.
+            other => anyhow::bail!("unknown clock {other:?} (valid: wall, virtual)"),
         }
     }
 
@@ -875,5 +875,18 @@ mod tests {
         assert_eq!(ClockSpec::parse("virtual").unwrap(), ClockSpec::Virtual);
         assert!(ClockSpec::parse("nope").is_err());
         assert_eq!(ClockSpec::Virtual.as_str(), "virtual");
+    }
+
+    #[test]
+    fn clock_spec_error_lists_valid_names() {
+        // Regression: the unknown-clock error must list the valid
+        // names, matching the --profile/hierarchy/policy error style.
+        let err = ClockSpec::parse("sundial").unwrap_err().to_string();
+        assert!(
+            err.contains("\"sundial\"")
+                && err.contains("wall")
+                && err.contains("virtual"),
+            "unknown-clock error does not list valid names: {err}"
+        );
     }
 }

@@ -18,10 +18,10 @@ pub mod sim;
 pub use clock::{Clock, ClockSpec, SimCondvar, TimeSource};
 pub use device::{Device, DeviceModel, Dir, IoObserver, NullObserver};
 pub use engine::{
-    with_origin, with_tier, AdaptiveQos, ChunkWriter, ClassStats,
-    EngineDeviceStats, EngineEvent, EngineObserver, EngineOp, IoClass,
-    IoCompletion, IoEngine, IoRequest, IoTicket, QosConfig, RateCap,
-    TierIoStats,
+    with_origin, with_tenant, with_tier, AdaptiveQos, ChunkWriter,
+    ClassStats, EngineDeviceStats, EngineEvent, EngineObserver, EngineOp,
+    IoClass, IoCompletion, IoEngine, IoRequest, IoTicket, QosConfig,
+    RateCap, TenantId, TenantIoStats, TenantQos, TierIoStats,
 };
 pub use hierarchy::{
     HierarchySpec, RamTier, StorageHierarchy, TierKind, TierSpec,

@@ -277,6 +277,7 @@ mod tests {
             op,
             origin: String::new(),
             tier: None,
+            tenant: String::new(),
             bytes,
             ok: true,
             submit_secs: submit,

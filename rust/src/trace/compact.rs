@@ -183,6 +183,7 @@ mod tests {
             op,
             origin: "test".into(),
             tier: None,
+            tenant: String::new(),
             bytes,
             ok: true,
             submit_secs: t,

@@ -12,7 +12,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::storage::{
     AdaptiveQos, DeviceModel, EngineEvent, EngineOp, IoClass, QosConfig,
-    RateCap,
+    RateCap, TenantQos,
 };
 use crate::util::json::{obj, to_string, Json};
 
@@ -24,7 +24,13 @@ use crate::util::json::{obj, to_string, Json};
 /// the request was accounted to ([`crate::storage::with_tier`]).  v1
 /// traces (no tier fields) load with `tier: None` and replay
 /// unchanged.
-pub const TRACE_VERSION: u32 = 2;
+///
+/// v3: events may carry a `tenant` field — the tenant the request was
+/// tagged with ([`crate::storage::with_tenant`]) — and the manifest's
+/// `qos` block may carry a `tenants` table ([`TenantQos`]).  v1/v2
+/// traces (no tenant fields) load with an empty tenant and replay
+/// unchanged; replay re-tags probes from the recorded field.
+pub const TRACE_VERSION: u32 = 3;
 
 /// One recorded engine request.
 #[derive(Debug, Clone, PartialEq)]
@@ -40,6 +46,10 @@ pub struct TraceEvent {
     /// (`storage::with_tier`); `None` for untiered requests and for
     /// every event of a v1 trace.
     pub tier: Option<u32>,
+    /// Tenant the request was tagged with (`storage::with_tenant`);
+    /// empty for untagged requests and for every event of a v1/v2
+    /// trace.
+    pub tenant: String,
     /// Bytes moved.  On failure: a unit request's intended size (so a
     /// replay offers the same load); 0 for failed streams (see
     /// `EngineEvent::bytes`).
@@ -63,6 +73,7 @@ impl TraceEvent {
             op: e.op,
             origin: e.origin.to_string(),
             tier: e.tier,
+            tenant: e.tenant.as_str().to_string(),
             bytes: e.bytes,
             ok: e.ok,
             submit_secs: e.submit_secs,
@@ -100,6 +111,12 @@ impl TraceEvent {
         if let Some(tier) = self.tier {
             fields.push(("tier", Json::Num(tier as f64)));
         }
+        // Likewise for tenants: a v3 trace with only untagged traffic
+        // is byte-identical to its v2 form except for the header
+        // version.
+        if !self.tenant.is_empty() {
+            fields.push(("tenant", Json::Str(self.tenant.clone())));
+        }
         obj(fields)
     }
 
@@ -132,6 +149,13 @@ impl TraceEvent {
             // Optional since v2; absent in v1 traces and for untiered
             // requests.
             tier: v.get("tier").and_then(Json::as_f64).map(|t| t as u32),
+            // Optional since v3; absent in v1/v2 traces and for
+            // untagged requests.
+            tenant: v
+                .get("tenant")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
             bytes: num("bytes")? as u64,
             ok: matches!(v.get("ok"), Some(Json::Bool(true))),
             submit_secs: num("t")?,
@@ -266,6 +290,61 @@ fn qos_to_json(q: &QosConfig) -> Json {
             ("tick", Json::Num(a.tick)),
         ]),
     };
+    let tenants = match &q.tenants {
+        None => Json::Null,
+        Some(t) => obj(vec![
+            (
+                "shares",
+                Json::Arr(
+                    t.shares
+                        .iter()
+                        .map(|(name, s)| {
+                            Json::Arr(vec![
+                                Json::Str(name.clone()),
+                                Json::Num(*s as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("default_share", Json::Num(t.default_share as f64)),
+            (
+                "rate_caps",
+                Json::Arr(
+                    t.rate_caps
+                        .iter()
+                        .map(|(name, cap)| {
+                            obj(vec![
+                                ("tenant", Json::Str(name.clone())),
+                                (
+                                    "bytes_per_sec",
+                                    Json::Num(cap.bytes_per_sec),
+                                ),
+                                (
+                                    "burst_bytes",
+                                    Json::Num(cap.burst_bytes as f64),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "adaptive_targets",
+                Json::Arr(
+                    t.adaptive_targets
+                        .iter()
+                        .map(|(name, x)| {
+                            Json::Arr(vec![
+                                Json::Str(name.clone()),
+                                Json::Num(*x),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+    };
     obj(vec![
         ("fifo", Json::Bool(q.fifo)),
         (
@@ -278,6 +357,7 @@ fn qos_to_json(q: &QosConfig) -> Json {
         ("max_yield_wait", Json::Num(q.max_yield_wait)),
         ("rate_caps", caps),
         ("adaptive", adaptive),
+        ("tenants", tenants),
     ])
 }
 
@@ -367,6 +447,94 @@ fn qos_from_json(v: &Json) -> Result<QosConfig> {
             })
         }
     };
+    // Optional since v3: v1/v2 manifests have no tenants block.
+    let tenants = match v.get("tenants") {
+        None | Some(Json::Null) => None,
+        Some(t) => {
+            let mut shares = Vec::new();
+            for s in t.get("shares").and_then(Json::as_arr).unwrap_or(&[]) {
+                let pair = s
+                    .as_arr()
+                    .filter(|p| p.len() == 2)
+                    .ok_or_else(|| {
+                        anyhow!("tenant share must be [name, share]")
+                    })?;
+                shares.push((
+                    pair[0]
+                        .as_str()
+                        .ok_or_else(|| anyhow!("bad tenant share name"))?
+                        .to_string(),
+                    pair[1]
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("bad tenant share"))?
+                        as u32,
+                ));
+            }
+            let mut rate_caps = Vec::new();
+            for c in
+                t.get("rate_caps").and_then(Json::as_arr).unwrap_or(&[])
+            {
+                rate_caps.push((
+                    c.get("tenant")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| {
+                            anyhow!("tenant rate cap missing tenant")
+                        })?
+                        .to_string(),
+                    RateCap {
+                        bytes_per_sec: c
+                            .get("bytes_per_sec")
+                            .and_then(Json::as_f64)
+                            .ok_or_else(|| {
+                                anyhow!(
+                                    "tenant rate cap missing bytes_per_sec"
+                                )
+                            })?,
+                        burst_bytes: c
+                            .get("burst_bytes")
+                            .and_then(Json::as_f64)
+                            .ok_or_else(|| {
+                                anyhow!(
+                                    "tenant rate cap missing burst_bytes"
+                                )
+                            })?
+                            as u64,
+                    },
+                ));
+            }
+            let mut adaptive_targets = Vec::new();
+            for a in t
+                .get("adaptive_targets")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+            {
+                let pair = a
+                    .as_arr()
+                    .filter(|p| p.len() == 2)
+                    .ok_or_else(|| {
+                        anyhow!("tenant target must be [name, target]")
+                    })?;
+                adaptive_targets.push((
+                    pair[0]
+                        .as_str()
+                        .ok_or_else(|| anyhow!("bad tenant target name"))?
+                        .to_string(),
+                    pair[1]
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("bad tenant target"))?,
+                ));
+            }
+            Some(TenantQos {
+                shares,
+                default_share: t
+                    .get("default_share")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(1.0) as u32,
+                rate_caps,
+                adaptive_targets,
+            })
+        }
+    };
     Ok(QosConfig {
         fifo: matches!(v.get("fifo"), Some(Json::Bool(true))),
         weights,
@@ -374,6 +542,7 @@ fn qos_from_json(v: &Json) -> Result<QosConfig> {
         max_yield_wait: num("max_yield_wait")?,
         rate_caps,
         adaptive,
+        tenants,
     })
 }
 
@@ -459,6 +628,7 @@ mod tests {
             op: EngineOp::StreamWrite,
             origin: "saver".into(),
             tier: None,
+            tenant: String::new(),
             bytes: 123_456,
             ok: true,
             submit_secs: 1.5,
@@ -493,13 +663,41 @@ mod tests {
 
     #[test]
     fn v1_event_without_tier_loads_as_none() {
-        // A line as a v1 recorder wrote it: no tier field anywhere.
+        // A line as a v1 recorder wrote it: no tier or tenant field
+        // anywhere.
         let line = "{\"seq\": 3, \"dev\": \"hdd\", \"class\": \"ingest\", \
                     \"op\": \"read\", \"origin\": \"\", \"bytes\": 512, \
                     \"ok\": true, \"t\": 0.5, \"q\": 0.1, \"s\": 0.01}";
         let e = TraceEvent::from_json(&Json::parse(line).unwrap()).unwrap();
         assert_eq!(e.tier, None);
+        assert_eq!(e.tenant, "");
         assert_eq!(e.bytes, 512);
+    }
+
+    #[test]
+    fn tenant_event_roundtrips_and_untagged_omits_the_field() {
+        let mut e = event();
+        e.tenant = "job-a".into();
+        let line = e.to_jsonl();
+        assert!(line.contains("\"tenant\""));
+        let back =
+            TraceEvent::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, e);
+        // Untagged: no "tenant" key at all (v2-shaped event body).
+        let e = event();
+        assert!(!e.to_jsonl().contains("\"tenant\""));
+    }
+
+    #[test]
+    fn v2_event_without_tenant_loads_as_empty() {
+        // A line as a v2 recorder wrote it: tier present, no tenant.
+        let line = "{\"seq\": 9, \"dev\": \"ssd\", \"class\": \"drain\", \
+                    \"op\": \"copy_read\", \"origin\": \"bb-drain\", \
+                    \"bytes\": 4096, \"ok\": true, \"t\": 1.0, \
+                    \"q\": 0.2, \"s\": 0.05, \"tier\": 1}";
+        let e = TraceEvent::from_json(&Json::parse(line).unwrap()).unwrap();
+        assert_eq!(e.tier, Some(1));
+        assert_eq!(e.tenant, "");
     }
 
     #[test]
@@ -562,6 +760,36 @@ mod tests {
         assert_eq!(q.max_yield_wait, qos.max_yield_wait);
         assert_eq!(q.rate_caps, qos.rate_caps);
         assert_eq!(q.adaptive, qos.adaptive);
+        assert!(q.tenants.is_none(), "tenant-blind config stays blind");
+    }
+
+    #[test]
+    fn manifest_roundtrips_tenant_qos() {
+        let qos = QosConfig::default().with_tenants(
+            TenantQos::default()
+                .with_share("a", 4)
+                .with_share("noisy", 1)
+                .with_rate_cap("noisy", 15e6, 1 << 18)
+                .with_adaptive_target("a", 0.002),
+        );
+        let m = TraceManifest {
+            version: TRACE_VERSION,
+            workload: "fleet".into(),
+            qos_mode: qos.mode_name().into(),
+            qos: Some(qos.clone()),
+            time_scale: 1.0,
+            devices: vec![crate::storage::profiles::blackdog_ssd(1.0)],
+        };
+        let back =
+            TraceManifest::from_json(&Json::parse(&m.to_jsonl()).unwrap())
+                .unwrap();
+        let t = back
+            .qos
+            .expect("qos survives")
+            .tenants
+            .expect("tenant table survives");
+        let orig = qos.tenants.unwrap();
+        assert_eq!(t, orig);
     }
 
     #[test]

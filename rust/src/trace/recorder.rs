@@ -243,6 +243,7 @@ mod tests {
             op: EngineOp::ProbeRead,
             origin: "test",
             tier: None,
+            tenant: crate::storage::TenantId::default(),
             bytes: 1000 + i,
             ok: true,
             submit_secs: i as f64 * 0.001,

@@ -200,13 +200,20 @@ fn submit_probe(engine: &IoEngine, ev: &TraceEvent) -> Result<IoTicket> {
             bytes: ev.bytes,
         },
     };
-    // Re-tag the recorded tier so replayed events keep their
-    // hierarchy attribution (and per-tier stats rows survive replay).
-    crate::storage::with_origin("replay", || match ev.tier {
-        Some(t) => crate::storage::with_tier(t, || {
-            engine.submit_class(req, ev.class)
-        }),
-        None => engine.submit_class(req, ev.class),
+    // Re-tag the recorded tier and tenant so replayed events keep
+    // their hierarchy and fleet attribution (per-tier / per-tenant
+    // stats rows survive replay, and a tenant-aware replay QoS config
+    // schedules the stream under the recorded keys).  v1/v2 events
+    // carry no tenant: the empty string is the default tenant, so
+    // they replay exactly as before.
+    let tenant = crate::storage::TenantId::new(&ev.tenant);
+    crate::storage::with_tenant(&tenant, || {
+        crate::storage::with_origin("replay", || match ev.tier {
+            Some(t) => crate::storage::with_tier(t, || {
+                engine.submit_class(req, ev.class)
+            }),
+            None => engine.submit_class(req, ev.class),
+        })
     })
 }
 
@@ -758,6 +765,7 @@ mod tests {
             op: crate::storage::EngineOp::ProbeRead,
             origin: String::new(),
             tier: None,
+            tenant: String::new(),
             bytes: 1024,
             ok: true,
             submit_secs: t,
@@ -951,6 +959,117 @@ mod tests {
             a.wall_secs,
             b.wall_secs
         );
+    }
+
+    #[test]
+    fn v2_trace_without_tenants_loads_and_replays_unchanged() {
+        // Back-compat: a pre-tenant (v2-shaped) trace — no "tenant"
+        // key on any line — loads, replays, and every replayed event
+        // lands on the default tenant.  Untagged events serialize
+        // without the key, so the file written here is byte-shaped
+        // like a genuine v2 recording.
+        let dir = scratch("v2compat");
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = TraceManifest {
+            version: 2,
+            workload: "legacy".into(),
+            qos_mode: "static".into(),
+            qos: None,
+            time_scale: 1000.0,
+            devices: vec![lat_device("d")],
+        };
+        let mk = |seq: u64, t: f64| TraceEvent {
+            seq,
+            device: "d".into(),
+            class: IoClass::Ingest,
+            op: crate::storage::EngineOp::ProbeRead,
+            origin: String::new(),
+            tier: None,
+            tenant: String::new(),
+            bytes: 4096,
+            ok: true,
+            submit_secs: t,
+            queue_secs: 0.001,
+            service_secs: 0.001,
+        };
+        let mut text = manifest.to_jsonl();
+        text.push('\n');
+        for i in 0..4 {
+            let line = mk(i, i as f64 * 0.01).to_jsonl();
+            assert!(
+                !line.contains("tenant"),
+                "untagged event must serialize v2-shaped: {line}"
+            );
+            text.push_str(&line);
+            text.push('\n');
+        }
+        let path = dir.join("legacy.jsonl");
+        std::fs::write(&path, text).unwrap();
+        let trace = Trace::load(&path).unwrap();
+        assert_eq!(trace.events.len(), 4);
+        assert!(trace.events.iter().all(|e| e.tenant.is_empty()));
+        let cfg = ReplayConfig {
+            clock: ClockSpec::Virtual,
+            ..ReplayConfig::default()
+        };
+        let outcome = replay(&trace, &cfg).unwrap();
+        assert_eq!(outcome.errors, 0);
+        assert_eq!(outcome.replayed.len(), 4);
+        assert!(
+            outcome.replayed.iter().all(|e| e.tenant.is_empty()),
+            "v2 events must replay on the default tenant"
+        );
+    }
+
+    #[test]
+    fn replay_re_tags_recorded_tenants() {
+        // v3: replayed probes carry the recorded tenant, so per-tenant
+        // stats rows and tenant-aware replay QoS see the same keys the
+        // recording did.
+        let manifest = TraceManifest {
+            version: super::super::event::TRACE_VERSION,
+            workload: "fleet".into(),
+            qos_mode: "static".into(),
+            qos: None,
+            time_scale: 1000.0,
+            devices: vec![lat_device("d")],
+        };
+        let mk = |seq: u64, t: f64, tenant: &str| TraceEvent {
+            seq,
+            device: "d".into(),
+            class: IoClass::Ingest,
+            op: crate::storage::EngineOp::ProbeRead,
+            origin: String::new(),
+            tier: None,
+            tenant: tenant.to_string(),
+            bytes: 4096,
+            ok: true,
+            submit_secs: t,
+            queue_secs: 0.001,
+            service_secs: 0.001,
+        };
+        let trace = Trace {
+            manifest,
+            events: vec![
+                mk(0, 0.00, "alpha"),
+                mk(1, 0.01, "beta"),
+                mk(2, 0.02, "alpha"),
+                mk(3, 0.03, ""),
+            ],
+        };
+        let cfg = ReplayConfig {
+            clock: ClockSpec::Virtual,
+            ..ReplayConfig::default()
+        };
+        let outcome = replay(&trace, &cfg).unwrap();
+        assert_eq!(outcome.errors, 0);
+        let mut rep: Vec<String> = outcome
+            .replayed
+            .iter()
+            .map(|e| e.tenant.clone())
+            .collect();
+        rep.sort();
+        assert_eq!(rep, vec!["", "alpha", "alpha", "beta"]);
     }
 
     #[test]
