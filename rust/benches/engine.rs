@@ -56,6 +56,15 @@
 //!    its solo baseline and Jain's index over per-tenant goodput is
 //!    >= 0.9, while the tenant-blind scheduler fails both gates on
 //!    the identical cell.
+//! 14. **Fault seam** — degraded-mode operation (DESIGN.md §15):
+//!    (a) a mid-drain slow-tier outage pauses the burst-buffer
+//!    migrator without losing a checkpoint — every triple drains
+//!    oldest-first once the fault clears and restores bit-exact from
+//!    the slow tier; (b) the fleet restart-storm cell reports a
+//!    positive per-tenant time-to-recover bounded by the cell
+//!    makespan, with a valid goodput Jain; (c) two identical
+//!    fault-injected virtual-clock replays are bit-deterministic in
+//!    clock makespan.
 //!
 //! No PJRT artifacts needed.
 
@@ -63,7 +72,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
-use dlio::checkpoint::Saver;
+use dlio::checkpoint::{BurstBuffer, CheckpointHandle, Saver};
 use dlio::coordinator::{fleet_sweep, qos_sweep, tier_sweep};
 use dlio::data::manifest::Sample;
 use dlio::metrics::{median, Table};
@@ -73,8 +82,8 @@ use dlio::runtime::meta::{ParamSpec, ProfileMeta};
 use dlio::storage::engine::{DEFAULT_CHUNK, STREAM_WINDOW};
 use dlio::storage::{
     profiles, with_tenant, Clock, ClockSpec, Device, DeviceModel,
-    EngineObserver, IoClass, IoEngine, IoRequest, NullObserver, QosConfig,
-    SimPath, StorageSim, TenantId, TenantQos,
+    EngineObserver, FaultPlan, IoClass, IoEngine, IoRequest, NullObserver,
+    QosConfig, SimPath, StorageSim, TenantId, TenantQos,
 };
 use dlio::trace::{
     analyze, replay, MemorySink, ReplayConfig, Trace, TraceManifest,
@@ -1229,6 +1238,173 @@ fn main() -> anyhow::Result<()> {
         j_blind < 0.9,
         "tenant-blind jain {j_blind:.3} unexpectedly fair — the hog no \
          longer skews goodput"
+    );
+
+    // ---- 14. fault seam: degraded-mode operation (DESIGN.md §15) ----
+    // (a) Mid-drain outage: the slow tier is offline for the first
+    // 100 ms while the burst buffer drains.  Saves keep landing on
+    // the healthy fast tier, the migrator pauses and requeues instead
+    // of erroring, and once the fault clears every checkpoint drains
+    // oldest-first — zero lost, all restorable from the slow tier.
+    let mk = |name: &str, write_lat: f64| DeviceModel {
+        name: name.into(),
+        read_bw: 1e9,
+        write_bw: 1e9,
+        read_lat: 0.0,
+        write_lat,
+        channels: 1,
+        elevator: vec![(1, 1.0)],
+        time_scale: 1.0,
+    };
+    let sim = Arc::new(StorageSim::cold(
+        workdir("faultbb"),
+        vec![mk("fast", 0.0), mk("slow", 0.004)],
+    )?);
+    sim.apply_fault_plan(&FaultPlan::parse("offline:slow:0:0.1")?)?;
+    let profile = small_profile();
+    let state = ModelState::init(&profile, 14);
+    let fault_steps: Vec<u64> = (1..=5).map(|i| i * 10).collect();
+    let t0 = Instant::now();
+    {
+        let mut bb = BurstBuffer::new(
+            Arc::clone(&sim),
+            profile.clone(),
+            "fast",
+            "slow",
+            "ck/m",
+            2, // retention quota below the paused backlog
+        )?;
+        bb.saver_mut().sync_on_save = false;
+        for &s in &fault_steps {
+            bb.save(&state, s)?;
+        }
+        bb.wait_drained();
+        let pauses = bb.hierarchy().migration_pauses();
+        let mut t = Table::new(&["quantity", "value"]);
+        t.row(&["checkpoints saved".into(),
+                fault_steps.len().to_string()]);
+        t.row(&["drained to slow tier".into(),
+                bb.drained_count().to_string()]);
+        t.row(&["migrator pauses".into(), pauses.to_string()]);
+        t.row(&["drain errors".into(),
+                bb.drain_error_count().to_string()]);
+        t.row(&["wall s incl. 0.1 s outage".into(),
+                format!("{:.3}", t0.elapsed().as_secs_f64())]);
+        print!("{}", t.render());
+        assert_eq!(
+            bb.drain_error_count(),
+            0,
+            "paused drains must not surface as migration errors"
+        );
+        assert!(pauses >= 1, "offline window never paused the migrator");
+        assert_eq!(
+            bb.drained_steps(),
+            fault_steps,
+            "drains must stay oldest-first across the fault"
+        );
+    }
+    for &s in &fault_steps {
+        let h = CheckpointHandle {
+            device: "slow".into(),
+            prefix: "ck/m".into(),
+            step: s,
+        };
+        let back = Saver::restore(&sim, &profile, &h)?;
+        assert_eq!(
+            back.params, state.params,
+            "step {s} lost or corrupted across the fault window"
+        );
+    }
+    sim.clear_faults();
+    println!(
+        "target: zero drain errors, >= 1 migrator pause, all {} \
+         checkpoints restorable from the slow tier",
+        fault_steps.len()
+    );
+
+    // (b) Restart storm: every tenant opens with a correlated
+    // checkpoint-restore burst; the fleet cell must report a positive
+    // per-tenant time-to-recover bounded by the cell makespan, with a
+    // valid goodput Jain.
+    let mut fault_fleet = fleet_sweep::FleetSweepConfig::smoke(1000.0);
+    fault_fleet.schemes = vec!["equal".into()];
+    fault_fleet.scenarios = vec!["restart".into()];
+    let rows = fleet_sweep::run(&fault_fleet)?;
+    assert_eq!(rows.len(), 2, "one smoke restart cell, two tenants");
+    let mut t = Table::new(&[
+        "tenant", "recovery ms", "elapsed ms", "jain goodput",
+    ]);
+    for r in &rows {
+        t.row(&[
+            r.tenant.clone(),
+            format!("{:.3}", r.recovery_secs * 1e3),
+            format!("{:.3}", r.elapsed_secs * 1e3),
+            format!("{:.3}", r.jain_goodput),
+        ]);
+        assert!(
+            r.recovery_secs > 0.0,
+            "{}: restart cell reported no time-to-recover",
+            r.tenant
+        );
+        assert!(
+            r.recovery_secs <= r.elapsed_secs + 1e-9,
+            "{}: recovery {:.6} s exceeds cell makespan {:.6} s",
+            r.tenant,
+            r.recovery_secs,
+            r.elapsed_secs
+        );
+        assert!(
+            r.jain_goodput > 0.0 && r.jain_goodput <= 1.0 + 1e-9,
+            "{}: goodput jain {:.3} outside (0, 1]",
+            r.tenant,
+            r.jain_goodput
+        );
+    }
+    print!("{}", t.render());
+    println!(
+        "target: restart rows report recovery > 0 within the cell \
+         makespan and a valid goodput jain"
+    );
+
+    // (c) Determinism: the same fault-injected replay under the
+    // virtual clock is bit-deterministic — two runs of the §9
+    // contention trace with an armed `slow:hdd` fault produce the
+    // exact same clock makespan, and the fault visibly stretches the
+    // healthy replay's.
+    let run_injected = |inject: Option<&str>| -> anyhow::Result<f64> {
+        let cfg = ReplayConfig {
+            qos: QosConfig::default(),
+            profile: Some("hdd".into()),
+            time_scale: Some(4.0),
+            clock: ClockSpec::Virtual,
+            inject: inject.map(str::to_string),
+            ..ReplayConfig::default()
+        };
+        let outcome = replay(&trace, &cfg)?;
+        assert_eq!(outcome.errors, 0, "slow fault must not error");
+        Ok(outcome.wall_secs)
+    };
+    let healthy = run_injected(None)?;
+    let inj_a = run_injected(Some("slow:hdd"))?;
+    let inj_b = run_injected(Some("slow:hdd"))?;
+    let mut t = Table::new(&["replay", "virtual makespan s"]);
+    t.row(&["healthy".into(), format!("{healthy:.6}")]);
+    t.row(&["slow:hdd run 1".into(), format!("{inj_a:.6}")]);
+    t.row(&["slow:hdd run 2".into(), format!("{inj_b:.6}")]);
+    print!("{}", t.render());
+    println!(
+        "target: injected runs bit-equal; fault stretches the healthy \
+         makespan >= 2x"
+    );
+    assert_eq!(
+        inj_a.to_bits(),
+        inj_b.to_bits(),
+        "identical virtual-clock fault replays diverged: {inj_a} vs \
+         {inj_b}"
+    );
+    assert!(
+        inj_a >= 2.0 * healthy,
+        "slow:hdd replay {inj_a:.6} s not >= 2x healthy {healthy:.6} s"
     );
 
     println!("\nengine acceptance: PASS");

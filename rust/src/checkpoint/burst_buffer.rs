@@ -295,6 +295,67 @@ mod tests {
     }
 
     #[test]
+    fn mid_drain_fault_pauses_drains_and_loses_no_checkpoints() {
+        // DESIGN.md §15 / bench §14 gate at unit scale: the slow tier
+        // goes offline for the first 80 ms — saves keep landing on the
+        // (healthy) fast tier, the migrator pauses and requeues
+        // instead of erroring, and once the fault clears every
+        // checkpoint drains oldest-first with nothing lost.
+        use crate::storage::FaultPlan;
+        let sim = sim("fault", 0.004);
+        sim.apply_fault_plan(
+            &FaultPlan::parse("offline:slow:0:0.08").unwrap(),
+        )
+        .unwrap();
+        let profile = profile();
+        let state = ModelState::init(&profile, 5);
+        let steps: Vec<u64> = (1..=4).map(|i| i * 10).collect();
+        {
+            let mut bb = BurstBuffer::new(
+                Arc::clone(&sim),
+                profile.clone(),
+                "fast",
+                "slow",
+                "ck/m",
+                2, // retention quota below the paused backlog
+            )
+            .unwrap();
+            bb.saver_mut().sync_on_save = false;
+            for &s in &steps {
+                bb.save(&state, s).unwrap();
+            }
+            bb.wait_drained();
+            assert_eq!(
+                bb.drain_error_count(),
+                0,
+                "paused drains must not be counted as errors"
+            );
+            assert!(
+                bb.hierarchy().migration_pauses() >= 1,
+                "fault window never paused the migrator"
+            );
+            assert_eq!(
+                bb.drained_steps(),
+                steps,
+                "drains must stay oldest-first across the fault"
+            );
+        }
+        // Zero checkpoints lost: every triple restores from the slow
+        // tier after the fault cleared (the retention guard held the
+        // staged copies while their drain groups sat paused).
+        for &s in &steps {
+            let h = CheckpointHandle {
+                device: "slow".into(),
+                prefix: "ck/m".into(),
+                step: s,
+            };
+            let back = Saver::restore(&sim, &profile, &h).unwrap();
+            assert_eq!(back.params, state.params, "step {s} corrupted");
+        }
+        sim.clear_faults();
+    }
+
+    #[test]
     fn two_tier_hierarchy_reproduces_bb_drain_counts_and_residency() {
         // The refactor's acceptance test: the wrapper's hierarchy
         // reports exactly the drain counts/order the BurstBuffer API

@@ -14,7 +14,10 @@
 //! * scenarios: `uniform` (identical jobs), `noisy` (tenant 0 issues
 //!   `noisy_factor`× the ingest load with an open request window),
 //!   `churn` (odd tenants depart halfway — work conservation), `storm`
-//!   (correlated checkpoint bursts)
+//!   (correlated checkpoint bursts), `restart` (every tenant opens
+//!   with a correlated checkpoint-restore read burst — the
+//!   restart-storm regime of DESIGN.md §15, reporting per-tenant
+//!   time-to-recover)
 //!
 //! Each cell emits one CSV/JSON row **per tenant** (exact ingest p99
 //! from the event stream, not histogram buckets) plus the cell-level
@@ -28,8 +31,8 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::config::Testbed;
 use crate::storage::engine::DEFAULT_CHUNK;
 use crate::storage::{
-    with_tenant, ClockSpec, Device, IoClass, IoEngine, IoRequest, IoTicket,
-    NullObserver, QosConfig, TenantId, TenantQos,
+    with_tenant, Clock, ClockSpec, Device, IoClass, IoEngine, IoRequest,
+    IoTicket, NullObserver, QosConfig, TenantId, TenantQos,
 };
 use crate::trace::MemorySink;
 use crate::util::json::{obj, to_string, Json};
@@ -37,7 +40,8 @@ use crate::util::json::{obj, to_string, Json};
 /// Valid share schemes, in canonical order (error messages quote it).
 pub const SCHEMES: [&str; 3] = ["equal", "weighted", "blind"];
 /// Valid scenarios, in canonical order.
-pub const SCENARIOS: [&str; 4] = ["uniform", "noisy", "churn", "storm"];
+pub const SCENARIOS: [&str; 5] =
+    ["uniform", "noisy", "churn", "storm", "restart"];
 
 /// Sweep matrix + per-job workload shape.
 #[derive(Debug, Clone)]
@@ -69,8 +73,8 @@ pub struct FleetSweepConfig {
 }
 
 impl FleetSweepConfig {
-    /// Full matrix: 3 schemes × 4 scenarios × fleets of 2 and 4 —
-    /// 24 cells, 72 per-tenant rows.
+    /// Full matrix: 3 schemes × 5 scenarios × fleets of 2 and 4 —
+    /// 30 cells, 90 per-tenant rows.
     pub fn standard(time_scale: f64) -> FleetSweepConfig {
         FleetSweepConfig {
             device: "hdd".into(),
@@ -126,6 +130,9 @@ pub struct FleetSweepRow {
     /// Per-tenant ingest goodput over the cell makespan, MB/s.
     pub goodput_mbps: f64,
     pub ckpt_completed: u64,
+    /// Clock seconds this tenant spent in its opening restore burst
+    /// (the `restart` scenario's time-to-recover; 0 elsewhere).
+    pub recovery_secs: f64,
     /// Cell makespan, clock seconds (same value on every row of the
     /// cell).
     pub elapsed_secs: f64,
@@ -160,7 +167,7 @@ fn percentile(sorted: &[f64], q: f64) -> f64 {
 }
 
 /// CSV column order — one place, so header and rows cannot drift.
-const CSV_COLUMNS: [&str; 13] = [
+const CSV_COLUMNS: [&str; 14] = [
     "scheme",
     "scenario",
     "tenants",
@@ -171,6 +178,7 @@ const CSV_COLUMNS: [&str; 13] = [
     "ingest_p99_ms",
     "goodput_mbps",
     "ckpt_completed",
+    "recovery_secs",
     "elapsed_secs",
     "jain_p99",
     "jain_goodput",
@@ -189,6 +197,7 @@ impl FleetSweepRow {
             format!("{:.4}", self.ingest_p99_ms),
             format!("{:.3}", self.goodput_mbps),
             self.ckpt_completed.to_string(),
+            format!("{:.6}", self.recovery_secs),
             format!("{:.4}", self.elapsed_secs),
             format!("{:.4}", self.jain_p99),
             format!("{:.4}", self.jain_goodput),
@@ -208,6 +217,7 @@ impl FleetSweepRow {
             ("ingest_p99_ms", Json::Num(self.ingest_p99_ms)),
             ("goodput_mbps", Json::Num(self.goodput_mbps)),
             ("ckpt_completed", Json::Num(self.ckpt_completed as f64)),
+            ("recovery_secs", Json::Num(self.recovery_secs)),
             ("elapsed_secs", Json::Num(self.elapsed_secs)),
             ("jain_p99", Json::Num(self.jain_p99)),
             ("jain_goodput", Json::Num(self.jain_goodput)),
@@ -242,6 +252,10 @@ struct JobPlan {
     ckpt_every: usize,
     ckpt_writes: usize,
     ckpt_bytes: u64,
+    /// Checkpoint-restore reads issued as one opening burst before any
+    /// ingest (the `restart` scenario; 0 elsewhere).  The burst's
+    /// drain time is the tenant's time-to-recover.
+    restore_reads: usize,
 }
 
 impl JobPlan {
@@ -253,6 +267,7 @@ impl JobPlan {
             ckpt_every: cfg.ckpt_every,
             ckpt_writes: cfg.ckpt_writes,
             ckpt_bytes: cfg.ckpt_bytes.max(1),
+            restore_reads: 0,
         };
         match scenario {
             "noisy" if idx == 0 => {
@@ -268,6 +283,12 @@ impl JobPlan {
                 // Correlated bursts: every tenant's checkpoint arrives
                 // in lockstep, 4× the writes.
                 plan.ckpt_writes *= 4;
+            }
+            "restart" => {
+                // Restart storm: every tenant re-reads its checkpoint
+                // set at t=0 before ingest resumes — the whole fleet's
+                // restores land on the device at once.
+                plan.restore_reads = (plan.ckpt_writes * 2).max(2);
             }
             _ => {}
         }
@@ -335,11 +356,36 @@ pub fn run(cfg: &FleetSweepConfig) -> Result<Vec<FleetSweepRow>> {
     Ok(rows)
 }
 
+/// Run one tenant job; returns the tenant's recovery time (clock
+/// seconds its opening restore burst took; 0 without one).
 fn run_one_job(
     engine: &IoEngine,
     device: &str,
     plan: &JobPlan,
-) -> Result<()> {
+    clock: &Clock,
+) -> Result<f64> {
+    let mut recovery_secs = 0.0;
+    if plan.restore_reads > 0 {
+        // Correlated restore burst: submit the whole set at once
+        // (Checkpoint class — restores are checkpoint traffic, not
+        // ingest), then wait it out.  Burst drain time = recovery.
+        let t0 = clock.now();
+        let restores: Vec<IoTicket> = (0..plan.restore_reads)
+            .map(|_| {
+                engine.submit_class(
+                    IoRequest::ProbeRead {
+                        device: device.to_string(),
+                        bytes: plan.ckpt_bytes,
+                    },
+                    IoClass::Checkpoint,
+                )
+            })
+            .collect::<Result<_>>()?;
+        for t in restores {
+            t.wait().context("fleet restore read failed")?;
+        }
+        recovery_secs = clock.now() - t0;
+    }
     let mut inflight: VecDeque<IoTicket> = VecDeque::new();
     let mut ckpts: Vec<IoTicket> = Vec::new();
     for i in 0..plan.reads {
@@ -369,7 +415,7 @@ fn run_one_job(
     for t in ckpts {
         t.wait().context("fleet checkpoint write failed")?;
     }
-    Ok(())
+    Ok(recovery_secs)
 }
 
 fn run_cell(
@@ -422,18 +468,20 @@ fn run_cell(
             let device = cfg.device.clone();
             std::thread::Builder::new()
                 .name(format!("fleet-{name}"))
-                .spawn(move || -> Result<()> {
+                .spawn(move || -> Result<f64> {
                     let _reg = clock.enter();
                     barrier.wait();
                     with_tenant(&tenant, || {
-                        run_one_job(&engine, &device, &plan)
+                        run_one_job(&engine, &device, &plan, &clock)
                     })
                 })
                 .context("spawn fleet job")
         })
         .collect::<Result<_>>()?;
+    let mut recoveries = Vec::with_capacity(n);
     for h in handles {
-        h.join().map_err(|_| anyhow!("fleet job panicked"))??;
+        recoveries
+            .push(h.join().map_err(|_| anyhow!("fleet job panicked"))??);
     }
     let elapsed = (clock.now() - t0).max(1e-9);
     engine.clear_observer();
@@ -476,6 +524,7 @@ fn run_cell(
             ingest_p99_ms: p99 * 1e3,
             goodput_mbps: goodput,
             ckpt_completed: ckpt,
+            recovery_secs: recoveries[i],
             elapsed_secs: elapsed,
             jain_p99: 0.0,
             jain_goodput: 0.0,
@@ -533,6 +582,9 @@ mod tests {
             if !(r.scenario == "noisy" && r.tenant == "t0") {
                 assert_eq!(r.ckpt_completed, 2);
             }
+            // No restore burst outside the restart scenario.
+            assert_eq!(r.recovery_secs, 0.0, "{}: phantom recovery",
+                       r.scenario);
         }
         // Identical jobs under equal shares: goodput is near-even.
         let uniform = rows
@@ -564,6 +616,32 @@ mod tests {
                 }
             }
             other => panic!("expected a JSON array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn restart_storm_reports_per_tenant_recovery() {
+        // DESIGN.md §15: the whole fleet restores at t=0; every tenant
+        // reports how long its correlated restore burst took before
+        // ingest resumed.
+        let mut cfg = tiny_cfg();
+        cfg.schemes = vec!["equal".into()];
+        cfg.scenarios = vec!["restart".into()];
+        let rows = run(&cfg).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(
+                r.recovery_secs > 0.0,
+                "{}: restart tenant reports no recovery time",
+                r.tenant
+            );
+            assert!(r.recovery_secs <= r.elapsed_secs + 1e-9);
+            // restore burst (2 × ckpt_writes, min 2) + the regular
+            // bursts (reads 8 / every 4 × 1 write) — all Checkpoint
+            // class.
+            assert_eq!(r.ckpt_completed, 4);
+            assert_eq!(r.ingest_completed, cfg.reads_per_job as u64);
+            assert!(r.jain_goodput > 0.0 && r.jain_goodput <= 1.0 + 1e-9);
         }
     }
 

@@ -2,6 +2,7 @@
 //! substrates.  Each bench/figure driver composes these runners; the
 //! `dlio` binary exposes them as subcommands.
 
+pub mod fault_sweep;
 pub mod fixtures;
 pub mod fleet_sweep;
 pub mod microbench;
@@ -11,6 +12,7 @@ pub mod tier_sweep;
 pub mod trace_record;
 pub mod workload;
 
+pub use fault_sweep::{FaultSweepConfig, FaultSweepRow};
 pub use fixtures::{
     build_hierarchy, ensure_corpus, make_sim, StorageTarget,
 };

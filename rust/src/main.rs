@@ -20,12 +20,16 @@
 //!                  [--tier0-cap-kb N] [--format csv|json]
 //!                  [--clock wall|virtual]
 //! dlio fleet-sweep [--smoke] [--tenants 2,4] [--schemes equal,..]
-//!                  [--scenarios uniform,noisy,churn,storm]
+//!                  [--scenarios uniform,noisy,churn,storm,restart]
 //!                  [--format csv|json] [--clock wall|virtual]
+//! dlio fault-sweep [--smoke] [--kinds none,slow,..] [--devices hdd,ssd]
+//!                  [--workers N] [--reads N] [--format csv|json]
+//!                  [--clock wall|virtual]
 //! dlio trace       [--device D] [--prefetch 0|1] ... (dstat CSV to stdout)
 //! dlio trace-record [microbench|miniapp] [--smoke] [--out FILE]
 //! dlio trace-replay <file> [--profile P] [--qos fifo|static|adaptive]
 //!                  [--sweep fifo,static,..] [--speed X] [--open-loop]
+//!                  [--inject kind[:dev[:start[:dur]]]]
 //!                  [--clock wall|virtual] [--json|--csv]
 //! dlio trace-compact <file> [--epochs N] [--out FILE]
 //! ```
@@ -44,8 +48,9 @@ use dlio::config::{
     CkptStudyConfig, MicrobenchConfig, MiniAppConfig, Testbed,
 };
 use dlio::coordinator::{
-    build_hierarchy, ensure_corpus, fleet_sweep, make_sim, microbench,
-    miniapp, qos_sweep, tier_sweep, trace_record, StorageTarget,
+    build_hierarchy, ensure_corpus, fault_sweep, fleet_sweep, make_sim,
+    microbench, miniapp, qos_sweep, tier_sweep, trace_record,
+    StorageTarget,
 };
 use dlio::data::CorpusSpec;
 use dlio::metrics::Table;
@@ -77,6 +82,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "qos-sweep" => cmd_qos_sweep(args),
         "tier-sweep" => cmd_tier_sweep(args),
         "fleet-sweep" => cmd_fleet_sweep(args),
+        "fault-sweep" => cmd_fault_sweep(args),
         "trace" => cmd_trace(args),
         "trace-record" => cmd_trace_record(args),
         "trace-replay" => cmd_trace_replay(args),
@@ -117,13 +123,21 @@ dlio — Characterizing Deep-Learning I/O Workloads (PDSW-DISCS'18) repro
                              ingest p99 and goodput ([--smoke]
                              [--tenants 2,4] [--schemes equal,weighted,
                               blind] [--scenarios uniform,noisy,churn,
-                              storm] [--format csv|json])
+                              storm,restart] [--format csv|json])
+  dlio fault-sweep           degraded-mode study: one probe workload
+                             per (fault kind x device) cell, reporting
+                             errors/retries, time-to-recover and the
+                             goodput-retained fraction vs the no-fault
+                             baseline ([--smoke] [--kinds none,slow,
+                              flaky,read-only,offline] [--devices
+                              hdd,ssd] [--format csv|json])
   dlio trace       Figs 8/10 dstat-style I/O trace (CSV on stdout)
   dlio trace-record [microbench|miniapp]  record a request-level JSONL
                              trace ([--smoke] [--out FILE])
   dlio trace-replay <file>   re-run a trace against any profile/QoS
                              ([--profile P] [--qos fifo|static|adaptive]
                               [--sweep M1,M2,..] [--speed X] [--open-loop]
+                              [--inject kind[:dev[:start[:dur]]]]
                               [--json|--csv])
   dlio trace-compact <file>  fold repeated per-epoch event runs into a
                              representative trace ([--epochs N] [--out F])
@@ -140,7 +154,11 @@ N (hard token-bucket caps on the Checkpoint / Drain classes),
 Time source: --clock wall|virtual — virtual runs the engine in
 discrete-event time (no real sleeps; sweeps finish orders of magnitude
 faster with identical byte totals).  Default: virtual for qos-sweep /
-tier-sweep / trace-replay --sweep, wall for plain trace-replay.
+tier-sweep / fleet-sweep / fault-sweep / trace-replay --sweep, wall
+for plain trace-replay.
+Fault injection: --inject kind[:device[:start[:duration]]] arms a
+device fault on the replay (kinds: none, slow, flaky, read-only,
+offline; window in modelled seconds, default immediate and permanent).
 Artifacts: run `make artifacts` first or set DLIO_ARTIFACTS.
 ";
 
@@ -212,7 +230,7 @@ fn testbed(args: &Args) -> Result<Testbed> {
 /// queue-depth/latency surface, straight from the engine.
 fn print_engine_stats(sim: &dlio::storage::StorageSim) {
     let mut t = Table::new(&[
-        "Device", "class", "reqs", "err", "max qdepth",
+        "Device", "class", "reqs", "err", "retry", "max qdepth",
         "mean queue ms", "p99 queue ms", "mean svc ms",
         "MB read", "MB written",
     ]);
@@ -233,6 +251,7 @@ fn print_engine_stats(sim: &dlio::storage::StorageSim) {
                 class.name().into(),
                 c.completed.to_string(),
                 c.errors.to_string(),
+                c.retries.to_string(),
                 c.max_queue_depth.to_string(),
                 format!("{:.3}", c.mean_queue_secs() * 1e3),
                 format!("{:.3}", c.p99_queue_secs() * 1e3),
@@ -246,6 +265,7 @@ fn print_engine_stats(sim: &dlio::storage::StorageSim) {
             "total".into(),
             s.completed.to_string(),
             s.errors.to_string(),
+            s.retries.to_string(),
             s.max_queue_depth.to_string(),
             format!("{:.3}", s.mean_queue_secs() * 1e3),
             "-".into(),
@@ -261,6 +281,7 @@ fn print_engine_stats(sim: &dlio::storage::StorageSim) {
                 format!("tier{}", tr.tier),
                 tr.completed.to_string(),
                 tr.errors.to_string(),
+                "-".into(),
                 "-".into(),
                 "-".into(),
                 "-".into(),
@@ -284,6 +305,7 @@ fn print_engine_stats(sim: &dlio::storage::StorageSim) {
                     format!("{}/{}", tn.tenant, class.name()),
                     c.completed.to_string(),
                     c.errors.to_string(),
+                    c.retries.to_string(),
                     "-".into(),
                     format!("{:.3}", c.mean_queue_secs() * 1e3),
                     format!("{:.3}", c.p99_queue_secs() * 1e3),
@@ -661,6 +683,54 @@ fn cmd_fleet_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `dlio fault-sweep`: one closed-loop probe workload per (fault kind
+/// × device profile) cell, with the fault window armed mid-run — one
+/// CSV/JSON row per cell reporting errors/retries, time-to-recover
+/// and the goodput-retained fraction against the cell's no-fault
+/// baseline (DESIGN.md §15).
+fn cmd_fault_sweep(args: &Args) -> Result<()> {
+    let ts = args.get_f64("time-scale", default_time_scale())?;
+    if ts <= 0.0 {
+        return Err(anyhow!("--time-scale must be positive"));
+    }
+    let mut cfg = if args.has_flag("smoke") {
+        fault_sweep::FaultSweepConfig::smoke(ts)
+    } else {
+        fault_sweep::FaultSweepConfig::standard(ts)
+    };
+    if let Some(d) = args.get_list("devices") {
+        cfg.devices = d;
+    }
+    if let Some(k) = args.get_list("kinds") {
+        cfg.kinds = k;
+    }
+    cfg.workers = args.get_usize("workers", cfg.workers)?;
+    cfg.reads_per_worker = args.get_usize("reads", cfg.reads_per_worker)?;
+    cfg.read_bytes =
+        args.get_usize("read-kb", (cfg.read_bytes / 1024) as usize)? as u64
+            * 1024;
+    cfg.ckpt_every = args.get_usize("ckpt-every", cfg.ckpt_every)?;
+    cfg.ckpt_bytes =
+        args.get_usize("ckpt-kb", (cfg.ckpt_bytes / 1024) as usize)? as u64
+            * 1024;
+    cfg.fault_start_frac =
+        args.get_f64("fault-start-frac", cfg.fault_start_frac)?;
+    cfg.fault_len_frac = args.get_f64("fault-len-frac", cfg.fault_len_frac)?;
+    cfg.clock = clock_arg(args, cfg.clock)?;
+    // Validate the output format *before* running the matrix.
+    let format = args.get_or("format", "csv");
+    if format != "csv" && format != "json" {
+        return Err(anyhow!("unknown --format {format:?} (csv|json)"));
+    }
+    let rows = fault_sweep::run(&cfg)?;
+    match format.as_str() {
+        "csv" => print!("{}", fault_sweep::to_csv(&rows)),
+        "json" => println!("{}", fault_sweep::to_json(&rows)),
+        _ => unreachable!("validated above"),
+    }
+    Ok(())
+}
+
 fn cmd_trace(args: &Args) -> Result<()> {
     let tb = testbed(args)?;
     // Validate here instead of letting Dstat::new's assert panic on a
@@ -756,7 +826,7 @@ fn cmd_trace_record(args: &Args) -> Result<()> {
 fn cmd_trace_replay(args: &Args) -> Result<()> {
     let file = args.positional.get(1).ok_or_else(|| {
         anyhow!("usage: dlio trace-replay <file> [--profile P] [--qos M] \
-                 [--speed X] [--open-loop] [--json|--csv]")
+                 [--speed X] [--open-loop] [--inject PLAN] [--json|--csv]")
     })?;
     let trace = Trace::load(Path::new(file))?;
     let adaptive_target = args.get_f64("adaptive-target-ms", 5.0)? * 1e-3;
@@ -819,6 +889,7 @@ fn cmd_trace_replay(args: &Args) -> Result<()> {
         profile: args.get("profile").map(str::to_string),
         time_scale,
         clock,
+        inject: args.get("inject").map(str::to_string),
     };
     // `--sweep m1,m2,..`: replay-driven what-if matrix — ONE recorded
     // trace across the qos-sweep scheduler modes, one diff row per

@@ -24,10 +24,13 @@
 //! modelled device.  All byte grants flow through an observer hook,
 //! which is how the dstat-style tracer (Figs. 8/10) sees traffic.
 
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
+use anyhow::Result;
+
 use super::clock::{Clock, SimCondvar};
+use super::fault::{DeviceHealth, HealthState};
 
 /// Transfer direction, for accounting and tracing.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -292,6 +295,9 @@ pub struct Device {
     gate: ChannelGate,
     observer: Arc<dyn IoObserver>,
     clock: Clock,
+    /// Armed fault schedule (the health seam, DESIGN.md §15): `None`
+    /// — the overwhelmingly common case — means permanently healthy.
+    health: RwLock<Option<Arc<DeviceHealth>>>,
 }
 
 /// Transfers are paced in chunks so no stream monopolizes the bucket
@@ -327,11 +333,60 @@ impl Device {
             observer,
             model,
             clock,
+            health: RwLock::new(None),
         }
     }
 
     pub fn name(&self) -> &str {
         &self.model.name
+    }
+
+    /// Arm (or clear) an injected fault schedule.  Every service path
+    /// consults it from here on; `None` restores permanent health.
+    pub fn set_health(&self, health: Option<Arc<DeviceHealth>>) {
+        *self.health.write().unwrap() = health;
+    }
+
+    /// The armed fault schedule, if any.
+    pub fn health(&self) -> Option<Arc<DeviceHealth>> {
+        self.health.read().unwrap().clone()
+    }
+
+    /// State-machine position right now (healthy without a schedule).
+    pub fn health_state(&self) -> HealthState {
+        match self.health.read().unwrap().as_ref() {
+            None => HealthState::Healthy,
+            Some(h) => h.state_at(self.clock.now()),
+        }
+    }
+
+    /// Whether any degradation (state, transient errors, or slowdown)
+    /// is active right now — the hierarchy migrator's pause predicate.
+    pub fn degraded(&self) -> bool {
+        match self.health.read().unwrap().as_ref() {
+            None => false,
+            Some(h) => h.degraded_at(self.clock.now()),
+        }
+    }
+
+    /// Admission gate for one request in `dir`: `Err` when the armed
+    /// fault schedule denies it (offline, read-only write, or a
+    /// transient-error draw).  Healthy devices pay one uncontended
+    /// read-lock.
+    pub fn fault_gate(&self, dir: Dir) -> Result<()> {
+        match self.health.read().unwrap().as_ref() {
+            None => Ok(()),
+            Some(h) => h.admit(&self.model.name, dir, self.clock.now()),
+        }
+    }
+
+    /// Current latency/transfer multiplier from the fault schedule
+    /// (1.0 when healthy).
+    fn fault_slow_factor(&self) -> f64 {
+        match self.health.read().unwrap().as_ref() {
+            None => 1.0,
+            Some(h) => h.slow_factor_at(self.clock.now()),
+        }
     }
 
     /// The clock this device paces against.
@@ -394,13 +449,15 @@ impl Device {
     }
 
     /// Sleep the latency phase (seek / command / RPC) for one request
-    /// at queue depth `depth`.
+    /// at queue depth `depth`.  An active latency-spike fault
+    /// multiplies the phase.
     pub fn latency_phase(&self, dir: Dir, depth: u32) {
         let lat = match dir {
             Dir::Read => self.model.read_lat,
             Dir::Write => self.model.write_lat,
         } / self.model.elevator_gain(depth)
-            / self.model.time_scale;
+            / self.model.time_scale
+            * self.fault_slow_factor();
         self.clock.sleep_secs(lat);
     }
 
@@ -417,6 +474,22 @@ impl Device {
             Dir::Write => &self.write_bucket,
         };
         bucket.take_with_credit(bytes, credit);
+        // Latency-spike fault: the window stretches the transfer phase
+        // too (the bucket is shared across requests, so the penalty is
+        // an extra per-request sleep rather than a rate change — a
+        // healthy sibling device keeps its full bandwidth).
+        let slow = self.fault_slow_factor();
+        if slow > 1.0 {
+            let bw = match dir {
+                Dir::Read => self.model.read_bw,
+                Dir::Write => self.model.write_bw,
+            };
+            if bw > 0.0 {
+                self.clock.sleep_secs(
+                    bytes as f64 / bw * (slow - 1.0) / self.model.time_scale,
+                );
+            }
+        }
         self.observer.record(&self.model.name, dir, bytes);
     }
 
@@ -430,7 +503,9 @@ impl Device {
 
     /// Pace a transfer of `bytes` in `dir`, invoking `io` for the real
     /// backing-file operation once the device "positions" (after the
-    /// latency phase).  Returns the value produced by `io`.
+    /// latency phase).  Returns the value produced by `io`, or the
+    /// fault-gate error when an armed fault schedule denies the
+    /// request (offline, read-only write, transient error draw).
     ///
     /// This is the blocking single-request path, now expressed over the
     /// same primitives the request-level [`IoEngine`]
@@ -440,7 +515,7 @@ impl Device {
         dir: Dir,
         bytes: u64,
         io: impl FnOnce() -> T,
-    ) -> T {
+    ) -> Result<T> {
         // Count the caller as a simulation participant for the span
         // of the transfer: concurrent virtual-mode transfers then
         // overlap their sleeps (the thread-scaling results) instead of
@@ -450,6 +525,13 @@ impl Device {
         // --- enter queue + claim a channel ---
         let enq = self.queue_enter();
         let depth = self.service_begin(enq);
+
+        // --- health gate: a denied request fails after claiming (and
+        //     releasing) its channel, like a real command error ---
+        if let Err(e) = self.fault_gate(dir) {
+            self.service_end();
+            return Err(e);
+        }
 
         // --- latency phase (seek / command / RPC) ---
         self.latency_phase(dir, depth);
@@ -476,7 +558,7 @@ impl Device {
 
         // --- leave ---
         self.service_end();
-        out
+        Ok(out)
     }
 
     /// Current queue depth (in-service + waiting).
@@ -590,7 +672,7 @@ mod tests {
     fn device_transfer_runs_io_and_paces() {
         let d = Device::new(model("x"), Arc::new(NullObserver));
         let t0 = Instant::now();
-        let v = d.transfer(Dir::Read, 5_000_000, || 42);
+        let v = d.transfer(Dir::Read, 5_000_000, || 42).unwrap();
         assert_eq!(v, 42);
         let dt = t0.elapsed().as_secs_f64();
         assert!(dt > 0.02, "no pacing applied: {dt}");
@@ -608,7 +690,7 @@ mod tests {
             .map(|_| {
                 let d = Arc::clone(&d);
                 std::thread::spawn(move || {
-                    d.transfer(Dir::Read, 1, || ());
+                    d.transfer(Dir::Read, 1, || ()).unwrap();
                 })
             })
             .collect();
@@ -638,7 +720,9 @@ mod tests {
             let hs: Vec<_> = (0..6)
                 .map(|_| {
                     let d = Arc::clone(&d);
-                    std::thread::spawn(move || d.transfer(Dir::Read, 1, || ()))
+                    std::thread::spawn(move || {
+                        d.transfer(Dir::Read, 1, || ()).unwrap()
+                    })
                 })
                 .collect();
             for h in hs {
@@ -664,7 +748,7 @@ mod tests {
         let mut m = model("x");
         m.time_scale = 1000.0; // fast test
         let d = Device::new(m, obs.clone());
-        d.transfer(Dir::Write, 3_000_000, || ());
+        d.transfer(Dir::Write, 3_000_000, || ()).unwrap();
         assert_eq!(obs.0.load(Ordering::SeqCst), 3_000_000);
     }
 
@@ -723,7 +807,7 @@ mod tests {
         let bytes = 8_000_000u64;
         let burst = (m.read_bw * 0.002).clamp(64.0 * 1024.0, 1024.0 * 1024.0);
         let t0 = clock.now();
-        d.transfer(Dir::Read, bytes, || ());
+        d.transfer(Dir::Read, bytes, || ()).unwrap();
         let dt = clock.now() - t0;
         let expect =
             m.service_time(Dir::Read, bytes, 1) - burst / (m.read_bw * m.time_scale);
@@ -735,12 +819,59 @@ mod tests {
     }
 
     #[test]
+    fn fault_gate_denies_then_recovers_and_slow_stretches_service() {
+        use super::super::fault::{DeviceHealth, FaultPhase};
+        let clock = Clock::virt();
+        let d = Device::with_clock(
+            model("flt"),
+            Arc::new(NullObserver),
+            clock.clone(),
+        );
+        // Offline for the first virtual second: everything fails.
+        d.set_health(Some(Arc::new(DeviceHealth::new(
+            vec![FaultPhase::state(0.0, 1.0, HealthState::Offline)],
+            clock.now(),
+        ))));
+        let err = d.transfer(Dir::Read, 1_000, || ()).unwrap_err();
+        assert!(err.to_string().contains("offline"), "{err}");
+        assert_eq!(d.health_state(), HealthState::Offline);
+        assert!(d.degraded());
+        {
+            let _reg = clock.enter();
+            clock.sleep_secs(1.5);
+        }
+        // Recovered: past the window the same request succeeds.
+        assert_eq!(d.health_state(), HealthState::Healthy);
+        assert!(!d.degraded());
+        d.transfer(Dir::Read, 1_000, || ()).unwrap();
+
+        // Latency spike: the same transfer takes ~slow_factor longer.
+        let elapsed = |d: &Device| {
+            let t0 = d.clock().now();
+            d.transfer(Dir::Read, 4_000_000, || ()).unwrap();
+            d.clock().now() - t0
+        };
+        let healthy = elapsed(&d);
+        d.set_health(Some(Arc::new(DeviceHealth::new(
+            vec![FaultPhase::slow(0.0, f64::INFINITY, 8.0)],
+            clock.now(),
+        ))));
+        let slowed = elapsed(&d);
+        assert!(
+            slowed > 4.0 * healthy,
+            "slow factor 8 transfer {slowed} !> 4x healthy {healthy}"
+        );
+        d.set_health(None);
+        assert!(!d.degraded());
+    }
+
+    #[test]
     fn time_scale_accelerates() {
         let mut m = model("fast");
         m.time_scale = 100.0;
         let d = Device::new(m, Arc::new(NullObserver));
         let t0 = Instant::now();
-        d.transfer(Dir::Read, 10_000_000, || ());
+        d.transfer(Dir::Read, 10_000_000, || ()).unwrap();
         // 0.1 s of modelled time at 100x => ~1 ms wall.
         assert!(t0.elapsed().as_secs_f64() < 0.05);
     }

@@ -135,6 +135,39 @@ pub struct RateCap {
     pub burst_bytes: u64,
 }
 
+/// Bounded retry-with-backoff for failed unit requests (reads, writes,
+/// probes) — the degraded-mode half of the fault seam (DESIGN.md §15).
+/// A failed request is re-run up to `budget[class]` times with
+/// exponential backoff before its error surfaces; every re-attempt is
+/// counted in the device/class `retries` counters, while `errors`
+/// stays exactly-once per finally-failed request.  Streams (chunked
+/// writes, copy halves) fail fast: a mid-stream retry would replay
+/// already-consumed chunks.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Re-attempts after the first failure, indexed by
+    /// [`IoClass::index`] (0 disables retries for the class).
+    pub budget: [u32; IoClass::COUNT],
+    /// First backoff sleep, **modelled** seconds (doubles per
+    /// attempt; divided by the device's `time_scale` at the sleep
+    /// point, like [`QosConfig::max_yield_wait`]).
+    pub backoff: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { budget: [2; IoClass::COUNT], backoff: 0.002 }
+    }
+}
+
+impl RetryPolicy {
+    /// Disable retries entirely (every failure surfaces immediately —
+    /// the pre-fault-seam behaviour, kept for A/B comparisons).
+    pub fn none() -> RetryPolicy {
+        RetryPolicy { budget: [0; IoClass::COUNT], backoff: 0.002 }
+    }
+}
+
 /// Identity of the job (tenant) a request belongs to — the outer key
 /// of the hierarchical `(TenantId, IoClass)` scheduler.  Cheap to
 /// clone (a shared string).  The default (empty) tenant is the
@@ -362,6 +395,9 @@ pub struct QosConfig {
     /// an outer DRR over tenant shares ([`TenantQos`]); `None` (the
     /// default) keeps the flat tenant-blind scheduler bit-for-bit.
     pub tenants: Option<TenantQos>,
+    /// Bounded retry-with-backoff for failed unit requests (the fault
+    /// seam's degraded-mode path).
+    pub retry: RetryPolicy,
 }
 
 impl Default for QosConfig {
@@ -374,6 +410,7 @@ impl Default for QosConfig {
             rate_caps: [None; IoClass::COUNT],
             adaptive: None,
             tenants: None,
+            retry: RetryPolicy::default(),
         }
     }
 }
@@ -439,6 +476,12 @@ impl QosConfig {
     /// per-tenant shares, caps, and adaptive targets.
     pub fn with_tenants(mut self, tenants: TenantQos) -> QosConfig {
         self.tenants = Some(tenants);
+        self
+    }
+
+    /// Builder: override the bounded-retry policy.
+    pub fn with_retry(mut self, retry: RetryPolicy) -> QosConfig {
+        self.retry = retry;
         self
     }
 
@@ -1046,6 +1089,12 @@ pub struct ClassStats {
     pub submitted: u64,
     pub completed: u64,
     pub errors: u64,
+    /// Failed attempts that were re-run under the bounded retry
+    /// policy ([`RetryPolicy`]).  A request retried twice then
+    /// succeeding contributes `retries: 2, errors: 0`; one exhausting
+    /// its budget contributes `retries: budget, errors: 1` — errors
+    /// stay exactly-once per finally-failed request.
+    pub retries: u64,
     /// Total submit → service-start seconds across requests.
     pub queue_secs: f64,
     /// Total service seconds across requests.
@@ -1119,6 +1168,9 @@ pub struct EngineDeviceStats {
     pub submitted: u64,
     pub completed: u64,
     pub errors: u64,
+    /// Failed attempts re-run under the retry policy (see
+    /// [`ClassStats::retries`] for the exactly-once error contract).
+    pub retries: u64,
     /// Total submit → service-start seconds across requests.
     pub queue_secs: f64,
     /// Total service seconds across requests.
@@ -1310,6 +1362,13 @@ fn record_done(
             }
         }
     }
+}
+
+/// One retried attempt's accounting (device + class rows): kept next
+/// to [`record_done`] so the retry/error split stays in one place.
+fn record_retry(stats: &mut EngineDeviceStats, class: IoClass) {
+    stats.retries += 1;
+    stats.classes[class.index()].retries += 1;
 }
 
 enum JobOp {
@@ -2918,7 +2977,38 @@ fn worker_loop(q: Arc<DeviceQueue>, chunk_size: usize) {
         let op_kind = job.op.engine_op();
         let queue_secs = (q.clock.now() - job.submitted).max(0.0);
         let t0 = q.clock.now();
-        let outcome = run_job(&q.device, job.op, job.enq_depth, chunk_size);
+        // Bounded retry-with-backoff (the fault seam's degraded-mode
+        // path): a failed attempt is re-run up to the class's budget
+        // with doubling modelled backoff before its error surfaces.
+        // The backoff sleeps on the engine clock, so virtual-clock
+        // fault runs stay deterministic.
+        let budget = q.qos.retry.budget[job.class.index()];
+        let mut attempt = 0u32;
+        // Each attempt consumes one queue membership (service_end
+        // leaves the queue), so every retry re-enters before re-running
+        // — the elevator model sees retries as fresh arrivals.
+        let mut enq_depth = job.enq_depth;
+        let outcome = loop {
+            let res = run_job(&q.device, &job.op, enq_depth, chunk_size);
+            match res {
+                Ok(v) => break Ok(v),
+                Err(e) => {
+                    if attempt >= budget {
+                        break Err(e);
+                    }
+                    attempt += 1;
+                    record_retry(
+                        &mut q.stats.lock().unwrap(),
+                        job.class,
+                    );
+                    let backoff = q.qos.retry.backoff
+                        * (1u64 << (attempt - 1).min(16)) as f64
+                        / q.device.model.time_scale;
+                    q.clock.sleep_secs(backoff);
+                    enq_depth = q.device.queue_enter();
+                }
+            }
+        };
         let service_secs = (q.clock.now() - t0).max(0.0);
         {
             let mut stats = q.stats.lock().unwrap();
@@ -2966,10 +3056,14 @@ fn worker_loop(q: Arc<DeviceQueue>, chunk_size: usize) {
     }
 }
 
-/// Execute one job; returns (bytes, direction, data).
+/// Execute one job; returns (bytes, direction, data).  Borrows the op
+/// so the worker's bounded-retry loop can re-run a failed attempt.
+/// Each attempt passes the device's fault gate after claiming a
+/// channel — an injected denial (offline, read-only write, transient
+/// error) fails like a command error, with the gate balanced.
 fn run_job(
     dev: &Arc<Device>,
-    op: JobOp,
+    op: &JobOp,
     enq_depth: u32,
     chunk_size: usize,
 ) -> Result<(u64, Dir, Option<Vec<u8>>)> {
@@ -2978,22 +3072,35 @@ fn run_job(
             // Queue membership was taken at submit; claim a channel
             // and balance the gate whatever happens during service.
             let depth = dev.service_begin(enq_depth);
+            if let Err(e) = dev.fault_gate(Dir::Read) {
+                dev.service_end();
+                return Err(e);
+            }
             dev.latency_phase(Dir::Read, depth);
-            let res = read_paced(dev, &path, chunk_size);
+            let res = read_paced(dev, path, chunk_size);
             dev.service_end();
             let data = res?;
             Ok((data.len() as u64, Dir::Read, Some(data)))
         }
         JobOp::Write { path, data } => {
             let depth = dev.service_begin(enq_depth);
+            if let Err(e) = dev.fault_gate(Dir::Write) {
+                dev.service_end();
+                return Err(e);
+            }
             dev.latency_phase(Dir::Write, depth);
-            let res = write_paced(dev, &path, &data, chunk_size);
+            let res = write_paced(dev, path, data, chunk_size);
             dev.service_end();
             res?;
             Ok((data.len() as u64, Dir::Write, None))
         }
         JobOp::Probe { dir, bytes } => {
+            let (dir, bytes) = (*dir, *bytes);
             let depth = dev.service_begin(enq_depth);
+            if let Err(e) = dev.fault_gate(dir) {
+                dev.service_end();
+                return Err(e);
+            }
             dev.latency_phase(dir, depth);
             let chunk = dev.pacing_chunk(bytes).max(chunk_size as u64);
             let mut remaining = bytes;
@@ -3122,6 +3229,16 @@ fn write_stream_chunks(
             let enq = dev.queue_enter();
             dev.service_begin(enq)
         };
+        if let Err(e) = dev.fault_gate(Dir::Write) {
+            dev.service_end();
+            if *first {
+                // The submit-time queue membership was consumed by
+                // the service_begin/service_end pair above — make
+                // sure the caller does not release it again.
+                *first = false;
+            }
+            return Err(StreamFailure::new(e, false));
+        }
         if *first {
             // The stream's queue phase ends here: the first chunk
             // holds the device.
@@ -3214,6 +3331,15 @@ fn copy_reader(
                 let enq = dev.queue_enter();
                 dev.service_begin(enq)
             };
+            if let Err(e) = dev.fault_gate(Dir::Read) {
+                dev.service_end();
+                if first {
+                    // Submit-time membership consumed above; the
+                    // post-closure queue_leave must not fire.
+                    first = false;
+                }
+                return Err(e);
+            }
             if first {
                 first_service = Some(q.clock.now());
                 dev.latency_phase(Dir::Read, depth);
@@ -4785,5 +4911,102 @@ mod tests {
         assert!(s.ingest_weight >= 1);
         assert_eq!(s.tenant("a").unwrap().completed, 4);
         assert_eq!(s.tenant("b").unwrap().completed, 4);
+    }
+
+    fn engine_with_fault(
+        phases: Vec<crate::storage::fault::FaultPhase>,
+        qos: QosConfig,
+    ) -> IoEngine {
+        use crate::storage::clock::Clock;
+        use crate::storage::fault::DeviceHealth;
+        let clock = Clock::virt();
+        let dev = Arc::new(Device::with_clock(
+            model("d", 2, 1.0),
+            Arc::new(NullObserver),
+            clock.clone(),
+        ));
+        dev.set_health(Some(Arc::new(DeviceHealth::new(
+            phases,
+            clock.now(),
+        ))));
+        let mut devices = HashMap::new();
+        devices.insert("d".to_string(), dev);
+        IoEngine::with_config(&devices, 8 * 1024, qos)
+    }
+
+    #[test]
+    fn exhausted_retry_budget_counts_error_exactly_once() {
+        use crate::storage::fault::FaultPhase;
+        // A permanently flaky device: every attempt draws a transient
+        // error.  The worker burns the full Ingest retry budget, then
+        // the error surfaces once — retries == budget, errors == 1.
+        let qos = QosConfig::default()
+            .with_retry(RetryPolicy { budget: [2; IoClass::COUNT], backoff: 0.002 });
+        let eng = engine_with_fault(
+            vec![FaultPhase::flaky(0.0, f64::INFINITY, 1.0)],
+            qos,
+        );
+        let t = eng
+            .submit(IoRequest::ProbeRead { device: "d".into(), bytes: 1024 })
+            .unwrap();
+        assert!(t.wait().is_err());
+        let stats = eng.stats();
+        let s = stats.iter().find(|st| st.device == "d").unwrap();
+        assert_eq!(s.submitted, 1);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.errors, 1, "error must be exactly-once");
+        assert_eq!(s.retries, 2, "retries must equal the class budget");
+        let ingest = &s.classes[IoClass::Ingest.index()];
+        assert_eq!(ingest.errors, 1);
+        assert_eq!(ingest.retries, 2);
+    }
+
+    #[test]
+    fn transient_fault_clearing_during_backoff_yields_no_error() {
+        use crate::storage::fault::FaultPhase;
+        // The fault window closes before the first backoff expires:
+        // the retried attempt succeeds, so the ledger shows retries
+        // but zero errors (a retried-then-successful request).
+        let qos = QosConfig::default()
+            .with_retry(RetryPolicy { budget: [4; IoClass::COUNT], backoff: 0.002 });
+        let eng = engine_with_fault(
+            vec![FaultPhase::flaky(0.0, 0.001, 1.0)],
+            qos,
+        );
+        let t = eng
+            .submit(IoRequest::ProbeRead { device: "d".into(), bytes: 4096 })
+            .unwrap();
+        let c = t.wait().unwrap();
+        assert_eq!(c.bytes, 4096);
+        let stats = eng.stats();
+        let s = stats.iter().find(|st| st.device == "d").unwrap();
+        assert_eq!(s.errors, 0, "recovered request must not count an error");
+        assert!(s.retries >= 1, "the failed attempt must be ledgered");
+        assert_eq!(s.classes[IoClass::Ingest.index()].errors, 0);
+        assert!(s.classes[IoClass::Ingest.index()].retries >= 1);
+    }
+
+    #[test]
+    fn zero_retry_budget_fails_fast() {
+        use crate::storage::fault::{FaultPhase, HealthState};
+        // RetryPolicy::none(): the first injected denial surfaces
+        // immediately with no retry ledger entries.
+        let qos = QosConfig::default().with_retry(RetryPolicy::none());
+        let eng = engine_with_fault(
+            vec![FaultPhase::state(0.0, f64::INFINITY, HealthState::Offline)],
+            qos,
+        );
+        let t = eng
+            .submit(IoRequest::ProbeWrite { device: "d".into(), bytes: 1024 })
+            .unwrap();
+        let err = t.wait().unwrap_err();
+        assert!(
+            err.to_string().contains("offline"),
+            "error should name the injected state: {err}"
+        );
+        let stats = eng.stats();
+        let s = stats.iter().find(|st| st.device == "d").unwrap();
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.retries, 0);
     }
 }

@@ -1,0 +1,415 @@
+//! Fault seam: injectable device faults and degraded-mode operation
+//! (DESIGN.md §15).
+//!
+//! The paper's entire case for checkpointing (and the burst-buffer
+//! result) is restart-after-failure, yet a simulator whose devices are
+//! perfect never exercises one.  This module makes *health* a
+//! first-class seam the way `clock.rs` did for time and the tenant
+//! scheduler did for tenancy: a [`FaultPlan`] describes per-device
+//! schedules of degradation, and an armed [`DeviceHealth`] handle is
+//! consulted by every device service path.
+//!
+//! Three orthogonal degradation axes per scheduled [`FaultPhase`]:
+//!
+//! * **state machine** — `healthy → read-only → offline → recovered`
+//!   ([`HealthState`]): a read-only device fails writes, an offline
+//!   device fails everything, and once the phase window passes the
+//!   device is healthy again (recovery is the absence of an active
+//!   phase, so plans cannot leave a device wedged).
+//! * **transient errors** — `error_rate` fails a fraction of requests
+//!   with a retryable error (the engine's bounded retry-with-backoff
+//!   path absorbs them up to its per-class budget).
+//! * **latency spikes** — `slow_factor` multiplies the latency phase
+//!   and stretches the transfer phase of every request in the window.
+//!
+//! Phase windows are *modelled seconds relative to arm time* and are
+//! evaluated against the shared [`Clock`], so virtual-clock runs are
+//! deterministic: the same plan over the same workload degrades the
+//! same requests.  Transient-error draws come from a counter-seeded
+//! hash stream (no global RNG), so a single-submitter virtual-clock
+//! run replays bit-for-bit.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::clock::Clock;
+use super::device::Dir;
+
+/// Degradation state of a device at a point in time.  Order is
+/// severity order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    /// Full service (possibly still slowed / transiently erroring).
+    Healthy,
+    /// Reads succeed, writes fail (a filesystem remounted read-only
+    /// after an error — the classic Lustre degraded mode).
+    ReadOnly,
+    /// Every request fails.
+    Offline,
+}
+
+impl HealthState {
+    pub fn label(self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::ReadOnly => "read-only",
+            HealthState::Offline => "offline",
+        }
+    }
+
+    /// Whether a request in `dir` is admitted in this state.
+    pub fn admits(self, dir: Dir) -> bool {
+        match self {
+            HealthState::Healthy => true,
+            HealthState::ReadOnly => dir == Dir::Read,
+            HealthState::Offline => false,
+        }
+    }
+}
+
+/// One scheduled window of degradation.  `start`/`end` are modelled
+/// seconds **after the plan is armed** on a device; outside every
+/// window the device is healthy (recovered).
+#[derive(Debug, Clone)]
+pub struct FaultPhase {
+    pub start: f64,
+    pub end: f64,
+    pub state: HealthState,
+    /// Fraction of admitted requests that fail transiently, `[0, 1]`.
+    pub error_rate: f64,
+    /// Latency/transfer-time multiplier, `>= 1`.
+    pub slow_factor: f64,
+}
+
+impl FaultPhase {
+    /// A phase that only changes the state machine.
+    pub fn state(start: f64, end: f64, state: HealthState) -> FaultPhase {
+        FaultPhase { start, end, state, error_rate: 0.0, slow_factor: 1.0 }
+    }
+
+    /// A latency-spike phase (state stays healthy).
+    pub fn slow(start: f64, end: f64, factor: f64) -> FaultPhase {
+        FaultPhase {
+            start,
+            end,
+            state: HealthState::Healthy,
+            error_rate: 0.0,
+            slow_factor: factor.max(1.0),
+        }
+    }
+
+    /// A transient-error phase (state stays healthy).
+    pub fn flaky(start: f64, end: f64, rate: f64) -> FaultPhase {
+        FaultPhase {
+            start,
+            end,
+            state: HealthState::Healthy,
+            error_rate: rate.clamp(0.0, 1.0),
+            slow_factor: 1.0,
+        }
+    }
+}
+
+/// Schedule of fault phases for one device.  `device` may be `"*"` to
+/// target every device the plan is applied to.
+#[derive(Debug, Clone)]
+pub struct DeviceFaultSpec {
+    pub device: String,
+    pub phases: Vec<FaultPhase>,
+}
+
+impl DeviceFaultSpec {
+    /// Whether this spec targets device `name`.
+    pub fn targets(&self, name: &str) -> bool {
+        self.device == "*" || self.device == name
+    }
+}
+
+/// Valid named fault kinds, in canonical order (error messages quote
+/// it).  `none` is the explicit no-fault plan so sweep matrices can
+/// carry a baseline cell.
+pub const FAULT_KINDS: [&str; 5] =
+    ["none", "slow", "flaky", "read-only", "offline"];
+
+/// Latency/transfer multiplier of the named `slow` kind.
+pub const SLOW_FACTOR: f64 = 8.0;
+/// Transient error rate of the named `flaky` kind.
+pub const FLAKY_RATE: f64 = 0.25;
+
+/// A named, per-device fault schedule — the unit the CLI (`--inject`),
+/// the replayer, and the sweep drivers pass around.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub name: String,
+    pub devices: Vec<DeviceFaultSpec>,
+}
+
+impl FaultPlan {
+    /// The explicit no-fault plan (baseline cells).
+    pub fn none() -> FaultPlan {
+        FaultPlan { name: "none".into(), devices: Vec::new() }
+    }
+
+    /// A single-device (or `"*"`) single-phase plan.
+    pub fn single(
+        name: impl Into<String>,
+        device: impl Into<String>,
+        phase: FaultPhase,
+    ) -> FaultPlan {
+        FaultPlan {
+            name: name.into(),
+            devices: vec![DeviceFaultSpec {
+                device: device.into(),
+                phases: vec![phase],
+            }],
+        }
+    }
+
+    /// Parse an injection spec: `kind[:device[:start[:duration]]]`.
+    ///
+    /// * `kind` — one of [`FAULT_KINDS`].
+    /// * `device` — device name the fault targets (`*`, the default,
+    ///   targets every device).
+    /// * `start` / `duration` — window in modelled seconds after the
+    ///   plan is armed; by default the fault starts immediately and
+    ///   never clears.
+    ///
+    /// `slow:hdd:0.02:0.05` degrades `hdd` with an 8× latency spike
+    /// from 20 ms to 70 ms after arming, then recovers.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut parts = spec.split(':');
+        let kind = parts.next().unwrap_or("");
+        let device = match parts.next() {
+            None | Some("") => "*".to_string(),
+            Some(d) => d.to_string(),
+        };
+        let num = |field: &str, s: Option<&str>, default: f64| -> Result<f64> {
+            match s {
+                None | Some("") => Ok(default),
+                Some(s) => s.parse::<f64>().map_err(|_| {
+                    anyhow!("bad fault {field} {s:?} in {spec:?} (seconds)")
+                }),
+            }
+        };
+        let start = num("start", parts.next(), 0.0)?;
+        let duration = num("duration", parts.next(), f64::INFINITY)?;
+        if let Some(extra) = parts.next() {
+            bail!("trailing fault field {extra:?} in {spec:?}");
+        }
+        if start < 0.0 || duration <= 0.0 {
+            bail!("fault window must have start >= 0 and duration > 0, got {spec:?}");
+        }
+        let end = start + duration;
+        let phase = match kind {
+            "none" => return Ok(FaultPlan::none()),
+            "slow" => FaultPhase::slow(start, end, SLOW_FACTOR),
+            "flaky" => FaultPhase::flaky(start, end, FLAKY_RATE),
+            "read-only" => {
+                FaultPhase::state(start, end, HealthState::ReadOnly)
+            }
+            "offline" => FaultPhase::state(start, end, HealthState::Offline),
+            other => bail!(
+                "unknown fault kind {other:?} (valid: {})",
+                FAULT_KINDS.join(", ")
+            ),
+        };
+        Ok(FaultPlan::single(kind, device, phase))
+    }
+
+    /// The phase schedule this plan holds for device `name`, if any.
+    pub fn spec_for(&self, name: &str) -> Option<&DeviceFaultSpec> {
+        self.devices.iter().find(|s| s.targets(name))
+    }
+
+    /// Arm this plan's schedule for device `name` at the clock's
+    /// current time (`None` when the plan does not target it).
+    pub fn arm(&self, name: &str, clock: &Clock) -> Option<DeviceHealth> {
+        self.spec_for(name)
+            .map(|s| DeviceHealth::new(s.phases.clone(), clock.now()))
+    }
+}
+
+/// Armed health schedule for one device: phase windows pinned to an
+/// arm time on the shared clock.  The device consults it on every
+/// service path; cheap when healthy (a time compare per phase).
+#[derive(Debug)]
+pub struct DeviceHealth {
+    phases: Vec<FaultPhase>,
+    /// Clock time the plan was armed; phase windows are relative.
+    t0: f64,
+    /// Deterministic transient-error draw stream (counter-seeded
+    /// hash, no global RNG).
+    draws: AtomicU64,
+}
+
+impl DeviceHealth {
+    pub fn new(phases: Vec<FaultPhase>, t0: f64) -> DeviceHealth {
+        DeviceHealth { phases, t0, draws: AtomicU64::new(0) }
+    }
+
+    fn phase_at(&self, now: f64) -> Option<&FaultPhase> {
+        let t = now - self.t0;
+        self.phases.iter().find(|p| t >= p.start && t < p.end)
+    }
+
+    /// State-machine position at `now` (healthy outside every phase —
+    /// the `recovered` arc).
+    pub fn state_at(&self, now: f64) -> HealthState {
+        self.phase_at(now).map_or(HealthState::Healthy, |p| p.state)
+    }
+
+    /// Latency/transfer multiplier at `now` (1.0 when healthy).
+    pub fn slow_factor_at(&self, now: f64) -> f64 {
+        self.phase_at(now).map_or(1.0, |p| p.slow_factor.max(1.0))
+    }
+
+    /// Whether any degradation (state, errors, or slowdown) is active
+    /// at `now` — the migrator's pause-and-retry predicate.
+    pub fn degraded_at(&self, now: f64) -> bool {
+        self.phase_at(now).map_or(false, |p| {
+            p.state != HealthState::Healthy
+                || p.error_rate > 0.0
+                || p.slow_factor > 1.0
+        })
+    }
+
+    /// Clock time after which every phase has ended (`None` for an
+    /// open-ended plan): the earliest the device is surely recovered.
+    pub fn recovered_after(&self) -> Option<f64> {
+        let end = self
+            .phases
+            .iter()
+            .map(|p| p.end)
+            .fold(0.0_f64, f64::max);
+        end.is_finite().then_some(self.t0 + end)
+    }
+
+    /// Admission gate for one request on `device` in `dir` at `now`:
+    /// `Err` fails the request (state denial or a transient-error
+    /// draw).  Transient errors are retryable; state denials persist
+    /// until the phase window passes.
+    pub fn admit(&self, device: &str, dir: Dir, now: f64) -> Result<()> {
+        let Some(p) = self.phase_at(now) else { return Ok(()) };
+        if !p.state.admits(dir) {
+            bail!(
+                "device {device:?}: injected fault: {}",
+                p.state.label()
+            );
+        }
+        if p.error_rate > 0.0 && self.unit_draw() < p.error_rate {
+            bail!("device {device:?}: injected transient I/O error");
+        }
+        Ok(())
+    }
+
+    /// Uniform draw in `[0, 1)` from a counter-seeded splitmix64
+    /// stream: deterministic per armed handle, no global RNG.
+    fn unit_draw(&self) -> f64 {
+        let n = self.draws.fetch_add(1, Ordering::Relaxed);
+        let mut z = n.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        (z >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_error_lists_valid_kinds() {
+        let err = FaultPlan::parse("meltdown:ssd").unwrap_err().to_string();
+        for kind in FAULT_KINDS {
+            assert!(
+                err.contains(kind),
+                "error {err:?} does not list valid kind {kind:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn parse_spec_fields_and_defaults() {
+        let p = FaultPlan::parse("slow:hdd:0.02:0.05").unwrap();
+        assert_eq!(p.name, "slow");
+        let s = p.spec_for("hdd").expect("targets hdd");
+        assert!(p.spec_for("ssd").is_none());
+        assert!((s.phases[0].start - 0.02).abs() < 1e-12);
+        assert!((s.phases[0].end - 0.07).abs() < 1e-12);
+        assert!((s.phases[0].slow_factor - SLOW_FACTOR).abs() < 1e-12);
+
+        // Device defaults to "*", window to [0, inf).
+        let p = FaultPlan::parse("offline").unwrap();
+        let s = p.spec_for("anything").expect("wildcard targets all");
+        assert_eq!(s.phases[0].state, HealthState::Offline);
+        assert_eq!(s.phases[0].end, f64::INFINITY);
+
+        assert!(FaultPlan::parse("none").unwrap().devices.is_empty());
+        assert!(FaultPlan::parse("slow:hdd:x").is_err());
+        assert!(FaultPlan::parse("slow:hdd:0:-1").is_err());
+        assert!(FaultPlan::parse("slow:hdd:0:1:9").is_err());
+    }
+
+    #[test]
+    fn state_machine_walks_healthy_degraded_recovered() {
+        let h = DeviceHealth::new(
+            vec![
+                FaultPhase::state(1.0, 2.0, HealthState::ReadOnly),
+                FaultPhase::state(2.0, 3.0, HealthState::Offline),
+            ],
+            10.0, // armed at t=10
+        );
+        assert_eq!(h.state_at(10.5), HealthState::Healthy);
+        assert_eq!(h.state_at(11.5), HealthState::ReadOnly);
+        assert!(h.admit("d", Dir::Read, 11.5).is_ok());
+        assert!(h.admit("d", Dir::Write, 11.5).is_err());
+        assert_eq!(h.state_at(12.5), HealthState::Offline);
+        assert!(h.admit("d", Dir::Read, 12.5).is_err());
+        // Recovered: past every window the device is healthy again.
+        assert_eq!(h.state_at(13.5), HealthState::Healthy);
+        assert!(h.admit("d", Dir::Write, 13.5).is_ok());
+        assert_eq!(h.recovered_after(), Some(13.0));
+        assert!(h.degraded_at(11.5) && !h.degraded_at(13.5));
+    }
+
+    #[test]
+    fn transient_draws_match_rate_and_are_deterministic() {
+        let h = DeviceHealth::new(
+            vec![FaultPhase::flaky(0.0, f64::INFINITY, 0.25)],
+            0.0,
+        );
+        let fails = (0..4000)
+            .filter(|_| h.admit("d", Dir::Read, 0.0).is_err())
+            .count();
+        let frac = fails as f64 / 4000.0;
+        assert!(
+            (0.18..0.32).contains(&frac),
+            "transient failure fraction {frac} far from 0.25"
+        );
+        // Identical armed handles draw identical streams.
+        let a = DeviceHealth::new(
+            vec![FaultPhase::flaky(0.0, f64::INFINITY, 0.5)],
+            0.0,
+        );
+        let b = DeviceHealth::new(
+            vec![FaultPhase::flaky(0.0, f64::INFINITY, 0.5)],
+            0.0,
+        );
+        for _ in 0..256 {
+            assert_eq!(
+                a.admit("d", Dir::Read, 0.0).is_ok(),
+                b.admit("d", Dir::Read, 0.0).is_ok()
+            );
+        }
+    }
+
+    #[test]
+    fn slow_factor_applies_only_inside_the_window() {
+        let h = DeviceHealth::new(vec![FaultPhase::slow(1.0, 2.0, 8.0)], 0.0);
+        assert_eq!(h.slow_factor_at(0.5), 1.0);
+        assert_eq!(h.slow_factor_at(1.5), 8.0);
+        assert_eq!(h.slow_factor_at(2.5), 1.0);
+    }
+}

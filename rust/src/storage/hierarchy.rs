@@ -38,7 +38,9 @@ use std::thread::JoinHandle;
 use anyhow::{anyhow, Context, Result};
 
 use super::clock::{Clock, SimCondvar};
+use super::device::Dir;
 use super::engine::{with_origin, with_tier, IoClass};
+use super::fault::HealthState;
 use super::policy::{PlacementPolicy, TierView};
 use super::sim::{PendingRead, SimPath, StorageSim};
 
@@ -321,7 +323,19 @@ struct MigGroup {
 struct Completed {
     labels: Vec<u64>,
     errors: u64,
+    /// Degraded-mode pauses: failed groups requeued (not dropped)
+    /// because an endpoint device was faulted at the time.
+    paused: u64,
 }
+
+/// Poll interval (clock seconds) while waiting out an open-ended
+/// degradation window, and the floor for scheduled retries.
+const DEGRADED_POLL_SECS: f64 = 0.005;
+
+/// Consecutive degraded-mode retries of one group before the migrator
+/// gives up and records a hard failure (bounds the wait when a plan
+/// never clears; sources are still never reclaimed on failure).
+const MAX_DEGRADED_RETRIES: u32 = 64;
 
 struct MigQueue {
     jobs: Mutex<VecDeque<MigGroup>>,
@@ -479,6 +493,25 @@ impl StorageHierarchy {
         } else {
             tier
         };
+        // Degraded-mode routing: a read-only or offline backing
+        // device cannot take fresh writes — fall through to the next
+        // writable device tier below (wrapping to the tiers above if
+        // none).  With every device degraded, keep the policy's
+        // placement and let the write surface the injected fault.
+        let writable = |t: usize| -> bool {
+            self.inner.spec.tiers[t]
+                .device_name()
+                .and_then(|d| self.inner.sim.device(d).ok())
+                .map_or(false, |d| d.health_state().admits(Dir::Write))
+        };
+        let tier = if writable(tier) {
+            tier
+        } else {
+            ((tier + 1)..self.inner.spec.tiers.len())
+                .chain(0..tier)
+                .find(|&t| writable(t))
+                .unwrap_or(tier)
+        };
         let dev = self.inner.spec.tiers[tier]
             .device_name()
             .expect("validated device tier")
@@ -528,6 +561,11 @@ impl StorageHierarchy {
             // Fastest tier holding a copy serves; RAM tiers above it
             // fill on their miss (PageCache read-through semantics).
             let mut serving: Option<(usize, bool)> = None;
+            // Fastest resident copy on an *offline* device, kept as a
+            // last resort: with every copy offline the read still
+            // submits there so the injected fault (not a misleading
+            // "no resident copy") surfaces.
+            let mut offline_fallback: Option<(usize, bool)> = None;
             for (i, spec) in self.inner.spec.tiers.iter().enumerate() {
                 match &spec.kind {
                     TierKind::Ram => {
@@ -560,12 +598,29 @@ impl StorageHierarchy {
                     }
                     TierKind::Device(_) => {
                         if ks.copies & (1 << i) != 0 {
+                            // Degraded-mode routing: an offline
+                            // backing device cannot serve — fall
+                            // through to a lower resident copy.
+                            let offline = spec
+                                .device_name()
+                                .and_then(|d| self.inner.sim.device(d).ok())
+                                .map_or(false, |d| {
+                                    d.health_state()
+                                        == HealthState::Offline
+                                });
+                            if offline {
+                                if offline_fallback.is_none() {
+                                    offline_fallback = Some((i, false));
+                                }
+                                continue;
+                            }
                             serving = Some((i, false));
                             break;
                         }
                     }
                 }
             }
+            let serving = serving.or(offline_fallback);
             let Some((tier, is_ram)) = serving else {
                 return Err(anyhow!(
                     "hierarchy {:?}: {key:?} has no resident copy",
@@ -800,9 +855,17 @@ impl StorageHierarchy {
         self.inner.queue.completed.lock().unwrap().labels.len() as u64
     }
 
-    /// Migration copy errors so far.
+    /// Migration copy errors so far (failed groups dropped; a
+    /// degraded-mode requeue is a pause, not an error).
     pub fn migration_errors(&self) -> u64 {
         self.inner.queue.completed.lock().unwrap().errors
+    }
+
+    /// Degraded-mode migration pauses so far: copy failures answered
+    /// by requeueing the group (an endpoint device was faulted) —
+    /// the time-to-recover signal of a fault run.
+    pub fn migration_pauses(&self) -> u64 {
+        self.inner.queue.completed.lock().unwrap().paused
     }
 
     /// Drop `key`'s copy on `tier` (backing file included); other
@@ -928,6 +991,34 @@ impl HierInner {
     fn next_device_below(&self, tier: usize) -> Option<usize> {
         ((tier + 1)..self.spec.tiers.len())
             .find(|&i| self.spec.tiers[i].device_name().is_some())
+    }
+
+    /// After a migration copy failed: if either endpoint device is
+    /// currently degraded, the clock time to retry the group at — the
+    /// fault schedule's recovery point when known and finite,
+    /// otherwise a short poll from now.  `None` when both endpoints
+    /// are healthy (the failure was not fault-induced).
+    fn degraded_retry_at(&self, job: &MigJob) -> Option<f64> {
+        let now = self.clock.now();
+        let mut at: Option<f64> = None;
+        for tier in [job.from, job.to] {
+            let Some(name) =
+                self.spec.tiers.get(tier).and_then(|t| t.device_name())
+            else {
+                continue;
+            };
+            let Ok(dev) = self.sim.device(name) else { continue };
+            if !dev.degraded() {
+                continue;
+            }
+            let until = dev
+                .health()
+                .and_then(|h| h.recovered_after())
+                .filter(|&t| t > now)
+                .unwrap_or(now + DEGRADED_POLL_SECS);
+            at = Some(at.map_or(until, |a: f64| a.max(until)));
+        }
+        at
     }
 
     fn fastest_device_copy(&self, ks: &KeyState) -> Option<usize> {
@@ -1183,6 +1274,25 @@ impl HierInner {
             });
             if let Err(e) = res {
                 let mut st = self.state.lock().unwrap();
+                // Roll back the destination: a failed copy may have
+                // left a partial backing file, and a later probe
+                // (auto_register) would claim it as a valid resident
+                // copy — a truncated checkpoint must never become
+                // restorable.  Only an unregistered destination is
+                // removed; a registered copy there is real data from
+                // an overwrite that landed mid-copy.
+                let dst_registered =
+                    st.keys.get(&job.key).map_or(false, |ks| {
+                        ks.copies & (1 << job.to) != 0
+                    });
+                if !dst_registered {
+                    if let Ok(dev) = self.device_of(job.to) {
+                        let p = SimPath::new(dev, job.key.clone());
+                        if self.sim.exists(&p) {
+                            let _ = self.sim.remove(&p);
+                        }
+                    }
+                }
                 self.clear_evicting(&mut st, job);
                 return Err(e);
             }
@@ -1270,6 +1380,8 @@ impl HierInner {
 
 fn migrate_loop(inner: Arc<HierInner>) {
     let _reg = inner.clock.enter();
+    // Consecutive degraded-mode retries of the current front group.
+    let mut retries = 0u32;
     loop {
         let group = {
             let mut jobs = inner.queue.jobs.lock().unwrap();
@@ -1288,17 +1400,39 @@ fn migrate_loop(inner: Arc<HierInner>) {
             }
         };
         let mut ok = true;
+        let mut retry_at: Option<f64> = None;
         for job in &group.jobs {
             if let Err(e) = inner.execute_migration(job, group.origin) {
-                eprintln!(
-                    "[hierarchy {}] migrate {:?} tier {} -> {}: {e:#}",
-                    inner.spec.name, job.key, job.from, job.to
-                );
-                inner.queue.completed.lock().unwrap().errors += 1;
                 ok = false;
+                retry_at = inner
+                    .degraded_retry_at(job)
+                    .filter(|_| retries < MAX_DEGRADED_RETRIES);
+                if retry_at.is_some() {
+                    inner.queue.completed.lock().unwrap().paused += 1;
+                } else {
+                    eprintln!(
+                        "[hierarchy {}] migrate {:?} tier {} -> {}: {e:#}",
+                        inner.spec.name, job.key, job.from, job.to
+                    );
+                    inner.queue.completed.lock().unwrap().errors += 1;
+                }
                 break;
             }
         }
+        if let Some(at) = retry_at {
+            // Degraded-mode pause: an endpoint tier is faulted.  The
+            // group stays at the FRONT of the queue — FIFO order and
+            // the retention guard both keep holding — and is retried
+            // once the fault schedule says the device recovers.
+            // Blocks are requeued, never dropped, while a tier is
+            // temporarily down.
+            retries += 1;
+            let wait =
+                (at - inner.clock.now()).max(DEGRADED_POLL_SECS);
+            inner.clock.sleep_secs(wait);
+            continue;
+        }
+        retries = 0;
         if ok {
             // Staged sources are reclaimed only after the WHOLE group
             // drained: a mid-group failure leaves every staged file
@@ -1664,5 +1798,104 @@ mod tests {
         h.remove("k").unwrap();
         assert!(!h.resident("k"));
         assert!(!sim.exists(&SimPath::new("slow", "k")));
+    }
+
+    #[test]
+    fn failed_migration_copy_rolls_back_partial_destination() {
+        let (h, sim, _) = two_tier("rollback", 0, Box::new(policy::Noop));
+        sim.write(&SimPath::new("fast", "blk"), &[9u8; 200_000])
+            .unwrap();
+        h.register("blk", 200_000, 0).unwrap();
+        // Sabotage the copy: the source backing file disappears, so
+        // the drain's chunked read fails after the destination file
+        // was already created — the partial-destination crash.  Both
+        // devices are healthy, so the migrator records a hard error
+        // instead of pausing.
+        sim.remove(&SimPath::new("fast", "blk")).unwrap();
+        h.enqueue_group(7, vec!["blk".into()], 0, 1, "test-drain", None)
+            .unwrap();
+        h.wait_idle();
+        assert_eq!(h.migration_errors(), 1);
+        assert!(h.completed_labels().is_empty());
+        // Regression: the failed copy must leave NO destination
+        // artifact — neither a residency claim nor a partial backing
+        // file a later probe would auto-register as a valid copy.
+        assert!(
+            !h.tiers_of("blk").contains(&1),
+            "failed copy left the block claimed on the destination"
+        );
+        assert!(
+            !sim.exists(&SimPath::new("slow", "blk")),
+            "failed copy left a partial destination file"
+        );
+    }
+
+    #[test]
+    fn migrator_pauses_and_requeues_during_device_fault() {
+        use crate::storage::fault::FaultPlan;
+        let (h, sim, _) = two_tier("pause", 0, Box::new(policy::Noop));
+        sim.write(&SimPath::new("fast", "blk"), &[5u8; 100_000])
+            .unwrap();
+        h.register("blk", 100_000, 0).unwrap();
+        // Destination offline for 200 ms of clock time from now: the
+        // drain's first copy attempt fails, the group must be
+        // requeued (paused), then complete once the fault clears.
+        sim.apply_fault_plan(
+            &FaultPlan::parse("offline:slow:0:0.2").unwrap(),
+        )
+        .unwrap();
+        h.enqueue_group(3, vec!["blk".into()], 0, 1, "test-drain", None)
+            .unwrap();
+        h.wait_idle();
+        assert_eq!(h.migration_errors(), 0, "pause must not be an error");
+        assert!(
+            h.migration_pauses() >= 1,
+            "fault window saw no migrator pause"
+        );
+        assert_eq!(h.completed_labels(), vec![3], "block was lost");
+        assert!(h.tiers_of("blk").contains(&1));
+        assert_eq!(h.read("blk").unwrap(), vec![5u8; 100_000]);
+    }
+
+    #[test]
+    fn writes_route_around_read_only_tier() {
+        use crate::storage::fault::FaultPlan;
+        let (h, sim, _) = two_tier("wroute", 0, Box::new(policy::Noop));
+        assert_eq!(h.write("a", &[1u8; 64]).unwrap(), 0);
+        // Tier 0's device goes read-only: fresh writes fall through
+        // to the next device tier down, reads keep serving.
+        sim.apply_fault_plan(
+            &FaultPlan::parse("read-only:fast").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(h.write("b", &[2u8; 64]).unwrap(), 1);
+        assert_eq!(h.tiers_of("b"), vec![1]);
+        assert_eq!(h.read("a").unwrap(), vec![1u8; 64]);
+        sim.clear_faults();
+        assert_eq!(h.write("c", &[3u8; 64]).unwrap(), 0, "no recovery");
+    }
+
+    #[test]
+    fn reads_fall_through_offline_tier_to_lower_copy() {
+        use crate::storage::fault::FaultPlan;
+        let (h, sim, _) = two_tier("rroute", 0, Box::new(policy::Noop));
+        sim.write(&SimPath::new("fast", "k"), &[4u8; 256]).unwrap();
+        sim.write(&SimPath::new("slow", "k"), &[4u8; 256]).unwrap();
+        sim.drop_caches();
+        assert_eq!(h.read("k").unwrap(), vec![4u8; 256]);
+        assert_eq!(h.stats()[0].hits, 1, "healthy: fast tier serves");
+        // Fast tier offline: the resident copy below serves instead.
+        sim.apply_fault_plan(&FaultPlan::parse("offline:fast").unwrap())
+            .unwrap();
+        assert_eq!(h.read("k").unwrap(), vec![4u8; 256]);
+        assert_eq!(h.stats()[1].hits, 1, "offline tier served a read");
+        // Every copy offline: the injected fault surfaces, not a
+        // misleading "no resident copy".
+        sim.apply_fault_plan(&FaultPlan::parse("offline").unwrap())
+            .unwrap();
+        let err = h.read("k").unwrap_err().to_string();
+        assert!(err.contains("offline"), "unexpected error: {err}");
+        sim.clear_faults();
+        assert_eq!(h.read("k").unwrap(), vec![4u8; 256]);
     }
 }

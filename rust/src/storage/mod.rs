@@ -8,6 +8,7 @@
 pub mod clock;
 pub mod device;
 pub mod engine;
+pub mod fault;
 pub mod hierarchy;
 pub mod ior;
 pub mod page_cache;
@@ -21,7 +22,11 @@ pub use engine::{
     with_origin, with_tenant, with_tier, AdaptiveQos, ChunkWriter,
     ClassStats, EngineDeviceStats, EngineEvent, EngineObserver, EngineOp,
     IoClass, IoCompletion, IoEngine, IoRequest, IoTicket, QosConfig,
-    RateCap, TenantId, TenantIoStats, TenantQos, TierIoStats,
+    RateCap, RetryPolicy, TenantId, TenantIoStats, TenantQos, TierIoStats,
+};
+pub use fault::{
+    DeviceFaultSpec, DeviceHealth, FaultPhase, FaultPlan, HealthState,
+    FAULT_KINDS,
 };
 pub use hierarchy::{
     HierarchySpec, RamTier, StorageHierarchy, TierKind, TierSpec,

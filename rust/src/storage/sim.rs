@@ -26,6 +26,7 @@ use super::device::{Device, DeviceModel, IoObserver, NullObserver};
 use super::engine::{
     ChunkWriter, IoClass, IoEngine, IoRequest, IoTicket, QosConfig,
 };
+use super::fault::FaultPlan;
 use super::page_cache::PageCache;
 
 /// A path on a simulated device: `(device, relative path)`.
@@ -272,6 +273,38 @@ impl StorageSim {
         let mut v: Vec<_> = self.devices.keys().cloned().collect();
         v.sort();
         v
+    }
+
+    /// Arm `plan` on this sim's devices at the current clock time.
+    /// Every targeted device gets its own armed
+    /// [`DeviceHealth`](super::fault::DeviceHealth) handle; devices
+    /// the plan does not target are reset to healthy, so re-arming a
+    /// different plan fully replaces the old one.  A plan naming a
+    /// device this sim does not have is an error listing the valid
+    /// names.
+    pub fn apply_fault_plan(&self, plan: &FaultPlan) -> Result<()> {
+        for spec in &plan.devices {
+            if spec.device != "*"
+                && !self.devices.contains_key(&spec.device)
+            {
+                return Err(anyhow!(
+                    "fault plan targets unknown device {:?} (valid: {})",
+                    spec.device,
+                    self.device_names().join(", ")
+                ));
+            }
+        }
+        for (name, dev) in &self.devices {
+            dev.set_health(plan.arm(name, self.clock()).map(Arc::new));
+        }
+        Ok(())
+    }
+
+    /// Detach every armed fault schedule (all devices healthy again).
+    pub fn clear_faults(&self) {
+        for dev in self.devices.values() {
+            dev.set_health(None);
+        }
     }
 
     /// Absolute backing path for a sim path.
@@ -1026,5 +1059,35 @@ mod tests {
         w.finish().unwrap();
         assert_eq!(s.finish_write(pending).unwrap(), payload.len() as u64);
         assert_eq!(s.read(&p).unwrap(), payload);
+    }
+
+    #[test]
+    fn fault_plan_arms_matching_devices_and_rejects_unknown() {
+        use crate::storage::fault::{FaultPlan, HealthState};
+        let s = sim("fault");
+        s.apply_fault_plan(&FaultPlan::parse("offline:hdd").unwrap())
+            .unwrap();
+        assert_eq!(
+            s.device("hdd").unwrap().health_state(),
+            HealthState::Offline
+        );
+        assert_eq!(
+            s.device("ssd").unwrap().health_state(),
+            HealthState::Healthy
+        );
+        // Writes on the offline device fail; the healthy one serves.
+        assert!(s.write(&SimPath::new("hdd", "x.bin"), b"x").is_err());
+        s.write(&SimPath::new("ssd", "x.bin"), b"x").unwrap();
+        // Re-arming the no-fault plan recovers everything.
+        s.apply_fault_plan(&FaultPlan::none()).unwrap();
+        s.write(&SimPath::new("hdd", "x.bin"), b"x").unwrap();
+        // Unknown target errors, listing this sim's device names.
+        let err = s
+            .apply_fault_plan(&FaultPlan::parse("offline:optane").unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("optane") && err.contains("hdd")
+                    && err.contains("ssd"),
+                "unhelpful fault-plan error: {err}");
     }
 }

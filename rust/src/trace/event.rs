@@ -12,7 +12,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::storage::{
     AdaptiveQos, DeviceModel, EngineEvent, EngineOp, IoClass, QosConfig,
-    RateCap, TenantQos,
+    RateCap, RetryPolicy, TenantQos,
 };
 use crate::util::json::{obj, to_string, Json};
 
@@ -345,6 +345,19 @@ fn qos_to_json(q: &QosConfig) -> Json {
             ),
         ]),
     };
+    let retry = obj(vec![
+        (
+            "budget",
+            Json::Arr(
+                q.retry
+                    .budget
+                    .iter()
+                    .map(|&b| Json::Num(b as f64))
+                    .collect(),
+            ),
+        ),
+        ("backoff", Json::Num(q.retry.backoff)),
+    ]);
     obj(vec![
         ("fifo", Json::Bool(q.fifo)),
         (
@@ -358,6 +371,7 @@ fn qos_to_json(q: &QosConfig) -> Json {
         ("rate_caps", caps),
         ("adaptive", adaptive),
         ("tenants", tenants),
+        ("retry", retry),
     ])
 }
 
@@ -535,6 +549,37 @@ fn qos_from_json(v: &Json) -> Result<QosConfig> {
             })
         }
     };
+    // Optional since the fault seam: older manifests predate retry
+    // budgets and load with the default policy.
+    let retry = match v.get("retry") {
+        None | Some(Json::Null) => RetryPolicy::default(),
+        Some(r) => {
+            let budget_arr = r
+                .get("budget")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("trace qos retry missing budget"))?;
+            if budget_arr.len() != IoClass::COUNT {
+                bail!("trace qos retry has {} budgets, expected {}",
+                      budget_arr.len(), IoClass::COUNT);
+            }
+            let mut budget = [0u32; IoClass::COUNT];
+            for (i, b) in budget_arr.iter().enumerate() {
+                budget[i] = b
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("bad qos retry budget"))?
+                    as u32;
+            }
+            RetryPolicy {
+                budget,
+                backoff: r
+                    .get("backoff")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| {
+                        anyhow!("trace qos retry missing backoff")
+                    })?,
+            }
+        }
+    };
     Ok(QosConfig {
         fifo: matches!(v.get("fifo"), Some(Json::Bool(true))),
         weights,
@@ -543,6 +588,7 @@ fn qos_from_json(v: &Json) -> Result<QosConfig> {
         rate_caps,
         adaptive,
         tenants,
+        retry,
     })
 }
 
@@ -733,6 +779,8 @@ mod tests {
         if let Some(a) = &mut qos.adaptive {
             a.per_device.push(("hdd".into(), 0.012));
         }
+        qos.retry =
+            RetryPolicy { budget: [3, 1, 0, 5], backoff: 0.0125 };
         let m = TraceManifest {
             version: TRACE_VERSION,
             workload: "microbench files=32".into(),
@@ -761,6 +809,33 @@ mod tests {
         assert_eq!(q.rate_caps, qos.rate_caps);
         assert_eq!(q.adaptive, qos.adaptive);
         assert!(q.tenants.is_none(), "tenant-blind config stays blind");
+        assert_eq!(q.retry, qos.retry);
+    }
+
+    #[test]
+    fn manifest_without_retry_block_defaults_the_policy() {
+        // Pre-fault-seam manifests carry no "retry" key: they must
+        // load with the default bounded policy, not an error.
+        let qos = QosConfig::default();
+        let m = TraceManifest {
+            version: TRACE_VERSION,
+            workload: "legacy".into(),
+            qos_mode: qos.mode_name().into(),
+            qos: Some(qos),
+            time_scale: 1.0,
+            devices: vec![crate::storage::profiles::blackdog_ssd(1.0)],
+        };
+        let mut v = Json::parse(&m.to_jsonl()).unwrap();
+        if let Json::Obj(fields) = &mut v {
+            if let Some(Json::Obj(qf)) = fields.get_mut("qos") {
+                qf.remove("retry");
+            }
+        }
+        let back = TraceManifest::from_json(&v).unwrap();
+        assert_eq!(
+            back.qos.expect("qos survives").retry,
+            RetryPolicy::default()
+        );
     }
 
     #[test]

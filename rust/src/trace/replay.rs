@@ -35,8 +35,8 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::metrics::Table;
 use crate::storage::engine::DEFAULT_CHUNK;
 use crate::storage::{
-    profiles, Clock, ClockSpec, Device, Dir, IoClass, IoEngine, IoRequest,
-    IoTicket, NullObserver, QosConfig,
+    profiles, Clock, ClockSpec, Device, Dir, FaultPlan, IoClass, IoEngine,
+    IoRequest, IoTicket, NullObserver, QosConfig,
 };
 use crate::util::json::{obj, Json};
 
@@ -133,6 +133,11 @@ pub struct ReplayConfig {
     /// replay in discrete-event time (same modelled durations, no
     /// sleeping) — the default for `--sweep` matrices.
     pub clock: ClockSpec,
+    /// Fault plan spec (`kind[:device[:start[:duration]]]`, see
+    /// [`FaultPlan::parse`]) armed on the replay devices before the
+    /// first submission — replay the same recorded stream with and
+    /// without an injected fault to measure degraded-mode behavior.
+    pub inject: Option<String>,
 }
 
 impl Default for ReplayConfig {
@@ -143,6 +148,7 @@ impl Default for ReplayConfig {
             profile: None,
             time_scale: None,
             clock: ClockSpec::Wall,
+            inject: None,
         }
     }
 }
@@ -259,6 +265,24 @@ fn replay_devices(
                 clock.clone(),
             )),
         );
+    }
+    if let Some(spec) = &cfg.inject {
+        let plan = FaultPlan::parse(spec)?;
+        for fs in &plan.devices {
+            if fs.device != "*" && !devices.contains_key(&fs.device) {
+                let mut names: Vec<&str> =
+                    devices.keys().map(String::as_str).collect();
+                names.sort_unstable();
+                bail!(
+                    "fault plan targets unknown device {:?} (valid: {})",
+                    fs.device,
+                    names.join(", ")
+                );
+            }
+        }
+        for (name, dev) in &devices {
+            dev.set_health(plan.arm(name, clock).map(Arc::new));
+        }
     }
     Ok(devices)
 }
@@ -1070,6 +1094,124 @@ mod tests {
             .collect();
         rep.sort();
         assert_eq!(rep, vec!["", "alpha", "alpha", "beta"]);
+    }
+
+    /// Synthetic four-probe trace on a single latency device — the
+    /// smallest stream that exercises closed-loop dependencies, used
+    /// by the fault-injection tests below.
+    fn tiny_trace(workload: &str) -> Trace {
+        let manifest = TraceManifest {
+            version: super::super::event::TRACE_VERSION,
+            workload: workload.into(),
+            qos_mode: "static".into(),
+            qos: None,
+            time_scale: 1.0,
+            devices: vec![lat_device("d")],
+        };
+        let mk = |seq: u64, t: f64| TraceEvent {
+            seq,
+            device: "d".into(),
+            class: IoClass::Ingest,
+            op: crate::storage::EngineOp::ProbeRead,
+            origin: String::new(),
+            tier: None,
+            tenant: String::new(),
+            bytes: 4096,
+            ok: true,
+            submit_secs: t,
+            queue_secs: 0.001,
+            service_secs: 0.001,
+        };
+        Trace {
+            manifest,
+            events: (0..4).map(|i| mk(i, i as f64 * 0.01)).collect(),
+        }
+    }
+
+    #[test]
+    fn inject_error_lists_valid_fault_kinds_and_devices() {
+        // Satellite: a typo'd --inject plan must say what IS valid —
+        // every fault kind, in the same style as the clock / profile /
+        // share-scheme errors.
+        let trace = tiny_trace("badinject");
+        let err = replay(
+            &trace,
+            &ReplayConfig {
+                inject: Some("quantum".into()),
+                ..ReplayConfig::default()
+            },
+        )
+        .unwrap_err()
+        .to_string();
+        for kind in crate::storage::FAULT_KINDS {
+            assert!(
+                err.contains(kind),
+                "inject error does not list {kind:?}: {err}"
+            );
+        }
+        // A plan naming a device the trace never recorded lists the
+        // traced device names instead of failing bare.
+        let err = replay(
+            &trace,
+            &ReplayConfig {
+                inject: Some("offline:nvme9".into()),
+                ..ReplayConfig::default()
+            },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(
+            err.contains("nvme9") && err.contains("(valid: d)"),
+            "unknown-device inject error unhelpful: {err}"
+        );
+    }
+
+    #[test]
+    fn injected_fault_replay_degrades_deterministically() {
+        // The §14 determinism gate at unit scale: the same recorded
+        // stream under the same injected fault on a virtual clock
+        // lands on a bit-identical makespan, and the fault actually
+        // bites (slow stretches the schedule, offline fails probes).
+        let trace = tiny_trace("inject");
+        let base = ReplayConfig {
+            clock: ClockSpec::Virtual,
+            ..ReplayConfig::default()
+        };
+        let healthy = replay(&trace, &base).unwrap();
+        assert_eq!(healthy.errors, 0);
+
+        let slow = ReplayConfig {
+            inject: Some("slow:d".into()),
+            ..base.clone()
+        };
+        let a = replay(&trace, &slow).unwrap();
+        let b = replay(&trace, &slow).unwrap();
+        assert_eq!(a.errors, 0, "a slow device still serves");
+        assert!(
+            a.wall_secs > healthy.wall_secs * 2.0,
+            "slow fault did not stretch the replay: healthy {} vs {}",
+            healthy.wall_secs,
+            a.wall_secs
+        );
+        assert!(
+            (a.wall_secs - b.wall_secs).abs() < 1e-9,
+            "injected replays not deterministic: {} vs {}",
+            a.wall_secs,
+            b.wall_secs
+        );
+
+        // An offline device fails every probe even after the default
+        // retry budget — the failures surface in `errors`, never as a
+        // panic or a hang.
+        let off = replay(
+            &trace,
+            &ReplayConfig {
+                inject: Some("offline:d".into()),
+                ..base.clone()
+            },
+        )
+        .unwrap();
+        assert_eq!(off.errors, trace.events.len() as u64);
     }
 
     #[test]
