@@ -1,0 +1,118 @@
+#!/usr/bin/env python3
+"""Plot the `dlio overlap-sweep --format json` matrix (DESIGN.md §16).
+
+Reads the sweep's JSON rows (one object per (target, shards, prefetch)
+cell, schema in EXPERIMENTS.md) and renders the paper's prefetcher
+figure: one line per (target, shards), step time vs prefetch depth,
+with the cell's analytic anchors — max(compute, input) for the overlap
+regime and compute + input for the synchronous one — drawn as dashed
+reference levels.
+
+Stub-safe: when matplotlib is unavailable (offline CI), prints an
+aligned ASCII summary of the same numbers instead of an image and
+exits 0 — the JSON schema is exercised either way.
+
+Usage:
+    dlio overlap-sweep --format json > overlap.json
+    python3 python/plot_overlap_sweep.py overlap.json --out overlap.png \
+        [--metric step_ms]
+"""
+
+import argparse
+import json
+import sys
+
+# Metric name -> extractor over one sweep row.
+METRICS = {
+    "step_ms": lambda row: row["step_ms"],
+    "stall_frac": lambda row: row["stall_frac"],
+    "overlap_frac": lambda row: row["overlap_frac"],
+    "eff_io_ms_per_step": lambda row: row["eff_io_ms_per_step"],
+    "images_per_sec": lambda row: row["images_per_sec"],
+}
+
+
+def load_rows(path):
+    with open(path) as f:
+        rows = json.load(f)
+    if not isinstance(rows, list) or not rows:
+        raise SystemExit(f"{path}: expected a non-empty JSON array of rows")
+    for key in ("target", "shards", "prefetch", "step_ms",
+                "compute_ms_per_step", "input_ms_per_step"):
+        if key not in rows[0]:
+            raise SystemExit(f"{path}: row missing {key!r} (schema drift?)")
+    return rows
+
+
+def curves(rows, metric):
+    """(target, shards) -> sorted [(prefetch, value)], plus anchors."""
+    out = {}
+    anchors = {}
+    pick = METRICS[metric]
+    for row in rows:
+        key = (row["target"], int(row["shards"]))
+        out.setdefault(key, []).append((int(row["prefetch"]), pick(row)))
+        c = row["compute_ms_per_step"]
+        i = row["input_ms_per_step"]
+        anchors[key] = (max(c, i), c + i)
+    return {k: sorted(v) for k, v in out.items()}, anchors
+
+
+def ascii_summary(series, anchors, metric):
+    print(f"# overlap-sweep: {metric} vs prefetch depth (matplotlib "
+          "unavailable: ASCII fallback)")
+    width = max(len(f"{t} s={s}") for t, s in series) + 2
+    for (target, shards), points in sorted(series.items()):
+        label = f"{target} s={shards}".ljust(width)
+        vals = "  ".join(f"p={p}:{v:.3f}" for p, v in points)
+        hi, lo = anchors[(target, shards)]
+        print(f"{label}{vals}  [max(C,I)={hi:.3f} C+I={lo:.3f}]")
+
+
+def plot(series, anchors, metric, out):
+    import matplotlib
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    fig, ax = plt.subplots(figsize=(6, 4))
+    for (target, shards), points in sorted(series.items()):
+        xs = [p for p, _ in points]
+        ys = [v for _, v in points]
+        line, = ax.plot(xs, ys, marker="o", label=f"{target}, {shards} shards")
+        if metric == "step_ms":
+            overlap, additive = anchors[(target, shards)]
+            color = line.get_color()
+            ax.axhline(overlap, color=color, linestyle="--", alpha=0.5,
+                       linewidth=0.8)
+            ax.axhline(additive, color=color, linestyle=":", alpha=0.5,
+                       linewidth=0.8)
+    ax.set_xlabel("prefetch depth (0 = synchronous)")
+    ax.set_ylabel(metric)
+    title = "dlio overlap-sweep"
+    if metric == "step_ms":
+        title += "  (-- max(C,I), .. C+I)"
+    ax.set_title(title)
+    ax.legend(fontsize=8)
+    ax.grid(True, alpha=0.3)
+    fig.tight_layout()
+    fig.savefig(out, dpi=120)
+    print(f"wrote {out}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("sweep_json",
+                    help="output of dlio overlap-sweep --format json")
+    ap.add_argument("--out", default="overlap-sweep.png", help="PNG path")
+    ap.add_argument("--metric", default="step_ms", choices=sorted(METRICS))
+    args = ap.parse_args()
+    series, anchors = curves(load_rows(args.sweep_json), args.metric)
+    try:
+        plot(series, anchors, args.metric, args.out)
+    except ImportError:
+        ascii_summary(series, anchors, args.metric)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

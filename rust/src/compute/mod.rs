@@ -1,0 +1,23 @@
+//! The accelerator compute model (DESIGN.md §16).
+//!
+//! Closes the loop the stubbed XLA runtime leaves open: a calibrated
+//! discrete-event [`AccelModel`] occupies the [`Clock`](crate::storage::Clock)
+//! for each training step's modelled duration, the
+//! [`run_loop`] driver couples it to the input pipeline through a
+//! clock-aware bounded prefetch queue, and every step emits a
+//! [`StepRecord`] (input wait / compute / checkpoint stall) that
+//! flows into trace files (schema v4) and stall/overlap summaries.
+//! This is the machinery behind `dlio train --compute model`,
+//! `dlio ckpt-study --compute model`, and `dlio overlap-sweep` — and
+//! the bench gate reproducing the paper's prefetcher-overlap result.
+
+pub mod accel;
+pub mod step;
+pub mod train_loop;
+
+pub use accel::{
+    AccelModel, AccelTier, ComputeProfile, LayerCost, PROFILE_NAMES,
+    TIER_NAMES,
+};
+pub use step::{StepRecord, StepSummary};
+pub use train_loop::{run_loop, LoopConfig, LoopOutcome};

@@ -1,0 +1,215 @@
+//! Per-step phase records and their roll-up summary.
+//!
+//! Each training step decomposes into the three phases the paper's
+//! instrumentation separates: waiting on the input pipeline, occupying
+//! the accelerator, and stalling on a synchronous checkpoint.  One
+//! [`StepRecord`] per step flows into trace files (schema v4 lines
+//! tagged `"rec":"step"`, appended after the request events) and into
+//! the [`StepSummary`] printed by `--engine-stats`-style reports:
+//! stall fraction, overlap fraction, and the effective I/O cost per
+//! step — the quantity the paper shows the prefetcher driving to
+//! zero.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{obj, to_string, Json};
+
+/// JSONL discriminator key/value marking a step-record line in a
+/// trace file (request-event lines have no `rec` key).
+pub const STEP_REC_KEY: &str = "rec";
+pub const STEP_REC_VALUE: &str = "step";
+
+/// One training step's phase breakdown, in clock seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepRecord {
+    pub step: u64,
+    /// Step start, relative to the loop start.
+    pub start_secs: f64,
+    /// Time blocked waiting for the input pipeline to produce a batch.
+    pub input_wait_secs: f64,
+    /// Modelled (or measured) accelerator occupancy.
+    pub compute_secs: f64,
+    /// Synchronous checkpoint pause attributed to this step.
+    pub ckpt_stall_secs: f64,
+    /// Images consumed by this step.
+    pub images: u64,
+}
+
+impl StepRecord {
+    /// Total step duration (the phases are serial on the step thread).
+    pub fn step_secs(&self) -> f64 {
+        self.input_wait_secs + self.compute_secs + self.ckpt_stall_secs
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            (STEP_REC_KEY, Json::Str(STEP_REC_VALUE.into())),
+            ("i", Json::Num(self.step as f64)),
+            ("t", Json::Num(self.start_secs)),
+            ("w", Json::Num(self.input_wait_secs)),
+            ("c", Json::Num(self.compute_secs)),
+            ("k", Json::Num(self.ckpt_stall_secs)),
+            ("n", Json::Num(self.images as f64)),
+        ])
+    }
+
+    pub fn to_jsonl(&self) -> String {
+        to_string(&self.to_json())
+    }
+
+    /// Whether a parsed trace line is a step record.
+    pub fn is_step_line(v: &Json) -> bool {
+        v.get(STEP_REC_KEY).and_then(Json::as_str) == Some(STEP_REC_VALUE)
+    }
+
+    pub fn from_json(v: &Json) -> Result<StepRecord> {
+        let num = |key: &str| -> Result<f64> {
+            v.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("step record missing '{key}'"))
+        };
+        Ok(StepRecord {
+            step: num("i")? as u64,
+            start_secs: num("t")?,
+            input_wait_secs: num("w")?,
+            compute_secs: num("c")?,
+            ckpt_stall_secs: num("k").context("step record")?,
+            images: num("n")? as u64,
+        })
+    }
+}
+
+/// Aggregates over a run's [`StepRecord`]s — the per-step analogue of
+/// the engine's `--engine-stats` block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepSummary {
+    pub steps: u64,
+    pub images: u64,
+    /// Sum of step durations (== loop wall time on the step thread).
+    pub total_secs: f64,
+    pub input_wait_secs: f64,
+    pub compute_secs: f64,
+    pub ckpt_stall_secs: f64,
+    pub mean_step_secs: f64,
+    /// Fraction of the loop NOT overlapped with compute: (input wait
+    /// + checkpoint stall) / total.  The paper's prefetcher drives
+    /// this to ~0.
+    pub stall_frac: f64,
+    /// Fraction of the loop the accelerator was busy: compute / total.
+    pub overlap_frac: f64,
+    /// Stall time amortized per step — the *effective* cost of I/O
+    /// after overlap, in seconds.
+    pub effective_io_secs_per_step: f64,
+    pub images_per_sec: f64,
+}
+
+impl StepSummary {
+    pub fn from_records(records: &[StepRecord]) -> StepSummary {
+        let steps = records.len() as u64;
+        let images: u64 = records.iter().map(|r| r.images).sum();
+        let input_wait_secs: f64 =
+            records.iter().map(|r| r.input_wait_secs).sum();
+        let compute_secs: f64 = records.iter().map(|r| r.compute_secs).sum();
+        let ckpt_stall_secs: f64 =
+            records.iter().map(|r| r.ckpt_stall_secs).sum();
+        let total_secs = input_wait_secs + compute_secs + ckpt_stall_secs;
+        let stall = input_wait_secs + ckpt_stall_secs;
+        let frac = |num: f64| if total_secs > 0.0 { num / total_secs } else { 0.0 };
+        StepSummary {
+            steps,
+            images,
+            total_secs,
+            input_wait_secs,
+            compute_secs,
+            ckpt_stall_secs,
+            mean_step_secs: if steps > 0 {
+                total_secs / steps as f64
+            } else {
+                0.0
+            },
+            stall_frac: frac(stall),
+            overlap_frac: frac(compute_secs),
+            effective_io_secs_per_step: if steps > 0 {
+                stall / steps as f64
+            } else {
+                0.0
+            },
+            images_per_sec: if total_secs > 0.0 {
+                images as f64 / total_secs
+            } else {
+                0.0
+            },
+        }
+    }
+
+    /// Mean step duration over the post-warm-up tail (`skip` leading
+    /// steps excluded) — what the paper averages after discarding the
+    /// first steps.
+    pub fn steady_mean_step_secs(records: &[StepRecord], skip: usize) -> f64 {
+        let tail = &records[skip.min(records.len())..];
+        if tail.is_empty() {
+            return 0.0;
+        }
+        tail.iter().map(StepRecord::step_secs).sum::<f64>()
+            / tail.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: u64, w: f64, c: f64, k: f64) -> StepRecord {
+        StepRecord {
+            step,
+            start_secs: step as f64 * 0.1,
+            input_wait_secs: w,
+            compute_secs: c,
+            ckpt_stall_secs: k,
+            images: 32,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let r = rec(7, 0.012345678901, 0.1, 0.00025);
+        let line = r.to_jsonl();
+        let v = Json::parse(&line).unwrap();
+        assert!(StepRecord::is_step_line(&v));
+        assert_eq!(StepRecord::from_json(&v).unwrap(), r);
+        // Request-event-shaped lines are not step lines.
+        let ev = Json::parse(r#"{"seq":0,"dev":"ssd","bytes":10}"#).unwrap();
+        assert!(!StepRecord::is_step_line(&ev));
+        // Missing keys are an error, not a default.
+        let bad = Json::parse(r#"{"rec":"step","i":1}"#).unwrap();
+        assert!(StepRecord::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn summary_fractions_partition_the_loop() {
+        let records =
+            vec![rec(0, 0.02, 0.08, 0.0), rec(1, 0.0, 0.08, 0.02)];
+        let s = StepSummary::from_records(&records);
+        assert_eq!(s.steps, 2);
+        assert_eq!(s.images, 64);
+        assert!((s.total_secs - 0.2).abs() < 1e-12);
+        assert!((s.mean_step_secs - 0.1).abs() < 1e-12);
+        assert!((s.stall_frac - 0.2).abs() < 1e-12);
+        assert!((s.overlap_frac - 0.8).abs() < 1e-12);
+        assert!((s.stall_frac + s.overlap_frac - 1.0).abs() < 1e-12);
+        assert!((s.effective_io_secs_per_step - 0.02).abs() < 1e-12);
+        assert!((s.images_per_sec - 320.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_and_steady_tail_edges() {
+        let s = StepSummary::from_records(&[]);
+        assert_eq!(s.steps, 0);
+        assert_eq!(s.mean_step_secs, 0.0);
+        assert_eq!(s.stall_frac, 0.0);
+        let records = vec![rec(0, 0.5, 0.1, 0.0), rec(1, 0.0, 0.1, 0.0)];
+        let steady = StepSummary::steady_mean_step_secs(&records, 1);
+        assert!((steady - 0.1).abs() < 1e-12);
+        assert_eq!(StepSummary::steady_mean_step_secs(&records, 10), 0.0);
+    }
+}

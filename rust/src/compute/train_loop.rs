@@ -1,0 +1,246 @@
+//! The modelled training loop: consume a batch, occupy the
+//! accelerator, optionally stall on a checkpoint — one
+//! [`StepRecord`] per iteration.
+//!
+//! This is the structure of the paper's mini-app with the XLA step
+//! replaced by [`AccelModel::execute`]: the input pipeline fills a
+//! bounded [`SimPrefetch`] queue ahead of the consumer, so with
+//! sufficient depth the step time converges to
+//! `max(compute, input)` — the paper's "complete overlap" — while
+//! `prefetch == 0` pays `compute + input` additively.
+
+use anyhow::Result;
+
+use crate::pipeline::{Dataset, SimPrefetch};
+
+use super::accel::AccelModel;
+use super::step::{StepRecord, StepSummary};
+
+/// Knobs for [`run_loop`].
+#[derive(Debug, Clone)]
+pub struct LoopConfig {
+    /// Prefetch queue depth (0 = synchronous).
+    pub prefetch: usize,
+    /// Stop after this many steps (0 = run until the source ends).
+    pub max_steps: usize,
+    /// Checkpoint every N steps (0 = never).
+    pub ckpt_interval: usize,
+}
+
+/// A finished loop: the per-step records and their roll-up.
+#[derive(Debug, Clone)]
+pub struct LoopOutcome {
+    pub records: Vec<StepRecord>,
+    pub summary: StepSummary,
+}
+
+/// Drive the loop over `batches` (each element = images in one batch).
+///
+/// Registers the calling thread with the accelerator's clock for the
+/// duration, so virtual-clock runs advance in discrete-event time.
+/// `on_ckpt` runs synchronously on the step thread every
+/// `ckpt_interval` steps; its clock-time cost is recorded as that
+/// step's checkpoint stall.
+pub fn run_loop<D>(
+    batches: D,
+    accel: &AccelModel,
+    cfg: &LoopConfig,
+    mut on_ckpt: Option<&mut dyn FnMut(u64) -> Result<()>>,
+) -> Result<LoopOutcome>
+where
+    D: Dataset<Item = u64> + 'static,
+{
+    let clock = accel.clock().clone();
+    let _reg = clock.enter();
+    let mut src = SimPrefetch::new(batches, cfg.prefetch, &clock);
+    let run0 = clock.now();
+    let mut records: Vec<StepRecord> = Vec::new();
+    let mut step = 0u64;
+    loop {
+        if cfg.max_steps > 0 && step >= cfg.max_steps as u64 {
+            break;
+        }
+        let w0 = clock.now();
+        let Some(batch) = src.next() else { break };
+        let images = batch?;
+        let input_wait_secs = clock.now() - w0;
+        let compute_secs = accel.execute(step);
+        let mut ckpt_stall_secs = 0.0;
+        if cfg.ckpt_interval > 0 && (step + 1) % cfg.ckpt_interval as u64 == 0
+        {
+            if let Some(f) = on_ckpt.as_mut() {
+                let k0 = clock.now();
+                f(step + 1)?;
+                ckpt_stall_secs = clock.now() - k0;
+            }
+        }
+        records.push(StepRecord {
+            step,
+            start_secs: w0 - run0,
+            input_wait_secs,
+            compute_secs,
+            ckpt_stall_secs,
+            images,
+        });
+        step += 1;
+    }
+    let summary = StepSummary::from_records(&records);
+    Ok(LoopOutcome { records, summary })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::accel::{AccelTier, ComputeProfile};
+    use crate::storage::Clock;
+
+    /// A batch source costing `secs` of clock time per batch.
+    struct TimedBatches {
+        left: usize,
+        secs: f64,
+        images: u64,
+        clock: Clock,
+    }
+
+    impl Dataset for TimedBatches {
+        type Item = u64;
+
+        fn next(&mut self) -> Option<Result<u64>> {
+            if self.left == 0 {
+                return None;
+            }
+            self.left -= 1;
+            self.clock.sleep_secs(self.secs);
+            Some(Ok(self.images))
+        }
+    }
+
+    fn accel(clock: &Clock, profile: &str, batch: usize) -> AccelModel {
+        AccelModel::new(
+            ComputeProfile::by_name(profile).unwrap(),
+            AccelTier::by_name("k80").unwrap(),
+            batch,
+            1.0,
+            clock.clone(),
+        )
+        .unwrap()
+    }
+
+    fn timed(clock: &Clock, n: usize, secs: f64) -> TimedBatches {
+        TimedBatches { left: n, secs, images: 16, clock: clock.clone() }
+    }
+
+    #[test]
+    fn prefetch_overlaps_and_sync_is_additive() {
+        // micro @ batch 16: step C = 0.0005 + 16*0.00005 = 1.3 ms.
+        // Input I = 1.0 ms/batch (compute-bound cell, C > I).
+        let run = |prefetch: usize| -> LoopOutcome {
+            let clock = Clock::virt();
+            let a = accel(&clock, "micro", 16);
+            let cfg =
+                LoopConfig { prefetch, max_steps: 0, ckpt_interval: 0 };
+            run_loop(timed(&clock, 20, 0.001), &a, &cfg, None).unwrap()
+        };
+        let sync = run(0);
+        let over = run(4);
+        assert_eq!(sync.summary.steps, 20);
+        assert_eq!(over.summary.steps, 20);
+        assert_eq!(sync.summary.images, 20 * 16);
+        let c = accel(&Clock::virt(), "micro", 16).steady_step_secs();
+        // Synchronous: every step pays C + I.
+        let sync_steady = StepSummary::steady_mean_step_secs(&sync.records, 2);
+        assert!(
+            sync_steady >= 0.999 * (c + 0.001),
+            "sync steady {sync_steady} < C+I {}",
+            c + 0.001
+        );
+        // Prefetched: steady step converges to max(C, I) = C and the
+        // stall fraction collapses.
+        let over_steady = StepSummary::steady_mean_step_secs(&over.records, 2);
+        assert!(
+            over_steady <= 1.01 * c,
+            "overlap steady {over_steady} > C {c}"
+        );
+        assert!(
+            over.summary.stall_frac < 0.05,
+            "stall_frac {}",
+            over.summary.stall_frac
+        );
+        assert!(over.summary.total_secs < sync.summary.total_secs);
+    }
+
+    #[test]
+    fn max_steps_truncates_and_ckpt_stall_is_attributed() {
+        let clock = Clock::virt();
+        let a = accel(&clock, "micro", 16);
+        let cfg =
+            LoopConfig { prefetch: 2, max_steps: 9, ckpt_interval: 4 };
+        let ckpt_clock = clock.clone();
+        let mut saved: Vec<u64> = Vec::new();
+        let mut on_ckpt = |step: u64| -> Result<()> {
+            ckpt_clock.sleep_secs(0.01);
+            saved.push(step);
+            Ok(())
+        };
+        let out =
+            run_loop(timed(&clock, 100, 0.0002), &a, &cfg, Some(&mut on_ckpt))
+                .unwrap();
+        assert_eq!(out.summary.steps, 9);
+        assert_eq!(saved, vec![4, 8]);
+        for r in &out.records {
+            if (r.step + 1) % 4 == 0 {
+                assert!(
+                    (r.ckpt_stall_secs - 0.01).abs() < 1e-9,
+                    "step {}: {}",
+                    r.step,
+                    r.ckpt_stall_secs
+                );
+            } else {
+                assert_eq!(r.ckpt_stall_secs, 0.0, "step {}", r.step);
+            }
+        }
+        assert!(out.summary.ckpt_stall_secs > 0.019);
+    }
+
+    #[test]
+    fn records_are_bit_identical_across_virtual_runs() {
+        let run = || {
+            let clock = Clock::virt();
+            let a = accel(&clock, "alexnet", 8);
+            let cfg =
+                LoopConfig { prefetch: 3, max_steps: 12, ckpt_interval: 5 };
+            let ckpt_clock = clock.clone();
+            let mut on_ckpt = |_| {
+                ckpt_clock.sleep_secs(0.002);
+                Ok(())
+            };
+            run_loop(
+                timed(&clock, 50, 0.0007),
+                &a,
+                &cfg,
+                Some(&mut on_ckpt),
+            )
+            .unwrap()
+        };
+        let a = run();
+        let b = run();
+        // Bit-identical f64s, not tolerances: the determinism contract.
+        assert_eq!(a.records, b.records);
+        assert_eq!(a.summary, b.summary);
+    }
+
+    #[test]
+    fn source_errors_propagate() {
+        struct Bad;
+        impl Dataset for Bad {
+            type Item = u64;
+            fn next(&mut self) -> Option<Result<u64>> {
+                Some(Err(anyhow::anyhow!("torn file")))
+            }
+        }
+        let clock = Clock::virt();
+        let a = accel(&clock, "micro", 4);
+        let cfg = LoopConfig { prefetch: 1, max_steps: 5, ckpt_interval: 0 };
+        assert!(run_loop(Bad, &a, &cfg, None).is_err());
+    }
+}

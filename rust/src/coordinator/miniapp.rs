@@ -10,6 +10,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use crate::checkpoint::{BurstBuffer, Saver};
+use crate::compute::StepRecord;
 use crate::config::{
     CheckpointTarget, CkptStudyConfig, MiniAppConfig, DEFAULT_SHARD_WINDOW,
 };
@@ -20,7 +21,7 @@ use crate::pipeline::{
     collect, from_manifest, sharded_reader_hier, Dataset, DatasetExt,
     ImageBatch,
 };
-use crate::runtime::Runtime;
+use crate::runtime::{ProfileMeta, Runtime};
 use crate::storage::{StorageHierarchy, StorageSim};
 use crate::util::Rng;
 
@@ -42,6 +43,9 @@ pub struct MiniAppResult {
     /// Per-checkpoint durations.
     pub ckpt_durations: Vec<f64>,
     pub losses: Vec<f32>,
+    /// Per-step phase breakdown (schema-v4 trace lines via
+    /// `--trace-out`).
+    pub step_records: Vec<StepRecord>,
 }
 
 /// Assemble the full mini-app input pipeline for `cfg`, ending after
@@ -130,35 +134,7 @@ pub fn run_hier(
     }
     let mut trainer = Trainer::new(rt, &cfg.profile, cfg.batch, cfg.seed)?;
     let mut ds = input_pipeline_hier(hier, rt, manifest, cfg)?;
-
-    let mut result = MiniAppResult {
-        steps: 0,
-        images: 0,
-        total_secs: 0.0,
-        ingest_wait_secs: 0.0,
-        compute_secs: 0.0,
-        ckpt_secs: 0.0,
-        ckpt_durations: Vec::new(),
-        losses: Vec::new(),
-    };
-    let total = Timer::start();
-    for _ in 0..cfg.iterations {
-        let wait = Timer::start();
-        let batch = match ds.next() {
-            None => break, // corpus exhausted (one-epoch runs)
-            Some(b) => b?,
-        };
-        result.ingest_wait_secs += wait.secs();
-
-        let compute = Timer::start();
-        let loss = trainer.step(&batch)?;
-        result.compute_secs += compute.secs();
-        result.losses.push(loss);
-        result.steps += 1;
-        result.images += batch.batch as u64;
-    }
-    result.total_secs = total.secs();
-    Ok(result)
+    drive(&mut trainer, &mut ds, Ckpt::None, cfg.iterations, usize::MAX)
 }
 
 /// Run the mini-application without checkpointing.
@@ -182,8 +158,123 @@ enum Ckpt {
     Bb(BurstBuffer),
 }
 
+/// Build the checkpoint sink for `target`.  With `route` set, Direct
+/// saves go through the storage hierarchy — the placement policy
+/// picks the tier, exactly like the routed ingest reads.
+fn ckpt_sink(
+    sim: &Arc<StorageSim>,
+    profile: &ProfileMeta,
+    target: &CheckpointTarget,
+    max_to_keep: usize,
+    route: Option<&Arc<StorageHierarchy>>,
+) -> Result<Ckpt> {
+    Ok(match target {
+        CheckpointTarget::None => Ckpt::None,
+        CheckpointTarget::Direct(dev) => {
+            let mut saver = Saver::new(
+                Arc::clone(sim),
+                profile.clone(),
+                dev,
+                "ckpt/model",
+                max_to_keep,
+            );
+            if let Some(h) = route {
+                saver.set_route(Arc::clone(h));
+            }
+            Ckpt::Direct(saver)
+        }
+        CheckpointTarget::BurstBuffer { fast, slow } => {
+            Ckpt::Bb(BurstBuffer::new(
+                Arc::clone(sim),
+                profile.clone(),
+                fast,
+                slow,
+                "ckpt/model",
+                max_to_keep,
+            )?)
+        }
+    })
+}
+
+/// The shared training loop: one [`StepRecord`] per iteration,
+/// checkpointing every `interval` iterations (§IV-C: 100 iters, ckpt
+/// every 20).
+fn drive(
+    trainer: &mut Trainer,
+    ds: &mut crate::pipeline::prefetch::Prefetch<ImageBatch>,
+    mut ckpt: Ckpt,
+    iterations: usize,
+    interval: usize,
+) -> Result<MiniAppResult> {
+    let mut result = MiniAppResult {
+        steps: 0,
+        images: 0,
+        total_secs: 0.0,
+        ingest_wait_secs: 0.0,
+        compute_secs: 0.0,
+        ckpt_secs: 0.0,
+        ckpt_durations: Vec::new(),
+        losses: Vec::new(),
+        step_records: Vec::new(),
+    };
+
+    let total = Timer::start();
+    for it in 0..iterations {
+        let start_secs = total.secs();
+        let wait = Timer::start();
+        let batch = match ds.next() {
+            None => break, // corpus exhausted (one-epoch runs)
+            Some(b) => b?,
+        };
+        let input_wait_secs = wait.secs();
+        result.ingest_wait_secs += input_wait_secs;
+
+        let compute = Timer::start();
+        let loss = trainer.step(&batch)?;
+        let compute_secs = compute.secs();
+        result.compute_secs += compute_secs;
+        result.losses.push(loss);
+        result.steps += 1;
+        result.images += batch.batch as u64;
+
+        let mut ckpt_stall_secs = 0.0;
+        if (it + 1) % interval.max(1) == 0 {
+            let t = Timer::start();
+            match &mut ckpt {
+                Ckpt::None => {}
+                Ckpt::Direct(saver) => {
+                    saver.save(trainer.state(), trainer.step_count())?;
+                }
+                Ckpt::Bb(bb) => {
+                    bb.save(trainer.state(), trainer.step_count())?;
+                }
+            }
+            let dt = t.secs();
+            if !matches!(ckpt, Ckpt::None) {
+                ckpt_stall_secs = dt;
+                result.ckpt_secs += dt;
+                result.ckpt_durations.push(dt);
+            }
+        }
+        result.step_records.push(StepRecord {
+            step: it as u64,
+            start_secs,
+            input_wait_secs,
+            compute_secs,
+            ckpt_stall_secs,
+            images: batch.batch as u64,
+        });
+    }
+    result.total_secs = total.secs();
+    // The BurstBuffer drop below blocks until drains complete, but the
+    // paper's runtime measurement ends when *training* ends — we have
+    // already captured total_secs.
+    drop(ckpt);
+    Ok(result)
+}
+
 /// Run the mini-application, optionally checkpointing every
-/// `cfg.interval` iterations (§IV-C: 100 iters, ckpt every 20).
+/// `cfg.interval` iterations.
 pub fn run_with_checkpoints(
     sim: Arc<StorageSim>,
     rt: &Runtime,
@@ -199,80 +290,33 @@ pub fn run_with_checkpoints(
     }
     let mut trainer = Trainer::new(rt, &mini.profile, mini.batch, mini.seed)?;
     let profile = trainer.profile().clone();
-
-    let mut ckpt = match &cfg.target {
-        CheckpointTarget::None => Ckpt::None,
-        CheckpointTarget::Direct(dev) => Ckpt::Direct(Saver::new(
-            Arc::clone(&sim),
-            profile.clone(),
-            dev,
-            "ckpt/model",
-            cfg.max_to_keep,
-        )),
-        CheckpointTarget::BurstBuffer { fast, slow } => {
-            Ckpt::Bb(BurstBuffer::new(
-                Arc::clone(&sim),
-                profile.clone(),
-                fast,
-                slow,
-                "ckpt/model",
-                cfg.max_to_keep,
-            )?)
-        }
-    };
-
+    let ckpt = ckpt_sink(&sim, &profile, &cfg.target, cfg.max_to_keep, None)?;
     let mut ds = input_pipeline(Arc::clone(&sim), rt, manifest, mini)?;
+    drive(&mut trainer, &mut ds, ckpt, mini.iterations, cfg.interval)
+}
 
-    let mut result = MiniAppResult {
-        steps: 0,
-        images: 0,
-        total_secs: 0.0,
-        ingest_wait_secs: 0.0,
-        compute_secs: 0.0,
-        ckpt_secs: 0.0,
-        ckpt_durations: Vec::new(),
-        losses: Vec::new(),
-    };
-
-    let total = Timer::start();
-    for it in 0..mini.iterations {
-        let wait = Timer::start();
-        let batch = match ds.next() {
-            None => break, // corpus exhausted (one-epoch runs)
-            Some(b) => b?,
-        };
-        result.ingest_wait_secs += wait.secs();
-
-        let compute = Timer::start();
-        let loss = trainer.step(&batch)?;
-        result.compute_secs += compute.secs();
-        result.losses.push(loss);
-        result.steps += 1;
-        result.images += batch.batch as u64;
-
-        // Checkpoint every `interval` iterations (§IV-C).
-        if (it + 1) % cfg.interval.max(1) == 0 {
-            let t = Timer::start();
-            match &mut ckpt {
-                Ckpt::None => {}
-                Ckpt::Direct(saver) => {
-                    saver.save(trainer.state(), trainer.step_count())?;
-                }
-                Ckpt::Bb(bb) => {
-                    bb.save(trainer.state(), trainer.step_count())?;
-                }
-            }
-            let dt = t.secs();
-            if !matches!(ckpt, Ckpt::None) {
-                result.ckpt_secs += dt;
-                result.ckpt_durations.push(dt);
-            }
-        }
+/// Hierarchy-routed variant of [`run_with_checkpoints`]
+/// (`dlio ckpt-study --device hier:<preset>`): ingest reads go
+/// through the hierarchy and Direct checkpoint saves are routed the
+/// same way.
+pub fn run_with_checkpoints_hier(
+    sim: Arc<StorageSim>,
+    hier: Arc<StorageHierarchy>,
+    rt: &Runtime,
+    manifest: &Manifest,
+    cfg: &CkptStudyConfig,
+) -> Result<MiniAppResult> {
+    let mini = &cfg.mini;
+    if manifest.len() < mini.batch {
+        return Err(anyhow!(
+            "corpus of {} images cannot fill a batch of {}",
+            manifest.len(), mini.batch
+        ));
     }
-    result.total_secs = total.secs();
-    // The BurstBuffer drop below blocks until drains complete, but the
-    // paper's runtime measurement ends when *training* ends — we have
-    // already captured total_secs.
-    drop(ckpt);
-    Ok(result)
+    let mut trainer = Trainer::new(rt, &mini.profile, mini.batch, mini.seed)?;
+    let profile = trainer.profile().clone();
+    let ckpt =
+        ckpt_sink(&sim, &profile, &cfg.target, cfg.max_to_keep, Some(&hier))?;
+    let mut ds = input_pipeline_hier(Arc::clone(&hier), rt, manifest, mini)?;
+    drive(&mut trainer, &mut ds, ckpt, mini.iterations, cfg.interval)
 }

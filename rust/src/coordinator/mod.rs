@@ -7,7 +7,9 @@ pub mod fixtures;
 pub mod fleet_sweep;
 pub mod microbench;
 pub mod miniapp;
+pub mod overlap_sweep;
 pub mod qos_sweep;
+pub mod sim_train;
 pub mod tier_sweep;
 pub mod trace_record;
 pub mod workload;
@@ -19,6 +21,8 @@ pub use fixtures::{
 pub use fleet_sweep::{FleetSweepConfig, FleetSweepRow};
 pub use microbench::MicrobenchResult;
 pub use miniapp::MiniAppResult;
+pub use overlap_sweep::{OverlapSweepConfig, OverlapSweepRow};
 pub use qos_sweep::{QosSweepCell, QosSweepConfig};
+pub use sim_train::{SimTrainConfig, SimTrainResult};
 pub use tier_sweep::{TierSweepCell, TierSweepConfig};
 pub use trace_record::{TraceRecordConfig, TraceRecordResult};

@@ -1,0 +1,378 @@
+//! `dlio overlap-sweep` — the prefetcher-overlap characterization
+//! driver (DESIGN.md §16): the paper's headline result as a matrix.
+//!
+//! The paper shows that with enough prefetch depth the training step
+//! time converges to `max(compute, input)` — the input pipeline
+//! completely overlaps the accelerator and the *effective* cost of
+//! I/O drops to ~0 — while a synchronous loop pays the two costs
+//! additively.  This sweep runs that experiment as (storage target ×
+//! reader shards × prefetch depth) cells of [`sim_train`] under the
+//! virtual clock, and reports each cell next to its two analytic
+//! anchors:
+//!
+//! * `compute_ms_per_step` — the accelerator model's exact
+//!   post-warm-up step cost (`C`).
+//! * `input_ms_per_step` — the pure input-pipeline cost per batch
+//!   (`I`), measured by a drain cell (compute profile `none`,
+//!   prefetch 0) over the same (target, shards) fixture.
+//!
+//! A cell in the overlap regime shows `step_ms ≈ max(C, I)` and
+//! `stall_frac → 0`; the `prefetch = 0` column stays additive.  The
+//! §15 bench gate asserts exactly that on a pinned cell.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::compute::{AccelTier, ComputeProfile, StepSummary};
+use crate::config::DEFAULT_SHARD_WINDOW;
+use crate::storage::ClockSpec;
+use crate::util::json::{obj, to_string, Json};
+
+use super::sim_train::{self, SimTrainConfig, SimTrainResult};
+
+/// Sweep matrix + cell shape.
+#[derive(Debug, Clone)]
+pub struct OverlapSweepConfig {
+    /// Storage targets: device names and/or `hier:<preset>`.
+    pub targets: Vec<String>,
+    /// Reader shard counts.
+    pub shards: Vec<usize>,
+    /// Prefetch depths (0 = synchronous).
+    pub prefetch: Vec<usize>,
+    /// Per-shard in-flight read window.
+    pub window: usize,
+    /// Images per batch.
+    pub batch: usize,
+    /// Steps per cell (corpus = exactly one epoch).
+    pub steps: usize,
+    /// Bytes per corpus file.
+    pub file_bytes: usize,
+    /// Compute profile / accelerator tier for the measured cells
+    /// (drain cells always run profile `none`).
+    pub profile: String,
+    pub tier: String,
+    /// Simulation speed-up.
+    pub time_scale: f64,
+    /// Working directory root (each cell gets a subdirectory).
+    pub workdir: String,
+    /// Time source per cell; virtual (the default) makes every cell
+    /// exact and the matrix fast.
+    pub clock: ClockSpec,
+}
+
+impl OverlapSweepConfig {
+    /// Full default matrix: 3 targets x 2 shard counts x 4 depths.
+    pub fn standard(workdir: String, time_scale: f64) -> OverlapSweepConfig {
+        OverlapSweepConfig {
+            targets: vec![
+                "ssd".into(),
+                "hdd".into(),
+                "hier:blackdog-bb".into(),
+            ],
+            shards: vec![1, 4],
+            prefetch: vec![0, 1, 2, 4],
+            window: DEFAULT_SHARD_WINDOW,
+            batch: 16,
+            steps: 24,
+            file_bytes: 64 * 1024,
+            profile: "alexnet".into(),
+            tier: "k80".into(),
+            time_scale,
+            workdir,
+            clock: ClockSpec::Virtual,
+        }
+    }
+
+    /// Tiny matrix for CI: 1 target x 1 shard count x 3 depths.
+    pub fn smoke(workdir: String, time_scale: f64) -> OverlapSweepConfig {
+        OverlapSweepConfig {
+            targets: vec!["ssd".into()],
+            shards: vec![2],
+            prefetch: vec![0, 1, 2],
+            batch: 8,
+            steps: 10,
+            file_bytes: 16 * 1024,
+            profile: "micro".into(),
+            ..OverlapSweepConfig::standard(workdir, time_scale)
+        }
+    }
+}
+
+/// One (target, shards, prefetch) cell of the sweep.
+#[derive(Debug, Clone)]
+pub struct OverlapSweepRow {
+    pub target: String,
+    pub shards: usize,
+    pub prefetch: usize,
+    /// Resolved data device (hier targets bottom out on the preset's
+    /// slow tier).
+    pub device: String,
+    pub steps: u64,
+    pub images: u64,
+    /// The accelerator model's exact post-warm-up step cost, `C`.
+    pub compute_ms_per_step: f64,
+    /// Pure input cost per batch from the drain cell, `I`.
+    pub input_ms_per_step: f64,
+    /// Measured post-warm-up mean step duration.
+    pub step_ms: f64,
+    pub stall_frac: f64,
+    pub overlap_frac: f64,
+    /// Stall time amortized per step — the effective I/O cost after
+    /// overlap.
+    pub eff_io_ms_per_step: f64,
+    pub images_per_sec: f64,
+    pub elapsed_secs: f64,
+}
+
+/// CSV column order — one place so header and rows can't drift.
+const CSV_COLUMNS: [&str; 14] = [
+    "target",
+    "shards",
+    "prefetch",
+    "device",
+    "steps",
+    "images",
+    "compute_ms_per_step",
+    "input_ms_per_step",
+    "step_ms",
+    "stall_frac",
+    "overlap_frac",
+    "eff_io_ms_per_step",
+    "images_per_sec",
+    "elapsed_secs",
+];
+
+impl OverlapSweepRow {
+    fn csv_row(&self) -> String {
+        [
+            self.target.clone(),
+            self.shards.to_string(),
+            self.prefetch.to_string(),
+            self.device.clone(),
+            self.steps.to_string(),
+            self.images.to_string(),
+            format!("{:.4}", self.compute_ms_per_step),
+            format!("{:.4}", self.input_ms_per_step),
+            format!("{:.4}", self.step_ms),
+            format!("{:.4}", self.stall_frac),
+            format!("{:.4}", self.overlap_frac),
+            format!("{:.4}", self.eff_io_ms_per_step),
+            format!("{:.1}", self.images_per_sec),
+            format!("{:.4}", self.elapsed_secs),
+        ]
+        .join(",")
+    }
+
+    fn json_value(&self) -> Json {
+        obj(vec![
+            ("target", Json::Str(self.target.clone())),
+            ("shards", Json::Num(self.shards as f64)),
+            ("prefetch", Json::Num(self.prefetch as f64)),
+            ("device", Json::Str(self.device.clone())),
+            ("steps", Json::Num(self.steps as f64)),
+            ("images", Json::Num(self.images as f64)),
+            ("compute_ms_per_step", Json::Num(self.compute_ms_per_step)),
+            ("input_ms_per_step", Json::Num(self.input_ms_per_step)),
+            ("step_ms", Json::Num(self.step_ms)),
+            ("stall_frac", Json::Num(self.stall_frac)),
+            ("overlap_frac", Json::Num(self.overlap_frac)),
+            ("eff_io_ms_per_step", Json::Num(self.eff_io_ms_per_step)),
+            ("images_per_sec", Json::Num(self.images_per_sec)),
+            ("elapsed_secs", Json::Num(self.elapsed_secs)),
+        ])
+    }
+}
+
+/// Render rows as CSV (header + one line per row).
+pub fn to_csv(rows: &[OverlapSweepRow]) -> String {
+    let mut out = CSV_COLUMNS.join(",");
+    out.push('\n');
+    for r in rows {
+        out.push_str(&r.csv_row());
+        out.push('\n');
+    }
+    out
+}
+
+/// Render rows as a JSON array (one object per row).
+pub fn to_json(rows: &[OverlapSweepRow]) -> String {
+    to_string(&Json::Arr(rows.iter().map(|r| r.json_value()).collect()))
+}
+
+/// Run the full matrix; rows come back in (target, shards, prefetch)
+/// iteration order.
+pub fn run(cfg: &OverlapSweepConfig) -> Result<Vec<OverlapSweepRow>> {
+    // Resolve the model knobs once, before any cell pays for fixtures.
+    let profile = ComputeProfile::by_name(&cfg.profile)?;
+    AccelTier::by_name(&cfg.tier)?;
+    let warm = profile.warmup_steps as usize;
+    let mut rows = Vec::new();
+    for target in &cfg.targets {
+        for &shards in &cfg.shards {
+            // Drain cell: the pure input-pipeline cost per batch over
+            // exactly this (target, shards) fixture.  `none` has no
+            // warm-up, so the steady mean spans every step.
+            let drain = run_cell(cfg, target, shards, 0, "none")?;
+            let input_secs =
+                StepSummary::steady_mean_step_secs(&drain.records, 0);
+            for &prefetch in &cfg.prefetch {
+                let r = run_cell(cfg, target, shards, prefetch, &cfg.profile)?;
+                let steady =
+                    StepSummary::steady_mean_step_secs(&r.records, warm);
+                rows.push(OverlapSweepRow {
+                    target: target.clone(),
+                    shards,
+                    prefetch,
+                    device: r.data_device.clone(),
+                    steps: r.summary.steps,
+                    images: r.summary.images,
+                    compute_ms_per_step: r.modelled_step_secs * 1e3,
+                    input_ms_per_step: input_secs * 1e3,
+                    step_ms: steady * 1e3,
+                    stall_frac: r.summary.stall_frac,
+                    overlap_frac: r.summary.overlap_frac,
+                    eff_io_ms_per_step: r.summary.effective_io_secs_per_step
+                        * 1e3,
+                    images_per_sec: r.summary.images_per_sec,
+                    elapsed_secs: r.summary.total_secs,
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+fn run_cell(
+    cfg: &OverlapSweepConfig,
+    target: &str,
+    shards: usize,
+    prefetch: usize,
+    profile: &str,
+) -> Result<SimTrainResult> {
+    let tag = target.replace(':', "-");
+    let dir = Path::new(&cfg.workdir)
+        .join(format!("overlap-{tag}-s{shards}-p{prefetch}-{profile}"));
+    let mut c = SimTrainConfig::standard(
+        dir.to_string_lossy().into_owned(),
+        cfg.time_scale,
+    );
+    c.device = target.to_string();
+    c.shards = shards;
+    c.window = cfg.window;
+    c.batch = cfg.batch;
+    c.steps = cfg.steps;
+    c.prefetch = prefetch;
+    c.file_bytes = cfg.file_bytes;
+    c.profile = profile.to_string();
+    c.tier = cfg.tier.clone();
+    c.clock = cfg.clock.clone();
+    sim_train::run(&c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn workdir(tag: &str) -> String {
+        std::env::temp_dir()
+            .join(format!(
+                "dlio-overlap-sweep-test-{tag}-{}",
+                std::process::id()
+            ))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    #[test]
+    fn smoke_matrix_emits_one_row_per_cell() {
+        let cfg = OverlapSweepConfig::smoke(workdir("rows"), 1000.0);
+        let rows = run(&cfg).unwrap();
+        assert_eq!(rows.len(), 3); // 1 target x 1 shard count x 3 depths
+        for r in &rows {
+            assert_eq!(r.target, "ssd");
+            assert_eq!(r.device, "ssd");
+            assert_eq!(r.steps, 10);
+            assert_eq!(r.images, 80);
+            assert!(r.compute_ms_per_step > 0.0);
+            assert!(r.input_ms_per_step > 0.0);
+            assert!(r.step_ms > 0.0);
+            assert!((0.0..=1.0).contains(&r.stall_frac), "{}", r.stall_frac);
+            assert!(
+                (r.stall_frac + r.overlap_frac - 1.0).abs() < 1e-9,
+                "fractions must partition the loop"
+            );
+        }
+        // CSV: header + one line per row, constant column count.
+        let csv = to_csv(&rows);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 4);
+        let ncols = lines[0].split(',').count();
+        assert_eq!(ncols, CSV_COLUMNS.len());
+        for l in &lines {
+            assert_eq!(l.split(',').count(), ncols, "ragged CSV: {l}");
+        }
+        // JSON round-trips through the in-repo parser.
+        let parsed = Json::parse(&to_json(&rows)).unwrap();
+        match parsed {
+            Json::Arr(out) => {
+                assert_eq!(out.len(), 3);
+                for r in out {
+                    assert!(r.get("target").and_then(Json::as_str).is_some());
+                    assert!(r.get("step_ms").and_then(Json::as_f64).is_some());
+                }
+            }
+            other => panic!("expected a JSON array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn prefetch_overlaps_on_a_compute_bound_cell() {
+        // Pinned compute-bound cell: micro @ batch 8 gives C = 0.9 ms
+        // while 8 x 16 KiB off the ssd costs well under that, and a
+        // 1-shard / 1-wide window means the synchronous column can
+        // only hide one read per step — the additive regime.
+        let mut cfg = OverlapSweepConfig::smoke(workdir("overlap"), 1.0);
+        cfg.shards = vec![1];
+        cfg.window = 1;
+        cfg.prefetch = vec![0, 4];
+        cfg.steps = 12;
+        let rows = run(&cfg).unwrap();
+        assert_eq!(rows.len(), 2);
+        let sync = &rows[0];
+        let over = &rows[1];
+        assert_eq!(sync.prefetch, 0);
+        assert_eq!(over.prefetch, 4);
+        let c = sync.compute_ms_per_step;
+        let i = sync.input_ms_per_step;
+        assert!(c > i, "cell must be compute-bound: C {c} vs I {i}");
+        // Deep prefetch: step converges to max(C, I) = C.
+        assert!(
+            over.step_ms <= 1.10 * c.max(i),
+            "overlap step {} > 1.1 x max(C,I) {}",
+            over.step_ms,
+            c.max(i)
+        );
+        // Synchronous pays the input cost the overlap column hides.
+        assert!(
+            sync.step_ms > over.step_ms,
+            "sync {} must exceed overlapped {}",
+            sync.step_ms,
+            over.step_ms
+        );
+        assert!(
+            over.eff_io_ms_per_step < sync.eff_io_ms_per_step,
+            "prefetch must shrink the effective I/O cost"
+        );
+    }
+
+    #[test]
+    fn unknown_profile_fails_before_any_cell() {
+        let mut cfg = OverlapSweepConfig::smoke(workdir("badprof"), 1000.0);
+        cfg.profile = "resnet".into();
+        assert!(run(&cfg).is_err());
+        let mut cfg = OverlapSweepConfig::smoke(workdir("badtarget"), 1000.0);
+        cfg.targets = vec!["floppy".into()];
+        assert!(run(&cfg).is_err());
+    }
+}

@@ -1,0 +1,454 @@
+//! The modelled training run (`dlio train --compute model`): the
+//! paper's mini-app structure with the XLA step replaced by the
+//! calibrated [`AccelModel`] (DESIGN.md §16).
+//!
+//! Everything is artifact-free: an engine-backed sharded reader pulls
+//! a synthetic corpus (flat device or `hier:<preset>`), batches feed
+//! the [`run_loop`] through a bounded [`SimPrefetch`] queue, the
+//! accelerator occupies the shared [`Clock`] for each step's modelled
+//! duration, and checkpoints save synthetic state through the real
+//! `Saver`/`BurstBuffer` machinery.  Under the virtual clock the whole
+//! run is discrete-event and bit-deterministic — the substrate the
+//! overlap sweep and the §15 bench gate measure.
+//!
+//! [`SimPrefetch`]: crate::pipeline::SimPrefetch
+//! [`Clock`]: crate::storage::Clock
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::checkpoint::{BurstBuffer, Saver};
+use crate::compute::{
+    run_loop, AccelModel, AccelTier, ComputeProfile, LoopConfig,
+    StepRecord, StepSummary,
+};
+use crate::config::{CheckpointTarget, Testbed, DEFAULT_SHARD_WINDOW};
+use crate::data::manifest::Sample;
+use crate::model::ModelState;
+use crate::pipeline::{
+    sharded_reader, sharded_reader_hier, Dataset, ShardedReader,
+};
+use crate::runtime::meta::{ParamSpec, ProfileMeta};
+use crate::storage::{ClockSpec, QosConfig, SimPath, StorageSim};
+use crate::trace::{append_steps, TraceManifest, TraceRecorder, TRACE_VERSION};
+
+use super::fixtures::{build_hierarchy, StorageTarget};
+
+/// Shape of one modelled training run.
+#[derive(Debug, Clone)]
+pub struct SimTrainConfig {
+    /// Storage target: a device name or `hier:<preset>` (corpus homed
+    /// on the preset's bottom tier, reads routed through it).
+    pub device: String,
+    /// Reader shards / per-shard in-flight window.
+    pub shards: usize,
+    pub window: usize,
+    /// Images per batch.
+    pub batch: usize,
+    /// Training steps (the corpus is sized to exactly one epoch).
+    pub steps: usize,
+    /// Prefetch queue depth between pipeline and accelerator
+    /// (0 = synchronous).
+    pub prefetch: usize,
+    /// Bytes per corpus file.
+    pub file_bytes: usize,
+    /// Compute profile name ([`crate::compute::PROFILE_NAMES`]).
+    pub profile: String,
+    /// Accelerator tier name ([`crate::compute::TIER_NAMES`]).
+    pub tier: String,
+    /// Checkpoint target; `Direct` saves route through the hierarchy
+    /// when the storage target is `hier:<preset>`.
+    pub ckpt: CheckpointTarget,
+    /// Checkpoint every N steps (0 = never).
+    pub ckpt_interval: usize,
+    /// Synthetic checkpoint size, f32 elements.
+    pub ckpt_params: usize,
+    pub max_to_keep: usize,
+    /// Simulation speed-up, applied to storage and compute alike so
+    /// the compute-vs-I/O ratio survives scaling.
+    pub time_scale: f64,
+    /// Working directory root (the run gets a subdirectory).
+    pub workdir: String,
+    /// Time source: virtual (default) = exact discrete-event run.
+    pub clock: ClockSpec,
+    /// When set, record a schema-v4 trace here: request events plus
+    /// the per-step records.
+    pub trace_out: Option<PathBuf>,
+}
+
+impl SimTrainConfig {
+    pub fn standard(workdir: String, time_scale: f64) -> SimTrainConfig {
+        SimTrainConfig {
+            device: "ssd".into(),
+            shards: 2,
+            window: DEFAULT_SHARD_WINDOW,
+            batch: 16,
+            steps: 20,
+            prefetch: 2,
+            file_bytes: 64 * 1024,
+            profile: "alexnet".into(),
+            tier: "k80".into(),
+            ckpt: CheckpointTarget::None,
+            ckpt_interval: 0,
+            ckpt_params: 64 * 1024,
+            max_to_keep: 3,
+            time_scale,
+            workdir,
+            clock: ClockSpec::Virtual,
+            trace_out: None,
+        }
+    }
+}
+
+/// What a modelled run produced.
+pub struct SimTrainResult {
+    /// The run's sim, for `--engine-stats`-style reporting.
+    pub sim: Arc<StorageSim>,
+    /// Resolved data device (the preset's bottom tier for hier
+    /// targets).
+    pub data_device: String,
+    pub records: Vec<StepRecord>,
+    pub summary: StepSummary,
+    /// The accelerator's post-warm-up step duration — the `C` term of
+    /// the overlap regime, exact by construction.
+    pub modelled_step_secs: f64,
+    /// Request events written to `trace_out` (None = not recording).
+    pub trace_events: Option<u64>,
+}
+
+/// Fold loaded samples into per-batch image counts — the training
+/// loop consumes batches, not files.  A partial trailing batch is
+/// dropped (`drop_remainder`, like the mini-app's shape-specialized
+/// HLO).
+struct CountBatches {
+    inner: ShardedReader,
+    batch: usize,
+}
+
+impl Dataset for CountBatches {
+    type Item = u64;
+
+    fn next(&mut self) -> Option<Result<u64>> {
+        for _ in 0..self.batch {
+            match self.inner.next() {
+                Some(Ok(_)) => {}
+                Some(Err(e)) => return Some(Err(e)),
+                None => return None,
+            }
+        }
+        Some(Ok(self.batch as u64))
+    }
+}
+
+/// Synthetic checkpoint payload: one flat tensor of `params` f32
+/// elements — the artifact-free shape the tier sweep saves.
+fn ckpt_profile(params: usize) -> ProfileMeta {
+    let params = params.max(16);
+    ProfileMeta {
+        name: "sim-train".into(),
+        input_size: 8,
+        num_classes: 4,
+        num_params: params,
+        params: vec![ParamSpec {
+            name: "fc1/kernel".into(),
+            shape: vec![params],
+        }],
+    }
+}
+
+enum Ckpt {
+    None,
+    Direct(Saver),
+    Bb(BurstBuffer),
+}
+
+/// Run one modelled training cell.
+pub fn run(cfg: &SimTrainConfig) -> Result<SimTrainResult> {
+    if !(cfg.time_scale > 0.0) {
+        bail!("time scale must be positive, got {}", cfg.time_scale);
+    }
+    let target = StorageTarget::parse(&cfg.device);
+    let dir = Path::new(&cfg.workdir).join("sim-train");
+    let _ = std::fs::remove_dir_all(&dir);
+    let clock = cfg.clock.build();
+    let qos = QosConfig::default();
+    // The full paper testbed, so hier presets and checkpoint targets
+    // resolve whatever devices they name.
+    let testbed = Testbed::paper(cfg.time_scale);
+    let sim = Arc::new(StorageSim::cold_with_qos_clock(
+        dir,
+        testbed.devices.clone(),
+        qos.clone(),
+        clock.clone(),
+    )?);
+
+    let (hier, data_device) = match &target {
+        StorageTarget::Flat(dev) => {
+            if !testbed.devices.iter().any(|m| m.name == *dev) {
+                bail!(
+                    "unknown device {dev:?} (valid: {})",
+                    testbed
+                        .devices
+                        .iter()
+                        .map(|m| m.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                );
+            }
+            (None, dev.clone())
+        }
+        StorageTarget::Hier(preset) => {
+            let (h, bottom) = build_hierarchy(&sim, preset)?;
+            (Some(h), bottom)
+        }
+    };
+
+    // Validate the model knobs before paying for the corpus.
+    let batch = cfg.batch.max(1);
+    let steps = cfg.steps.max(1);
+    let accel = AccelModel::new(
+        ComputeProfile::by_name(&cfg.profile)?,
+        AccelTier::by_name(&cfg.tier)?,
+        batch,
+        cfg.time_scale,
+        clock.clone(),
+    )?;
+
+    // Fixture: exactly one epoch of corpus, excluded from the
+    // measured stats and any trace.
+    let samples: Vec<Sample> = (0..steps * batch)
+        .map(|i| -> Result<Sample> {
+            let p = SimPath::new(&data_device, format!("corpus/f{i}.bin"));
+            sim.write(&p, &vec![(i % 251) as u8; cfg.file_bytes])?;
+            Ok(Sample { path: p, label: i as u32 })
+        })
+        .collect::<Result<_>>()?;
+    sim.drop_caches();
+    sim.engine().reset_stats();
+
+    // Optional request-level recorder: the trace carries exactly the
+    // measured phase, with the step records appended after finish().
+    let recorder = match &cfg.trace_out {
+        None => None,
+        Some(out) => {
+            let manifest = TraceManifest {
+                version: TRACE_VERSION,
+                workload: format!(
+                    "sim-train device={} profile={} tier={} batch={} \
+                     steps={} prefetch={} shards={} window={} \
+                     ckpt={} ckpt_interval={}",
+                    cfg.device,
+                    cfg.profile,
+                    cfg.tier,
+                    batch,
+                    steps,
+                    cfg.prefetch,
+                    cfg.shards,
+                    cfg.window,
+                    cfg.ckpt.label(),
+                    cfg.ckpt_interval,
+                ),
+                qos_mode: qos.mode_name().to_string(),
+                qos: Some(qos.clone()),
+                time_scale: cfg.time_scale,
+                devices: testbed.devices.clone(),
+            };
+            let rec = TraceRecorder::create(out, &manifest)?;
+            sim.engine().set_observer(rec.observer());
+            Some(rec)
+        }
+    };
+
+    let reader = match &hier {
+        Some(h) => sharded_reader_hier(
+            samples,
+            Arc::clone(h),
+            cfg.shards.max(1),
+            cfg.window.max(1),
+        ),
+        None => sharded_reader(
+            samples,
+            Arc::clone(&sim),
+            cfg.shards.max(1),
+            cfg.window.max(1),
+        ),
+    };
+    let batches = CountBatches { inner: reader, batch };
+
+    // Checkpoint sink over synthetic state.  Hier-target runs route
+    // Direct saves through the hierarchy, so the placement policy
+    // picks the tier exactly like the routed ckpt-study path.
+    let (mut sink, state) = match &cfg.ckpt {
+        CheckpointTarget::None => (Ckpt::None, None),
+        other => {
+            let profile = ckpt_profile(cfg.ckpt_params);
+            let state = ModelState::init(&profile, 7);
+            let sink = match other {
+                CheckpointTarget::None => unreachable!(),
+                CheckpointTarget::Direct(dev) => {
+                    let mut saver = Saver::new(
+                        Arc::clone(&sim),
+                        profile,
+                        dev,
+                        "ckpt/model",
+                        cfg.max_to_keep,
+                    );
+                    if let Some(h) = &hier {
+                        saver.set_route(Arc::clone(h));
+                    }
+                    saver.sync_on_save = false;
+                    Ckpt::Direct(saver)
+                }
+                CheckpointTarget::BurstBuffer { fast, slow } => {
+                    Ckpt::Bb(BurstBuffer::new(
+                        Arc::clone(&sim),
+                        profile,
+                        fast,
+                        slow,
+                        "ckpt/model",
+                        cfg.max_to_keep,
+                    )?)
+                }
+            };
+            (sink, Some(state))
+        }
+    };
+
+    let loop_cfg = LoopConfig {
+        prefetch: cfg.prefetch,
+        max_steps: steps,
+        ckpt_interval: match cfg.ckpt {
+            CheckpointTarget::None => 0,
+            _ => cfg.ckpt_interval,
+        },
+    };
+    let mut on_ckpt = |step: u64| -> Result<()> {
+        let state = state.as_ref().expect("ckpt sink without state");
+        match &mut sink {
+            Ckpt::None => Ok(()),
+            Ckpt::Direct(s) => s.save(state, step).map(|_| ()),
+            Ckpt::Bb(b) => b.save(state, step).map(|_| ()),
+        }
+    };
+    let outcome = run_loop(batches, &accel, &loop_cfg, Some(&mut on_ckpt))
+        .context("sim-train loop failed")?;
+
+    // Like the mini-app: training time is already captured; the
+    // burst-buffer drain completes off the step clock.
+    if let Ckpt::Bb(bb) = &sink {
+        bb.wait_drained();
+    }
+
+    let trace_events = match recorder {
+        None => None,
+        Some(rec) => {
+            sim.engine().clear_observer();
+            let path = rec.path().clone();
+            let events = rec.finish()?;
+            append_steps(path, &outcome.records)?;
+            Some(events)
+        }
+    };
+
+    Ok(SimTrainResult {
+        sim,
+        data_device,
+        records: outcome.records,
+        summary: outcome.summary,
+        modelled_step_secs: accel.steady_step_secs(),
+        trace_events,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Trace;
+
+    fn tiny_cfg(tag: &str) -> SimTrainConfig {
+        let dir = std::env::temp_dir().join(format!(
+            "dlio-sim-train-test-{tag}-{}",
+            std::process::id()
+        ));
+        let mut c = SimTrainConfig::standard(
+            dir.to_string_lossy().into_owned(),
+            1000.0,
+        );
+        c.profile = "micro".into();
+        c.batch = 4;
+        c.steps = 6;
+        c.file_bytes = 4 * 1024;
+        c
+    }
+
+    #[test]
+    fn two_virtual_runs_are_bit_identical() {
+        let cfg = tiny_cfg("det");
+        let a = run(&cfg).unwrap();
+        let b = run(&cfg).unwrap();
+        assert_eq!(a.summary.steps, 6);
+        assert_eq!(a.summary.images, 24);
+        // Bit-identical f64s, not tolerances: the virtual-clock
+        // determinism contract, end-to-end through the engine-backed
+        // reader, the prefetch queue, and the accelerator.
+        assert_eq!(a.records, b.records);
+        assert_eq!(a.summary, b.summary);
+        assert_eq!(a.modelled_step_secs, b.modelled_step_secs);
+    }
+
+    #[test]
+    fn hier_target_routes_data_and_checkpoints() {
+        let mut cfg = tiny_cfg("hier");
+        cfg.device = "hier:blackdog-bb".into();
+        cfg.ckpt = CheckpointTarget::Direct("ssd".into());
+        cfg.ckpt_interval = 2;
+        cfg.ckpt_params = 1024;
+        let r = run(&cfg).unwrap();
+        assert_eq!(r.data_device, "hdd", "bb preset bottoms at hdd");
+        assert_eq!(r.summary.steps, 6);
+        // Saves fired on steps 2, 4, 6 and stalled the step thread.
+        assert!(r.summary.ckpt_stall_secs > 0.0);
+        for rec in &r.records {
+            if (rec.step + 1) % 2 == 0 {
+                assert!(
+                    rec.ckpt_stall_secs > 0.0,
+                    "step {} missing its save stall",
+                    rec.step
+                );
+            } else {
+                assert_eq!(rec.ckpt_stall_secs, 0.0, "step {}", rec.step);
+            }
+        }
+    }
+
+    #[test]
+    fn trace_out_writes_a_v4_trace_with_steps_and_events() {
+        let mut cfg = tiny_cfg("trace");
+        let out = Path::new(&cfg.workdir).join("train-trace.jsonl");
+        cfg.trace_out = Some(out.clone());
+        let r = run(&cfg).unwrap();
+        let events = r.trace_events.unwrap();
+        assert!(events >= 24, "expected >= one read per image, got {events}");
+        let trace = Trace::load(&out).unwrap();
+        assert_eq!(trace.manifest.version, TRACE_VERSION);
+        assert!(trace.manifest.workload.contains("sim-train"));
+        assert_eq!(trace.events.len() as u64, events);
+        assert_eq!(trace.steps.len(), r.records.len());
+        assert_eq!(trace.steps, r.records);
+    }
+
+    #[test]
+    fn unknown_knobs_are_rejected_before_running() {
+        let mut cfg = tiny_cfg("baddev");
+        cfg.device = "floppy".into();
+        assert!(run(&cfg).is_err());
+        let mut cfg = tiny_cfg("badprof");
+        cfg.profile = "resnet".into();
+        assert!(run(&cfg).is_err());
+        let mut cfg = tiny_cfg("badtier");
+        cfg.tier = "tpu".into();
+        assert!(run(&cfg).is_err());
+    }
+}

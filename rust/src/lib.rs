@@ -26,6 +26,7 @@
 
 pub mod bench;
 pub mod checkpoint;
+pub mod compute;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -10,8 +10,14 @@
 //!                  [--shards N] [--engine-stats]
 //! dlio train       [--device D|hier:P] [--threads N] [--batch 64]
 //!                  [--prefetch 1] [--iterations N] [--profile micro|mini]
+//!                  [--compute xla|model] [--accel cpu|k80|p100|v100]
+//!                  [--compute-profile alexnet|micro] [--trace-out FILE]
 //! dlio ckpt-study  [--target none|hdd|ssd|optane|bb:optane:hdd]
-//!                  [--interval 5] [--iterations 20]
+//!                  [--interval 5] [--iterations 20] [--device D|hier:P]
+//!                  [--compute xla|model] [--trace-out FILE]
+//! dlio overlap-sweep [--smoke] [--targets ssd,hdd,hier:P]
+//!                  [--shards 1,4] [--prefetch 0,1,2,4]
+//!                  [--format csv|json] [--clock wall|virtual]
 //! dlio qos-sweep   [--smoke] [--modes fifo,static,adaptive]
 //!                  [--intervals 0,2,8] [--shards 1,2,4] [--format csv|json]
 //!                  [--clock wall|virtual]
@@ -47,17 +53,21 @@ use dlio::config::{
     default_time_scale, default_workdir, Args, CheckpointTarget,
     CkptStudyConfig, MicrobenchConfig, MiniAppConfig, Testbed,
 };
+use dlio::compute::{StepRecord, StepSummary};
 use dlio::coordinator::{
     build_hierarchy, ensure_corpus, fault_sweep, fleet_sweep, make_sim,
-    microbench, miniapp, qos_sweep, tier_sweep, trace_record,
-    StorageTarget,
+    microbench, miniapp, overlap_sweep, qos_sweep, sim_train, tier_sweep,
+    trace_record, StorageTarget,
 };
 use dlio::data::CorpusSpec;
 use dlio::metrics::Table;
 use dlio::runtime::Runtime;
 use dlio::storage::ior;
-use dlio::storage::{profiles, ClockSpec, IoClass, QosConfig};
-use dlio::trace::{replay, Dstat, ReplayConfig, ReplayMode, Trace};
+use dlio::storage::{profiles, ClockSpec, IoClass, QosConfig, StorageSim};
+use dlio::trace::{
+    append_steps, replay, Dstat, ReplayConfig, ReplayMode, Trace,
+    TraceManifest, TraceRecorder, TRACE_VERSION,
+};
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
@@ -79,6 +89,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "microbench" => cmd_microbench(args),
         "train" => cmd_train(args),
         "ckpt-study" => cmd_ckpt_study(args),
+        "overlap-sweep" => cmd_overlap_sweep(args),
         "qos-sweep" => cmd_qos_sweep(args),
         "tier-sweep" => cmd_tier_sweep(args),
         "fleet-sweep" => cmd_fleet_sweep(args),
@@ -110,7 +121,22 @@ dlio — Characterizing Deep-Learning I/O Workloads (PDSW-DISCS'18) repro
   dlio gen-corpus             synthesize an SIMG corpus
   dlio microbench  Figs 4/5  tf.data ingestion bandwidth
   dlio train       Figs 6/7  AlexNet mini-app (prefetch study)
+                             (--compute model swaps the XLA step for
+                              the calibrated accelerator model: no
+                              artifacts, exact under --clock virtual;
+                              [--accel cpu|k80|p100|v100]
+                              [--compute-profile alexnet|micro])
   dlio ckpt-study  Fig 9     checkpoint targets incl. burst buffer
+                             (--device hier:<preset> routes ingest AND
+                              Direct saves through the hierarchy;
+                              --compute model as for train)
+  dlio overlap-sweep         prefetcher-overlap matrix (storage target
+                             x reader shards x prefetch depth) on the
+                             modelled accelerator: per-cell step time
+                             vs the analytic max(compute, input) anchor
+                             plus stall/overlap fractions ([--smoke]
+                             [--targets ssd,hdd,hier:P] [--shards 1,4]
+                             [--prefetch 0,1,2,4] [--format csv|json])
   dlio qos-sweep   Figs 4/8  (mode x ckpt interval x shards) matrix ->
                              per-class queue/latency rows, CSV or JSON
   dlio tier-sweep  Figs 9/10 (hierarchy x policy x workload) matrix ->
@@ -159,7 +185,11 @@ for plain trace-replay.
 Fault injection: --inject kind[:device[:start[:duration]]] arms a
 device fault on the replay (kinds: none, slow, flaky, read-only,
 offline; window in modelled seconds, default immediate and permanent).
-Artifacts: run `make artifacts` first or set DLIO_ARTIFACTS.
+Tracing: --trace-out FILE (train / ckpt-study / both --compute modes)
+records a schema-v4 JSONL trace: request-level events plus per-step
+phase records (input wait / compute / checkpoint stall).
+Artifacts: run `make artifacts` first or set DLIO_ARTIFACTS (not
+needed by --compute model or overlap-sweep, which are artifact-free).
 ";
 
 /// Engine QoS from CLI flags (shared by every subcommand that builds
@@ -450,7 +480,142 @@ fn train_cfg(args: &Args) -> Result<MiniAppConfig> {
     })
 }
 
+/// `--compute xla|model`: the real PJRT step or the calibrated
+/// accelerator model (DESIGN.md §16).  Anything else fails fast.
+fn compute_mode(args: &Args) -> Result<&'static str> {
+    match args.get_or("compute", "xla").as_str() {
+        "xla" => Ok("xla"),
+        "model" => Ok("model"),
+        other => Err(anyhow!("unknown --compute {other:?} (xla|model)")),
+    }
+}
+
+/// Shared CLI surface for the modelled (`--compute model`) runs:
+/// artifact-free, virtual-clock by default.  `--threads` doubles as
+/// the shard count so flat/model invocations stay flag-compatible.
+fn sim_train_cfg(args: &Args) -> Result<sim_train::SimTrainConfig> {
+    let ts = args.get_f64("time-scale", default_time_scale())?;
+    if ts <= 0.0 {
+        return Err(anyhow!("--time-scale must be positive"));
+    }
+    let workdir = args
+        .get("workdir")
+        .map(str::to_string)
+        .unwrap_or_else(default_workdir);
+    let mut cfg = sim_train::SimTrainConfig::standard(workdir, ts);
+    cfg.device = args.get_or("device", &cfg.device);
+    let threads = args.get_usize("threads", cfg.shards)?;
+    cfg.shards = args.get_usize("shards", threads)?;
+    cfg.window = args.get_usize("window", cfg.window)?;
+    cfg.batch = args.get_usize("batch", cfg.batch)?;
+    cfg.steps = args.get_usize("iterations", cfg.steps)?;
+    cfg.prefetch = args.get_usize("prefetch", cfg.prefetch)?;
+    cfg.file_bytes = args.get_usize("file-kb", cfg.file_bytes / 1024)? * 1024;
+    cfg.profile = args.get_or("compute-profile", &cfg.profile);
+    cfg.tier = args.get_or("accel", &cfg.tier);
+    cfg.clock = clock_arg(args, cfg.clock)?;
+    cfg.trace_out = args.get("trace-out").map(PathBuf::from);
+    Ok(cfg)
+}
+
+/// The `--compute model` result line: the per-step phase breakdown
+/// the overlap study reads (mean step vs stall/overlap fractions).
+fn print_step_summary(s: &StepSummary) {
+    println!(
+        "steps={} images={} total={:.3}s mean-step={:.3}ms \
+         stall-frac={:.3} overlap-frac={:.3} eff-io={:.3}ms/step \
+         {:.1} images/s",
+        s.steps,
+        s.images,
+        s.total_secs,
+        s.mean_step_secs * 1e3,
+        s.stall_frac,
+        s.overlap_frac,
+        s.effective_io_secs_per_step * 1e3,
+        s.images_per_sec,
+    );
+}
+
+/// `--trace-out FILE` on the artifact-backed paths: attach the
+/// request-level recorder to `sim` (call AFTER corpus generation so
+/// fixture writes stay out of the trace).
+fn trace_recorder_for(
+    args: &Args,
+    sim: &Arc<StorageSim>,
+    tb: &Testbed,
+    workload: String,
+) -> Result<Option<TraceRecorder>> {
+    let Some(out) = args.get("trace-out") else {
+        return Ok(None);
+    };
+    let manifest = TraceManifest {
+        version: TRACE_VERSION,
+        workload,
+        qos_mode: tb.qos.mode_name().to_string(),
+        qos: Some(tb.qos.clone()),
+        time_scale: tb.devices[0].time_scale,
+        devices: tb.devices.clone(),
+    };
+    let rec = TraceRecorder::create(Path::new(out), &manifest)?;
+    sim.engine().set_observer(rec.observer());
+    Ok(Some(rec))
+}
+
+/// Detach + flush the recorder and append the run's per-step records
+/// (the schema-v4 trace tail).
+fn finish_trace(
+    sim: &Arc<StorageSim>,
+    rec: Option<TraceRecorder>,
+    steps: &[StepRecord],
+) -> Result<()> {
+    let Some(rec) = rec else {
+        return Ok(());
+    };
+    sim.engine().clear_observer();
+    let path = rec.path().clone();
+    let events = rec.finish()?;
+    let n = append_steps(path.clone(), steps)?;
+    println!(
+        "trace: {} request events + {} step records -> {}",
+        events,
+        n,
+        path.display()
+    );
+    Ok(())
+}
+
+/// `dlio train --compute model`: the mini-app loop with the XLA step
+/// replaced by the calibrated accelerator model — artifact-free and,
+/// under the (default) virtual clock, exact and bit-deterministic.
+fn cmd_train_model(args: &Args) -> Result<()> {
+    let cfg = sim_train_cfg(args)?;
+    let r = sim_train::run(&cfg)?;
+    println!(
+        "device={} (data on {}) shards={} window={} prefetch={} batch={} \
+         compute-profile={} accel={} modelled-step={:.3}ms",
+        cfg.device, r.data_device, cfg.shards, cfg.window, cfg.prefetch,
+        cfg.batch, cfg.profile, cfg.tier, r.modelled_step_secs * 1e3,
+    );
+    print_step_summary(&r.summary);
+    if let Some(events) = r.trace_events {
+        let out = cfg.trace_out.as_ref().expect("events imply trace_out");
+        println!(
+            "trace: {} request events + {} step records -> {}",
+            events,
+            r.records.len(),
+            out.display()
+        );
+    }
+    if args.has_flag("engine-stats") {
+        print_engine_stats(&r.sim);
+    }
+    Ok(())
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
+    if compute_mode(args)? == "model" {
+        return cmd_train_model(args);
+    }
     let tb = testbed(args)?;
     let sim = make_sim(&tb, None)?;
     let rt = Runtime::open_default()?;
@@ -469,10 +634,20 @@ fn cmd_train(args: &Args) -> Result<()> {
         .num_files
         .max(cfg.batch * cfg.iterations.min(1024));
     let manifest = ensure_corpus(&sim, &device, &spec)?;
+    let rec = trace_recorder_for(
+        args,
+        &sim,
+        &tb,
+        format!(
+            "train device={} threads={} prefetch={} batch={} profile={}",
+            cfg.device, cfg.threads, cfg.prefetch, cfg.batch, cfg.profile
+        ),
+    )?;
     let r = match hier {
         Some(h) => miniapp::run_hier(h, &rt, &manifest, &cfg)?,
         None => miniapp::run(Arc::clone(&sim), &rt, &manifest, &cfg)?,
     };
+    finish_trace(&sim, rec, &r.step_records)?;
     println!(
         "device={} threads={} prefetch={} batch={} profile={}",
         cfg.device, cfg.threads, cfg.prefetch, cfg.batch, cfg.profile
@@ -488,7 +663,41 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `dlio ckpt-study --compute model`: the checkpoint-target study over
+/// the modelled accelerator — synthetic state through the real
+/// `Saver`/`BurstBuffer` machinery, no artifacts needed.
+fn cmd_ckpt_study_model(args: &Args) -> Result<()> {
+    let mut cfg = sim_train_cfg(args)?;
+    cfg.ckpt = CheckpointTarget::parse(&args.get_or("target", "hdd"))?;
+    cfg.ckpt_interval = args.get_usize("interval", 5)?;
+    cfg.ckpt_params = args.get_usize("ckpt-params", cfg.ckpt_params)?;
+    cfg.max_to_keep = args.get_usize("max-to-keep", cfg.max_to_keep)?;
+    let r = sim_train::run(&cfg)?;
+    let saves = r
+        .records
+        .iter()
+        .filter(|rec| rec.ckpt_stall_secs > 0.0)
+        .count();
+    println!(
+        "target={} interval={} : total={:.3}s ckpt-stall={:.3}s \
+         ({} checkpoints)",
+        cfg.ckpt.label(),
+        cfg.ckpt_interval,
+        r.summary.total_secs,
+        r.summary.ckpt_stall_secs,
+        saves,
+    );
+    print_step_summary(&r.summary);
+    if args.has_flag("engine-stats") {
+        print_engine_stats(&r.sim);
+    }
+    Ok(())
+}
+
 fn cmd_ckpt_study(args: &Args) -> Result<()> {
+    if compute_mode(args)? == "model" {
+        return cmd_ckpt_study_model(args);
+    }
     let tb = testbed(args)?;
     let sim = make_sim(&tb, None)?;
     let rt = Runtime::open_default()?;
@@ -498,10 +707,37 @@ fn cmd_ckpt_study(args: &Args) -> Result<()> {
         interval: args.get_usize("interval", 5)?,
         max_to_keep: args.get_usize("max-to-keep", 5)?,
     };
+    // `--device hier:<preset>`: ingest reads AND Direct checkpoint
+    // saves route through the hierarchy (PR-7 parity for this study).
+    let (hier, device) = match StorageTarget::parse(&cfg.mini.device) {
+        StorageTarget::Flat(d) => (None, d),
+        StorageTarget::Hier(preset) => {
+            let (h, bottom) = build_hierarchy(&sim, &preset)?;
+            (Some(h), bottom)
+        }
+    };
     let spec = corpus_spec(args)?;
-    let manifest = ensure_corpus(&sim, &cfg.mini.device, &spec)?;
-    let r = miniapp::run_with_checkpoints(Arc::clone(&sim), &rt,
-                                          &manifest, &cfg)?;
+    let manifest = ensure_corpus(&sim, &device, &spec)?;
+    let rec = trace_recorder_for(
+        args,
+        &sim,
+        &tb,
+        format!(
+            "ckpt-study device={} target={} interval={}",
+            cfg.mini.device,
+            cfg.target.label(),
+            cfg.interval
+        ),
+    )?;
+    let r = match hier {
+        Some(h) => miniapp::run_with_checkpoints_hier(
+            Arc::clone(&sim), h, &rt, &manifest, &cfg,
+        )?,
+        None => miniapp::run_with_checkpoints(
+            Arc::clone(&sim), &rt, &manifest, &cfg,
+        )?,
+    };
+    finish_trace(&sim, rec, &r.step_records)?;
     println!(
         "target={} interval={} : total={:.2}s ckpt-total={:.2}s \
          ({} checkpoints, median {:.2}s)",
@@ -513,6 +749,51 @@ fn cmd_ckpt_study(args: &Args) -> Result<()> {
         // Checkpoint-vs-ingest interference, per class (§V): the
         // table the QoS scheduler's isolation claims are read from.
         print_engine_stats(&sim);
+    }
+    Ok(())
+}
+
+/// `dlio overlap-sweep`: the (storage target × reader shards ×
+/// prefetch depth) matrix over the modelled accelerator — one CSV/JSON
+/// row per cell with the measured step time next to its analytic
+/// anchors (DESIGN.md §16): `max(compute, input)` in the overlap
+/// regime, `compute + input` in the synchronous column.
+fn cmd_overlap_sweep(args: &Args) -> Result<()> {
+    let ts = args.get_f64("time-scale", default_time_scale())?;
+    if ts <= 0.0 {
+        return Err(anyhow!("--time-scale must be positive"));
+    }
+    let workdir = args
+        .get("workdir")
+        .map(str::to_string)
+        .unwrap_or_else(default_workdir);
+    let mut cfg = if args.has_flag("smoke") {
+        overlap_sweep::OverlapSweepConfig::smoke(workdir, ts)
+    } else {
+        overlap_sweep::OverlapSweepConfig::standard(workdir, ts)
+    };
+    if let Some(t) = args.get_list("targets") {
+        cfg.targets = t;
+    }
+    cfg.shards = args.get_usize_list("shards", &cfg.shards)?;
+    cfg.prefetch = args.get_usize_list("prefetch", &cfg.prefetch)?;
+    cfg.window = args.get_usize("window", cfg.window)?;
+    cfg.batch = args.get_usize("batch", cfg.batch)?;
+    cfg.steps = args.get_usize("steps", cfg.steps)?;
+    cfg.file_bytes = args.get_usize("file-kb", cfg.file_bytes / 1024)? * 1024;
+    cfg.profile = args.get_or("compute-profile", &cfg.profile);
+    cfg.tier = args.get_or("accel", &cfg.tier);
+    cfg.clock = clock_arg(args, cfg.clock)?;
+    // Validate the output format *before* running the matrix.
+    let format = args.get_or("format", "csv");
+    if format != "csv" && format != "json" {
+        return Err(anyhow!("unknown --format {format:?} (csv|json)"));
+    }
+    let rows = overlap_sweep::run(&cfg)?;
+    match format.as_str() {
+        "csv" => print!("{}", overlap_sweep::to_csv(&rows)),
+        "json" => println!("{}", overlap_sweep::to_json(&rows)),
+        _ => unreachable!("validated above"),
     }
     Ok(())
 }

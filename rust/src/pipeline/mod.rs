@@ -9,9 +9,11 @@ pub mod ignore_errors;
 pub mod map;
 pub mod prefetch;
 pub mod shuffle;
+pub mod sim_prefetch;
 pub mod source;
 
 pub use dataset::{collect, BoxedDataset, Dataset, DatasetExt};
+pub use sim_prefetch::SimPrefetch;
 pub use elements::{ImageBatch, ProcessedImage};
 pub use source::{
     from_manifest, from_vec, read_ahead, sharded_reader,

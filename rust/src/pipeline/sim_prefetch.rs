@@ -1,0 +1,322 @@
+//! Clock-aware bounded prefetch — `tf.data.Dataset.prefetch(n)` for
+//! simulated time.
+//!
+//! [`Prefetch`](super::prefetch::Prefetch) blocks its producer thread
+//! on a std `Condvar` the [`Clock`] cannot see, so a virtual-clock
+//! run would stall (the clock only advances when every registered
+//! thread is parked *through the clock*).  [`SimPrefetch`] is the
+//! same bounded producer/consumer queue rebuilt on the clock seam:
+//! the producer registers via [`Clock::enter`] and both sides block
+//! on [`SimCondvar`], which makes prefetch overlap exact and
+//! bit-deterministic under `--clock virtual` while behaving like the
+//! std prefetcher on the wall clock.
+//!
+//! Depth semantics match tf.data: `depth` completed elements may sit
+//! in the queue while the producer works on one more.  `depth == 0`
+//! is fully synchronous — no thread, the consumer pulls upstream
+//! directly (the `--prefetch 0` baseline that pays compute + input
+//! additively).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::storage::{Clock, SimCondvar};
+
+use super::dataset::Dataset;
+
+struct State<T> {
+    queue: VecDeque<Option<Result<T>>>,
+    /// Producer exhausted upstream (after draining `queue`, `next`
+    /// returns `None`).
+    done: bool,
+    /// Consumer dropped; producer must exit without pushing.
+    shutdown: bool,
+}
+
+struct Shared<T> {
+    state: Mutex<State<T>>,
+    capacity: usize,
+    /// Signalled when the queue gains an element (or `done` flips).
+    filled: SimCondvar,
+    /// Signalled when the queue loses an element (or on shutdown).
+    drained: SimCondvar,
+}
+
+enum Mode<T: Send + 'static> {
+    /// `depth == 0`: pull upstream on the consumer thread.
+    Passthrough(Box<dyn Dataset<Item = T>>),
+    Threaded {
+        shared: Arc<Shared<T>>,
+        handle: Option<JoinHandle<()>>,
+    },
+}
+
+/// Clock-aware `prefetch(depth)` — see the module docs.
+pub struct SimPrefetch<T: Send + 'static> {
+    clock: Clock,
+    mode: Mode<T>,
+}
+
+impl<T: Send + 'static> SimPrefetch<T> {
+    /// Spawn the producer over `upstream`.  Blocks until the producer
+    /// thread is *registered* with the clock: without the handshake a
+    /// registered consumer could park and let virtual time advance
+    /// while the producer is still spawning, serializing the very
+    /// overlap this queue exists to model (and breaking run-to-run
+    /// determinism).
+    pub fn new<D>(upstream: D, depth: usize, clock: &Clock) -> SimPrefetch<T>
+    where
+        D: Dataset<Item = T> + 'static,
+    {
+        if depth == 0 {
+            return SimPrefetch {
+                clock: clock.clone(),
+                mode: Mode::Passthrough(Box::new(upstream)),
+            };
+        }
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                queue: VecDeque::with_capacity(depth),
+                done: false,
+                shutdown: false,
+            }),
+            capacity: depth,
+            filled: SimCondvar::new(),
+            drained: SimCondvar::new(),
+        });
+        let barrier = Arc::new(std::sync::Barrier::new(2));
+        let handle = {
+            let shared = Arc::clone(&shared);
+            let clock = clock.clone();
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let _reg = clock.enter();
+                barrier.wait();
+                producer_loop(upstream, &shared, &clock);
+            })
+        };
+        barrier.wait();
+        SimPrefetch {
+            clock: clock.clone(),
+            mode: Mode::Threaded { shared, handle: Some(handle) },
+        }
+    }
+
+    /// Completed elements currently buffered (0 for passthrough).
+    pub fn buffered(&self) -> usize {
+        match &self.mode {
+            Mode::Passthrough(_) => 0,
+            Mode::Threaded { shared, .. } => {
+                shared.state.lock().unwrap().queue.len()
+            }
+        }
+    }
+}
+
+fn producer_loop<D: Dataset>(
+    mut upstream: D,
+    shared: &Shared<D::Item>,
+    clock: &Clock,
+) {
+    loop {
+        // Pull outside the lock — this is the fill-ahead: the element
+        // in the producer's hand is the `+1` of the depth semantics.
+        let item = upstream.next();
+        let exhausted = item.is_none();
+        let mut st = shared.state.lock().unwrap();
+        while st.queue.len() >= shared.capacity && !st.shutdown {
+            st = shared.drained.wait(clock, &shared.state, st);
+        }
+        if st.shutdown {
+            return;
+        }
+        if exhausted {
+            st.done = true;
+            shared.filled.notify_all(clock);
+            return;
+        }
+        st.queue.push_back(item);
+        shared.filled.notify_one(clock);
+    }
+}
+
+impl<T: Send + 'static> Dataset for SimPrefetch<T> {
+    type Item = T;
+
+    fn next(&mut self) -> Option<Result<T>> {
+        match &mut self.mode {
+            Mode::Passthrough(upstream) => upstream.next(),
+            Mode::Threaded { shared, .. } => {
+                let mut st = shared.state.lock().unwrap();
+                while st.queue.is_empty() && !st.done {
+                    st = shared.filled.wait(&self.clock, &shared.state, st);
+                }
+                match st.queue.pop_front() {
+                    Some(item) => {
+                        shared.drained.notify_one(&self.clock);
+                        item
+                    }
+                    None => None, // done and drained
+                }
+            }
+        }
+    }
+}
+
+impl<T: Send + 'static> Drop for SimPrefetch<T> {
+    fn drop(&mut self) {
+        if let Mode::Threaded { shared, handle } = &mut self.mode {
+            {
+                let mut st = shared.state.lock().unwrap();
+                st.shutdown = true;
+                st.queue.clear();
+                shared.drained.notify_all(&self.clock);
+            }
+            if let Some(h) = handle.take() {
+                // Joining is a foreign block: drop this thread's
+                // registration (if any) so virtual time keeps moving
+                // while the producer finishes its in-flight pull.
+                let _suspend = self.clock.suspend();
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::dataset::collect;
+    use crate::pipeline::source::from_vec;
+
+    /// A source that sleeps `secs` of clock time per element.
+    struct Slow {
+        left: usize,
+        secs: f64,
+        clock: Clock,
+    }
+
+    impl Dataset for Slow {
+        type Item = u64;
+
+        fn next(&mut self) -> Option<Result<u64>> {
+            if self.left == 0 {
+                return None;
+            }
+            self.left -= 1;
+            self.clock.sleep_secs(self.secs);
+            Some(Ok(self.left as u64))
+        }
+    }
+
+    #[test]
+    fn preserves_order_and_exhaustion() {
+        let clock = Clock::wall();
+        for depth in [0usize, 1, 3, 16] {
+            let d =
+                SimPrefetch::new(from_vec(vec![1, 2, 3, 4, 5]), depth, &clock);
+            assert_eq!(collect(d).unwrap(), vec![1, 2, 3, 4, 5]);
+        }
+    }
+
+    #[test]
+    fn errors_flow_through_as_elements() {
+        struct Failing(usize);
+        impl Dataset for Failing {
+            type Item = u32;
+            fn next(&mut self) -> Option<Result<u32>> {
+                self.0 += 1;
+                match self.0 {
+                    1 => Some(Ok(10)),
+                    2 => Some(Err(anyhow::anyhow!("boom"))),
+                    3 => Some(Ok(30)),
+                    _ => None,
+                }
+            }
+        }
+        let clock = Clock::wall();
+        let mut d = SimPrefetch::new(Failing(0), 2, &clock);
+        assert_eq!(d.next().unwrap().unwrap(), 10);
+        assert!(d.next().unwrap().is_err());
+        assert_eq!(d.next().unwrap().unwrap(), 30);
+        assert!(d.next().is_none());
+    }
+
+    #[test]
+    fn overlaps_producer_and_consumer_on_the_virtual_clock() {
+        // 8 elements at 10 ms production + 10 ms consumption: without
+        // overlap 160 ms, with a depth-2 queue the steady state is
+        // max(produce, consume) per element — expect ~90 ms (first
+        // element's production is the only unoverlapped pull).
+        let clock = Clock::virt();
+        let _reg = clock.enter();
+        let src = Slow { left: 8, secs: 0.01, clock: clock.clone() };
+        let mut d = SimPrefetch::new(src, 2, &clock);
+        let t0 = clock.now();
+        let mut n = 0;
+        while let Some(item) = d.next() {
+            item.unwrap();
+            clock.sleep_secs(0.01);
+            n += 1;
+        }
+        let elapsed = clock.now() - t0;
+        assert_eq!(n, 8);
+        assert!(
+            (elapsed - 0.09).abs() < 1e-9,
+            "expected full overlap (~0.09 s), got {elapsed}"
+        );
+    }
+
+    #[test]
+    fn synchronous_depth_zero_pays_the_additive_cost() {
+        let clock = Clock::virt();
+        let _reg = clock.enter();
+        let src = Slow { left: 4, secs: 0.01, clock: clock.clone() };
+        let mut d = SimPrefetch::new(src, 0, &clock);
+        let t0 = clock.now();
+        while let Some(item) = d.next() {
+            item.unwrap();
+            clock.sleep_secs(0.01);
+        }
+        let elapsed = clock.now() - t0;
+        assert!(
+            (elapsed - 0.08).abs() < 1e-9,
+            "expected additive (~0.08 s), got {elapsed}"
+        );
+    }
+
+    #[test]
+    fn virtual_clock_runs_are_bit_identical() {
+        let run = || -> Vec<f64> {
+            let clock = Clock::virt();
+            let _reg = clock.enter();
+            let src = Slow { left: 6, secs: 0.013, clock: clock.clone() };
+            let mut d = SimPrefetch::new(src, 3, &clock);
+            let mut stamps = Vec::new();
+            while let Some(item) = d.next() {
+                item.unwrap();
+                clock.sleep_secs(0.007);
+                stamps.push(clock.now());
+            }
+            stamps
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.len(), 6);
+        // Bit-identical, not approximately equal.
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn drop_mid_stream_joins_the_producer() {
+        let clock = Clock::virt();
+        let _reg = clock.enter();
+        let src = Slow { left: 100, secs: 0.001, clock: clock.clone() };
+        let mut d = SimPrefetch::new(src, 4, &clock);
+        assert!(d.next().is_some());
+        drop(d); // must not hang or leak the producer
+    }
+}

@@ -134,7 +134,9 @@ pub fn compact(
             format!("{} [compacted {k}x]", manifest.workload);
     }
     Ok((
-        Trace { manifest, events },
+        // Step records describe the training loop, not the request
+        // stream being folded — they pass through unchanged.
+        Trace { manifest, events, steps: trace.steps.clone() },
         CompactReport {
             epochs: k,
             events_in: n,
@@ -163,6 +165,10 @@ pub fn write_trace(path: &Path, trace: &Trace) -> Result<()> {
     file.write_all(b"\n")?;
     for e in &trace.events {
         file.write_all(e.to_jsonl().as_bytes())?;
+        file.write_all(b"\n")?;
+    }
+    for s in &trace.steps {
+        file.write_all(s.to_jsonl().as_bytes())?;
         file.write_all(b"\n")?;
     }
     file.flush().context("flushing compacted trace")?;
@@ -203,6 +209,7 @@ mod tests {
                 devices: vec![crate::storage::profiles::blackdog_ssd(1.0)],
             },
             events,
+            steps: Vec::new(),
         }
     }
 

@@ -30,7 +30,14 @@ use crate::util::json::{obj, to_string, Json};
 /// `qos` block may carry a `tenants` table ([`TenantQos`]).  v1/v2
 /// traces (no tenant fields) load with an empty tenant and replay
 /// unchanged; replay re-tags probes from the recorded field.
-pub const TRACE_VERSION: u32 = 3;
+///
+/// v4: a trace may carry step-level records — lines tagged
+/// `"rec":"step"` ([`crate::compute::StepRecord`]) holding each
+/// training step's input-wait / compute / checkpoint-stall split,
+/// appended after the request events.  v1–v3 traces (no step lines)
+/// load with empty `steps` and replay unchanged; replay ignores step
+/// lines (they describe the consumer, not the offered I/O load).
+pub const TRACE_VERSION: u32 = 4;
 
 /// One recorded engine request.
 #[derive(Debug, Clone, PartialEq)]

@@ -35,7 +35,7 @@ pub mod replay;
 pub use compact::{compact, write_trace, CompactReport};
 pub use dstat::{Dstat, TraceRow};
 pub use event::{TraceEvent, TraceManifest, TRACE_VERSION};
-pub use recorder::{MemorySink, TraceRecorder};
+pub use recorder::{append_steps, MemorySink, TraceRecorder};
 pub use replay::{
     replay, report, sweep, sweep_to_csv, sweep_to_json, ReplayConfig,
     ReplayMode, ReplayOutcome, ReplayReport, Trace,

@@ -20,6 +20,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::compute::StepRecord;
 use crate::storage::{EngineEvent, EngineObserver};
 
 use super::event::{TraceEvent, TraceManifest};
@@ -195,6 +196,31 @@ fn write_events(sink: &Arc<Sink>, mut file: BufWriter<File>) -> Result<u64> {
     }
 }
 
+/// Append step-level records ([`StepRecord`] lines, schema v4) to a
+/// finished trace file.  Request events stream through the recorder's
+/// writer thread as they complete; step records are known only when
+/// the training loop ends, so drivers call this after
+/// [`TraceRecorder::finish`].  Returns the number of lines appended.
+pub fn append_steps(
+    path: impl Into<PathBuf>,
+    steps: &[StepRecord],
+) -> Result<u64> {
+    let path = path.into();
+    let mut file = BufWriter::new(
+        std::fs::OpenOptions::new()
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("append to {}", path.display()))?,
+    );
+    for s in steps {
+        file.write_all(s.to_jsonl().as_bytes())
+            .context("writing step record")?;
+        file.write_all(b"\n")?;
+    }
+    file.flush().context("flushing step records")?;
+    Ok(steps.len() as u64)
+}
+
 /// In-memory event sink: collects the stream instead of writing it.
 /// The replayer attaches one to measure its own run with exactly the
 /// machinery that produced the recording (symmetric diffs); tests use
@@ -325,6 +351,38 @@ mod tests {
         }
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text.lines().count(), 2);
+    }
+
+    #[test]
+    fn append_steps_extends_a_finished_trace() {
+        let path = scratch("steps").join("t.jsonl");
+        let rec = TraceRecorder::create(&path, &manifest()).unwrap();
+        rec.observer().record(engine_event(0));
+        assert_eq!(rec.finish().unwrap(), 1);
+        let steps = vec![
+            StepRecord {
+                step: 0,
+                start_secs: 0.0,
+                input_wait_secs: 0.01,
+                compute_secs: 0.1,
+                ckpt_stall_secs: 0.0,
+                images: 16,
+            },
+            StepRecord {
+                step: 1,
+                start_secs: 0.11,
+                input_wait_secs: 0.0,
+                compute_secs: 0.1,
+                ckpt_stall_secs: 0.02,
+                images: 16,
+            },
+        ];
+        assert_eq!(append_steps(&path, &steps).unwrap(), 2);
+        let trace = super::super::replay::Trace::load(&path).unwrap();
+        assert_eq!(trace.events.len(), 1);
+        assert_eq!(trace.steps.len(), 2);
+        assert_eq!(trace.steps[1].images, 16);
+        assert_eq!(trace.steps[1].ckpt_stall_secs, 0.02);
     }
 
     #[test]

@@ -43,11 +43,17 @@ use crate::util::json::{obj, Json};
 use super::analyze::{self, ClassAgg};
 use super::event::{TraceEvent, TraceManifest};
 use super::recorder::MemorySink;
+use crate::compute::StepRecord;
 
-/// A loaded trace: header + events in submit order.
+/// A loaded trace: header + events in submit order (+ any step-level
+/// records, schema v4).
 pub struct Trace {
     pub manifest: TraceManifest,
     pub events: Vec<TraceEvent>,
+    /// Step records (`"rec":"step"` lines); empty for v1–v3 traces
+    /// and for recordings without a training loop.  Replay ignores
+    /// them — they describe the consumer, not the offered I/O load.
+    pub steps: Vec<StepRecord>,
 }
 
 impl Trace {
@@ -61,6 +67,7 @@ impl Trace {
             .with_context(|| format!("read trace {}", path.display()))?;
         let mut manifest: Option<TraceManifest> = None;
         let mut events = Vec::new();
+        let mut steps = Vec::new();
         for (i, line) in std::io::BufReader::new(file).lines().enumerate() {
             let line = line
                 .with_context(|| format!("read trace {}", path.display()))?;
@@ -73,6 +80,10 @@ impl Trace {
                 .map_err(|e| anyhow!("trace line {lineno}: {e}"))?;
             match &manifest {
                 None => manifest = Some(TraceManifest::from_json(&v)?),
+                Some(_) if StepRecord::is_step_line(&v) => steps.push(
+                    StepRecord::from_json(&v)
+                        .with_context(|| format!("trace line {lineno}"))?,
+                ),
                 Some(_) => events.push(
                     TraceEvent::from_json(&v)
                         .with_context(|| format!("trace line {lineno}"))?,
@@ -88,7 +99,8 @@ impl Trace {
                 .total_cmp(&b.submit_secs)
                 .then(a.seq.cmp(&b.seq))
         });
-        Ok(Trace { manifest, events })
+        steps.sort_by_key(|s| s.step);
+        Ok(Trace { manifest, events, steps })
     }
 
     /// Per-class aggregates of the *recorded* run.
@@ -799,6 +811,7 @@ mod tests {
         let trace = Trace {
             manifest,
             events: vec![mk(0, 0.0), mk(1, 0.2)],
+            steps: Vec::new(),
         };
         let run = |speed: f64| {
             let cfg = ReplayConfig {
@@ -1046,6 +1059,100 @@ mod tests {
     }
 
     #[test]
+    fn v1_through_v3_traces_load_under_v4_with_empty_steps() {
+        // Schema v4 added trailing per-step record lines; every older
+        // on-disk shape must keep loading (with `steps` empty), and a
+        // v4 file's step lines must ride along without disturbing the
+        // request-event replay.
+        let dir = scratch("vercompat");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mk = |seq: u64, t: f64| TraceEvent {
+            seq,
+            device: "d".into(),
+            class: IoClass::Ingest,
+            op: crate::storage::EngineOp::ProbeRead,
+            origin: String::new(),
+            tier: None,
+            tenant: String::new(),
+            bytes: 4096,
+            ok: true,
+            submit_secs: t,
+            queue_secs: 0.001,
+            service_secs: 0.001,
+        };
+        let write_trace = |version, steps: &[StepRecord]| -> PathBuf {
+            let manifest = TraceManifest {
+                version,
+                workload: format!("legacy-v{version}"),
+                qos_mode: "static".into(),
+                qos: None,
+                time_scale: 1000.0,
+                devices: vec![lat_device("d")],
+            };
+            let mut text = manifest.to_jsonl();
+            text.push('\n');
+            for i in 0..3 {
+                text.push_str(&mk(i, i as f64 * 0.01).to_jsonl());
+                text.push('\n');
+            }
+            for s in steps {
+                text.push_str(&s.to_jsonl());
+                text.push('\n');
+            }
+            let path = dir.join(format!("legacy-v{version}.jsonl"));
+            std::fs::write(&path, text).unwrap();
+            path
+        };
+        for version in 1..=3 {
+            let trace = Trace::load(&write_trace(version, &[])).unwrap();
+            assert_eq!(trace.manifest.version, version);
+            assert_eq!(trace.events.len(), 3, "v{version} lost events");
+            assert!(
+                trace.steps.is_empty(),
+                "v{version} trace must load with no step records"
+            );
+        }
+        // Current-version file with step lines appended after the
+        // events (the append_steps layout).
+        let steps = [
+            StepRecord {
+                step: 0,
+                start_secs: 0.0,
+                input_wait_secs: 0.002,
+                compute_secs: 0.004,
+                ckpt_stall_secs: 0.0,
+                images: 8,
+            },
+            StepRecord {
+                step: 1,
+                start_secs: 0.006,
+                input_wait_secs: 0.001,
+                compute_secs: 0.004,
+                ckpt_stall_secs: 0.003,
+                images: 8,
+            },
+        ];
+        let trace = Trace::load(&write_trace(
+            super::super::event::TRACE_VERSION,
+            &steps,
+        ))
+        .unwrap();
+        assert_eq!(trace.events.len(), 3);
+        assert_eq!(trace.steps, steps.to_vec());
+        let cfg = ReplayConfig {
+            clock: ClockSpec::Virtual,
+            ..ReplayConfig::default()
+        };
+        let outcome = replay(&trace, &cfg).unwrap();
+        assert_eq!(outcome.errors, 0);
+        assert_eq!(
+            outcome.replayed.len(),
+            3,
+            "step lines must not become replayed requests"
+        );
+    }
+
+    #[test]
     fn replay_re_tags_recorded_tenants() {
         // v3: replayed probes carry the recorded tenant, so per-tenant
         // stats rows and tenant-aware replay QoS see the same keys the
@@ -1080,6 +1187,7 @@ mod tests {
                 mk(2, 0.02, "alpha"),
                 mk(3, 0.03, ""),
             ],
+            steps: Vec::new(),
         };
         let cfg = ReplayConfig {
             clock: ClockSpec::Virtual,
@@ -1125,6 +1233,7 @@ mod tests {
         Trace {
             manifest,
             events: (0..4).map(|i| mk(i, i as f64 * 0.01)).collect(),
+            steps: Vec::new(),
         }
     }
 
