@@ -1,11 +1,19 @@
 #!/usr/bin/env python3
-"""Plot the `dlio tier-sweep --format json` matrix (DESIGN.md §12).
+"""Plot the `dlio tier-sweep --format json` matrix (DESIGN.md §12, §17).
 
 Reads the sweep's JSON rows (one object per (hierarchy, policy,
-workload) cell, each carrying a `tier_rows` array) and renders the
-per-tier hit/migration columns: for every cell, one bar group per
-tier with hits, migrations-in, and evictions side by side — where the
-placement policy put the data, visually.
+workload) cell, each carrying a `tier_rows` array) and renders two
+panels:
+
+* per-tier hit/migration columns — for every cell, one bar group per
+  tier with hits, migrations-in, and evictions side by side: where
+  the placement policy put the data, visually;
+* policy vs theta — for the read-write-mix cells (`zipf`/`uniform`),
+  tier-0 hit fraction against the Zipf skew, one line per placement
+  policy (averaged across hierarchies).  Run the sweep with several
+  `--workloads zipf:0.6,zipf:0.9,zipf:1.2,uniform` tokens to get a
+  multi-point curve; the cost-aware policy should track `freq` at
+  high skew and hold migrations near zero at theta 0.
 
 Stub-safe: when matplotlib is unavailable (offline CI), prints an
 aligned ASCII summary of the same numbers instead of an image and
@@ -41,6 +49,28 @@ def cell_label(row):
     return f"{row['hierarchy']}/{row['policy']}/{row['workload']}"
 
 
+MIX_WORKLOADS = ("zipf", "uniform")
+
+
+def mix_curves(rows):
+    """(policy -> sorted [(theta, mean t0_hit_frac)]) over mix cells.
+
+    `uniform` cells land at theta 0, so a standard sweep already
+    yields a two-point curve per policy; hit fractions are averaged
+    across hierarchies at each theta.
+    """
+    buckets = {}
+    for r in rows:
+        if r["workload"] not in MIX_WORKLOADS:
+            continue
+        buckets.setdefault(r["policy"], {}).setdefault(
+            float(r["theta"]), []).append(float(r["t0_hit_frac"]))
+    return {
+        pol: sorted((th, sum(v) / len(v)) for th, v in pts.items())
+        for pol, pts in buckets.items()
+    }
+
+
 def ascii_summary(rows):
     print("# tier-sweep: per-tier hit/migration columns (matplotlib "
           "unavailable: ASCII fallback)")
@@ -53,6 +83,14 @@ def ascii_summary(rows):
             for t in row["tier_rows"]
         )
         print(f"{label}hit_frac={row['t0_hit_frac']:.2f}  {cols}")
+    curves = mix_curves(rows)
+    if curves:
+        print("# policy vs theta (tier-0 hit fraction over mix cells, "
+              "mean across hierarchies)")
+        for pol in sorted(curves):
+            pts = "  ".join(f"theta={th:.2f}:{hf:.2f}"
+                            for th, hf in curves[pol])
+            print(f"{pol.ljust(8)}{pts}")
 
 
 def plot(rows, out):
@@ -60,7 +98,14 @@ def plot(rows, out):
     matplotlib.use("Agg")
     import matplotlib.pyplot as plt
 
-    fig, ax = plt.subplots(figsize=(max(6, 1.4 * len(rows)), 4))
+    curves = mix_curves(rows)
+    if curves:
+        fig, (ax, ax2) = plt.subplots(
+            1, 2, figsize=(max(6, 1.4 * len(rows)) + 4, 4),
+            gridspec_kw={"width_ratios": [3, 1]})
+    else:
+        fig, ax = plt.subplots(figsize=(max(6, 1.4 * len(rows)), 4))
+        ax2 = None
     series = [
         ("hits", lambda t: t["hits"]),
         ("migrations in", lambda t: t["migrations_in"]),
@@ -90,6 +135,17 @@ def plot(rows, out):
     ax.set_title("dlio tier-sweep: per-tier placement")
     ax.legend(fontsize=8)
     ax.grid(True, axis="y", alpha=0.3)
+    if ax2 is not None:
+        for pol in sorted(curves):
+            thetas = [th for th, _hf in curves[pol]]
+            fracs = [hf for _th, hf in curves[pol]]
+            ax2.plot(thetas, fracs, marker="o", label=pol)
+        ax2.set_xlabel("zipf theta (0 = uniform)")
+        ax2.set_ylabel("tier-0 hit fraction")
+        ax2.set_ylim(0, 1)
+        ax2.set_title("policy vs skew")
+        ax2.legend(fontsize=8)
+        ax2.grid(True, alpha=0.3)
     fig.tight_layout()
     fig.savefig(out, dpi=120)
     print(f"wrote {out}")
@@ -101,7 +157,7 @@ def main():
                     help="output of dlio tier-sweep --format json")
     ap.add_argument("--out", default="tier-sweep.png", help="PNG path")
     ap.add_argument("--workload", default="",
-                    help="filter to one workload (hot|ckpt)")
+                    help="filter to one workload (hot|zipf|uniform|ckpt)")
     args = ap.parse_args()
     rows = load_rows(args.sweep_json, args.workload)
     try:

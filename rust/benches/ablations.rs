@@ -142,6 +142,7 @@ fn main() -> anyhow::Result<()> {
                 channels: 4,
                 elevator: vec![(1, 1.0)],
                 time_scale: 1.0,
+                lat_tables: None,
             };
             let sim = Arc::new(StorageSim::cold(
                 dir, vec![mk("slow", slow_bw), mk("fast", 600e6)])?);

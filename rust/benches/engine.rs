@@ -72,6 +72,14 @@
 //!    time to <= 1.05x max(compute, input) with stall fraction
 //!    <= 0.05, while the synchronous `--prefetch 0` column pays
 //!    >= 0.9x (compute + input) additively.
+//! 16. **Cost-aware placement** — on the calibrated 2-tier preset
+//!    (per-block-size latency tables feeding the policy's cost
+//!    model) under a Zipf read-write mix whose working set is 3x
+//!    tier-0 capacity, the bidirectional cost policy beats
+//!    promote-only freq: ingest p99 <= 0.9x and tier-0 hit fraction
+//!    >= 1.1x.  Freq promotes every block past its access threshold
+//!    and thrashes on evictions; cost rejects colder-than-victim
+//!    candidates and keeps the head set resident.
 //!
 //! No PJRT artifacts needed.
 
@@ -326,6 +334,7 @@ fn main() -> anyhow::Result<()> {
         channels: 32,
         elevator: vec![(1, 1.0)],
         time_scale: 1.0,
+        lat_tables: None,
     };
     const SHARD_FILES: usize = 144;
     let sim = Arc::new(StorageSim::cold(workdir("shard"), vec![ost])?);
@@ -637,6 +646,7 @@ fn main() -> anyhow::Result<()> {
         elevator: vec![(1, 1.0)],
         time_scale: 1000.0, // 1 ms wall per op: nothing completes
                             // before the whole burst is submitted
+        lat_tables: None,
     };
     let trace_path = dir.join("contention.jsonl");
     {
@@ -1022,6 +1032,7 @@ fn main() -> anyhow::Result<()> {
             channels: 1,
             elevator: vec![(1, 1.0)],
             time_scale: 1.0,
+            lat_tables: None,
         }
     }
 
@@ -1262,6 +1273,7 @@ fn main() -> anyhow::Result<()> {
         channels: 1,
         elevator: vec![(1, 1.0)],
         time_scale: 1.0,
+        lat_tables: None,
     };
     let sim = Arc::new(StorageSim::cold(
         workdir("faultbb"),
@@ -1474,6 +1486,101 @@ fn main() -> anyhow::Result<()> {
          prefetch 0 must pay the input cost additively",
         sync.step_ms,
         0.9 * (c + i)
+    );
+
+    // ---- 16. cost-aware placement under Zipf capacity pressure ----
+    // The calibrated 2-tier preset (per-block-size latency tables on
+    // both devices — the numbers the cost model prices with) under a
+    // moderately skewed read-hot Zipf stream whose working set is 12x
+    // tier-0 capacity: the small-cache/long-tail regime where recency
+    // and frequency rankings genuinely diverge.  After the tail has
+    // been touched a few times every block clears freq's count
+    // threshold, so freq promotes on essentially every miss — LRU
+    // churn that evicts head-set members and queues copy-read +
+    // demotion-write pairs behind ingest on the slow device.  Cost
+    // only swaps when the candidate is hotter than the victim it
+    // displaces AND the modelled gain exceeds the migration cost, so
+    // the head set freezes in tier 0 and the slow queue stays short.
+    // (A discrete-event model of this cell puts cost's hit fraction
+    // at >= 1.3x freq and its slow-device load at <= 0.55x across
+    // seeds and promotion-landing delays — comfortable margin over
+    // the 1.1x / 0.9x gates below.)
+    let zipf_cfg = |tag: &str| {
+        let mut cfg = tier_sweep::TierSweepConfig::smoke(
+            workdir(&format!("costgate-{tag}"))
+                .to_string_lossy()
+                .into_owned(),
+            8.0,
+        );
+        cfg.hierarchies = vec!["calibrated-tiered".into()];
+        cfg.policies = vec!["freq".into(), "cost".into()];
+        cfg.workloads = vec!["zipf:0.8".into()];
+        cfg.files = 128;
+        cfg.file_bytes = 32 * 1024;
+        cfg.reads = 2880;
+        cfg.warmup_reads = 960;
+        cfg.rw_ratio = 1.0; // read-hot: invalidation churn is a wash
+        cfg.shards = 2;
+        cfg.window = 4;
+        cfg.tier0_cap = 0;
+        cfg.ws_ratio = 12.0; // tier 0 holds ~10 of 128 blocks
+        cfg
+    };
+    let zipf_cells = |tag: &str| -> anyhow::Result<(f64, f64, f64, f64, f64, u64)> {
+        let cells = tier_sweep::run(&zipf_cfg(tag))?;
+        let freq = cells
+            .iter()
+            .find(|c| c.policy == "freq")
+            .expect("freq cell");
+        let cost = cells
+            .iter()
+            .find(|c| c.policy == "cost")
+            .expect("cost cell");
+        Ok((
+            freq.t0_hit_frac,
+            freq.ingest_p99_ms,
+            cost.t0_hit_frac,
+            cost.ingest_p99_ms,
+            cost.cost_accuracy,
+            cost.rejected_by_cost,
+        ))
+    };
+    let (f_hit_a, f_p99_a, c_hit_a, c_p99_a, acc_a, rej_a) = zipf_cells("a")?;
+    let (f_hit_b, f_p99_b, c_hit_b, c_p99_b, acc_b, rej_b) = zipf_cells("b")?;
+    let (freq_hit, freq_p99) = (f_hit_a.max(f_hit_b), f_p99_a.min(f_p99_b));
+    let (cost_hit, cost_p99) = (c_hit_a.max(c_hit_b), c_p99_a.min(c_p99_b));
+    let (cost_acc, cost_rej) = (acc_a.max(acc_b), rej_a.max(rej_b));
+
+    let mut t = Table::new(&[
+        "policy", "tier-0 hit frac", "ingest p99 queue ms",
+        "rejected-by-cost",
+    ]);
+    t.row(&["freq".into(), format!("{freq_hit:.2}"),
+            format!("{freq_p99:.2}"), "-".into()]);
+    t.row(&["cost".into(), format!("{cost_hit:.2}"),
+            format!("{cost_p99:.2}"), cost_rej.to_string()]);
+    print!("{}", t.render());
+    println!("target: cost ingest p99 <= 0.9x freq, cost hit frac >= \
+              1.1x freq, on the Zipf(0.8) read stream at 12x capacity \
+              pressure");
+    assert!(
+        cost_p99 <= 0.9 * freq_p99,
+        "cost policy did not unload the slow queue: cost p99 \
+         {cost_p99:.2} ms !<= 0.9 * freq {freq_p99:.2} ms"
+    );
+    assert!(
+        cost_hit >= 1.1 * freq_hit,
+        "cost policy did not hold the head set: cost hit frac \
+         {cost_hit:.2} !>= 1.1 * freq {freq_hit:.2}"
+    );
+    assert!(
+        cost_rej > 0,
+        "pressure cell never rejected a migration on cost — the veto \
+         is not engaging"
+    );
+    assert!(
+        cost_acc > 0.0,
+        "cost model priced no migrations (accuracy column empty)"
     );
 
     println!("\nengine acceptance: PASS");

@@ -454,6 +454,7 @@ mod tests {
             channels: 4,
             elevator: vec![(1, 1.0)],
             time_scale: 1000.0,
+            lat_tables: None,
         }
     }
 

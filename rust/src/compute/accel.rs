@@ -51,7 +51,7 @@ pub struct ComputeProfile {
 }
 
 /// Valid compute-profile names, in [`ComputeProfile::by_name`] order.
-pub const PROFILE_NAMES: [&str; 3] = ["alexnet", "micro", "none"];
+pub const PROFILE_NAMES: [&str; 4] = ["alexnet", "resnet50", "micro", "none"];
 
 impl ComputeProfile {
     /// The paper's AlexNet-like mini-app, calibrated to a K80-class
@@ -79,6 +79,37 @@ impl ComputeProfile {
             ],
             warmup_steps: 2,
             warmup_factor: 3.0,
+        }
+    }
+
+    /// A ResNet-50-shaped table: the four residual stages (3/4/6/3
+    /// bottleneck blocks) folded into one layer row each, calibrated
+    /// to K80-class throughput of roughly 50 images/s — ~20 ms/image,
+    /// an order of magnitude more compute per byte read than AlexNet.
+    /// Under the `step = max(compute, input)` overlap regime this is
+    /// the compute-bound end of the paper's spectrum: the same input
+    /// pipeline that bottlenecks AlexNet hides completely behind
+    /// ResNet compute, with proportionally lower prefetcher pressure.
+    pub fn resnet50() -> ComputeProfile {
+        let l = |name, fixed_us, per_image_us| LayerCost {
+            name,
+            fixed_us,
+            per_image_us,
+        };
+        ComputeProfile {
+            name: "resnet50",
+            layers: vec![
+                l("conv1+pool", 800.0, 900.0),
+                l("stage1(3x)", 2400.0, 3600.0),
+                l("stage2(4x)", 3200.0, 4400.0),
+                l("stage3(6x)", 4800.0, 6200.0),
+                l("stage4(3x)", 2400.0, 3800.0),
+                l("pool+fc", 600.0, 120.0),
+                l("optimizer", 900.0, 0.0),
+            ],
+            // Deeper graph: more kernels to JIT/autotune than AlexNet.
+            warmup_steps: 3,
+            warmup_factor: 3.5,
         }
     }
 
@@ -111,6 +142,7 @@ impl ComputeProfile {
     pub fn by_name(name: &str) -> Result<ComputeProfile> {
         match name {
             "alexnet" => Ok(ComputeProfile::alexnet()),
+            "resnet50" | "resnet" => Ok(ComputeProfile::resnet50()),
             "micro" => Ok(ComputeProfile::micro()),
             "none" => Ok(ComputeProfile::none()),
             other => bail!(
@@ -256,7 +288,9 @@ mod tests {
         for n in PROFILE_NAMES {
             assert_eq!(ComputeProfile::by_name(n).unwrap().name, n);
         }
-        let err = ComputeProfile::by_name("resnet").unwrap_err().to_string();
+        // "resnet" is an accepted alias for the canonical "resnet50".
+        assert_eq!(ComputeProfile::by_name("resnet").unwrap().name, "resnet50");
+        let err = ComputeProfile::by_name("vgg").unwrap_err().to_string();
         for n in PROFILE_NAMES {
             assert!(err.contains(n), "{err} missing {n}");
         }
@@ -307,6 +341,39 @@ mod tests {
         let s = k80.steady_step_secs();
         assert!((v100.steady_step_secs() - s / 4.5).abs() < 1e-12);
         assert!((scaled.steady_step_secs() - s / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn resnet_is_the_compute_bound_end_of_the_spectrum() {
+        let r = ComputeProfile::resnet50();
+        let a = ComputeProfile::alexnet();
+        // Calibration anchor: ~50 images/s on the K80 baseline at
+        // batch 64 — roughly 1.3 s/step, an order of magnitude above
+        // AlexNet's ~100 ms.
+        let step = r.step_secs(64);
+        assert!((0.8..2.0).contains(&step), "batch-64 step {step}");
+        assert!(
+            step > 5.0 * a.step_secs(64),
+            "resnet ({step}s) must dwarf alexnet ({}s)",
+            a.step_secs(64)
+        );
+        // The model executes like any other profile: virtual-clock
+        // smoke of one warm-up and one steady step.
+        let clock = Clock::virt();
+        let accel = AccelModel::new(
+            r,
+            AccelTier::by_name("v100").unwrap(),
+            32,
+            8.0,
+            clock.clone(),
+        )
+        .unwrap();
+        let _reg = clock.enter();
+        let t0 = clock.now();
+        let d0 = accel.execute(0);
+        let d3 = accel.execute(3);
+        assert!(d0 > d3, "warm-up step must be slower");
+        assert!((clock.now() - t0 - (d0 + d3)).abs() < 1e-12);
     }
 
     #[test]

@@ -34,6 +34,12 @@ impl Testbed {
                 profiles::blackdog_ssd(time_scale),
                 profiles::blackdog_optane(time_scale),
                 profiles::tegner_lustre(time_scale),
+                // Calibrated per-block-size classes (DESIGN.md §17):
+                // idle unless a hierarchy/workload names them, so the
+                // paper experiments are unaffected.
+                profiles::optane_class(time_scale),
+                profiles::nvme_class(time_scale),
+                profiles::hdd_class(time_scale),
             ],
             cache_bytes: 0,
             workdir: default_workdir(),
@@ -372,7 +378,18 @@ mod tests {
         let t = Testbed::paper(1.0);
         let names: Vec<_> =
             t.devices.iter().map(|d| d.name.as_str()).collect();
-        assert_eq!(names, vec!["hdd", "ssd", "optane", "lustre"]);
+        assert_eq!(
+            names,
+            vec![
+                "hdd",
+                "ssd",
+                "optane",
+                "lustre",
+                "optane-class",
+                "nvme-class",
+                "hdd-class"
+            ]
+        );
         assert_eq!(t.cache_bytes, 0);
     }
 }

@@ -95,6 +95,17 @@ pub fn build_hierarchy(
     sim: &Arc<StorageSim>,
     preset: &str,
 ) -> Result<(Arc<StorageHierarchy>, String)> {
+    build_hierarchy_with_policy(sim, preset, "noop")
+}
+
+/// [`build_hierarchy`] with an explicit placement policy
+/// (`--policy` on the CLI paths): lets a single `hier:` run exercise
+/// promotion/demotion and report the policy's decision counters.
+pub fn build_hierarchy_with_policy(
+    sim: &Arc<StorageSim>,
+    preset: &str,
+    policy_name: &str,
+) -> Result<(Arc<StorageHierarchy>, String)> {
     let spec = profiles::hierarchy_by_name(preset).ok_or_else(|| {
         anyhow!(
             "unknown hierarchy {preset:?} (valid: {})",
@@ -115,7 +126,7 @@ pub fn build_hierarchy(
     let hier = Arc::new(StorageHierarchy::new(
         Arc::clone(sim),
         spec,
-        policy::by_name("noop")?,
+        policy::by_name(policy_name)?,
     )?);
     Ok((hier, bottom))
 }
@@ -139,6 +150,7 @@ mod tests {
                 channels: 8,
                 elevator: vec![(1, 1.0)],
                 time_scale: 1000.0,
+                lat_tables: None,
             }],
             cache_bytes: 0,
             workdir: dir.to_string_lossy().into_owned(),

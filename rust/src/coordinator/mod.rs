@@ -16,7 +16,8 @@ pub mod workload;
 
 pub use fault_sweep::{FaultSweepConfig, FaultSweepRow};
 pub use fixtures::{
-    build_hierarchy, ensure_corpus, make_sim, StorageTarget,
+    build_hierarchy, build_hierarchy_with_policy, ensure_corpus, make_sim,
+    StorageTarget,
 };
 pub use fleet_sweep::{FleetSweepConfig, FleetSweepRow};
 pub use microbench::MicrobenchResult;

@@ -3,13 +3,22 @@
 //!
 //! Runs a matrix of (hierarchy preset × placement policy × workload)
 //! cells and emits one CSV/JSON row per cell, mirroring `qos-sweep`'s
-//! row discipline.  Two workloads:
+//! row discipline.  Four workloads:
 //!
 //! * `hot` — skewed ingest over a corpus homed on the hierarchy's
 //!   bottom tier: `hot_frac` of the accesses cycle through a small
 //!   hot set.  This is the placement-policy study: a promotion policy
 //!   should lift the hot set into tier 0 (higher tier-0 hit fraction)
 //!   and unload the slow device's queue (lower ingest p99).
+//! * `zipf` (alias `zipf:<theta>`) — a Zipf(theta) read-write mix
+//!   from [`mixed_accesses`]: ranks draw with weight
+//!   `1/(i+1)^theta`, writes update the bottom-tier home and
+//!   invalidate promoted copies.  The working-set-to-tier-0 ratio
+//!   (`ws_ratio`) sizes tier 0 below the corpus, so policies are
+//!   judged under capacity pressure — the cost-aware placement study.
+//! * `uniform` — the same mix with theta 0 (no skew): the control
+//!   cell where promotion cannot help and a cost model should mostly
+//!   reject migrations.
 //! * `ckpt` — checkpoint triples saved through the hierarchy (the
 //!   paper's §III-C study as sweep cells): a write-through staging
 //!   tier returns as soon as the fast copy is durable, so the
@@ -19,22 +28,25 @@
 //!
 //! Every cell is self-contained: a fresh sim + hierarchy over the
 //! full paper testbed, `IoEngine::reset_stats` bracketing the
-//! measured phase.  Unknown hierarchy/policy names fail before any
-//! cell runs, listing the valid presets.
+//! measured phase; mix streams are seeded, so virtual-clock cells are
+//! bit-deterministic.  Unknown hierarchy/policy/workload names fail
+//! before any cell runs, listing the valid presets.
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
+use super::workload::{mixed_accesses, MixOp};
 use crate::config::Testbed;
 use crate::data::manifest::Sample;
 use crate::model::ModelState;
 use crate::pipeline::{sharded_reader_hier, Dataset};
 use crate::runtime::meta::{ParamSpec, ProfileMeta};
 use crate::storage::{
-    policy, profiles, ClockSpec, HierarchySpec, IoClass, SimPath,
-    StorageHierarchy, StorageSim, TierKind,
+    policy, profiles, ClockSpec, EngineOp, HierarchySpec, IoClass,
+    SimPath, StorageHierarchy, StorageSim, TierKind,
 };
+use crate::trace::{Trace, TraceEvent};
 use crate::util::json::{obj, to_string, Json};
 
 /// Sweep matrix + workload shape.
@@ -45,7 +57,7 @@ pub struct TierSweepConfig {
     /// Placement policies for the `hot` workload (`ckpt` cells always
     /// run `noop` — placement of fresh writes is the same for all).
     pub policies: Vec<String>,
-    /// Workloads: `hot` | `ckpt`.
+    /// Workloads: `hot` | `ckpt` | `zipf[:theta]` | `uniform`.
     pub workloads: Vec<String>,
     /// Corpus size, files (homed on the bottom tier).
     pub files: usize,
@@ -67,8 +79,22 @@ pub struct TierSweepConfig {
     pub shards: usize,
     pub window: usize,
     /// Override tier 0's byte capacity (0 = preset default) — the
-    /// cache-pressure knob.
+    /// cache-pressure knob (`hot` cells; mix cells use `ws_ratio`).
     pub tier0_cap: u64,
+    /// Zipf skew for bare `zipf` workload tokens (a `zipf:1.2` token
+    /// overrides per cell).
+    pub theta: f64,
+    /// Read fraction of the mix workloads (1.0 = read-only).
+    pub rw_ratio: f64,
+    /// Open-loop pacing between mix ops, microseconds of modelled
+    /// time (0 = closed loop).  Scaled by `time_scale` like device
+    /// latencies.
+    pub arrival_us: f64,
+    /// Working-set-to-tier-0 ratio for mix cells: tier 0's capacity
+    /// is set to `corpus_bytes / ws_ratio` (0 = leave the preset /
+    /// `tier0_cap` value).  Ratios above 1 put the corpus under
+    /// capacity pressure — the regime where placement cost matters.
+    pub ws_ratio: f64,
     /// Checkpoint saves in the `ckpt` workload.
     pub ckpt_saves: usize,
     /// Model parameters per checkpoint (sizes the `.data` payload).
@@ -90,9 +116,20 @@ impl TierSweepConfig {
                 "blackdog-tiered".into(),
                 "blackdog-bb".into(),
                 "blackdog-direct-hdd".into(),
+                "calibrated-tiered".into(),
             ],
-            policies: vec!["noop".into(), "lru".into(), "freq".into()],
-            workloads: vec!["hot".into(), "ckpt".into()],
+            policies: vec![
+                "noop".into(),
+                "lru".into(),
+                "freq".into(),
+                "cost".into(),
+            ],
+            workloads: vec![
+                "hot".into(),
+                "zipf".into(),
+                "uniform".into(),
+                "ckpt".into(),
+            ],
             files: 96,
             file_bytes: 64 * 1024,
             reads: 960,
@@ -102,6 +139,10 @@ impl TierSweepConfig {
             shards: 2,
             window: 4,
             tier0_cap: 24 * 64 * 1024,
+            theta: 0.9,
+            rw_ratio: 0.9,
+            arrival_us: 0.0,
+            ws_ratio: 3.0,
             ckpt_saves: 8,
             ckpt_params: 64 * 1024,
             time_scale,
@@ -118,8 +159,8 @@ impl TierSweepConfig {
                 "blackdog-bb".into(),
                 "blackdog-direct-hdd".into(),
             ],
-            policies: vec!["noop".into(), "freq".into()],
-            workloads: vec!["hot".into(), "ckpt".into()],
+            policies: vec!["noop".into(), "freq".into(), "cost".into()],
+            workloads: vec!["hot".into(), "zipf".into(), "ckpt".into()],
             files: 24,
             file_bytes: 16 * 1024,
             reads: 160,
@@ -129,6 +170,10 @@ impl TierSweepConfig {
             shards: 2,
             window: 4,
             tier0_cap: 8 * 16 * 1024,
+            theta: 0.9,
+            rw_ratio: 0.9,
+            arrival_us: 0.0,
+            ws_ratio: 3.0,
             ckpt_saves: 3,
             ckpt_params: 16 * 1024,
             time_scale,
@@ -164,6 +209,22 @@ pub struct TierSweepCell {
     /// Median / total training-visible save pause (`ckpt`), seconds.
     pub save_p50_secs: f64,
     pub save_total_secs: f64,
+    /// Zipf skew of a mix cell (0 for `uniform`/`hot`/`ckpt`).
+    pub theta: f64,
+    /// Drain-class bytes landed on any device since warm-up, MB —
+    /// the migration traffic the policy generated.
+    pub migration_mb: f64,
+    /// Policy-predicted migration seconds over the measured phase
+    /// (cost-aware policies only; 0 otherwise).
+    pub predicted_migration_secs: f64,
+    /// Predicted / measured Drain-class service seconds: how well
+    /// the policy's cost model priced the migrations it approved
+    /// (1.0 = perfectly calibrated; 0 when the policy prices
+    /// nothing).
+    pub cost_accuracy: f64,
+    /// Candidate promotions the policy rejected as not worth their
+    /// migration cost.
+    pub rejected_by_cost: u64,
     /// Per-tier detail (JSON only).
     pub tier_rows: Vec<TierRow>,
 }
@@ -182,10 +243,11 @@ pub struct TierRow {
 }
 
 /// CSV column order — one place, so header and rows cannot drift.
-const CSV_COLUMNS: [&str; 14] = [
+const CSV_COLUMNS: [&str; 18] = [
     "hierarchy",
     "policy",
     "workload",
+    "theta",
     "tiers",
     "ops",
     "elapsed_secs",
@@ -194,7 +256,10 @@ const CSV_COLUMNS: [&str; 14] = [
     "t0_hit_frac",
     "promotions",
     "demotions",
+    "rejected_by_cost",
     "drained",
+    "migration_mb",
+    "cost_accuracy",
     "ingest_p99_ms",
     "save_p50_ms",
 ];
@@ -205,6 +270,7 @@ impl TierSweepCell {
             self.hierarchy.clone(),
             self.policy.clone(),
             self.workload.clone(),
+            format!("{:.3}", self.theta),
             self.tiers.to_string(),
             self.ops.to_string(),
             format!("{:.4}", self.elapsed_secs),
@@ -213,7 +279,10 @@ impl TierSweepCell {
             format!("{:.4}", self.t0_hit_frac),
             self.promotions.to_string(),
             self.demotions.to_string(),
+            self.rejected_by_cost.to_string(),
             self.drained.to_string(),
+            format!("{:.4}", self.migration_mb),
+            format!("{:.4}", self.cost_accuracy),
             format!("{:.4}", self.ingest_p99_ms),
             format!("{:.4}", self.save_p50_secs * 1e3),
         ]
@@ -225,6 +294,7 @@ impl TierSweepCell {
             ("hierarchy", Json::Str(self.hierarchy.clone())),
             ("policy", Json::Str(self.policy.clone())),
             ("workload", Json::Str(self.workload.clone())),
+            ("theta", Json::Num(self.theta)),
             ("tiers", Json::Num(self.tiers as f64)),
             ("ops", Json::Num(self.ops as f64)),
             ("elapsed_secs", Json::Num(self.elapsed_secs)),
@@ -233,7 +303,17 @@ impl TierSweepCell {
             ("t0_hit_frac", Json::Num(self.t0_hit_frac)),
             ("promotions", Json::Num(self.promotions as f64)),
             ("demotions", Json::Num(self.demotions as f64)),
+            (
+                "rejected_by_cost",
+                Json::Num(self.rejected_by_cost as f64),
+            ),
             ("drained", Json::Num(self.drained as f64)),
+            ("migration_mb", Json::Num(self.migration_mb)),
+            (
+                "predicted_migration_secs",
+                Json::Num(self.predicted_migration_secs),
+            ),
+            ("cost_accuracy", Json::Num(self.cost_accuracy)),
             ("ingest_p99_ms", Json::Num(self.ingest_p99_ms)),
             ("save_p50_ms", Json::Num(self.save_p50_secs * 1e3)),
             ("save_total_secs", Json::Num(self.save_total_secs)),
@@ -296,30 +376,72 @@ fn spec_for(cfg: &TierSweepConfig, name: &str) -> Result<HierarchySpec> {
     Ok(spec)
 }
 
+/// Workload tokens accepted by [`run`] (`zipf` also accepts an
+/// inline skew, `zipf:<theta>`).
+pub const WORKLOAD_NAMES: [&str; 4] = ["hot", "ckpt", "zipf", "uniform"];
+
+/// A parsed workload token.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Workload {
+    Hot,
+    Ckpt,
+    /// Zipf(theta) read-write mix.
+    Zipf(f64),
+    /// Uniform read-write mix (Zipf with theta 0).
+    Uniform,
+}
+
+/// Parse a workload token, erroring with the full valid list — the
+/// same fail-before-any-cell contract as hierarchy/policy names.
+fn parse_workload(token: &str, default_theta: f64) -> Result<Workload> {
+    let bad = || {
+        anyhow!(
+            "unknown workload {token:?} (valid: {}; zipf takes an \
+             optional skew, e.g. zipf:1.2)",
+            WORKLOAD_NAMES.join(", ")
+        )
+    };
+    match token {
+        "hot" => Ok(Workload::Hot),
+        "ckpt" => Ok(Workload::Ckpt),
+        "uniform" => Ok(Workload::Uniform),
+        "zipf" => Ok(Workload::Zipf(default_theta)),
+        other => {
+            let theta = other
+                .strip_prefix("zipf:")
+                .and_then(|t| t.parse::<f64>().ok())
+                .filter(|t| t.is_finite() && *t >= 0.0)
+                .ok_or_else(bad)?;
+            Ok(Workload::Zipf(theta))
+        }
+    }
+}
+
 /// Run the full matrix; cells in (workload, hierarchy, policy) order.
 pub fn run(cfg: &TierSweepConfig) -> Result<Vec<TierSweepCell>> {
-    // Validate the whole matrix before the first cell.
+    // Validate the whole matrix — hierarchies, policies AND workload
+    // tokens — before the first cell, so a typo in any axis cannot
+    // waste a half-finished sweep.
     for h in &cfg.hierarchies {
         let _ = spec_for(cfg, h)?;
     }
     for p in &cfg.policies {
         let _ = policy::by_name(p)?;
     }
+    for w in &cfg.workloads {
+        let _ = parse_workload(w, cfg.theta)?;
+    }
     let noop = vec!["noop".to_string()];
     let mut cells = Vec::new();
     for workload in &cfg.workloads {
-        let policies = match workload.as_str() {
-            "hot" => &cfg.policies,
-            "ckpt" => &noop,
-            other => {
-                return Err(anyhow!(
-                    "unknown workload {other:?} (valid: hot, ckpt)"
-                ))
-            }
+        let parsed = parse_workload(workload, cfg.theta)?;
+        let policies = match parsed {
+            Workload::Ckpt => &noop,
+            _ => &cfg.policies,
         };
         for hierarchy in &cfg.hierarchies {
             for pol in policies {
-                cells.push(run_cell(cfg, hierarchy, pol, workload)?);
+                cells.push(run_cell(cfg, hierarchy, pol, workload, parsed)?);
             }
         }
     }
@@ -339,8 +461,20 @@ fn run_cell(
     hierarchy: &str,
     pol: &str,
     workload: &str,
+    parsed: Workload,
 ) -> Result<TierSweepCell> {
-    let spec = spec_for(cfg, hierarchy)?;
+    let mut spec = spec_for(cfg, hierarchy)?;
+    // Mix cells size tier 0 relative to the corpus: the
+    // working-set-to-tier-0 ratio is the pressure axis the
+    // cost-aware study sweeps.
+    if matches!(parsed, Workload::Zipf(_) | Workload::Uniform)
+        && cfg.ws_ratio > 0.0
+        && spec.tiers.len() > 1
+    {
+        let corpus = (cfg.files.max(2) * cfg.file_bytes) as f64;
+        spec.tiers[0].capacity =
+            ((corpus / cfg.ws_ratio) as u64).max(cfg.file_bytes as u64);
+    }
     let dir = std::path::Path::new(&cfg.workdir)
         .join(format!("tier-sweep-{hierarchy}-{pol}-{workload}"));
     let _ = std::fs::remove_dir_all(&dir);
@@ -375,16 +509,41 @@ fn run_cell(
         ingest_p99_ms: 0.0,
         save_p50_secs: 0.0,
         save_total_secs: 0.0,
+        theta: match parsed {
+            Workload::Zipf(t) => t,
+            _ => 0.0,
+        },
+        migration_mb: 0.0,
+        predicted_migration_secs: 0.0,
+        cost_accuracy: 0.0,
+        rejected_by_cost: 0,
         tier_rows: Vec::new(),
     };
 
-    match workload {
-        "hot" => run_hot(cfg, &sim, &hier, bottom, &mut cell)?,
-        "ckpt" => run_ckpt(cfg, &sim, &hier, &mut cell)?,
-        _ => unreachable!("validated in run()"),
+    match parsed {
+        Workload::Hot => run_hot(cfg, &sim, &hier, bottom, &mut cell)?,
+        Workload::Ckpt => run_ckpt(cfg, &sim, &hier, &mut cell)?,
+        Workload::Zipf(theta) => {
+            run_mix(cfg, &sim, &hier, bottom, theta, &mut cell)?
+        }
+        Workload::Uniform => {
+            run_mix(cfg, &sim, &hier, bottom, 0.0, &mut cell)?
+        }
     }
 
-    // Flush pending migrations so tier rows are final, then snapshot.
+    snapshot_cell(&sim, &hier, bottom, &mut cell);
+    Ok(cell)
+}
+
+/// Finalize a cell after its workload ran: flush pending migrations
+/// so tier rows are final, then snapshot hierarchy + engine stats
+/// (shared by synthetic and trace-driven cells).
+fn snapshot_cell(
+    sim: &Arc<StorageSim>,
+    hier: &Arc<StorageHierarchy>,
+    bottom: usize,
+    cell: &mut TierSweepCell,
+) {
     hier.wait_idle();
     let stats = hier.stats();
     cell.t0_hits = stats[0].hits;
@@ -397,13 +556,31 @@ fn run_cell(
     cell.promotions = stats[0].migrations_in;
     cell.demotions = stats[0].evictions;
     cell.drained = if bottom > 0 { stats[bottom].migrations_in } else { 0 };
-    cell.ingest_p99_ms = sim
-        .engine()
-        .stats()
+    let engine_stats = sim.engine().stats();
+    cell.ingest_p99_ms = engine_stats
         .iter()
         .map(|s| s.class(IoClass::Ingest).p99_queue_secs())
         .fold(0.0, f64::max)
         * 1e3;
+    // Migration traffic + cost-model accuracy: Drain-class engine
+    // stats cover everything since the post-warm-up reset, the same
+    // window `predicted_migration_secs` was accumulated over.
+    let drain_secs: f64 = engine_stats
+        .iter()
+        .map(|s| s.class(IoClass::Drain).service_secs)
+        .sum();
+    cell.migration_mb = engine_stats
+        .iter()
+        .map(|s| s.class(IoClass::Drain).bytes_written)
+        .sum::<u64>() as f64
+        / 1e6;
+    cell.cost_accuracy =
+        if drain_secs > 0.0 && cell.predicted_migration_secs > 0.0 {
+            cell.predicted_migration_secs / drain_secs
+        } else {
+            0.0
+        };
+    cell.rejected_by_cost = hier.policy_decisions().rejected_by_cost;
     cell.tier_rows = stats
         .iter()
         .map(|s| TierRow {
@@ -421,6 +598,161 @@ fn run_cell(
     } else {
         0.0
     };
+}
+
+/// Smallest period `p` of a sequence: `sig[i] == sig[i - p]` for all
+/// `i >= p` (a trailing partial repetition is fine).  Computed as
+/// `n - longest_border(sig)` via the KMP prefix function, O(n).
+/// Epoch-structured training recordings repeat the same (device,
+/// bytes) read signature every epoch, so the first `p` events
+/// enumerate the distinct blocks; an aperiodic recording degenerates
+/// to `p == n` (every event its own block).
+fn epoch_period<T: PartialEq>(sig: &[T]) -> usize {
+    let n = sig.len();
+    if n == 0 {
+        return 1;
+    }
+    let mut pi = vec![0usize; n];
+    for i in 1..n {
+        let mut k = pi[i - 1];
+        while k > 0 && sig[i] != sig[k] {
+            k = pi[k - 1];
+        }
+        if sig[i] == sig[k] {
+            k += 1;
+        }
+        pi[i] = k;
+    }
+    n - pi[n - 1]
+}
+
+/// Drive the (hierarchy × policy) matrix from a *recorded* trace
+/// instead of a synthetic generator (`trace-replay --sweep
+/// <hier>/<policy> ...`): the tier-tagged ingest reads of a v2+
+/// hierarchy recording become the access stream.  Traces carry no
+/// block identity (only device/bytes/timing), so blocks are
+/// recovered by [`epoch_period`] inference over the (device, bytes)
+/// signature — exact for epoch-structured recordings, and safely
+/// degenerate (one block per event, so no re-reads and nothing to
+/// promote) otherwise.  Every pair is validated before the first
+/// cell runs, the same contract as [`run`].
+pub fn run_trace_cells(
+    trace: &Trace,
+    cfg: &TierSweepConfig,
+    pairs: &[(String, String)],
+) -> Result<Vec<TierSweepCell>> {
+    for (h, p) in pairs {
+        let _ = spec_for(cfg, h)?;
+        let _ = policy::by_name(p)?;
+    }
+    let reads: Vec<&TraceEvent> = trace
+        .events
+        .iter()
+        .filter(|e| {
+            e.ok
+                && e.tier.is_some()
+                && e.class == IoClass::Ingest
+                && e.op == EngineOp::Read
+        })
+        .collect();
+    if reads.is_empty() {
+        bail!(
+            "trace has no tier-tagged ingest reads — hierarchy/policy \
+             sweep cells need a v2+ recording of a hierarchy run \
+             (e.g. `dlio train --compute model --device hier:<preset> \
+             --trace-out FILE`)"
+        );
+    }
+    let sig: Vec<(&str, u64)> = reads
+        .iter()
+        .map(|e| (e.device.as_str(), e.bytes))
+        .collect();
+    let period = epoch_period(&sig);
+    let mut cells = Vec::new();
+    for (hierarchy, pol) in pairs {
+        cells.push(run_trace_cell(cfg, hierarchy, pol, &reads, period)?);
+    }
+    Ok(cells)
+}
+
+/// One trace-driven cell: home the inferred blocks (recorded byte
+/// sizes) on the cell hierarchy's bottom tier, then re-issue the
+/// recorded read stream through it under the cell's placement
+/// policy and snapshot the same columns as the synthetic cells.
+fn run_trace_cell(
+    cfg: &TierSweepConfig,
+    hierarchy: &str,
+    pol: &str,
+    reads: &[&TraceEvent],
+    period: usize,
+) -> Result<TierSweepCell> {
+    let spec = spec_for(cfg, hierarchy)?;
+    let dir = std::path::Path::new(&cfg.workdir)
+        .join(format!("tier-sweep-{hierarchy}-{pol}-trace"));
+    let _ = std::fs::remove_dir_all(&dir);
+    let tb = Testbed::paper(cfg.time_scale);
+    let sim = Arc::new(StorageSim::cold_with_qos_clock(
+        dir,
+        tb.devices,
+        crate::storage::QosConfig::default(),
+        cfg.clock.build(),
+    )?);
+    let tiers = spec.tiers.len();
+    let bottom = bottom_device_tier(&spec);
+    let hier = Arc::new(StorageHierarchy::new(
+        Arc::clone(&sim),
+        spec,
+        policy::by_name(pol)?,
+    )?);
+    let mut cell = TierSweepCell {
+        hierarchy: hierarchy.to_string(),
+        policy: hier.policy_name().to_string(),
+        workload: "trace".to_string(),
+        tiers,
+        ops: 0,
+        elapsed_secs: 0.0,
+        ops_per_sec: 0.0,
+        t0_hits: 0,
+        t0_hit_frac: 0.0,
+        promotions: 0,
+        demotions: 0,
+        drained: 0,
+        ingest_p99_ms: 0.0,
+        save_p50_secs: 0.0,
+        save_total_secs: 0.0,
+        theta: 0.0,
+        migration_mb: 0.0,
+        predicted_migration_secs: 0.0,
+        cost_accuracy: 0.0,
+        rejected_by_cost: 0,
+        tier_rows: Vec::new(),
+    };
+
+    let bottom_dev = hier.device_of(bottom)?;
+    let clock = sim.clock().clone();
+    let _reg = clock.enter();
+    // Fixture: one block per first-epoch read, recorded sizes.
+    for (i, e) in reads.iter().take(period).enumerate() {
+        let key = format!("blk/{i}.bin");
+        let bytes = e.bytes.max(1) as usize;
+        let p = SimPath::new(bottom_dev.clone(), key.clone());
+        sim.write(&p, &vec![(i % 251) as u8; bytes])?;
+        hier.register(&key, bytes as u64, bottom)?;
+    }
+    sim.drop_caches();
+    sim.engine().reset_stats();
+    let predicted0 = hier.predicted_migration_secs();
+    let t0 = clock.now();
+    for i in 0..reads.len() {
+        let key = format!("blk/{}.bin", i % period);
+        hier.read(&key)
+            .context("trace-driven tier-sweep read failed")?;
+    }
+    cell.ops = reads.len() as u64;
+    cell.elapsed_secs = clock.now() - t0;
+    cell.predicted_migration_secs =
+        hier.predicted_migration_secs() - predicted0;
+    snapshot_cell(&sim, &hier, bottom, &mut cell);
     Ok(cell)
 }
 
@@ -494,6 +826,7 @@ fn run_hot(
         hier.wait_idle();
     }
     sim.engine().reset_stats();
+    let predicted0 = hier.predicted_migration_secs();
 
     let t0 = clock.now();
     let mut ds = sharded_reader_hier(
@@ -509,7 +842,131 @@ fn run_hot(
     }
     cell.ops = n;
     cell.elapsed_secs = clock.now() - t0;
+    cell.predicted_migration_secs =
+        hier.predicted_migration_secs() - predicted0;
     Ok(())
+}
+
+/// Seed of every mix stream: fixed, so all cells of a sweep see the
+/// same access sequence (policies compared on identical inputs) and
+/// virtual-clock runs replay bit-for-bit.
+const MIX_SEED: u64 = 0xd110_5eed;
+
+/// Zipf/uniform read-write mix over a corpus homed on the bottom
+/// tier ([`mixed_accesses`]): reads go through the
+/// hierarchy window-deep, writes update the durable home (dropping
+/// any promoted copy — the invalidation churn a cost model has to
+/// price against).
+fn run_mix(
+    cfg: &TierSweepConfig,
+    sim: &Arc<StorageSim>,
+    hier: &Arc<StorageHierarchy>,
+    bottom: usize,
+    theta: f64,
+    cell: &mut TierSweepCell,
+) -> Result<()> {
+    let bottom_dev = hier.device_of(bottom)?;
+    let clock = sim.clock().clone();
+    let _reg = clock.enter();
+    let files = cfg.files.max(2);
+    let mut samples = Vec::with_capacity(files);
+    for i in 0..files {
+        let key = format!("corpus/f{i}.bin");
+        let p = SimPath::new(bottom_dev.clone(), key.clone());
+        sim.write(&p, &vec![(i % 251) as u8; cfg.file_bytes])?;
+        hier.register(&key, cfg.file_bytes as u64, bottom)?;
+        samples.push(Sample {
+            path: SimPath::new(bottom_dev.clone(), key),
+            label: i as u32,
+        });
+    }
+    sim.drop_caches();
+
+    let total = cfg.warmup_reads + cfg.reads;
+    let ops = mixed_accesses(files, total, theta, cfg.rw_ratio, MIX_SEED);
+    let (warm, measured) = ops.split_at(cfg.warmup_reads.min(ops.len()));
+    if !warm.is_empty() {
+        drive_mix(cfg, sim, hier, bottom, &samples, warm)?;
+        hier.wait_idle();
+    }
+    sim.engine().reset_stats();
+    let predicted0 = hier.predicted_migration_secs();
+
+    let t0 = clock.now();
+    cell.ops = drive_mix(cfg, sim, hier, bottom, &samples, measured)?;
+    cell.elapsed_secs = clock.now() - t0;
+    cell.predicted_migration_secs =
+        hier.predicted_migration_secs() - predicted0;
+    Ok(())
+}
+
+/// Issue one span of mix ops: consecutive reads batch into a
+/// window-deep sharded reader (queue pressure like the `hot`
+/// workload), each write flushes the batch first so the
+/// read-after-write order of the stream is preserved.
+fn drive_mix(
+    cfg: &TierSweepConfig,
+    sim: &Arc<StorageSim>,
+    hier: &Arc<StorageHierarchy>,
+    bottom: usize,
+    samples: &[Sample],
+    ops: &[MixOp],
+) -> Result<u64> {
+    let bottom_dev = hier.device_of(bottom)?;
+    let clock = sim.clock().clone();
+    let gap = if cfg.arrival_us > 0.0 && cfg.time_scale > 0.0 {
+        cfg.arrival_us * 1e-6 / cfg.time_scale
+    } else {
+        0.0
+    };
+    let depth = (cfg.shards * cfg.window).max(1);
+    let mut pending: Vec<Sample> = Vec::new();
+    let mut n = 0u64;
+    let flush = |pending: &mut Vec<Sample>| -> Result<u64> {
+        if pending.is_empty() {
+            return Ok(0);
+        }
+        let batch = std::mem::take(pending);
+        let mut done = 0u64;
+        let mut ds = sharded_reader_hier(
+            batch,
+            Arc::clone(hier),
+            cfg.shards,
+            cfg.window,
+        );
+        while let Some(item) = ds.next() {
+            item.context("tier-sweep mix read failed")?;
+            done += 1;
+        }
+        Ok(done)
+    };
+    for op in ops {
+        if gap > 0.0 {
+            clock.sleep_secs(gap);
+        }
+        match *op {
+            MixOp::Read(i) => {
+                pending.push(samples[i].clone());
+                if pending.len() >= depth {
+                    n += flush(&mut pending)?;
+                }
+            }
+            MixOp::Write(i) => {
+                n += flush(&mut pending)?;
+                let key = format!("corpus/f{i}.bin");
+                let p = SimPath::new(bottom_dev.clone(), key.clone());
+                sim.write_class(
+                    &p,
+                    &vec![(i % 251) as u8; cfg.file_bytes],
+                    IoClass::Ingest,
+                )?;
+                hier.note_written(&[key], bottom)?;
+                n += 1;
+            }
+        }
+    }
+    n += flush(&mut pending)?;
+    Ok(n)
 }
 
 /// Checkpoint saves routed through the hierarchy: the placement
@@ -585,6 +1042,10 @@ mod tests {
             shards: 2,
             window: 2,
             tier0_cap: 6 * 4 * 1024,
+            theta: 0.9,
+            rw_ratio: 0.9,
+            arrival_us: 0.0,
+            ws_ratio: 3.0,
             ckpt_saves: 2,
             ckpt_params: 1024,
             // Modest acceleration: reads stay slow enough (tens of
@@ -685,6 +1146,196 @@ mod tests {
         assert!(err.contains("noop"), "policy error lists names: {err}");
         let mut cfg = tiny_cfg("badworkload");
         cfg.workloads = vec!["warp".into()];
+        let err = run(&cfg).unwrap_err().to_string();
+        assert!(
+            err.contains("zipf") && err.contains("uniform"),
+            "workload error does not list names: {err}"
+        );
+    }
+
+    #[test]
+    fn unknown_workload_fails_before_any_cell_runs() {
+        // Regression: workload names used to be validated lazily
+        // inside the matrix loop, so a typo after a valid workload
+        // burned the whole first axis before erroring.  The error
+        // must now fire before the first cell touches disk.
+        let mut cfg = tiny_cfg("lazybug");
+        cfg.workloads = vec!["hot".into(), "warp".into()];
+        let err = run(&cfg).unwrap_err().to_string();
+        assert!(err.contains("warp"), "error names the bad token: {err}");
+        let first_cell = std::path::Path::new(&cfg.workdir).join(
+            "tier-sweep-tegner-lustre+optane-noop-hot",
+        );
+        assert!(
+            !first_cell.exists(),
+            "a cell ran before workload validation"
+        );
+        // Malformed zipf skews are typos too, not silent defaults.
+        let mut cfg = tiny_cfg("badtheta");
+        cfg.workloads = vec!["zipf:hotter".into()];
         assert!(run(&cfg).is_err());
+        let mut cfg = tiny_cfg("negtheta");
+        cfg.workloads = vec!["zipf:-1".into()];
+        assert!(run(&cfg).is_err());
+    }
+
+    #[test]
+    fn zipf_cells_emit_mix_columns_and_replay_bit_for_bit() {
+        let mut cfg = tiny_cfg("zipfmix");
+        cfg.hierarchies = vec!["tegner-lustre+optane".into()];
+        cfg.policies = vec!["freq".into(), "cost".into()];
+        cfg.workloads = vec!["zipf:1.1".into(), "uniform".into()];
+        let cells = run(&cfg).unwrap();
+        assert_eq!(cells.len(), 4);
+        for c in &cells {
+            // Reads + writes all issued.
+            assert_eq!(c.ops, cfg.reads as u64);
+            assert!(c.elapsed_secs > 0.0);
+            match c.workload.as_str() {
+                "zipf:1.1" => assert_eq!(c.theta, 1.1),
+                "uniform" => assert_eq!(c.theta, 0.0),
+                other => panic!("unexpected workload {other}"),
+            }
+        }
+        // The cost policy prices its migrations: whenever it moved
+        // bytes, the accuracy column must be populated and sane.
+        let cost_zipf = cells
+            .iter()
+            .find(|c| c.policy == "cost" && c.workload == "zipf:1.1")
+            .unwrap();
+        if cost_zipf.promotions > 0 {
+            assert!(cost_zipf.predicted_migration_secs > 0.0);
+            assert!(cost_zipf.cost_accuracy > 0.0);
+        }
+        // Virtual-clock cells are bit-deterministic: a re-run of the
+        // same config reproduces the CSV byte-for-byte.
+        let again = run(&cfg).unwrap();
+        assert_eq!(
+            to_csv(&cells),
+            to_csv(&again),
+            "virtual-clock mix cells must replay bit-for-bit"
+        );
+    }
+
+    #[test]
+    fn epoch_period_infers_the_repeating_prefix() {
+        assert_eq!(epoch_period(&[1, 2, 3, 1, 2, 3]), 3);
+        // Trailing partial epoch still resolves to the full period.
+        assert_eq!(epoch_period(&[1, 2, 3, 1, 2]), 3);
+        assert_eq!(epoch_period(&[5, 5, 5, 5]), 1);
+        // Aperiodic: every event its own block.
+        assert_eq!(epoch_period(&[1, 2, 3]), 3);
+        assert_eq!(epoch_period::<u32>(&[]), 1);
+    }
+
+    fn synthetic_hier_trace(epochs: usize, blocks: u64) -> Trace {
+        use crate::trace::{TraceManifest, TRACE_VERSION};
+        let mut events = Vec::new();
+        let mut seq = 0u64;
+        for _ in 0..epochs {
+            for i in 0..blocks {
+                events.push(TraceEvent {
+                    seq,
+                    device: "hdd".into(),
+                    class: IoClass::Ingest,
+                    op: EngineOp::Read,
+                    origin: "reader".into(),
+                    tier: Some(1),
+                    tenant: String::new(),
+                    // Distinct size per block, so the (device, bytes)
+                    // signature's period is exactly `blocks` and the
+                    // inference recovers every block (same-signature
+                    // blocks alias harmlessly, but that's not what
+                    // this fixture tests).  Six blocks total 21 KB —
+                    // under tiny_cfg's 24 KB tier-0 cap, so every
+                    // promotion fits without evictions.
+                    bytes: 1024 * (1 + i),
+                    ok: true,
+                    submit_secs: seq as f64 * 1e-3,
+                    queue_secs: 0.0,
+                    service_secs: 1e-3,
+                });
+                seq += 1;
+            }
+        }
+        Trace {
+            manifest: TraceManifest {
+                version: TRACE_VERSION,
+                workload: "synthetic hierarchy run".into(),
+                qos_mode: "fair".into(),
+                qos: None,
+                time_scale: 8.0,
+                devices: Testbed::paper(8.0).devices,
+            },
+            events,
+            steps: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn trace_cells_replay_recorded_reads_through_the_matrix() {
+        let cfg = tiny_cfg("tracecells");
+        // 4 epochs over 6 blocks: freq promotes on the 3rd access,
+        // so the 4th epoch reads the promoted copies.
+        let trace = synthetic_hier_trace(4, 6);
+        let pairs = vec![
+            ("tegner-lustre+optane".to_string(), "noop".to_string()),
+            ("tegner-lustre+optane".to_string(), "freq".to_string()),
+        ];
+        let cells = run_trace_cells(&trace, &cfg, &pairs).unwrap();
+        assert_eq!(cells.len(), 2);
+        for c in &cells {
+            assert_eq!(c.workload, "trace");
+            assert_eq!(c.ops, 24, "every recorded read re-issued");
+            assert!(c.elapsed_secs > 0.0);
+            assert_eq!(c.tier_rows.len(), c.tiers);
+        }
+        // Epoch inference recovered 6 blocks, so epochs 2-3 re-read
+        // them and the promotion policy has something to act on.
+        let noop = cells.iter().find(|c| c.policy == "noop").unwrap();
+        let freq = cells.iter().find(|c| c.policy == "freq").unwrap();
+        assert_eq!(noop.t0_hit_frac, 0.0, "noop never promotes");
+        assert!(
+            freq.promotions > 0,
+            "re-read blocks were never promoted"
+        );
+        assert!(freq.t0_hit_frac > noop.t0_hit_frac);
+        // The cells render through the same CSV schema.
+        let csv = to_csv(&cells);
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn trace_cells_validate_pairs_and_require_tier_tags() {
+        let cfg = tiny_cfg("tracebad");
+        let trace = synthetic_hier_trace(2, 4);
+        let bad = vec![(
+            "tegner-lustre+optane".to_string(),
+            "banana".to_string(),
+        )];
+        let err =
+            run_trace_cells(&trace, &cfg, &bad).unwrap_err().to_string();
+        assert!(err.contains("noop"), "policy error lists names: {err}");
+        let bad = vec![("floppy".to_string(), "noop".to_string())];
+        let err =
+            run_trace_cells(&trace, &cfg, &bad).unwrap_err().to_string();
+        assert!(
+            err.contains("blackdog-bb"),
+            "hierarchy error lists presets: {err}"
+        );
+        // A v1-shaped (untiered) trace cannot drive placement cells.
+        let mut flat = synthetic_hier_trace(2, 4);
+        for e in &mut flat.events {
+            e.tier = None;
+        }
+        let pairs =
+            vec![("tegner-lustre+optane".to_string(), "noop".to_string())];
+        let err = run_trace_cells(&flat, &cfg, &pairs)
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("tier-tagged"),
+            "untiered trace error should point at v2+ recording: {err}"
+        );
     }
 }

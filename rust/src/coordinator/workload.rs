@@ -1,6 +1,8 @@
 //! The map functions of the paper's pipelines (§III-A, §III-B): the
 //! per-element work that `parallel_map` fans out over
-//! `num_parallel_calls` threads.
+//! `num_parallel_calls` threads — plus the skewed access-stream
+//! generators ([`ZipfSampler`], [`mixed_accesses`]) that drive the
+//! tier-sweep's read-write-mix workloads.
 //!
 //! * [`read_only_fn`] — just `tf.read()` (Fig. 5's stripped pipeline).
 //! * [`preprocess_fn`] — `tf.read()` + decode + the fused Pallas
@@ -17,6 +19,78 @@ use crate::pipeline::{LoadedSample, ProcessedImage};
 use crate::runtime::executable::{lit, ExecSpec, Executable};
 use crate::runtime::Runtime;
 use crate::storage::StorageSim;
+use crate::util::Rng;
+
+/// One op of a read-write-mix access stream ([`mixed_accesses`]):
+/// the payload is a rank into the generator's corpus (rank 0 is the
+/// hottest file under skew).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MixOp {
+    Read(usize),
+    Write(usize),
+}
+
+/// Zipf(theta) rank sampler over `n` items: rank `i` carries weight
+/// `1/(i+1)^theta`, so `theta = 0` degenerates to uniform and larger
+/// theta concentrates mass on the low ranks.  The CDF is precomputed
+/// once and each draw is a binary search; randomness comes from the
+/// caller's seeded xoshiro stream, so a `(seed, n, theta)` triple
+/// always yields the same sequence — the bit-determinism the
+/// virtual-clock sweep cells rely on.
+pub struct ZipfSampler {
+    cdf: Vec<f64>,
+}
+
+impl ZipfSampler {
+    pub fn new(n: usize, theta: f64) -> ZipfSampler {
+        let n = n.max(1);
+        let mut cdf = Vec::with_capacity(n);
+        let mut total = 0.0;
+        for i in 0..n {
+            total += 1.0 / ((i + 1) as f64).powf(theta);
+            cdf.push(total);
+        }
+        for c in &mut cdf {
+            *c /= total;
+        }
+        ZipfSampler { cdf }
+    }
+
+    /// Draw one rank in `[0, n)`.
+    pub fn draw(&self, rng: &mut Rng) -> usize {
+        let u = rng.next_f64();
+        self.cdf
+            .partition_point(|&c| c <= u)
+            .min(self.cdf.len() - 1)
+    }
+}
+
+/// Deterministic Zipf/uniform read-write-mix stream over an `n`-file
+/// corpus: every slot draws a rank from [`ZipfSampler::new`]`(n,
+/// theta)` and is a read with probability `rw_ratio` (`1.0` =
+/// read-only).  Writes model in-place updates of the drawn file —
+/// under a tiered hierarchy they invalidate any promoted copy, which
+/// is exactly the churn the cost-aware placement study measures.
+pub fn mixed_accesses(
+    n: usize,
+    ops: usize,
+    theta: f64,
+    rw_ratio: f64,
+    seed: u64,
+) -> Vec<MixOp> {
+    let z = ZipfSampler::new(n, theta);
+    let mut rng = Rng::new(seed);
+    (0..ops)
+        .map(|_| {
+            let i = z.draw(&mut rng);
+            if rng.next_f64() < rw_ratio {
+                MixOp::Read(i)
+            } else {
+                MixOp::Write(i)
+            }
+        })
+        .collect()
+}
 
 /// Raw element for the read-only pipeline: bytes + provenance.
 pub struct RawFile {
@@ -111,4 +185,82 @@ pub fn run_preprocess(
                            result.len()));
     }
     Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rank_counts(ops: &[MixOp], n: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; n];
+        for op in ops {
+            let (MixOp::Read(i) | MixOp::Write(i)) = *op;
+            counts[i] += 1;
+        }
+        counts
+    }
+
+    #[test]
+    fn zipf_stream_is_bit_deterministic_per_seed() {
+        let a = mixed_accesses(64, 500, 0.9, 0.8, 7);
+        let b = mixed_accesses(64, 500, 0.9, 0.8, 7);
+        assert_eq!(a, b, "same (seed, n, theta) must replay exactly");
+        let c = mixed_accesses(64, 500, 0.9, 0.8, 8);
+        assert_ne!(a, c, "a different seed must decorrelate the stream");
+    }
+
+    #[test]
+    fn zipf_skew_concentrates_on_low_ranks() {
+        let n = 64;
+        let ops = mixed_accesses(n, 4000, 1.2, 1.0, 11);
+        let counts = rank_counts(&ops, n);
+        // Under theta=1.2 the head rank takes a large multiple of the
+        // uniform share (1/64 of 4000 ≈ 62); the deep tail is rare.
+        assert!(
+            counts[0] > 4 * (4000 / n),
+            "rank 0 drew only {} of 4000",
+            counts[0]
+        );
+        assert!(counts[0] > counts[n / 2] && counts[0] > counts[n - 1]);
+        let tail: usize = counts[n / 2..].iter().sum();
+        assert!(
+            tail < 4000 / 4,
+            "tail half drew {tail} of 4000 — not skewed"
+        );
+    }
+
+    #[test]
+    fn theta_zero_is_uniform_and_rw_ratio_splits_ops() {
+        let n = 16;
+        let ops = mixed_accesses(n, 4000, 0.0, 0.75, 3);
+        let counts = rank_counts(&ops, n);
+        // Every rank near the uniform share (250 ± 40%).
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                c > 150 && c < 350,
+                "rank {i} drew {c}, far from uniform 250"
+            );
+        }
+        let writes =
+            ops.iter().filter(|o| matches!(o, MixOp::Write(_))).count();
+        let frac = writes as f64 / ops.len() as f64;
+        assert!(
+            (frac - 0.25).abs() < 0.05,
+            "write fraction {frac:.3}, want ~0.25"
+        );
+    }
+
+    #[test]
+    fn sampler_clamps_edge_draws_into_range() {
+        let z = ZipfSampler::new(1, 2.0);
+        let mut rng = Rng::new(0);
+        for _ in 0..100 {
+            assert_eq!(z.draw(&mut rng), 0);
+        }
+        let z = ZipfSampler::new(5, 0.9);
+        let mut rng = Rng::new(9);
+        for _ in 0..2000 {
+            assert!(z.draw(&mut rng) < 5);
+        }
+    }
 }

@@ -205,6 +205,7 @@ mod tests {
             channels: 8,
             elevator: vec![(1, 1.0)],
             time_scale: 1000.0,
+            lat_tables: None,
         };
         StorageSim::cold(dir, vec![m]).unwrap()
     }

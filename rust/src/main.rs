@@ -5,13 +5,14 @@
 //! ```text
 //! dlio ior         [--size-mb 512] [--reps 6] [--time-scale 8]
 //! dlio gen-corpus  [--corpus imagenet|caltech101] [--files N] [--device D]
-//! dlio microbench  [--device D|hier:P] [--threads N] [--batch 64]
+//! dlio microbench  [--device D|hier:P] [--policy noop|lru|freq|cost]
+//!                  [--threads N] [--batch 64]
 //!                  [--iterations N] [--no-preprocess] [--readahead N]
 //!                  [--shards N] [--engine-stats]
 //! dlio train       [--device D|hier:P] [--threads N] [--batch 64]
 //!                  [--prefetch 1] [--iterations N] [--profile micro|mini]
 //!                  [--compute xla|model] [--accel cpu|k80|p100|v100]
-//!                  [--compute-profile alexnet|micro] [--trace-out FILE]
+//!                  [--compute-profile alexnet|resnet50|micro] [--trace-out FILE]
 //! dlio ckpt-study  [--target none|hdd|ssd|optane|bb:optane:hdd]
 //!                  [--interval 5] [--iterations 20] [--device D|hier:P]
 //!                  [--compute xla|model] [--trace-out FILE]
@@ -22,7 +23,9 @@
 //!                  [--intervals 0,2,8] [--shards 1,2,4] [--format csv|json]
 //!                  [--clock wall|virtual]
 //! dlio tier-sweep  [--smoke] [--hierarchies blackdog-bb,..]
-//!                  [--policies noop,lru,freq] [--workloads hot,ckpt]
+//!                  [--policies noop,lru,freq,cost]
+//!                  [--workloads hot,zipf,uniform,ckpt] [--theta F]
+//!                  [--rw-ratio F] [--arrival-us F] [--ws-ratio F]
 //!                  [--tier0-cap-kb N] [--format csv|json]
 //!                  [--clock wall|virtual]
 //! dlio fleet-sweep [--smoke] [--tenants 2,4] [--schemes equal,..]
@@ -34,7 +37,8 @@
 //! dlio trace       [--device D] [--prefetch 0|1] ... (dstat CSV to stdout)
 //! dlio trace-record [microbench|miniapp] [--smoke] [--out FILE]
 //! dlio trace-replay <file> [--profile P] [--qos fifo|static|adaptive]
-//!                  [--sweep fifo,static,..] [--speed X] [--open-loop]
+//!                  [--sweep fifo,static,..] [--sweep hier/policy,..]
+//!                  [--speed X] [--open-loop]
 //!                  [--inject kind[:dev[:start[:dur]]]]
 //!                  [--clock wall|virtual] [--json|--csv]
 //! dlio trace-compact <file> [--epochs N] [--out FILE]
@@ -55,7 +59,8 @@ use dlio::config::{
 };
 use dlio::compute::{StepRecord, StepSummary};
 use dlio::coordinator::{
-    build_hierarchy, ensure_corpus, fault_sweep, fleet_sweep, make_sim,
+    build_hierarchy, build_hierarchy_with_policy, ensure_corpus,
+    fault_sweep, fleet_sweep, make_sim,
     microbench, miniapp, overlap_sweep, qos_sweep, sim_train, tier_sweep,
     trace_record, StorageTarget,
 };
@@ -125,7 +130,7 @@ dlio — Characterizing Deep-Learning I/O Workloads (PDSW-DISCS'18) repro
                               the calibrated accelerator model: no
                               artifacts, exact under --clock virtual;
                               [--accel cpu|k80|p100|v100]
-                              [--compute-profile alexnet|micro])
+                              [--compute-profile alexnet|resnet50|micro])
   dlio ckpt-study  Fig 9     checkpoint targets incl. burst buffer
                              (--device hier:<preset> routes ingest AND
                               Direct saves through the hierarchy;
@@ -140,9 +145,14 @@ dlio — Characterizing Deep-Learning I/O Workloads (PDSW-DISCS'18) repro
   dlio qos-sweep   Figs 4/8  (mode x ckpt interval x shards) matrix ->
                              per-class queue/latency rows, CSV or JSON
   dlio tier-sweep  Figs 9/10 (hierarchy x policy x workload) matrix ->
-                             per-tier hit/migration rows, CSV or JSON
-                             ([--smoke] [--hierarchies A,B] [--policies
-                              noop,lru,freq] [--workloads hot,ckpt])
+                             per-tier hit/migration rows plus the
+                             cost-model columns (migration_mb,
+                             cost_accuracy, rejected_by_cost), CSV or
+                             JSON ([--smoke] [--hierarchies A,B]
+                             [--policies noop,lru,freq,cost]
+                             [--workloads hot,zipf[:T],uniform,ckpt]
+                             [--theta F] [--rw-ratio F] [--arrival-us
+                              F] [--ws-ratio F])
   dlio fleet-sweep           N concurrent tenant jobs on one device:
                              (tenants x share scheme x scenario) matrix
                              -> per-tenant rows with Jain fairness over
@@ -164,7 +174,10 @@ dlio — Characterizing Deep-Learning I/O Workloads (PDSW-DISCS'18) repro
                              ([--profile P] [--qos fifo|static|adaptive]
                               [--sweep M1,M2,..] [--speed X] [--open-loop]
                               [--inject kind[:dev[:start[:dur]]]]
-                              [--json|--csv])
+                              [--json|--csv]); --sweep H/P,.. pairs
+                             (e.g. blackdog-tiered/cost) instead drive
+                             the tier-sweep (hierarchy x policy) matrix
+                             from the trace's tier-tagged reads
   dlio trace-compact <file>  fold repeated per-epoch event runs into a
                              representative trace ([--epochs N] [--out F])
 
@@ -422,7 +435,13 @@ fn cmd_microbench(args: &Args) -> Result<()> {
     let (hier, device) = match StorageTarget::parse(&raw) {
         StorageTarget::Flat(d) => (None, d),
         StorageTarget::Hier(preset) => {
-            let (h, bottom) = build_hierarchy(&sim, &preset)?;
+            // `--policy cost` (etc.) makes the single-job run exercise
+            // promotion/demotion; default stays noop.
+            let (h, bottom) = build_hierarchy_with_policy(
+                &sim,
+                &preset,
+                &args.get_or("policy", "noop"),
+            )?;
             (Some(h), bottom)
         }
     };
@@ -464,6 +483,18 @@ fn cmd_microbench(args: &Args) -> Result<()> {
     );
     if args.has_flag("engine-stats") {
         print_engine_stats(&sim);
+        if let Some(h) = &hier {
+            let d = h.policy_decisions();
+            println!(
+                "policy={} promotions={} demotions={} \
+                 rejected-by-cost={} predicted-migration-secs={:.4}",
+                h.policy_name(),
+                d.promotions,
+                d.demotions,
+                d.rejected_by_cost,
+                h.predicted_migration_secs(),
+            );
+        }
     }
     Ok(())
 }
@@ -896,6 +927,22 @@ fn cmd_tier_sweep(args: &Args) -> Result<()> {
         args.get_usize("tier0-cap-kb", (cfg.tier0_cap / 1024) as usize)?
             as u64
             * 1024;
+    cfg.theta = args.get_f64("theta", cfg.theta)?;
+    if !cfg.theta.is_finite() || cfg.theta < 0.0 {
+        return Err(anyhow!("--theta must be a non-negative skew"));
+    }
+    cfg.rw_ratio = args.get_f64("rw-ratio", cfg.rw_ratio)?;
+    if !(0.0..=1.0).contains(&cfg.rw_ratio) {
+        return Err(anyhow!("--rw-ratio must be in [0, 1]"));
+    }
+    cfg.arrival_us = args.get_f64("arrival-us", cfg.arrival_us)?;
+    if !cfg.arrival_us.is_finite() || cfg.arrival_us < 0.0 {
+        return Err(anyhow!("--arrival-us must be non-negative"));
+    }
+    cfg.ws_ratio = args.get_f64("ws-ratio", cfg.ws_ratio)?;
+    if !cfg.ws_ratio.is_finite() || cfg.ws_ratio < 0.0 {
+        return Err(anyhow!("--ws-ratio must be non-negative"));
+    }
     cfg.ckpt_saves = args.get_usize("ckpt-saves", cfg.ckpt_saves)?;
     cfg.clock = clock_arg(args, cfg.clock)?;
     // Validate the output format *before* running the matrix.
@@ -1174,8 +1221,47 @@ fn cmd_trace_replay(args: &Args) -> Result<()> {
     };
     // `--sweep m1,m2,..`: replay-driven what-if matrix — ONE recorded
     // trace across the qos-sweep scheduler modes, one diff row per
-    // cell (ROADMAP follow-up).
+    // cell (ROADMAP follow-up).  `<hierarchy>/<policy>` tokens switch
+    // the matrix axis from schedulers to placement: the recorded
+    // (v2+) tier-tagged read stream re-runs through each hierarchy ×
+    // policy pair, one tier-sweep row per cell.
     if let Some(modes) = args.get_list("sweep") {
+        if modes.iter().any(|m| m.contains('/')) {
+            let pairs = modes
+                .iter()
+                .map(|m| {
+                    m.split_once('/')
+                        .map(|(h, p)| (h.to_string(), p.to_string()))
+                        .ok_or_else(|| {
+                            anyhow!(
+                                "--sweep mixes scheduler modes and \
+                                 hierarchy/policy pairs ({m:?}); use \
+                                 one kind of token per invocation"
+                            )
+                        })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let ts = time_scale.unwrap_or(trace.manifest.time_scale);
+            let workdir = args
+                .get("workdir")
+                .map(str::to_string)
+                .unwrap_or_else(default_workdir);
+            let mut tcfg =
+                tier_sweep::TierSweepConfig::standard(workdir, ts);
+            // Trace cells take their block sizes from the recording;
+            // tier-0 capacity stays at the preset unless overridden.
+            tcfg.tier0_cap =
+                args.get_usize("tier0-cap-kb", 0)? as u64 * 1024;
+            tcfg.clock = cfg.clock.clone();
+            let cells =
+                tier_sweep::run_trace_cells(&trace, &tcfg, &pairs)?;
+            if args.has_flag("json") {
+                println!("{}", tier_sweep::to_json(&cells));
+            } else {
+                print!("{}", tier_sweep::to_csv(&cells));
+            }
+            return Ok(());
+        }
         let reports =
             dlio::trace::sweep(&trace, &cfg, &modes, adaptive_target)?;
         if args.has_flag("json") {

@@ -363,6 +363,7 @@ mod tests {
                 channels: 8,
                 elevator: vec![(1, 1.0)],
                 time_scale: 1000.0,
+                lat_tables: None,
             };
             Arc::new(StorageSim::cold(dir, vec![model]).unwrap())
         }
@@ -494,6 +495,7 @@ mod tests {
                 channels: 8,
                 elevator: vec![(1, 1.0)],
                 time_scale: 1000.0,
+                lat_tables: None,
             };
             let s = Arc::new(
                 StorageSim::cold(dir, vec![mk("fast"), mk("slow")]).unwrap(),

@@ -51,6 +51,39 @@ impl IoObserver for NullObserver {
     fn record(&self, _device: &str, _dir: Dir, _bytes: u64) {}
 }
 
+/// Optional per-block-size setup-latency tables (placement-policy-
+/// vivarium style device calibration): `(block size bytes, per-op
+/// setup latency secs)` control points, sorted by block size.  Lookup
+/// interpolates linearly between points and clamps at the ends, so a
+/// single-point table degenerates to a constant.  The table replaces
+/// only the *setup* term of the service-time model — the bandwidth
+/// (transfer) term is unchanged — which is what a migration cost
+/// model needs: per-device-pair payoff as a function of block size.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyTables {
+    pub read: Vec<(u64, f64)>,
+    pub write: Vec<(u64, f64)>,
+}
+
+impl LatencyTables {
+    /// Interpolated setup latency at `bytes`; `None` for an empty
+    /// point list (callers fall back to the single-point latency).
+    pub fn interp(points: &[(u64, f64)], bytes: u64) -> Option<f64> {
+        let (first, last) = (points.first()?, points.last()?);
+        if bytes <= first.0 {
+            return Some(first.1);
+        }
+        for w in points.windows(2) {
+            let ((b0, l0), (b1, l1)) = (w[0], w[1]);
+            if bytes <= b1 {
+                let t = (bytes - b0) as f64 / (b1 - b0).max(1) as f64;
+                return Some(l0 + t * (l1 - l0));
+            }
+        }
+        Some(last.1)
+    }
+}
+
 /// Static description of a device's performance envelope.
 #[derive(Debug, Clone)]
 pub struct DeviceModel {
@@ -71,6 +104,9 @@ pub struct DeviceModel {
     /// Speed multiplier: 1.0 = modelled speed; >1 runs experiments
     /// proportionally faster while preserving every ratio.
     pub time_scale: f64,
+    /// Per-block-size setup-latency tables; `None` keeps the
+    /// single-point `read_lat`/`write_lat` model bit-for-bit.
+    pub lat_tables: Option<LatencyTables>,
 }
 
 impl DeviceModel {
@@ -94,13 +130,42 @@ impl DeviceModel {
         pts[pts.len() - 1].1
     }
 
+    /// Per-op setup latency for a `bytes`-sized access: interpolated
+    /// from the per-block-size table when one is present, otherwise
+    /// the single-point `read_lat`/`write_lat` (bit-compatible for
+    /// every pre-existing profile).
+    pub fn lat_for(&self, dir: Dir, bytes: u64) -> f64 {
+        let (fixed, table) = match dir {
+            Dir::Read => {
+                (self.read_lat, self.lat_tables.as_ref().map(|t| &t.read))
+            }
+            Dir::Write => {
+                (self.write_lat, self.lat_tables.as_ref().map(|t| &t.write))
+            }
+        };
+        table
+            .and_then(|pts| LatencyTables::interp(pts, bytes))
+            .unwrap_or(fixed)
+    }
+
+    /// Whether a per-block-size table exists for `dir` (callers use
+    /// this to avoid paying for a size probe when it cannot matter).
+    pub fn has_lat_table(&self, dir: Dir) -> bool {
+        match (dir, self.lat_tables.as_ref()) {
+            (Dir::Read, Some(t)) => !t.read.is_empty(),
+            (Dir::Write, Some(t)) => !t.write.is_empty(),
+            _ => false,
+        }
+    }
+
     /// Analytic single-request service time (no queueing), seconds.
     /// Used by calibration tests; the live path uses paced sleeps.
     pub fn service_time(&self, dir: Dir, bytes: u64, queue_depth: u32) -> f64 {
-        let (lat, bw) = match dir {
-            Dir::Read => (self.read_lat, self.read_bw),
-            Dir::Write => (self.write_lat, self.write_bw),
+        let bw = match dir {
+            Dir::Read => self.read_bw,
+            Dir::Write => self.write_bw,
         };
+        let lat = self.lat_for(dir, bytes);
         (lat / self.elevator_gain(queue_depth) + bytes as f64 / bw)
             / self.time_scale
     }
@@ -450,15 +515,21 @@ impl Device {
 
     /// Sleep the latency phase (seek / command / RPC) for one request
     /// at queue depth `depth`.  An active latency-spike fault
-    /// multiplies the phase.
-    pub fn latency_phase(&self, dir: Dir, depth: u32) {
-        let lat = match dir {
-            Dir::Read => self.model.read_lat,
-            Dir::Write => self.model.write_lat,
-        } / self.model.elevator_gain(depth)
+    /// multiplies the phase.  `bytes = 0` clamps a per-block-size
+    /// table to its smallest point (and is exact for table-less
+    /// models), so callers without a size in hand stay well-defined.
+    pub fn latency_phase_sized(&self, dir: Dir, depth: u32, bytes: u64) {
+        let lat = self.model.lat_for(dir, bytes)
+            / self.model.elevator_gain(depth)
             / self.model.time_scale
             * self.fault_slow_factor();
         self.clock.sleep_secs(lat);
+    }
+
+    /// [`latency_phase_sized`](Self::latency_phase_sized) without a
+    /// size hint (streaming chunk paths, size-oblivious callers).
+    pub fn latency_phase(&self, dir: Dir, depth: u32) {
+        self.latency_phase_sized(dir, depth, 0);
     }
 
     /// Pace `bytes` through the direction's bandwidth bucket, crediting
@@ -534,7 +605,7 @@ impl Device {
         }
 
         // --- latency phase (seek / command / RPC) ---
-        self.latency_phase(dir, depth);
+        self.latency_phase_sized(dir, depth, bytes);
 
         // --- real backing I/O (timed: it counts toward service; in
         //     virtual mode the clock cannot advance while we run, so
@@ -598,6 +669,7 @@ mod tests {
             channels: 4,
             elevator: vec![(1, 1.0)],
             time_scale: 1.0,
+            lat_tables: None,
         }
     }
 
@@ -610,6 +682,42 @@ mod tests {
         assert!((m.elevator_gain(3) - 1.8).abs() < 1e-9);
         assert!((m.elevator_gain(8) - 2.3).abs() < 1e-9);
         assert!((m.elevator_gain(100) - 2.3).abs() < 1e-9); // clamped
+    }
+
+    #[test]
+    fn latency_table_interpolates_and_clamps() {
+        let mut m = model("tbl");
+        m.read_lat = 99.0; // must be ignored once a table exists
+        m.lat_tables = Some(LatencyTables {
+            read: vec![(4 << 10, 0.001), (64 << 10, 0.002), (1 << 20, 0.010)],
+            write: vec![],
+        });
+        // Below the first point: clamps.
+        assert!((m.lat_for(Dir::Read, 0) - 0.001).abs() < 1e-12);
+        assert!((m.lat_for(Dir::Read, 1024) - 0.001).abs() < 1e-12);
+        // Midpoint of the first segment.
+        assert!((m.lat_for(Dir::Read, 34 << 10) - 0.0015).abs() < 1e-12);
+        // Exactly on a point.
+        assert!((m.lat_for(Dir::Read, 64 << 10) - 0.002).abs() < 1e-12);
+        // Above the last point: clamps.
+        assert!((m.lat_for(Dir::Read, 1 << 30) - 0.010).abs() < 1e-12);
+        // Empty per-direction table falls back to the fixed point.
+        m.write_lat = 0.5;
+        assert!((m.lat_for(Dir::Write, 1 << 20) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tableless_model_is_bit_compatible_with_fixed_latency() {
+        let mut m = model("fixed");
+        m.read_lat = 0.004;
+        m.write_lat = 0.006;
+        for &bytes in &[0u64, 1 << 10, 1 << 20, 1 << 30] {
+            assert_eq!(m.lat_for(Dir::Read, bytes), m.read_lat);
+            assert_eq!(m.lat_for(Dir::Write, bytes), m.write_lat);
+            let want = (m.read_lat + bytes as f64 / m.read_bw) / m.time_scale;
+            assert_eq!(m.service_time(Dir::Read, bytes, 1), want);
+        }
+        assert!(!m.has_lat_table(Dir::Read));
     }
 
     #[test]
@@ -714,6 +822,7 @@ mod tests {
                 channels: 1,
                 elevator: elev,
                 time_scale: 1.0,
+                lat_tables: None,
             };
             let d = Arc::new(Device::new(m, Arc::new(NullObserver)));
             let t0 = Instant::now();

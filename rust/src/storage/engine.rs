@@ -3076,7 +3076,14 @@ fn run_job(
                 dev.service_end();
                 return Err(e);
             }
-            dev.latency_phase(Dir::Read, depth);
+            // Per-block-size calibrated models price the setup phase
+            // by request size; stat only when a table makes it matter.
+            let size_hint = if dev.model.has_lat_table(Dir::Read) {
+                std::fs::metadata(path).map(|m| m.len()).unwrap_or(0)
+            } else {
+                0
+            };
+            dev.latency_phase_sized(Dir::Read, depth, size_hint);
             let res = read_paced(dev, path, chunk_size);
             dev.service_end();
             let data = res?;
@@ -3088,7 +3095,7 @@ fn run_job(
                 dev.service_end();
                 return Err(e);
             }
-            dev.latency_phase(Dir::Write, depth);
+            dev.latency_phase_sized(Dir::Write, depth, data.len() as u64);
             let res = write_paced(dev, path, data, chunk_size);
             dev.service_end();
             res?;
@@ -3101,7 +3108,7 @@ fn run_job(
                 dev.service_end();
                 return Err(e);
             }
-            dev.latency_phase(dir, depth);
+            dev.latency_phase_sized(dir, depth, bytes);
             let chunk = dev.pacing_chunk(bytes).max(chunk_size as u64);
             let mut remaining = bytes;
             while remaining > 0 {
@@ -3443,6 +3450,7 @@ mod tests {
             channels,
             elevator: vec![(1, 1.0)],
             time_scale,
+            lat_tables: None,
         }
     }
 

@@ -385,7 +385,7 @@ impl StorageHierarchy {
     pub fn new(
         sim: Arc<StorageSim>,
         spec: HierarchySpec,
-        policy: Box<dyn PlacementPolicy>,
+        mut policy: Box<dyn PlacementPolicy>,
     ) -> Result<StorageHierarchy> {
         if spec.tiers.is_empty() || spec.tiers.len() > 32 {
             return Err(anyhow!(
@@ -395,16 +395,21 @@ impl StorageHierarchy {
             ));
         }
         let mut rams = Vec::with_capacity(spec.tiers.len());
+        let mut models = Vec::with_capacity(spec.tiers.len());
         let mut devices = 0usize;
         for t in &spec.tiers {
             match &t.kind {
-                TierKind::Ram => rams.push(Some(RamTier::new(t.capacity))),
+                TierKind::Ram => {
+                    rams.push(Some(RamTier::new(t.capacity)));
+                    models.push(None);
+                }
                 TierKind::Device(d) => {
-                    sim.device(d).with_context(|| {
+                    let dev = sim.device(d).with_context(|| {
                         format!("hierarchy {:?} tier {:?}", spec.name, t.name)
                     })?;
                     devices += 1;
                     rams.push(None);
+                    models.push(Some(dev.model.clone()));
                 }
             }
         }
@@ -415,6 +420,9 @@ impl StorageHierarchy {
                 spec.name
             ));
         }
+        // Hand cost-aware policies the calibrated per-tier device
+        // models (index-aligned with the tier list; None for RAM).
+        policy.calibrate(&models);
         let tiers = spec.tiers.iter().map(|_| TierRt::default()).collect();
         let clock = sim.clock().clone();
         let inner = Arc::new(HierInner {
@@ -453,6 +461,19 @@ impl StorageHierarchy {
 
     pub fn policy_name(&self) -> &'static str {
         self.inner.state.lock().unwrap().policy.name()
+    }
+
+    /// The policy's decision counters (promotions / demotions /
+    /// rejected-by-cost; zeros for cost-blind policies).
+    pub fn policy_decisions(&self) -> super::policy::PolicyDecisions {
+        self.inner.state.lock().unwrap().policy.decisions()
+    }
+
+    /// Modelled seconds of migration work the policy committed to
+    /// (0.0 for cost-blind policies) — the numerator of the sweep's
+    /// cost-model-accuracy column.
+    pub fn predicted_migration_secs(&self) -> f64 {
+        self.inner.state.lock().unwrap().policy.predicted_migration_secs()
     }
 
     pub fn sim(&self) -> &Arc<StorageSim> {
@@ -1487,6 +1508,7 @@ mod tests {
             channels: 4,
             elevator: vec![(1, 1.0)],
             time_scale: 1000.0,
+            lat_tables: None,
         }
     }
 
@@ -1897,5 +1919,84 @@ mod tests {
         assert!(err.contains("offline"), "unexpected error: {err}");
         sim.clear_faults();
         assert_eq!(h.read("k").unwrap(), vec![4u8; 256]);
+    }
+
+    #[test]
+    fn cost_aware_swap_survives_mid_migration_device_fault() {
+        use crate::storage::fault::FaultPlan;
+        // Asymmetric tiers so the cost model prices a real gain: a
+        // fast bounded tier 0 over a slow durable home.
+        let (sim, _) = sim_with(
+            "costfault",
+            vec![
+                {
+                    let mut m = model("fast", 0.1e-3);
+                    m.write_lat = 0.1e-3;
+                    m
+                },
+                {
+                    let mut m = model("slow", 10e-3);
+                    m.write_lat = 10e-3;
+                    m.read_bw = 100e6;
+                    m.write_bw = 100e6;
+                    m
+                },
+            ],
+        );
+        let spec = HierarchySpec::new(
+            "t",
+            vec![
+                TierSpec::device("fast", 150_000),
+                TierSpec::device("slow", 0),
+            ],
+        );
+        let h = StorageHierarchy::new(
+            Arc::clone(&sim),
+            spec,
+            Box::new(policy::CostAware::new(3, 0)),
+        )
+        .unwrap();
+        // "cold" fills tier 0; "hot" lives on the slow durable home.
+        h.write("cold", &[1u8; 100_000]).unwrap();
+        h.wait_idle();
+        sim.write(&SimPath::new("slow", "hot"), &[2u8; 100_000])
+            .unwrap();
+        sim.drop_caches();
+        // Two reads stay below the consider threshold.
+        let _ = h.read("hot").unwrap();
+        let _ = h.read("hot").unwrap();
+        h.wait_idle();
+        assert_eq!(h.tiers_of("hot"), vec![1]);
+        // Tier 0's device goes offline for 200 ms of clock time.  The
+        // third read (served from the healthy slow tier) trips the
+        // bidirectional swap — demote "cold" to make room, promote
+        // "hot" — and both copies hit the fault mid-flight: the
+        // demotion cannot read its source, the promotion cannot write
+        // its destination.
+        sim.apply_fault_plan(
+            &FaultPlan::parse("offline:fast:0:0.2").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(h.read("hot").unwrap(), vec![2u8; 100_000]);
+        h.wait_idle();
+        // The fault pauses (requeues) the migrator — never a hard
+        // error, never a half-applied swap.  Once the window clears
+        // the swap completes exactly as planned.
+        assert_eq!(h.migration_errors(), 0, "fault became a hard error");
+        assert!(
+            h.migration_pauses() >= 1,
+            "fault window saw no migrator pause"
+        );
+        assert_eq!(h.tiers_of("hot"), vec![0, 1], "promotion lost");
+        assert_eq!(h.tiers_of("cold"), vec![1], "demotion not applied");
+        assert!(sim.exists(&SimPath::new("fast", "hot")));
+        assert!(!sim.exists(&SimPath::new("fast", "cold")));
+        assert!(sim.exists(&SimPath::new("slow", "cold")));
+        assert_eq!(h.read("hot").unwrap(), vec![2u8; 100_000]);
+        assert_eq!(h.read("cold").unwrap(), vec![1u8; 100_000]);
+        let dec = h.policy_decisions();
+        assert_eq!(dec.promotions, 1);
+        assert_eq!(dec.demotions, 1);
+        assert!(h.predicted_migration_secs() > 0.0);
     }
 }

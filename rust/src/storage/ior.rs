@@ -108,6 +108,7 @@ mod tests {
             channels: 4,
             elevator: vec![(1, 1.0)],
             time_scale: 4.0,
+            lat_tables: None,
         };
         let clock = Clock::virt();
         let sim = StorageSim::cold_with_qos_clock(
@@ -150,6 +151,7 @@ mod tests {
             channels: 4,
             elevator: vec![(1, 1.0)],
             time_scale: 1000.0,
+            lat_tables: None,
         };
         let sim = StorageSim::cold(dir, vec![mk("a"), mk("b")]).unwrap();
         let rows =

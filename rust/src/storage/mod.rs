@@ -17,7 +17,9 @@ pub mod profiles;
 pub mod sim;
 
 pub use clock::{Clock, ClockSpec, SimCondvar, TimeSource};
-pub use device::{Device, DeviceModel, Dir, IoObserver, NullObserver};
+pub use device::{
+    Device, DeviceModel, Dir, IoObserver, LatencyTables, NullObserver,
+};
 pub use engine::{
     with_origin, with_tenant, with_tier, AdaptiveQos, ChunkWriter,
     ClassStats, EngineDeviceStats, EngineEvent, EngineObserver, EngineOp,
@@ -33,5 +35,7 @@ pub use hierarchy::{
     TierStatsSnap,
 };
 pub use page_cache::PageCache;
-pub use policy::{Migration, PlacementPolicy, TierView};
+pub use policy::{
+    Migration, PlacementPolicy, PolicyDecisions, TierView,
+};
 pub use sim::{PendingRead, PendingWrite, SimPath, StorageSim};

@@ -29,6 +29,8 @@ use std::collections::HashMap;
 
 use anyhow::{anyhow, Result};
 
+use super::device::{DeviceModel, Dir};
+
 /// What a policy sees of one tier when deciding (a snapshot taken
 /// under the hierarchy lock — cheap, there are only a handful of
 /// tiers).
@@ -62,6 +64,20 @@ pub fn first_device_tier(tiers: &[TierView]) -> usize {
         .iter()
         .position(|t| !t.is_ram)
         .expect("hierarchy has at least one device tier")
+}
+
+/// Per-policy decision counters ([`CostAware`] fills them; the
+/// stateless built-ins report zeros).  Surfaced per tier-sweep cell
+/// and under `--engine-stats`.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PolicyDecisions {
+    /// Blocks the policy chose to copy up into the fast tier.
+    pub promotions: u64,
+    /// Cold residents the policy pushed down to make room.
+    pub demotions: u64,
+    /// Candidate swaps declined because the modelled migration cost
+    /// exceeded the projected gain.
+    pub rejected_by_cost: u64,
 }
 
 /// Placement decisions over an ordered (fast → slow) tier list.
@@ -102,6 +118,26 @@ pub trait PlacementPolicy: Send {
     /// `key` left `tier` (evicted, demoted, or deleted): drop any
     /// per-key bookkeeping so a re-ingested key starts cold.
     fn on_remove(&mut self, _key: &str, _tier: usize) {}
+
+    /// Hand the policy the per-tier device models (`None` for RAM
+    /// tiers), index-aligned with every later `tiers` slice.  The
+    /// hierarchy calls this once at construction; cost-blind policies
+    /// ignore it.
+    fn calibrate(&mut self, _models: &[Option<DeviceModel>]) {}
+
+    /// Decision counters accumulated so far (zeros for cost-blind
+    /// policies).
+    fn decisions(&self) -> PolicyDecisions {
+        PolicyDecisions::default()
+    }
+
+    /// Modelled seconds of migration work this policy has committed to
+    /// (read-from-source + write-to-dest of every accepted swap) —
+    /// compared against the engine's measured `Drain` service time to
+    /// score cost-model accuracy.  0 for cost-blind policies.
+    fn predicted_migration_secs(&self) -> f64 {
+        0.0
+    }
 }
 
 /// Leave everything where it lands: no promotions, no demotions.
@@ -243,9 +279,260 @@ impl PlacementPolicy for Frequency {
     }
 }
 
+/// Cost-aware bidirectional placement — the vivarium swap criterion.
+///
+/// Where [`Frequency`] promotes on a fixed access count, `CostAware`
+/// prices each candidate promotion against the calibrated device
+/// models ([`PlacementPolicy::calibrate`]):
+///
+/// * **gain** — the access-frequency estimate (reads observed so far,
+///   with the same periodic decay as `Frequency`) times the
+///   per-access service-time delta between the serving tier and the
+///   fast tier at this block's size (per-block-size latency tables
+///   when the model carries them);
+/// * **cost** — the modelled migration time: read the block from its
+///   current tier plus write it into the fast tier, **plus**, when
+///   the fast tier is full, the same for demoting its coldest
+///   resident down a tier (bidirectional migration — the `freq`
+///   policy can only promote, so under pressure it thrashs on LRU
+///   evictions instead of choosing a victim).
+///
+/// The swap runs only when `gain > cost` *and* the candidate is
+/// hotter than the victim it would displace; otherwise the attempt is
+/// counted in [`PolicyDecisions::rejected_by_cost`].  Uncalibrated
+/// (no models handed over — unit-test or bare construction), the
+/// policy degrades to threshold promotion with capacity-aware
+/// demotion and never rejects on cost.
+#[derive(Debug)]
+pub struct CostAware {
+    /// Minimum observed reads before a block is priced at all (a
+    /// 1-read frequency estimate is noise).
+    consider_after: u32,
+    /// Reads between decay sweeps; 0 disables decay.
+    decay_every: u64,
+    /// Per-tier device models, index-aligned with `TierView` slices;
+    /// empty until [`PlacementPolicy::calibrate`].
+    models: Vec<Option<DeviceModel>>,
+    counts: HashMap<String, u32>,
+    /// Blocks this policy believes are resident in the fast tier:
+    /// key → (bytes, last-touch tick).  Kept in sync by `on_read` /
+    /// `on_write` / `on_remove`; the hierarchy stays authoritative
+    /// (a stale entry just proposes a migration that planning drops).
+    resident: HashMap<String, (u64, u64)>,
+    /// Fast-tier index the residency map refers to (set on first
+    /// decision; hierarchies never reorder tiers).
+    target: Option<usize>,
+    tick: u64,
+    reads: u64,
+    dec: PolicyDecisions,
+    predicted_secs: f64,
+}
+
+impl CostAware {
+    pub fn new(consider_after: u32, decay_every: u64) -> CostAware {
+        CostAware {
+            consider_after: consider_after.max(1),
+            decay_every,
+            models: Vec::new(),
+            counts: HashMap::new(),
+            resident: HashMap::new(),
+            target: None,
+            tick: 0,
+            reads: 0,
+            dec: PolicyDecisions::default(),
+            predicted_secs: 0.0,
+        }
+    }
+
+    /// Accesses recorded for `key` so far (tests / introspection).
+    pub fn count(&self, key: &str) -> u32 {
+        self.counts.get(key).copied().unwrap_or(0)
+    }
+
+    /// Modelled single-request service time of `bytes` on tier `t`,
+    /// `None` when no model was handed over for it.
+    fn svc(&self, t: usize, dir: Dir, bytes: u64) -> Option<f64> {
+        self.models
+            .get(t)
+            .and_then(|m| m.as_ref())
+            .map(|m| m.service_time(dir, bytes, 1))
+    }
+
+    /// The coldest block the residency map knows in the fast tier.
+    fn coldest_resident(&self) -> Option<(&str, u64, u64)> {
+        self.resident
+            .iter()
+            .min_by_key(|(_, &(_, tick))| tick)
+            .map(|(k, &(bytes, tick))| (k.as_str(), bytes, tick))
+    }
+
+    /// First non-RAM tier strictly below `target` — where demoted
+    /// victims go (`served` is the caller's fallback when the view
+    /// has no such tier, which cannot happen on a valid hierarchy).
+    fn demote_tier(target: usize, served: usize, tiers: &[TierView]) -> usize {
+        tiers
+            .iter()
+            .enumerate()
+            .skip(target + 1)
+            .find(|(_, t)| !t.is_ram)
+            .map(|(i, _)| i)
+            .unwrap_or(served)
+    }
+}
+
+impl Default for CostAware {
+    /// Price blocks from their 2nd access on, decay every 1024 reads
+    /// (same aging cadence as [`Frequency`]).
+    fn default() -> CostAware {
+        CostAware::new(2, 1024)
+    }
+}
+
+impl PlacementPolicy for CostAware {
+    fn name(&self) -> &'static str {
+        "cost"
+    }
+
+    fn calibrate(&mut self, models: &[Option<DeviceModel>]) {
+        self.models = models.to_vec();
+    }
+
+    fn decisions(&self) -> PolicyDecisions {
+        self.dec
+    }
+
+    fn predicted_migration_secs(&self) -> f64 {
+        self.predicted_secs
+    }
+
+    fn on_read(
+        &mut self,
+        key: &str,
+        bytes: u64,
+        served: usize,
+        tiers: &[TierView],
+    ) -> Vec<Migration> {
+        self.tick += 1;
+        self.reads += 1;
+        if self.decay_every > 0 && self.reads % self.decay_every == 0 {
+            for c in self.counts.values_mut() {
+                *c /= 2;
+            }
+            self.counts.retain(|_, c| *c > 0);
+        }
+        let count = {
+            let c = self.counts.entry(key.to_string()).or_insert(0);
+            *c = c.saturating_add(1);
+            *c
+        };
+        let target = first_device_tier(tiers);
+        self.target = Some(target);
+        if served <= target {
+            if served == target {
+                // Fast-tier hit: refresh recency so the victim scan
+                // sees true coldness.
+                self.resident.insert(key.to_string(), (bytes, self.tick));
+            }
+            return Vec::new();
+        }
+        if count < self.consider_after {
+            return Vec::new(); // not yet priceable, not a rejection
+        }
+
+        // --- price the swap ---
+        let view = &tiers[target];
+        let needs_room =
+            view.capacity > 0 && view.used + bytes > view.capacity;
+        let below = Self::demote_tier(target, served, tiers);
+        let victim = if needs_room {
+            match self.coldest_resident() {
+                Some((k, vb, _)) => Some((k.to_string(), vb)),
+                // Full but nothing known-resident (e.g. freshly
+                // attached over a warm tier): nothing to swap out.
+                None => return Vec::new(),
+            }
+        } else {
+            None
+        };
+        // Candidate must be hotter than the block it displaces.
+        if let Some((vk, _)) = &victim {
+            if self.count(vk) >= count {
+                self.dec.rejected_by_cost += 1;
+                return Vec::new();
+            }
+        }
+        let priced = (|| {
+            let src_read = self.svc(served, Dir::Read, bytes)?;
+            let dst_read = self.svc(target, Dir::Read, bytes)?;
+            let dst_write = self.svc(target, Dir::Write, bytes)?;
+            let delta = src_read - dst_read;
+            let gain = count as f64 * delta;
+            let mut cost = src_read + dst_write;
+            if let Some((_, vb)) = &victim {
+                cost += self.svc(target, Dir::Read, *vb)?
+                    + self.svc(below, Dir::Write, *vb)?;
+            }
+            Some((gain, cost))
+        })();
+        match priced {
+            Some((gain, cost)) if gain <= cost => {
+                self.dec.rejected_by_cost += 1;
+                return Vec::new();
+            }
+            Some((_, cost)) => self.predicted_secs += cost,
+            // Uncalibrated: threshold promotion, no cost veto.
+            None => {}
+        }
+
+        // --- commit: demote the victim (if any), promote the key ---
+        let mut migs = Vec::new();
+        if let Some((vk, _)) = victim {
+            self.resident.remove(&vk);
+            self.dec.demotions += 1;
+            migs.push(Migration {
+                key: vk,
+                from: target,
+                to: below,
+                evict_src: true,
+            });
+        }
+        self.dec.promotions += 1;
+        self.resident.insert(key.to_string(), (bytes, self.tick));
+        migs.push(Migration {
+            key: key.to_string(),
+            from: served,
+            to: target,
+            evict_src: false,
+        });
+        migs
+    }
+
+    fn on_write(
+        &mut self,
+        key: &str,
+        bytes: u64,
+        tier: usize,
+        tiers: &[TierView],
+    ) -> Vec<Migration> {
+        self.tick += 1;
+        if tier == first_device_tier(tiers) {
+            self.resident.insert(key.to_string(), (bytes, self.tick));
+        }
+        Vec::new()
+    }
+
+    fn on_remove(&mut self, key: &str, tier: usize) {
+        // Like `Frequency`: an evicted key re-earns its heat.
+        self.counts.remove(key);
+        if self.target == Some(tier) {
+            self.resident.remove(key);
+        }
+    }
+}
+
 /// Valid policy names, in the order `by_name` accepts them (the list
 /// unknown-name errors print).
-pub const POLICY_NAMES: [&str; 3] = ["noop", "lru", "freq"];
+pub const POLICY_NAMES: [&str; 4] = ["noop", "lru", "freq", "cost"];
 
 /// Resolve a policy by name (default parameters); unknown names list
 /// the valid set — the same contract as `profiles::by_name` errors.
@@ -254,6 +541,7 @@ pub fn by_name(name: &str) -> Result<Box<dyn PlacementPolicy>> {
         "noop" => Ok(Box::new(Noop)),
         "lru" => Ok(Box::new(Lru)),
         "freq" | "frequency" => Ok(Box::<Frequency>::default()),
+        "cost" | "cost-aware" => Ok(Box::<CostAware>::default()),
         other => Err(anyhow!(
             "unknown placement policy {other:?} (valid: {})",
             POLICY_NAMES.join(", ")
@@ -346,6 +634,147 @@ mod tests {
         assert!(
             p.on_read("k", 1, 1, &tiers()).is_empty(),
             "evicted key must re-earn promotion"
+        );
+    }
+
+    fn cost_models(fast_write_lat: f64) -> Vec<Option<DeviceModel>> {
+        let mk = |name: &str, read_lat: f64, write_lat: f64, bw: f64| {
+            DeviceModel {
+                name: name.into(),
+                read_bw: bw,
+                write_bw: bw,
+                read_lat,
+                write_lat,
+                channels: 4,
+                elevator: vec![(1, 1.0)],
+                time_scale: 1.0,
+                lat_tables: None,
+            }
+        };
+        vec![
+            Some(mk("fast", 0.1e-3, fast_write_lat, 1e9)),
+            Some(mk("slow", 10.0e-3, 10.0e-3, 100e6)),
+        ]
+    }
+
+    #[test]
+    fn cost_aware_promotes_once_gain_clears_migration_cost() {
+        // gain(count=2) = 2 x ~10.8 ms beats cost ~11.2 ms, so the
+        // 2nd slow read promotes; the 1st (count=1) is below
+        // consider_after and is not a rejection.
+        let mut p = CostAware::new(2, 0);
+        p.calibrate(&cost_models(0.1e-3));
+        assert!(p.on_read("hot", 100_000, 1, &tiers()).is_empty());
+        let m = p.on_read("hot", 100_000, 1, &tiers());
+        assert_eq!(
+            m,
+            vec![Migration {
+                key: "hot".into(),
+                from: 1,
+                to: 0,
+                evict_src: false
+            }]
+        );
+        let d = p.decisions();
+        assert_eq!((d.promotions, d.demotions, d.rejected_by_cost), (1, 0, 0));
+        assert!(p.predicted_migration_secs() > 0.0);
+    }
+
+    #[test]
+    fn cost_aware_rejects_swap_when_migration_cost_exceeds_gain() {
+        // A 10-second write into the fast tier prices every
+        // early-count promotion out of the market.
+        let mut p = CostAware::new(2, 0);
+        p.calibrate(&cost_models(10.0));
+        assert!(p.on_read("hot", 100_000, 1, &tiers()).is_empty());
+        for _ in 0..5 {
+            assert!(p.on_read("hot", 100_000, 1, &tiers()).is_empty());
+        }
+        let d = p.decisions();
+        assert_eq!(d.promotions, 0);
+        assert_eq!(d.rejected_by_cost, 5);
+        assert_eq!(p.predicted_migration_secs(), 0.0);
+    }
+
+    #[test]
+    fn cost_aware_demotes_the_coldest_resident_when_tier0_exactly_full() {
+        // consider_after = 3: a count-3 gain (~32 ms) clears the full
+        // swap cost (promotion ~11 ms + victim demotion ~11 ms).
+        let mut p = CostAware::new(3, 0);
+        p.calibrate(&cost_models(0.1e-3));
+        // Two residents land in the fast tier; "cold" is touched
+        // before "warm", so it is the colder one.
+        let mut t = tiers();
+        p.on_write("cold", 100_000, 0, &t);
+        p.on_write("warm", 100_000, 0, &t);
+        // Fast tier is now exactly full.
+        t[0].capacity = 200_000;
+        t[0].used = 200_000;
+        assert!(p.on_read("hot", 100_000, 1, &t).is_empty());
+        assert!(p.on_read("hot", 100_000, 1, &t).is_empty());
+        let m = p.on_read("hot", 100_000, 1, &t);
+        assert_eq!(
+            m,
+            vec![
+                Migration {
+                    key: "cold".into(),
+                    from: 0,
+                    to: 1,
+                    evict_src: true
+                },
+                Migration {
+                    key: "hot".into(),
+                    from: 1,
+                    to: 0,
+                    evict_src: false
+                },
+            ],
+            "bidirectional swap: demote the coldest, promote the hot"
+        );
+        let d = p.decisions();
+        assert_eq!((d.promotions, d.demotions), (1, 1));
+    }
+
+    #[test]
+    fn cost_aware_keeps_a_hotter_victim_over_a_colder_candidate() {
+        let mut p = CostAware::new(2, 0);
+        p.calibrate(&cost_models(0.1e-3));
+        let mut t = tiers();
+        // "vip" is read at the fast tier many times: count 5.
+        for _ in 0..5 {
+            p.on_read("vip", 100_000, 0, &t);
+        }
+        t[0].capacity = 100_000;
+        t[0].used = 100_000;
+        // "lukewarm" reaches count 2 < 5: displacing vip would cool
+        // the tier, so the swap is refused.
+        assert!(p.on_read("lukewarm", 100_000, 1, &t).is_empty());
+        assert!(p.on_read("lukewarm", 100_000, 1, &t).is_empty());
+        assert_eq!(p.decisions().promotions, 0);
+        assert!(p.decisions().rejected_by_cost >= 1);
+    }
+
+    #[test]
+    fn cost_aware_uncalibrated_falls_back_to_threshold_promotion() {
+        // No models handed over: no pricing possible, so behave like
+        // threshold promotion (never a cost rejection).
+        let mut p = CostAware::new(2, 0);
+        assert!(p.on_read("k", 100, 1, &tiers()).is_empty());
+        assert_eq!(p.on_read("k", 100, 1, &tiers()).len(), 1);
+        assert_eq!(p.decisions().rejected_by_cost, 0);
+    }
+
+    #[test]
+    fn cost_aware_eviction_resets_count_and_residency() {
+        let mut p = CostAware::new(2, 0);
+        p.calibrate(&cost_models(0.1e-3));
+        assert!(p.on_read("k", 100_000, 1, &tiers()).is_empty());
+        assert_eq!(p.on_read("k", 100_000, 1, &tiers()).len(), 1);
+        p.on_remove("k", 0);
+        assert_eq!(p.count("k"), 0);
+        assert!(
+            p.on_read("k", 100_000, 1, &tiers()).is_empty(),
+            "evicted key re-earns its heat"
         );
     }
 

@@ -15,7 +15,7 @@
 //! from the queueing model, so profile edits that break the paper's
 //! shapes fail the suite.
 
-use super::device::{DeviceModel, Dir};
+use super::device::{DeviceModel, Dir, LatencyTables};
 use super::engine::QosConfig;
 use super::hierarchy::{HierarchySpec, TierSpec};
 
@@ -37,6 +37,7 @@ pub fn blackdog_hdd(time_scale: f64) -> DeviceModel {
         // Elevator gain ≈ measured scaling (seek-dominated regime).
         elevator: vec![(1, 1.0), (2, 1.70), (4, 2.05), (8, 2.55)],
         time_scale,
+        lat_tables: None,
     }
 }
 
@@ -53,6 +54,7 @@ pub fn blackdog_ssd(time_scale: f64) -> DeviceModel {
         channels: 4,
         elevator: vec![(1, 1.0)],
         time_scale,
+        lat_tables: None,
     }
 }
 
@@ -69,6 +71,7 @@ pub fn blackdog_optane(time_scale: f64) -> DeviceModel {
         channels: 7,
         elevator: vec![(1, 1.0)],
         time_scale,
+        lat_tables: None,
     }
 }
 
@@ -85,20 +88,140 @@ pub fn tegner_lustre(time_scale: f64) -> DeviceModel {
         channels: 32,
         elevator: vec![(1, 1.0)],
         time_scale,
+        lat_tables: None,
     }
 }
 
-/// The paper's device preset names, in `by_name` order — what
-/// unknown-profile CLI errors list.
-pub const DEVICE_NAMES: [&str; 4] = ["hdd", "ssd", "optane", "lustre"];
+// ---------------------------------------------------------------------------
+// Calibrated per-block-size device classes (DESIGN.md §17)
+// ---------------------------------------------------------------------------
+//
+// The paper's four profiles model each device with one (lat, bw)
+// point.  The cost-aware placement study needs more: migration payoff
+// depends on *block size*, and a single latency point over- or
+// under-prices small blocks on every device class.  These presets
+// carry per-block-size setup-latency tables (linear interpolation,
+// clamped) in the spirit of the vivarium exemplar's `devices.rs` —
+// peak rates anchored to datasheet-class hardware (Optane SSC DC
+// P4800X ≈ 2517 MB/s, NVMe-class flash ≈ 2903 MB/s, 7.2k SATA HDD
+// ≈ 120 MB/s), setup latency growing with block size as command and
+// DMA overheads stop amortizing.
 
-/// All four devices of the paper, by name.
+/// Optane-class low-latency SSD: near-flat latency over block size,
+/// deep internal parallelism.  Per-op setup is microseconds, so small
+/// random blocks are almost as cheap per byte as large ones — the
+/// tier where migrated-in blocks pay off fastest.
+pub fn optane_class(time_scale: f64) -> DeviceModel {
+    DeviceModel {
+        name: "optane-class".into(),
+        read_bw: 2517.0e6,
+        write_bw: 2200.0e6,
+        read_lat: 10.0e-6,
+        write_lat: 12.0e-6,
+        channels: 16,
+        elevator: vec![(1, 1.0)],
+        time_scale,
+        lat_tables: Some(LatencyTables {
+            read: vec![
+                (4 << 10, 10.0e-6),
+                (64 << 10, 14.0e-6),
+                (1 << 20, 30.0e-6),
+                (4 << 20, 60.0e-6),
+            ],
+            write: vec![
+                (4 << 10, 12.0e-6),
+                (64 << 10, 16.0e-6),
+                (1 << 20, 35.0e-6),
+                (4 << 20, 70.0e-6),
+            ],
+        }),
+    }
+}
+
+/// NVMe-class flash SSD: comparable peak bandwidth to Optane but an
+/// order of magnitude more per-op setup at small blocks (flash read
+/// latency + deeper firmware path), narrowing toward large blocks.
+pub fn nvme_class(time_scale: f64) -> DeviceModel {
+    DeviceModel {
+        name: "nvme-class".into(),
+        read_bw: 2903.0e6,
+        write_bw: 1950.0e6,
+        read_lat: 80.0e-6,
+        write_lat: 30.0e-6,
+        channels: 8,
+        elevator: vec![(1, 1.0)],
+        time_scale,
+        lat_tables: Some(LatencyTables {
+            read: vec![
+                (4 << 10, 80.0e-6),
+                (64 << 10, 95.0e-6),
+                (1 << 20, 140.0e-6),
+                (4 << 20, 250.0e-6),
+            ],
+            write: vec![
+                (4 << 10, 30.0e-6),
+                (64 << 10, 45.0e-6),
+                (1 << 20, 90.0e-6),
+                (4 << 20, 180.0e-6),
+            ],
+        }),
+    }
+}
+
+/// HDD-class 7.2k SATA drive: the seek dominates every block size, so
+/// the table is nearly flat in absolute terms but the per-byte cost
+/// of small blocks is catastrophic — the tier blocks are demoted to.
+pub fn hdd_class(time_scale: f64) -> DeviceModel {
+    DeviceModel {
+        name: "hdd-class".into(),
+        read_bw: 120.0e6,
+        write_bw: 110.0e6,
+        read_lat: 8.5e-3,
+        write_lat: 9.0e-3,
+        channels: 1,
+        elevator: vec![(1, 1.0), (2, 1.70), (4, 2.05), (8, 2.55)],
+        time_scale,
+        lat_tables: Some(LatencyTables {
+            read: vec![
+                (4 << 10, 8.5e-3),
+                (64 << 10, 8.6e-3),
+                (1 << 20, 9.0e-3),
+                (4 << 20, 10.5e-3),
+            ],
+            write: vec![
+                (4 << 10, 9.0e-3),
+                (64 << 10, 9.1e-3),
+                (1 << 20, 9.5e-3),
+                (4 << 20, 11.0e-3),
+            ],
+        }),
+    }
+}
+
+/// The device preset names, in `by_name` order — what
+/// unknown-profile CLI errors list.  The first four are the paper's
+/// single-point testbed profiles; the `*-class` trio carries
+/// calibrated per-block-size latency tables.
+pub const DEVICE_NAMES: [&str; 7] = [
+    "hdd",
+    "ssd",
+    "optane",
+    "lustre",
+    "optane-class",
+    "nvme-class",
+    "hdd-class",
+];
+
+/// All device presets, by name.
 pub fn by_name(name: &str, time_scale: f64) -> Option<DeviceModel> {
     match name {
         "hdd" => Some(blackdog_hdd(time_scale)),
         "ssd" => Some(blackdog_ssd(time_scale)),
         "optane" => Some(blackdog_optane(time_scale)),
         "lustre" => Some(tegner_lustre(time_scale)),
+        "optane-class" => Some(optane_class(time_scale)),
+        "nvme-class" => Some(nvme_class(time_scale)),
+        "hdd-class" => Some(hdd_class(time_scale)),
         _ => None,
     }
 }
@@ -106,11 +229,12 @@ pub fn by_name(name: &str, time_scale: f64) -> Option<DeviceModel> {
 /// Named storage-hierarchy presets over the paper's devices
 /// (DESIGN.md §12).  Tier-0 capacities are modelled bytes; sweep
 /// drivers override them to shape cache-pressure studies.
-pub const HIERARCHY_NAMES: [&str; 4] = [
+pub const HIERARCHY_NAMES: [&str; 5] = [
     "blackdog-bb",
     "blackdog-direct-hdd",
     "blackdog-tiered",
     "tegner-lustre+optane",
+    "calibrated-tiered",
 ];
 
 /// Resolve a hierarchy preset by name.  Device names refer to the
@@ -147,6 +271,16 @@ pub fn hierarchy_by_name(name: &str) -> Option<HierarchySpec> {
                 TierSpec::device("lustre", 0),
             ],
         )),
+        // Calibrated per-block-size classes (DESIGN.md §17): the
+        // hierarchy the cost model prices exactly, since both tiers
+        // carry latency tables.
+        "calibrated-tiered" => Some(HierarchySpec::new(
+            name,
+            vec![
+                TierSpec::device("optane-class", 512 << 20),
+                TierSpec::device("hdd-class", 0),
+            ],
+        )),
         _ => None,
     }
 }
@@ -175,6 +309,9 @@ pub fn adaptive_ingest_target(name: &str) -> Option<f64> {
         "ssd" => Some(2.0e-3),    // a few SATA command slots
         "optane" => Some(0.5e-3), // deep parallelism: waits ~ 0
         "lustre" => Some(5.0e-3), // ~2 RPC round-trips
+        "optane-class" => Some(0.3e-3), // sub-optane per-op floor
+        "nvme-class" => Some(1.0e-3),   // flash read latency x ~10
+        "hdd-class" => Some(14.0e-3),   // ~1.5x the 9 ms seek floor
         _ => None,
     }
 }
@@ -340,6 +477,65 @@ mod tests {
             assert_eq!(by_name(n, 1.0).unwrap().name, n);
         }
         assert!(by_name("floppy", 1.0).is_none());
+    }
+
+    #[test]
+    fn paper_profiles_stay_single_point() {
+        // Bit-compatibility guard: the four paper profiles must keep
+        // the single-point latency model (every calibration ratio
+        // above depends on it).
+        for n in ["hdd", "ssd", "optane", "lustre"] {
+            assert!(by_name(n, 1.0).unwrap().lat_tables.is_none(), "{n}");
+        }
+    }
+
+    #[test]
+    fn calibrated_classes_interpolate_monotonically() {
+        for n in ["optane-class", "nvme-class", "hdd-class"] {
+            let m = by_name(n, 1.0).unwrap();
+            assert!(m.has_lat_table(Dir::Read), "{n}");
+            assert!(m.has_lat_table(Dir::Write), "{n}");
+            // Setup latency grows with block size (amortization stops).
+            for dir in [Dir::Read, Dir::Write] {
+                let mut prev = 0.0;
+                for bytes in [4 << 10, 64 << 10, 1 << 20, 4 << 20] {
+                    let lat = m.lat_for(dir, bytes);
+                    assert!(lat > prev, "{n}: non-monotone at {bytes}");
+                    prev = lat;
+                }
+            }
+            // The table's smallest point matches the single-point
+            // fallback, so size-oblivious paths (bytes = 0) agree.
+            assert_eq!(m.lat_for(Dir::Read, 0), m.read_lat, "{n}");
+        }
+    }
+
+    #[test]
+    fn calibrated_class_ordering_holds_across_block_sizes() {
+        // Per-op service time: optane-class < nvme-class < hdd-class
+        // at every block size — the gradient the cost model descends.
+        let o = optane_class(1.0);
+        let n = nvme_class(1.0);
+        let h = hdd_class(1.0);
+        for bytes in [4 << 10, 64 << 10, 1 << 20, 4 << 20] {
+            let so = o.service_time(Dir::Read, bytes, 1);
+            let sn = n.service_time(Dir::Read, bytes, 1);
+            let sh = h.service_time(Dir::Read, bytes, 1);
+            assert!(so < sn, "bytes={bytes}: {so} !< {sn}");
+            assert!(sn < sh, "bytes={bytes}: {sn} !< {sh}");
+        }
+        // And a 4 MiB sequential stream still approaches the peak rate
+        // (the snippet-1 calibration anchor: block time ≈ size/peak).
+        for m in [&o, &n, &h] {
+            let bytes = 4 << 20;
+            let floor = bytes as f64 / m.read_bw;
+            let svc = m.service_time(Dir::Read, bytes, 1);
+            assert!(
+                svc < 1.25 * floor + m.lat_for(Dir::Read, bytes),
+                "{}: {svc}",
+                m.name
+            );
+        }
     }
 
     #[test]

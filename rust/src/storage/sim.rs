@@ -743,6 +743,7 @@ mod tests {
             channels: 8,
             elevator: vec![(1, 1.0)],
             time_scale: 1000.0,
+            lat_tables: None,
         }
     }
 
@@ -843,6 +844,7 @@ mod tests {
             channels: 1,
             elevator: vec![(1, 1.0)],
             time_scale: 1.0,
+            lat_tables: None,
         };
         let clock = Clock::virt();
         let s = StorageSim::with_qos_clock(

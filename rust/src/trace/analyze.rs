@@ -388,6 +388,7 @@ mod tests {
             channels: 4,
             elevator: vec![(1, 1.0)],
             time_scale: 1000.0,
+            lat_tables: None,
         };
         let dstat = Arc::new(Dstat::new(1e6)); // one wide bin
         let sim = StorageSim::new(

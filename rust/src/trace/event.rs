@@ -11,8 +11,8 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::storage::{
-    AdaptiveQos, DeviceModel, EngineEvent, EngineOp, IoClass, QosConfig,
-    RateCap, RetryPolicy, TenantQos,
+    AdaptiveQos, DeviceModel, EngineEvent, EngineOp, IoClass,
+    LatencyTables, QosConfig, RateCap, RetryPolicy, TenantQos,
 };
 use crate::util::json::{obj, to_string, Json};
 
@@ -197,8 +197,17 @@ pub struct TraceManifest {
     pub devices: Vec<DeviceModel>,
 }
 
+fn lat_points_to_json(points: &[(u64, f64)]) -> Json {
+    Json::Arr(
+        points
+            .iter()
+            .map(|&(b, l)| Json::Arr(vec![Json::Num(b as f64), Json::Num(l)]))
+            .collect(),
+    )
+}
+
 fn device_to_json(m: &DeviceModel) -> Json {
-    obj(vec![
+    let mut fields = vec![
         ("name", Json::Str(m.name.clone())),
         ("read_bw", Json::Num(m.read_bw)),
         ("write_bw", Json::Num(m.write_bw)),
@@ -217,7 +226,35 @@ fn device_to_json(m: &DeviceModel) -> Json {
             ),
         ),
         ("time_scale", Json::Num(m.time_scale)),
-    ])
+    ];
+    // Per-block-size latency tables are optional: table-less models
+    // serialize exactly as before, so v2-v4 traces stay byte-stable.
+    if let Some(t) = &m.lat_tables {
+        fields.push(("lat_read", lat_points_to_json(&t.read)));
+        fields.push(("lat_write", lat_points_to_json(&t.write)));
+    }
+    obj(fields)
+}
+
+fn lat_points_from_json(v: &Json, key: &str) -> Result<Vec<(u64, f64)>> {
+    let mut points = Vec::new();
+    let Some(arr) = v.get(key).and_then(Json::as_arr) else {
+        return Ok(points);
+    };
+    for pt in arr {
+        let pair = pt
+            .as_arr()
+            .filter(|p| p.len() == 2)
+            .ok_or_else(|| anyhow!("{key} point must be [bytes, secs]"))?;
+        let b = pair[0]
+            .as_f64()
+            .ok_or_else(|| anyhow!("bad {key} block size"))?;
+        let l = pair[1]
+            .as_f64()
+            .ok_or_else(|| anyhow!("bad {key} latency"))?;
+        points.push((b as u64, l));
+    }
+    Ok(points)
 }
 
 fn device_from_json(v: &Json) -> Result<DeviceModel> {
@@ -257,6 +294,15 @@ fn device_from_json(v: &Json) -> Result<DeviceModel> {
         channels: num("channels")? as usize,
         elevator,
         time_scale: num("time_scale")?,
+        lat_tables: {
+            let read = lat_points_from_json(v, "lat_read")?;
+            let write = lat_points_from_json(v, "lat_write")?;
+            if read.is_empty() && write.is_empty() {
+                None // pre-table trace (v2-v4): single-point model
+            } else {
+                Some(LatencyTables { read, write })
+            }
+        },
     })
 }
 
@@ -817,6 +863,31 @@ mod tests {
         assert_eq!(q.adaptive, qos.adaptive);
         assert!(q.tenants.is_none(), "tenant-blind config stays blind");
         assert_eq!(q.retry, qos.retry);
+    }
+
+    #[test]
+    fn manifest_roundtrips_latency_tables_and_defaults_to_none() {
+        // A calibrated device's per-block-size tables must survive the
+        // round trip; a table-less device must come back as `None`
+        // (the v2-v4 single-point form), not as empty tables.
+        let mut dev = crate::storage::profiles::blackdog_ssd(1.0);
+        dev.lat_tables = Some(LatencyTables {
+            read: vec![(4 << 10, 0.0001), (4 << 20, 0.0016)],
+            write: vec![(4 << 10, 0.0002)],
+        });
+        let m = TraceManifest {
+            version: TRACE_VERSION,
+            workload: "calibrated".into(),
+            qos_mode: "fifo".into(),
+            qos: None,
+            time_scale: 1.0,
+            devices: vec![dev.clone(), crate::storage::profiles::blackdog_hdd(1.0)],
+        };
+        let back =
+            TraceManifest::from_json(&Json::parse(&m.to_jsonl()).unwrap())
+                .unwrap();
+        assert_eq!(back.devices[0].lat_tables, dev.lat_tables);
+        assert_eq!(back.devices[1].lat_tables, None);
     }
 
     #[test]

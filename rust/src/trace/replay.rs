@@ -652,6 +652,7 @@ mod tests {
             channels: 1,
             elevator: vec![(1, 1.0)],
             time_scale: 1.0,
+            lat_tables: None,
         }
     }
 
@@ -792,6 +793,7 @@ mod tests {
                 channels: 4,
                 elevator: vec![(1, 1.0)],
                 time_scale: 1000.0,
+                lat_tables: None,
             }],
         };
         let mk = |seq: u64, t: f64| TraceEvent {

@@ -298,6 +298,7 @@ fn burst_buffer_save_latency_beats_direct_hdd() {
         channels: 4,
         elevator: vec![(1, 1.0)],
         time_scale: 1.0,
+        lat_tables: None,
     };
     let sim = Arc::new(
         StorageSim::cold(dir, vec![mk("slow", 20e6), mk("fast", 600e6)])

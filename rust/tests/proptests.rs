@@ -159,6 +159,7 @@ fn random_model(rng: &mut Rng) -> DeviceModel {
         channels: rng.index(32) + 1,
         elevator,
         time_scale: 1.0,
+        lat_tables: None,
     }
 }
 
